@@ -1,0 +1,45 @@
+//! Simulation-mode miniature of Figure 2: the paper's controlled-cluster
+//! experiment at full paper scale (79 TB HCP images, 44 OSTs, 6 Spark
+//! busy-writer nodes) on the virtual clock.
+//!
+//! ```bash
+//! cargo run --release --example degraded_lustre_sim
+//! ```
+
+use sea::config::{ClusterConfig, DatasetKind, PipelineKind, Strategy, WorkloadSpec};
+use sea::experiments::report::{fmt_secs, fmt_speedup, markdown_table};
+use sea::experiments::run_cell;
+
+fn main() -> anyhow::Result<()> {
+    let cluster = ClusterConfig::dedicated();
+    println!(
+        "cluster: {} ({} nodes, {} OSTs, {} MDT)\n",
+        cluster.name, cluster.n_nodes, cluster.lustre.n_ost, cluster.lustre.n_mdt
+    );
+
+    let mut rows = Vec::new();
+    for busy in [0usize, 6] {
+        for pipeline in PipelineKind::ALL {
+            let dataset = DatasetKind::Hcp;
+            let spec = WorkloadSpec::new(pipeline, dataset, 1).busy_writers(busy);
+            let base = run_cell(&cluster, &spec.clone().strategy(Strategy::Baseline))?;
+            let sea = run_cell(&cluster, &spec.clone().strategy(Strategy::Sea))?;
+            rows.push(vec![
+                format!("{pipeline}/{dataset}"),
+                busy.to_string(),
+                fmt_secs(base.makespan),
+                fmt_secs(sea.makespan),
+                fmt_speedup(base.makespan / sea.makespan),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["pipeline", "busy writers", "baseline", "sea", "speedup"],
+            &rows
+        )
+    );
+    println!("(full grid: `cargo bench --bench fig2_controlled`)");
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Diagnostic: print makespans + key metrics for a representative set of
+//! simulated cells (quick smoke of the Fig-2 mechanisms).
+//!
+//! ```bash
+//! cargo run --release --example diag
+//! ```
+use ::sea::config::{ClusterConfig, DatasetKind, PipelineKind, Strategy, WorkloadSpec};
+use ::sea::experiments::run_cell;
+
+fn main() {
+    let cluster = ClusterConfig::dedicated();
+    for (p, d) in [
+        (PipelineKind::Spm, DatasetKind::Hcp),
+        (PipelineKind::Afni, DatasetKind::PreventAd),
+        (PipelineKind::FslFeat, DatasetKind::PreventAd),
+        (PipelineKind::Afni, DatasetKind::Hcp),
+    ] {
+        for bw in [0usize, 6] {
+            let w = WorkloadSpec::new(p, d, 1).busy_writers(bw);
+            let b = run_cell(&cluster, &w.clone().strategy(Strategy::Baseline)).unwrap();
+            let s = run_cell(&cluster, &w.clone().strategy(Strategy::Sea)).unwrap();
+            println!(
+                "{p}/{d} bw={bw}: base={:.1}s sea={:.1}s speedup={:.2} \
+                 (ev {}/{}) lustre={:.0}MB stalls={} mds={:.0}",
+                b.makespan,
+                s.makespan,
+                b.makespan / s.makespan,
+                b.events,
+                s.events,
+                b.metrics.lustre_write_bytes / 1e6,
+                b.metrics.stalled_writes,
+                b.metrics.mds_ops
+            );
+        }
+    }
+}

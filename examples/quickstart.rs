@@ -1,0 +1,69 @@
+//! Quickstart: mount Sea over two tiers, write/read through it, flush,
+//! and inspect placement — the 60-second tour of the library.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use sea::config::SeaConfig;
+use sea::flusher::SeaSession;
+use sea::intercept::OpenMode;
+use sea::pathrules::{PathRules, SeaLists};
+use sea::testing::tempdir::tempdir;
+use sea::util::{format_bytes, MIB};
+
+fn main() -> anyhow::Result<()> {
+    // Two tiers: a fast 64 MiB "tmpfs" cache in front of "lustre".
+    let dir = tempdir("quickstart");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 64 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 10_000 * MIB)
+        .flusher(true, 100)
+        .build();
+
+    // Lists: persist *.out, treat *.tmp as cache-only scratch.
+    let lists = SeaLists::new(
+        PathRules::parse(r".*\.out$")?,
+        PathRules::parse(r".*\.tmp$")?,
+        PathRules::empty(),
+    );
+
+    let session = SeaSession::start(cfg, lists, |t| t)?;
+    let sea = session.io();
+
+    // Writes are redirected to the fastest cache with room.
+    let fd = sea.create("/results/analysis.out")?;
+    sea.write(fd, b"final result: 42\n")?;
+    sea.close(fd)?;
+
+    let fd = sea.create("/results/scratch.tmp")?;
+    sea.write(fd, &vec![0u8; 1024])?;
+    sea.close(fd)?;
+
+    println!("after writing:");
+    for (tier, used, files) in sea.tier_usage() {
+        println!("  {tier:8} {:>10}  {files} file(s)", format_bytes(used));
+    }
+    let st = sea.stat("/results/analysis.out")?;
+    println!("analysis.out lives on {:?} (dirty={})", st.tier, st.dirty);
+
+    // Reads come from the fastest replica.
+    let fd = sea.open("/results/analysis.out", OpenMode::Read)?;
+    let mut buf = [0u8; 64];
+    let n = sea.read(fd, &mut buf)?;
+    sea.close(fd)?;
+    println!("read back: {:?}", std::str::from_utf8(&buf[..n])?);
+
+    // Unmount drains: .out flushed to lustre, .tmp evicted (never lands).
+    let (stats, report) = session.unmount();
+    println!(
+        "unmount: flushed {} file(s) ({} B), evicted {}, \
+         {} glibc calls intercepted ({} hit lustre)",
+        report.flushed + report.moved,
+        report.bytes_flushed,
+        report.evicted,
+        stats.total(),
+        stats.persist_calls,
+    );
+    Ok(())
+}

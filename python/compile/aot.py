@@ -1,0 +1,87 @@
+"""AOT lowering: JAX preprocessing graphs → HLO *text* artifacts.
+
+The interchange format is HLO text, **not** serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once per build (``make artifacts``)::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Produces ``{pipeline}_{dataset}.hlo.txt`` for every pipeline × dataset shape
+plus ``manifest.tsv`` describing each artifact (name, pipeline, dataset,
+T Z Y X) which the Rust runtime parses at startup.  Python never runs on the
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import DATASET_SHAPES, PIPELINE_FNS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is essential: the default printer elides
+    big literals as ``constant({...})`` and the text parser silently fills
+    them with zeros — the Gaussian filter matrices would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_pipeline(pipeline: str, dataset: str) -> str:
+    """Lower one pipeline variant at one dataset shape to HLO text."""
+    shape = DATASET_SHAPES[dataset]
+    fn = PIPELINE_FNS[pipeline]
+    spec = jax.ShapeDtypeStruct(shape, jnp.float32)
+    # donate the input: the preprocessed output may alias the input buffer
+    lowered = jax.jit(fn, donate_argnums=0).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated pipeline_dataset names to build")
+    args = ap.parse_args()
+
+    only = set(args.only.split(",")) if args.only else None
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_rows = []
+    for pipeline in PIPELINE_FNS:
+        for dataset, shape in DATASET_SHAPES.items():
+            name = f"{pipeline}_{dataset}"
+            if only is not None and name not in only:
+                continue
+            text = lower_pipeline(pipeline, dataset)
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            t, z, y, x = shape
+            manifest_rows.append(f"{name}\t{pipeline}\t{dataset}\t{t}\t{z}\t{y}\t{x}")
+            print(f"wrote {path} ({len(text)} chars)")
+
+    if only is None:
+        manifest = os.path.join(args.out_dir, "manifest.tsv")
+        with open(manifest, "w") as f:
+            f.write("# name\tpipeline\tdataset\tT\tZ\tY\tX\n")
+            f.write("\n".join(manifest_rows) + "\n")
+        print(f"wrote {manifest} ({len(manifest_rows)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for fMRI functional preprocessing.
+
+Each module exports a public wrapper around a ``pl.pallas_call`` (always
+``interpret=True`` on this CPU image — see DESIGN.md §3) plus a
+``vmem_bytes`` perf-model helper; ``ref`` holds the pure-jnp oracles.
+"""
+
+from . import ref  # noqa: F401
+from .slice_timing import slice_timing  # noqa: F401
+from .detrend import detrend  # noqa: F401
+from .gaussian import smooth, smooth_fwhm  # noqa: F401
+from .normalize import normalize, apply_scale  # noqa: F401
+from .highpass import highpass, highpass_cutoff  # noqa: F401

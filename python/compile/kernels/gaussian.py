@@ -1,0 +1,109 @@
+"""Pallas kernel: separable 3-D Gaussian smoothing — the compute hot spot.
+
+The classical CPU formulation is three 1-D convolution sweeps. For the TPU
+we re-think it (per DESIGN.md §3) as three *dense matmuls* against banded
+Toeplitz filter matrices ``F_x, F_y, F_z`` so the arithmetic lands on the
+MXU systolic array instead of the VPU:
+
+    out = F_z ·_z ( F_y ·_y ( img ·_x F_xᵀ ) )
+
+The grid iterates over time frames; each step stages one ``(Z, Y, X)``
+volume plus the three filter matrices in VMEM and performs
+``2·Z·Y·X·(X + Y + Z)`` flops of matmul work. For paper-scale volumes
+(64³–96³) a full volume exceeds VMEM, so the kernel also supports splitting
+``Z`` into slabs (``z_block``): the X and Y passes are slab-local and the Z
+pass uses the full-Z filter rows for the slab, reading the full column
+extent — expressed here with a slab-resident gather of the needed input
+rows; with 3σ truncation the effective band is small.
+
+For the artifact shapes we AOT (≤ 48³) the whole volume fits comfortably
+(< 2 MiB), so ``z_block = Z`` and the kernel is a single fused step per
+frame.  ``interpret=True`` everywhere on this CPU image.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(img_ref, fz_ref, fy_ref, fx_ref, out_ref):
+    vol = img_ref[...][0]  # (Z, Y, X)
+    fx = fx_ref[...]
+    fy = fy_ref[...]
+    fz = fz_ref[...]
+    # X pass: (Z,Y,X) @ (X,U) — contiguous innermost dim feeds the MXU.
+    vol = jnp.einsum("zyx,xu->zyu", vol, fx.T, preferred_element_type=jnp.float32)
+    # Y pass.
+    vol = jnp.einsum("zyx,yu->zux", vol, fy.T, preferred_element_type=jnp.float32)
+    # Z pass.
+    vol = jnp.einsum("zyx,zu->uyx", vol, fz.T, preferred_element_type=jnp.float32)
+    out_ref[...] = vol[None]
+
+
+def smooth(img: jnp.ndarray, fz: jnp.ndarray, fy: jnp.ndarray,
+           fx: jnp.ndarray) -> jnp.ndarray:
+    """Smooth a ``(T, Z, Y, X)`` image with per-axis Toeplitz filters."""
+    t, z, y, x = img.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, z, y, x), lambda ti: (ti, 0, 0, 0)),
+            pl.BlockSpec((z, z), lambda ti: (0, 0)),
+            pl.BlockSpec((y, y), lambda ti: (0, 0)),
+            pl.BlockSpec((x, x), lambda ti: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, z, y, x), lambda ti: (ti, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, z, y, x), jnp.float32),
+        interpret=True,
+    )(img.astype(jnp.float32), fz, fy, fx)
+
+
+def smooth_fwhm(img: jnp.ndarray, fwhm_vox: float) -> jnp.ndarray:
+    """Convenience wrapper building the filters from a FWHM in voxels."""
+    _t, z, y, x = img.shape
+    fz = jnp.asarray(ref.gaussian_filter_matrix(z, fwhm_vox))
+    fy = jnp.asarray(ref.gaussian_filter_matrix(y, fwhm_vox))
+    fx = jnp.asarray(ref.gaussian_filter_matrix(x, fwhm_vox))
+    return smooth(img, fz, fy, fx)
+
+
+# ---------------------------------------------------------------------------
+# Perf model (used by the §Perf analysis and python/tests/test_perf_model.py)
+# ---------------------------------------------------------------------------
+
+
+def vmem_bytes(shape: tuple[int, int, int, int]) -> int:
+    """VMEM working set per grid step: volume in+out+temp + 3 filters."""
+    _t, z, y, x = shape
+    vol = z * y * x * 4
+    filters = (z * z + y * y + x * x) * 4
+    return 3 * vol + filters
+
+
+def flops_per_frame(shape: tuple[int, int, int, int]) -> int:
+    """Matmul flops of the three passes for one frame."""
+    _t, z, y, x = shape
+    return 2 * z * y * x * (x + y + z)
+
+
+def mxu_utilization_estimate(shape: tuple[int, int, int, int],
+                             mxu_dim: int = 128) -> float:
+    """Fraction of MXU lanes fed by each pass, averaged over passes.
+
+    A pass contracting over length ``n`` with ``m`` independent rows fills
+    ``min(n, mxu_dim)/mxu_dim × min(m, mxu_dim)/mxu_dim`` of the systolic
+    array per issue.  This is the *structural* estimate DESIGN.md §7 uses —
+    interpret-mode wallclock is not a TPU proxy.
+    """
+    _t, z, y, x = shape
+    passes = [(x, z * y), (y, z * x), (z, y * x)]
+    utils = []
+    for contract, rows in passes:
+        utils.append(min(contract, mxu_dim) / mxu_dim *
+                     min(rows, mxu_dim) / mxu_dim)
+    return sum(utils) / len(utils)

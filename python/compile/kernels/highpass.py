@@ -1,0 +1,53 @@
+"""Pallas kernel: FSL-style temporal highpass filtering.
+
+``out[t] = (I - G_lowpass) · img[:, z]  + mean_t`` — a dense ``(T, T)``
+matmul along the time axis (the MXU-friendly re-think of FSL's running-line
+smoother), applied slice by slice. The grid iterates over ``Z``; each step
+holds one ``(T, 1, Y, X)`` slab and the ``(T, T)`` filter in VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(img_ref, ft_ref, out_ref):
+    blk = img_ref[...][:, 0]  # (T, Y, X)
+    ft = ft_ref[...]          # (T, T)
+    mean = blk.mean(axis=0, keepdims=True)
+    filt = jnp.einsum("ts,syx->tyx", ft, blk,
+                      preferred_element_type=jnp.float32)
+    out_ref[...] = (filt + mean)[:, None]
+
+
+def highpass(img: jnp.ndarray, ft: jnp.ndarray) -> jnp.ndarray:
+    """Temporal highpass a ``(T, Z, Y, X)`` image with filter ``ft`` (T, T)."""
+    t, z, y, x = img.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(z,),
+        in_specs=[
+            pl.BlockSpec((t, 1, y, x), lambda zi: (0, zi, 0, 0)),
+            pl.BlockSpec((t, t), lambda zi: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, 1, y, x), lambda zi: (0, zi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, z, y, x), jnp.float32),
+        interpret=True,
+    )(img.astype(jnp.float32), ft)
+
+
+def highpass_cutoff(img: jnp.ndarray, cutoff_frames: float) -> jnp.ndarray:
+    """Build the ``(T, T)`` filter from a cutoff (in frames) and apply it."""
+    t = img.shape[0]
+    ft = jnp.asarray(ref.highpass_filter_matrix(t, cutoff_frames))
+    return highpass(img, ft)
+
+
+def vmem_bytes(shape: tuple[int, int, int, int]) -> int:
+    """VMEM working set per grid step (slab in+out + filter + mean plane)."""
+    t, _z, y, x = shape
+    return 2 * t * y * x * 4 + t * t * 4 + y * x * 4

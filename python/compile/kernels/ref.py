@@ -1,0 +1,132 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written in
+straight-line jax.numpy with no Pallas, no blocking and no cleverness. The
+pytest suite asserts `assert_allclose(kernel(...), ref(...))` over a
+hypothesis-driven sweep of shapes and parameters — this file is the
+correctness ground truth for Layer 1.
+
+Conventions
+-----------
+fMRI volumes are arrays of shape ``(T, Z, Y, X)`` float32:
+``T`` time frames, ``Z`` axial slices, ``Y``/``X`` in-plane.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Filter construction (shared by kernel and reference — host-side, numpy)
+# ---------------------------------------------------------------------------
+
+FWHM_TO_SIGMA = 1.0 / (2.0 * np.sqrt(2.0 * np.log(2.0)))
+
+
+def gaussian_filter_matrix(n: int, fwhm_vox: float) -> np.ndarray:
+    """Dense Toeplitz matrix applying a 1-D Gaussian blur along an axis.
+
+    Row ``i`` holds the (renormalised, edge-clamped) Gaussian centred at
+    ``i``.  ``out = F @ v`` blurs a length-``n`` signal.  Rows renormalise to
+    sum to 1 so edges do not darken (standard "reflect-free" normalisation,
+    matching what SPM/AFNI do at volume borders).
+    """
+    sigma = max(float(fwhm_vox) * FWHM_TO_SIGMA, 1e-6)
+    idx = np.arange(n, dtype=np.float64)
+    d2 = (idx[:, None] - idx[None, :]) ** 2
+    f = np.exp(-d2 / (2.0 * sigma * sigma))
+    # truncate beyond 3 sigma like classical implementations
+    f[np.sqrt(d2) > max(3.0 * sigma, 1.0)] = 0.0
+    f /= f.sum(axis=1, keepdims=True)
+    return f.astype(np.float32)
+
+
+def highpass_filter_matrix(n: int, cutoff_frames: float) -> np.ndarray:
+    """FSL-style temporal highpass: identity minus a wide Gaussian lowpass."""
+    low = gaussian_filter_matrix(n, fwhm_vox=cutoff_frames)
+    return (np.eye(n, dtype=np.float32) - low).astype(np.float32)
+
+
+def interleaved_slice_offsets(nz: int) -> np.ndarray:
+    """Acquisition-time offset (fraction of TR in [0,1)) per slice for an
+    interleaved ascending acquisition (odd slices first, then even), the
+    scheme used by all three pipelines in the paper."""
+    order = np.concatenate([np.arange(0, nz, 2), np.arange(1, nz, 2)])
+    tau = np.empty(nz, dtype=np.float32)
+    tau[order] = np.arange(nz, dtype=np.float32) / float(nz)
+    return tau
+
+
+# ---------------------------------------------------------------------------
+# References
+# ---------------------------------------------------------------------------
+
+
+def slice_timing_ref(img: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """Linear temporal resampling of each slice to the start of its TR.
+
+    ``out[t, z] = img(t - tau[z], z)`` with linear interpolation and clamping
+    at ``t = 0``.  Because ``tau`` is constant per slice and lies in
+    ``[0, 1)``, the interpolation always mixes frames ``t-1`` and ``t``.
+    """
+    t_axis = img.astype(jnp.float32)
+    prev = jnp.concatenate([t_axis[:1], t_axis[:-1]], axis=0)  # frame t-1, clamped
+    w = (1.0 - tau).astype(jnp.float32)  # weight of frame t
+    w = w[None, :, None, None]
+    return w * t_axis + (1.0 - w) * prev
+
+
+def detrend_ref(img: jnp.ndarray) -> jnp.ndarray:
+    """Remove per-voxel linear drift (keep the temporal mean).
+
+    Ordinary least squares of ``v(t) = a + b t`` per voxel; subtract
+    ``b (t - mean(t))``.  Equivalent to AFNI ``3dDetrend -polort 1`` modulo
+    mean retention.
+    """
+    T = img.shape[0]
+    t = jnp.arange(T, dtype=jnp.float32)
+    tc = t - t.mean()
+    denom = jnp.maximum((tc * tc).sum(), 1e-12)
+    b = jnp.tensordot(tc, img, axes=(0, 0)) / denom  # (Z, Y, X)
+    return img - tc[:, None, None, None] * b[None]
+
+
+def smooth_ref(img: jnp.ndarray, fz: jnp.ndarray, fy: jnp.ndarray,
+               fx: jnp.ndarray) -> jnp.ndarray:
+    """Separable 3-D Gaussian smoothing of every frame.
+
+    Each pass is a dense matmul against a Toeplitz filter matrix — the same
+    formulation the Pallas kernel uses so the MXU mapping is testable."""
+    out = jnp.einsum("tzyx,xu->tzyu", img, fx.T)
+    out = jnp.einsum("tzyx,yu->tzux", out, fy.T)
+    out = jnp.einsum("tzyx,zu->tuyx", out, fz.T)
+    return out
+
+
+def normalize_ref(img: jnp.ndarray, target: float = 100.0,
+                  mask_frac: float = 0.2, apply_mask: bool = True):
+    """Grand-mean intensity normalisation plus threshold brain mask.
+
+    The mean volume thresholded at ``mask_frac * max`` defines the brain
+    mask; intensities are scaled so the within-mask grand mean equals
+    ``target`` (SPM-style "global scaling").  Returns
+    ``(scaled, mean_vol, mask)``.
+    """
+    mean_vol = img.mean(axis=0)
+    thr = mask_frac * mean_vol.max()
+    mask = (mean_vol > thr).astype(jnp.float32)
+    masked_sum = (mean_vol * mask).sum()
+    grand_mean = masked_sum / jnp.maximum(mask.sum(), 1.0)
+    scale = target / jnp.maximum(grand_mean, 1e-12)
+    scaled = img * scale
+    if apply_mask:
+        scaled = scaled * mask[None]
+    return scaled, mean_vol, mask
+
+
+def highpass_ref(img: jnp.ndarray, ft: jnp.ndarray) -> jnp.ndarray:
+    """FSL-style temporal highpass as a matmul along T (keep the mean)."""
+    mean = img.mean(axis=0, keepdims=True)
+    return jnp.einsum("ts,szyx->tzyx", ft, img) + mean

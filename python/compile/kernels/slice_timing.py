@@ -1,0 +1,50 @@
+"""Pallas kernel: slice-timing correction.
+
+Resamples each axial slice's time series to the start of its TR with linear
+interpolation (see :func:`ref.slice_timing_ref`). The grid iterates over
+slices ``z``; each grid step holds one ``(T, 1, Y, X)`` slab plus that
+slice's scalar acquisition offset in VMEM.
+
+TPU mapping: the slab layout keeps the innermost ``(Y, X)`` plane contiguous
+for the VPU; the temporal mix is a 2-term FMA, so this kernel is bandwidth-
+bound — the BlockSpec exists to keep the slab within VMEM, not to feed the
+MXU.  Lowered with ``interpret=True`` on this CPU image (Mosaic custom-calls
+cannot execute on the CPU PJRT plugin).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(img_ref, tau_ref, out_ref):
+    """One slice: out[t] = (1-tau)*img[t] + tau*img[t-1] (t=0 clamped)."""
+    blk = img_ref[...]  # (T, 1, Y, X)
+    prev = jnp.concatenate([blk[:1], blk[:-1]], axis=0)
+    w = 1.0 - tau_ref[0]  # weight of the current frame
+    out_ref[...] = w * blk + (1.0 - w) * prev
+
+
+def slice_timing(img: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """Slice-timing-correct a ``(T, Z, Y, X)`` image given per-slice offsets
+    ``tau`` (shape ``(Z,)``, fraction of TR in ``[0, 1)``)."""
+    t, z, y, x = img.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(z,),
+        in_specs=[
+            pl.BlockSpec((t, 1, y, x), lambda zi: (0, zi, 0, 0)),
+            pl.BlockSpec((1,), lambda zi: (zi,)),
+        ],
+        out_specs=pl.BlockSpec((t, 1, y, x), lambda zi: (0, zi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, z, y, x), jnp.float32),
+        interpret=True,
+    )(img.astype(jnp.float32), tau.astype(jnp.float32))
+
+
+def vmem_bytes(shape: tuple[int, int, int, int]) -> int:
+    """VMEM working set per grid step: in slab + out slab + scalar."""
+    t, _z, y, x = shape
+    return 2 * t * y * x * 4 + 4

@@ -1,0 +1,128 @@
+"""Layer 2: fMRI functional-preprocessing compute graphs.
+
+Three pipeline variants mirror the toolboxes the paper evaluates (§4.1.2).
+The variants differ exactly where the real toolboxes differ in *compute
+shape* — the properties Table 2 measures (compute seconds, output volume):
+
+* ``afni``  — slice timing → linear detrend → 4 mm smoothing → grand-mean
+  scale + mask.  Minimal compute, large output (AFNI writes every
+  intermediate; the L3 trace model emits those writes).
+* ``spm``   — slice timing → 8 mm smoothing → grand-mean scaling (no mask —
+  SPM masks later, at analysis).  SPM's defining I/O trait (in-place memmap
+  updates of its inputs, which makes prefetch matter) lives at L3.
+* ``fsl``   — slice timing → detrend → temporal highpass → 5 mm smoothing →
+  intensity normalisation + mask.  The extra temporal pass makes it the
+  compute-heavy variant, as FSL Feat is in the paper.
+
+Every step calls the Layer-1 Pallas kernels; the whole graph is lowered once
+by :mod:`compile.aot` to HLO text and executed from Rust via PJRT.  Outputs
+are ``(preprocessed, mean_vol, mask)``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.slice_timing import slice_timing
+from .kernels.detrend import detrend
+from .kernels.gaussian import smooth
+from .kernels.normalize import apply_scale
+from .kernels.highpass import highpass
+
+Output = Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]
+
+#: (T, Z, Y, X) artifact shapes per dataset profile. Scaled-down but
+#: order-preserving stand-ins for the paper's image sizes (Table 1:
+#: HCP single images ≫ ds001545 ≫ PREVENT-AD).
+DATASET_SHAPES: Dict[str, Tuple[int, int, int, int]] = {
+    "prevent_ad": (8, 8, 16, 16),
+    "ds001545": (12, 12, 24, 24),
+    "hcp": (16, 16, 32, 32),
+}
+
+PIPELINES = ("afni", "spm", "fsl")
+
+
+def _filters(shape, fwhm_vox: float):
+    _t, z, y, x = shape
+    return (jnp.asarray(ref.gaussian_filter_matrix(z, fwhm_vox)),
+            jnp.asarray(ref.gaussian_filter_matrix(y, fwhm_vox)),
+            jnp.asarray(ref.gaussian_filter_matrix(x, fwhm_vox)))
+
+
+def _tau(shape) -> jnp.ndarray:
+    return jnp.asarray(ref.interleaved_slice_offsets(shape[1]))
+
+
+def _normalize(img: jnp.ndarray, target: float, mask_frac: float,
+               apply_mask: bool) -> Output:
+    """Cross-frame statistics at L2, per-frame application in Pallas."""
+    mean_vol = img.mean(axis=0)
+    thr = mask_frac * mean_vol.max()
+    mask = (mean_vol > thr).astype(jnp.float32)
+    masked_sum = (mean_vol * mask).sum()
+    grand_mean = masked_sum / jnp.maximum(mask.sum(), 1.0)
+    scale = target / jnp.maximum(grand_mean, 1e-12)
+    scaled = apply_scale(img, mask, scale, apply_mask=apply_mask)
+    return scaled, mean_vol, mask
+
+
+def afni_preprocess(img: jnp.ndarray) -> Output:
+    """AFNI-like functional preprocessing (see module docstring)."""
+    shape = img.shape
+    img = slice_timing(img, _tau(shape))
+    img = detrend(img)
+    img = smooth(img, *_filters(shape, fwhm_vox=1.5))
+    return _normalize(img, target=100.0, mask_frac=0.2, apply_mask=True)
+
+
+def spm_preprocess(img: jnp.ndarray) -> Output:
+    """SPM-like functional preprocessing (see module docstring)."""
+    shape = img.shape
+    img = slice_timing(img, _tau(shape))
+    img = smooth(img, *_filters(shape, fwhm_vox=2.5))
+    return _normalize(img, target=100.0, mask_frac=0.2, apply_mask=False)
+
+
+def fsl_preprocess(img: jnp.ndarray) -> Output:
+    """FSL-Feat-like functional preprocessing (see module docstring)."""
+    shape = img.shape
+    t = shape[0]
+    img = slice_timing(img, _tau(shape))
+    img = detrend(img)
+    img = highpass(img, jnp.asarray(
+        ref.highpass_filter_matrix(t, cutoff_frames=t / 2.0)))
+    img = smooth(img, *_filters(shape, fwhm_vox=1.8))
+    return _normalize(img, target=10000.0, mask_frac=0.2, apply_mask=True)
+
+
+PIPELINE_FNS: Dict[str, Callable[[jnp.ndarray], Output]] = {
+    "afni": afni_preprocess,
+    "spm": spm_preprocess,
+    "fsl": fsl_preprocess,
+}
+
+
+def reference_preprocess(pipeline: str, img: jnp.ndarray) -> Output:
+    """Pure-jnp oracle of the full graph (kernels swapped for refs)."""
+    shape = img.shape
+    tau = _tau(shape)
+    img = ref.slice_timing_ref(img, tau)
+    if pipeline == "afni":
+        img = ref.detrend_ref(img)
+        img = ref.smooth_ref(img, *_filters(shape, 1.5))
+        return ref.normalize_ref(img, 100.0, 0.2, apply_mask=True)
+    if pipeline == "spm":
+        img = ref.smooth_ref(img, *_filters(shape, 2.5))
+        return ref.normalize_ref(img, 100.0, 0.2, apply_mask=False)
+    if pipeline == "fsl":
+        img = ref.detrend_ref(img)
+        t = shape[0]
+        img = ref.highpass_ref(
+            img, jnp.asarray(ref.highpass_filter_matrix(t, t / 2.0)))
+        img = ref.smooth_ref(img, *_filters(shape, 1.8))
+        return ref.normalize_ref(img, 10000.0, 0.2, apply_mask=True)
+    raise ValueError(f"unknown pipeline {pipeline!r}")

@@ -1,0 +1,62 @@
+"""AOT path tests: lowering produces loadable HLO text + manifest sanity."""
+
+import os
+
+import pytest
+
+from compile.aot import lower_pipeline
+from compile.model import DATASET_SHAPES, PIPELINE_FNS
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_produces_hlo_text():
+    text = lower_pipeline("spm", "prevent_ad")
+    assert "ENTRY" in text
+    assert "f32[8,8,16,16]" in text  # input shape embedded
+    # tuple of three outputs (preprocessed, mean_vol, mask)
+    assert "(f32[8,8,16,16]" in text
+
+
+def test_no_elided_constants():
+    """Regression: the default HLO printer elides large literals as
+    ``constant({...})`` which the text parser refills with ZEROS — the
+    Gaussian filter matrices silently vanished and every output was 0.
+    ``print_large_constants=True`` must keep them verbatim."""
+    for pipeline in PIPELINE_FNS:
+        text = lower_pipeline(pipeline, "prevent_ad")
+        assert "{...}" not in text, pipeline
+
+
+def test_lowered_text_has_no_custom_calls():
+    """interpret=True must lower Pallas to plain HLO the CPU PJRT can run."""
+    for pipeline in PIPELINE_FNS:
+        text = lower_pipeline(pipeline, "prevent_ad")
+        assert "custom-call" not in text.lower(), pipeline
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.tsv")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestManifest:
+    def test_manifest_covers_grid(self):
+        with open(os.path.join(ART_DIR, "manifest.tsv")) as f:
+            rows = [l.split("\t") for l in f.read().splitlines()
+                    if l and not l.startswith("#")]
+        names = {r[0] for r in rows}
+        assert names == {f"{p}_{d}" for p in PIPELINE_FNS
+                         for d in DATASET_SHAPES}
+
+    def test_manifest_shapes_match_model(self):
+        with open(os.path.join(ART_DIR, "manifest.tsv")) as f:
+            rows = [l.split("\t") for l in f.read().splitlines()
+                    if l and not l.startswith("#")]
+        for name, _pipe, dataset, t, z, y, x in rows:
+            assert tuple(map(int, (t, z, y, x))) == DATASET_SHAPES[dataset], name
+
+    def test_artifact_files_exist_and_nonempty(self):
+        with open(os.path.join(ART_DIR, "manifest.tsv")) as f:
+            rows = [l.split("\t") for l in f.read().splitlines()
+                    if l and not l.startswith("#")]
+        for row in rows:
+            path = os.path.join(ART_DIR, f"{row[0]}.hlo.txt")
+            assert os.path.getsize(path) > 1000, path

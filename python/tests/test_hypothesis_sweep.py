@@ -1,0 +1,84 @@
+"""Hypothesis sweeps: Pallas kernels vs references over random shapes/params.
+
+Interpret-mode Pallas is slow, so example counts are modest but shapes and
+parameters are drawn broadly (odd sizes, tiny axes, extreme FWHM) — this is
+where blocking/index-map bugs surface.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.slice_timing import slice_timing
+from compile.kernels.detrend import detrend
+from compile.kernels.gaussian import smooth
+from compile.kernels.normalize import normalize
+from compile.kernels.highpass import highpass
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+dims = st.tuples(
+    st.integers(2, 10),   # T
+    st.integers(1, 7),    # Z
+    st.integers(2, 12),   # Y
+    st.integers(2, 12),   # X
+)
+
+
+def make_img(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(50, 20, shape).astype(np.float32))
+
+
+@settings(**SETTINGS)
+@given(shape=dims, seed=st.integers(0, 2**31), frac=st.floats(0.0, 0.999))
+def test_slice_timing_sweep(shape, seed, frac):
+    img = make_img(shape, seed)
+    rng = np.random.default_rng(seed + 1)
+    tau = jnp.asarray((rng.random(shape[1]) * frac).astype(np.float32))
+    assert_allclose(slice_timing(img, tau), ref.slice_timing_ref(img, tau),
+                    rtol=1e-4, atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(shape=dims, seed=st.integers(0, 2**31))
+def test_detrend_sweep(shape, seed):
+    img = make_img(shape, seed)
+    assert_allclose(detrend(img), ref.detrend_ref(img), rtol=1e-3, atol=1e-2)
+
+
+@settings(**SETTINGS)
+@given(shape=dims, seed=st.integers(0, 2**31),
+       fwhm=st.floats(0.3, 6.0))
+def test_smooth_sweep(shape, seed, fwhm):
+    img = make_img(shape, seed)
+    _t, z, y, x = shape
+    fz = jnp.asarray(ref.gaussian_filter_matrix(z, fwhm))
+    fy = jnp.asarray(ref.gaussian_filter_matrix(y, fwhm))
+    fx = jnp.asarray(ref.gaussian_filter_matrix(x, fwhm))
+    assert_allclose(smooth(img, fz, fy, fx), ref.smooth_ref(img, fz, fy, fx),
+                    rtol=1e-3, atol=1e-2)
+
+
+@settings(**SETTINGS)
+@given(shape=dims, seed=st.integers(0, 2**31),
+       target=st.floats(1.0, 10000.0), mask_frac=st.floats(0.05, 0.9),
+       masked=st.booleans())
+def test_normalize_sweep(shape, seed, target, mask_frac, masked):
+    img = jnp.abs(make_img(shape, seed)) + 1.0
+    got = normalize(img, target=target, mask_frac=mask_frac, apply_mask=masked)
+    want = ref.normalize_ref(img, target=target, mask_frac=mask_frac,
+                             apply_mask=masked)
+    for g, w in zip(got, want):
+        assert_allclose(g, w, rtol=1e-3, atol=1e-2)
+
+
+@settings(**SETTINGS)
+@given(shape=dims, seed=st.integers(0, 2**31), cutoff=st.floats(1.0, 16.0))
+def test_highpass_sweep(shape, seed, cutoff):
+    img = make_img(shape, seed)
+    ft = jnp.asarray(ref.highpass_filter_matrix(shape[0], cutoff))
+    assert_allclose(highpass(img, ft), ref.highpass_ref(img, ft),
+                    rtol=1e-3, atol=1e-2)

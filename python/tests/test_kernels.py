@@ -1,0 +1,175 @@
+"""Kernel-vs-reference correctness: the core Layer-1 signal.
+
+Each Pallas kernel (interpret mode) must match its pure-jnp oracle in
+``compile.kernels.ref`` to float32 tolerance on deterministic inputs.
+Randomised shape/parameter sweeps live in test_hypothesis_sweep.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import (apply_scale, detrend, highpass, highpass_cutoff,
+                             normalize, ref, slice_timing, smooth, smooth_fwhm)
+
+RNG = np.random.default_rng(1234)
+
+
+def mk_img(t=6, z=4, y=8, x=8, offset=100.0):
+    """Brain-ish synthetic image: bright ellipsoid + noise + drift."""
+    zz, yy, xx = np.meshgrid(np.linspace(-1, 1, z), np.linspace(-1, 1, y),
+                             np.linspace(-1, 1, x), indexing="ij")
+    brain = (zz ** 2 + yy ** 2 + xx ** 2 < 0.8).astype(np.float32)
+    img = offset * brain[None] + RNG.normal(0, 5, (t, z, y, x))
+    img += np.linspace(0, 10, t)[:, None, None, None] * brain[None]
+    return jnp.asarray(img.astype(np.float32))
+
+
+class TestSliceTiming:
+    def test_matches_ref(self):
+        img = mk_img()
+        tau = jnp.asarray(ref.interleaved_slice_offsets(img.shape[1]))
+        assert_allclose(slice_timing(img, tau),
+                        ref.slice_timing_ref(img, tau), rtol=1e-5, atol=1e-4)
+
+    def test_zero_offset_is_identity(self):
+        img = mk_img()
+        tau = jnp.zeros(img.shape[1], jnp.float32)
+        assert_allclose(slice_timing(img, tau), img, rtol=1e-6)
+
+    def test_first_frame_clamped(self):
+        img = mk_img()
+        tau = jnp.full((img.shape[1],), 0.5, jnp.float32)
+        out = slice_timing(img, tau)
+        # t=0 mixes img[0] with clamped img[-1]==img[0] -> unchanged
+        assert_allclose(out[0], img[0], rtol=1e-6)
+
+    def test_constant_series_unchanged(self):
+        img = jnp.ones((5, 4, 6, 6), jnp.float32) * 42.0
+        tau = jnp.asarray(ref.interleaved_slice_offsets(4))
+        assert_allclose(slice_timing(img, tau), img, rtol=1e-6)
+
+
+class TestDetrend:
+    def test_matches_ref(self):
+        img = mk_img()
+        assert_allclose(detrend(img), ref.detrend_ref(img),
+                        rtol=1e-4, atol=1e-3)
+
+    def test_removes_pure_ramp(self):
+        t, z, y, x = 8, 3, 4, 4
+        ramp = jnp.arange(t, dtype=jnp.float32)[:, None, None, None]
+        img = jnp.broadcast_to(ramp, (t, z, y, x)) * 3.0
+        out = detrend(img)
+        # Pure ramp -> constant at the temporal mean
+        expected = jnp.full_like(img, 3.0 * (t - 1) / 2.0)
+        assert_allclose(out, expected, rtol=1e-4, atol=1e-3)
+
+    def test_preserves_mean(self):
+        img = mk_img()
+        assert_allclose(detrend(img).mean(axis=0), img.mean(axis=0),
+                        rtol=1e-4, atol=1e-2)
+
+
+class TestSmooth:
+    def test_matches_ref(self):
+        img = mk_img()
+        _t, z, y, x = img.shape
+        fz = jnp.asarray(ref.gaussian_filter_matrix(z, 1.5))
+        fy = jnp.asarray(ref.gaussian_filter_matrix(y, 1.5))
+        fx = jnp.asarray(ref.gaussian_filter_matrix(x, 1.5))
+        assert_allclose(smooth(img, fz, fy, fx),
+                        ref.smooth_ref(img, fz, fy, fx),
+                        rtol=1e-4, atol=1e-3)
+
+    def test_preserves_constant_field(self):
+        img = jnp.full((3, 6, 8, 8), 7.0, jnp.float32)
+        out = smooth_fwhm(img, 2.0)
+        # Rows are renormalised, so a constant field is exactly preserved.
+        assert_allclose(out, img, rtol=1e-5)
+
+    def test_reduces_variance(self):
+        img = mk_img(offset=0.0)
+        out = smooth_fwhm(img, 2.5)
+        assert float(out.std()) < float(img.std())
+
+    def test_filter_matrix_rows_sum_to_one(self):
+        f = ref.gaussian_filter_matrix(16, 2.0)
+        assert_allclose(f.sum(axis=1), np.ones(16), rtol=1e-6)
+
+    def test_filter_truncated_at_3_sigma(self):
+        f = ref.gaussian_filter_matrix(32, 2.0)
+        sigma = 2.0 * ref.FWHM_TO_SIGMA
+        assert f[0, int(np.ceil(3 * sigma)) + 1] == 0.0
+
+
+class TestNormalize:
+    def test_matches_ref(self):
+        img = mk_img()
+        s, mv, mk = normalize(img)
+        s2, mv2, mk2 = ref.normalize_ref(img)
+        assert_allclose(s, s2, rtol=1e-4, atol=1e-3)
+        assert_allclose(mv, mv2, rtol=1e-5)
+        assert_allclose(mk, mk2)
+
+    def test_grand_mean_hits_target(self):
+        img = mk_img()
+        s, _mv, mk = normalize(img, target=100.0)
+        within = (s.mean(axis=0) * mk).sum() / mk.sum()
+        assert abs(float(within) - 100.0) < 1.0
+
+    def test_mask_is_binary(self):
+        _s, _mv, mk = normalize(mk_img())
+        vals = np.unique(np.asarray(mk))
+        assert set(vals.tolist()) <= {0.0, 1.0}
+
+    def test_unmasked_keeps_background(self):
+        img = mk_img()
+        s, _mv, mk = normalize(img, apply_mask=False)
+        outside = np.asarray(s[0])[np.asarray(mk) == 0.0]
+        assert np.abs(outside).sum() > 0.0
+
+    def test_apply_scale_masked_zeroes_background(self):
+        img = mk_img()
+        _s, _mv, mk = normalize(img)
+        out = apply_scale(img, mk, jnp.asarray(2.0), apply_mask=True)
+        outside = np.asarray(out[0])[np.asarray(mk) == 0.0]
+        assert_allclose(outside, np.zeros_like(outside))
+
+
+class TestHighpass:
+    def test_matches_ref(self):
+        img = mk_img(t=10)
+        ft = jnp.asarray(ref.highpass_filter_matrix(10, 5.0))
+        assert_allclose(highpass(img, ft), ref.highpass_ref(img, ft),
+                        rtol=1e-4, atol=1e-3)
+
+    def test_removes_slow_drift_keeps_mean(self):
+        t = 16
+        drift = jnp.linspace(0.0, 20.0, t)[:, None, None, None]
+        img = 100.0 + jnp.broadcast_to(drift, (t, 2, 4, 4))
+        out = highpass_cutoff(img, cutoff_frames=4.0)
+        # temporal std shrinks, mean is retained
+        assert float(out.std(axis=0).mean()) < float(img.std(axis=0).mean())
+        assert_allclose(out.mean(axis=0), img.mean(axis=0), rtol=1e-3)
+
+    def test_highpass_matrix_annihilates_constants(self):
+        ft = ref.highpass_filter_matrix(12, 6.0)
+        assert_allclose(ft @ np.ones(12, np.float32),
+                        np.zeros(12), atol=1e-5)
+
+
+class TestSliceOffsets:
+    def test_interleaved_permutation(self):
+        tau = ref.interleaved_slice_offsets(7)
+        assert sorted((tau * 7).round().astype(int).tolist()) == list(range(7))
+
+    def test_odd_slices_acquired_first(self):
+        tau = ref.interleaved_slice_offsets(6)
+        assert tau[0] < tau[1] and tau[2] < tau[1]
+
+    @pytest.mark.parametrize("nz", [1, 2, 3, 8, 15])
+    def test_range(self, nz):
+        tau = ref.interleaved_slice_offsets(nz)
+        assert (tau >= 0).all() and (tau < 1).all() and tau.shape == (nz,)

@@ -1,0 +1,80 @@
+"""Layer-2 graph tests: pipeline variants vs full-graph oracles + invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.model import (DATASET_SHAPES, PIPELINE_FNS, PIPELINES,
+                           reference_preprocess)
+
+RNG = np.random.default_rng(7)
+
+
+def brainish(shape):
+    t, z, y, x = shape
+    zz, yy, xx = np.meshgrid(np.linspace(-1, 1, z), np.linspace(-1, 1, y),
+                             np.linspace(-1, 1, x), indexing="ij")
+    brain = (zz ** 2 + yy ** 2 + xx ** 2 < 0.8).astype(np.float32)
+    img = 500.0 * brain[None] + RNG.normal(0, 10, shape)
+    img += np.linspace(0, 30, t)[:, None, None, None] * brain[None]
+    return jnp.asarray(np.maximum(img, 0).astype(np.float32))
+
+
+@pytest.mark.parametrize("pipeline", PIPELINES)
+def test_pipeline_matches_reference(pipeline):
+    shape = (6, 6, 10, 10)
+    img = brainish(shape)
+    got = PIPELINE_FNS[pipeline](img)
+    want = reference_preprocess(pipeline, img)
+    names = ("preprocessed", "mean_vol", "mask")
+    for g, w, name in zip(got, want, names):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-3, atol=5e-2,
+                        err_msg=f"{pipeline}:{name}")
+
+
+@pytest.mark.parametrize("pipeline", PIPELINES)
+@pytest.mark.parametrize("dataset", list(DATASET_SHAPES))
+def test_output_shapes(pipeline, dataset):
+    shape = DATASET_SHAPES[dataset]
+    img = brainish(shape)
+    pre, mean_vol, mask = PIPELINE_FNS[pipeline](img)
+    assert pre.shape == shape
+    assert mean_vol.shape == shape[1:]
+    assert mask.shape == shape[1:]
+    assert pre.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("pipeline", PIPELINES)
+def test_outputs_finite(pipeline):
+    img = brainish((6, 6, 10, 10))
+    for out in PIPELINE_FNS[pipeline](img):
+        assert np.isfinite(np.asarray(out)).all()
+
+
+def test_masked_pipelines_zero_background():
+    img = brainish((6, 6, 10, 10))
+    for pipeline in ("afni", "fsl"):
+        pre, _mv, mask = PIPELINE_FNS[pipeline](img)
+        outside = np.asarray(pre)[:, np.asarray(mask) == 0.0]
+        assert np.abs(outside).max() == 0.0, pipeline
+
+
+def test_spm_keeps_background():
+    img = brainish((6, 6, 10, 10))
+    pre, _mv, mask = PIPELINE_FNS["spm"](img)
+    outside = np.asarray(pre)[:, np.asarray(mask) == 0.0]
+    assert np.abs(outside).sum() > 0.0
+
+
+def test_dataset_shapes_ordered_by_size():
+    """HCP images are the largest, PREVENT-AD the smallest (Table 1)."""
+    nbytes = {d: int(np.prod(s)) * 4 for d, s in DATASET_SHAPES.items()}
+    assert nbytes["hcp"] > nbytes["ds001545"] > nbytes["prevent_ad"]
+
+
+def test_pipelines_differ():
+    img = brainish((6, 6, 10, 10))
+    outs = {p: np.asarray(PIPELINE_FNS[p](img)[0]) for p in PIPELINES}
+    assert not np.allclose(outs["afni"], outs["spm"])
+    assert not np.allclose(outs["afni"], outs["fsl"])

@@ -1,0 +1,60 @@
+"""Structural perf-model tests (DESIGN.md §7, L1 targets).
+
+interpret=True wallclock is not a TPU proxy, so the perf contract is
+structural: every artifact shape's per-grid-step working set must fit VMEM,
+and the MXU-utilisation estimate must behave sensibly as blocks grow.
+"""
+
+import importlib
+
+from compile.model import DATASET_SHAPES
+
+# `compile.kernels.__init__` re-exports the kernel *functions* under the
+# module names, so fetch the submodules explicitly.
+gaussian = importlib.import_module("compile.kernels.gaussian")
+detrend = importlib.import_module("compile.kernels.detrend")
+highpass = importlib.import_module("compile.kernels.highpass")
+normalize = importlib.import_module("compile.kernels.normalize")
+slice_timing = importlib.import_module("compile.kernels.slice_timing")
+
+VMEM_BYTES = 16 * 1024 * 1024  # v4/v5e-class VMEM per core
+
+KERNELS = {
+    "slice_timing": slice_timing.vmem_bytes,
+    "detrend": detrend.vmem_bytes,
+    "gaussian": gaussian.vmem_bytes,
+    "normalize": normalize.vmem_bytes,
+    "highpass": highpass.vmem_bytes,
+}
+
+
+def test_all_artifact_shapes_fit_vmem():
+    for dataset, shape in DATASET_SHAPES.items():
+        for name, fn in KERNELS.items():
+            assert fn(shape) < VMEM_BYTES, (dataset, name)
+
+
+def test_paper_scale_volume_fits_vmem():
+    """A 64x64x36 HCP-like frame also fits for the smoothing hot spot."""
+    assert gaussian.vmem_bytes((1, 36, 64, 64)) < VMEM_BYTES
+
+
+def test_gaussian_flops_scale_with_volume():
+    small = gaussian.flops_per_frame((1, 8, 16, 16))
+    large = gaussian.flops_per_frame((1, 16, 32, 32))
+    assert large > 8 * small  # 8x voxels and ~2x contraction length
+
+
+def test_mxu_estimate_monotone_in_block():
+    shapes = [(1, 8, 16, 16), (1, 16, 32, 32), (1, 64, 128, 128)]
+    utils = [gaussian.mxu_utilization_estimate(s) for s in shapes]
+    assert utils[0] < utils[1] < utils[2] <= 1.0
+
+
+def test_mxu_estimate_saturates_at_128():
+    assert gaussian.mxu_utilization_estimate((1, 128, 128, 128)) == 1.0
+
+
+def test_vmem_grows_with_shape():
+    for fn in KERNELS.values():
+        assert fn((16, 16, 32, 32)) > fn((8, 8, 16, 16))

@@ -1,0 +1,52 @@
+//! Shared helpers for the bench targets (plain `harness = false` mains —
+//! criterion is not in the vendored crate set, so timing is explicit).
+
+use sea::experiments::figures::CompareRow;
+use sea::experiments::report::{fmt_secs, fmt_speedup, markdown_table};
+use sea::stats;
+
+/// Print a comparison grid + summary statistics (mean speedups, t-test).
+pub fn print_grid(title: &str, reference: &str, rows: &[CompareRow]) {
+    println!("\n# {title}\n");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.label(),
+                fmt_secs(stats::mean(&r.reference)),
+                fmt_secs(stats::mean(&r.sea)),
+                fmt_speedup(r.speedup()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        markdown_table(&["cell", reference, "sea", "speedup"], &table)
+    );
+
+    let speedups: Vec<f64> = rows.iter().map(CompareRow::speedup).collect();
+    let s = stats::summarize(&speedups);
+    println!(
+        "speedups: mean {:.2}x, median {:.2}x, max {:.2}x, min {:.2}x over {} cells",
+        s.mean, s.median, s.max, s.min, s.n
+    );
+
+    // Paired samples across repeats for the paper's t-tests.
+    let all_ref: Vec<f64> = rows.iter().flat_map(|r| r.reference.clone()).collect();
+    let all_sea: Vec<f64> = rows.iter().flat_map(|r| r.sea.clone()).collect();
+    if all_ref.len() >= 2 && all_sea.len() >= 2 {
+        let t = stats::welch_t_test(&all_ref, &all_sea);
+        println!(
+            "two-sample unpaired t-test ({reference} vs sea): t={:.3}, p={:.4}",
+            t.t, t.p
+        );
+    }
+}
+
+/// Wall-clock a closure and report.
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    eprintln!("[bench] {label} took {:.1}s", t0.elapsed().as_secs_f64());
+    out
+}

@@ -1,0 +1,28 @@
+//! Figure 3: makespan Sea vs tmpfs on the production cluster, flushing
+//! disabled — the paper's overhead measurement (§2.4: p=0.9, Sea's
+//! overhead is minimal).
+
+mod common;
+
+use sea::experiments::figures::{fig3_rows, repeats};
+
+fn main() {
+    let rows = common::timed("fig3 grid", || fig3_rows(repeats()));
+    common::print_grid(
+        "Figure 3 — production cluster, Sea vs tmpfs (flushing disabled)",
+        "tmpfs",
+        &rows,
+    );
+
+    let all_ref: Vec<f64> = rows.iter().flat_map(|r| r.reference.clone()).collect();
+    let all_sea: Vec<f64> = rows.iter().flat_map(|r| r.sea.clone()).collect();
+    let t = sea::stats::welch_t_test(&all_ref, &all_sea);
+    println!(
+        "overhead verdict: p={:.3} (paper: p=0.9 — no significant difference)",
+        t.p
+    );
+    if t.p < 0.05 {
+        println!("WARNING: Sea vs tmpfs differs significantly — overhead regression?");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,43 @@
+//! Figure 5: makespan Sea vs Baseline on the production cluster with
+//! flushing enabled for all files (AFNI and SPM, as in the paper). The
+//! flush drain is part of the makespan; occasional large speedups appear
+//! when the sampled ambient load degrades Lustre (§2.5: max 11x AFNI/HCP).
+
+mod common;
+
+use sea::experiments::figures::{fig5_rows, repeats};
+
+fn main() {
+    let rows = common::timed("fig5 grid", || fig5_rows(repeats()));
+    common::print_grid(
+        "Figure 5 — production cluster, Sea vs Baseline (flushing enabled)",
+        "baseline",
+        &rows,
+    );
+    // The paper reports per-run observations: its 11x max is one baseline
+    // execution that hit a degraded Lustre vs one Sea execution that
+    // didn't. Compare per-repeat pairs, like for like.
+    let max = rows
+        .iter()
+        .map(|r| (r.max_pair_ratio(), r.label()))
+        .max_by(|a, b| a.0.total_cmp(&b.0))
+        .unwrap();
+    let min = rows
+        .iter()
+        .map(|r| (r.min_pair_ratio(), r.label()))
+        .min_by(|a, b| a.0.total_cmp(&b.0))
+        .unwrap();
+    println!(
+        "max per-run speedup {:.1}x at {} (paper: max 11x, AFNI × 1 HCP image)",
+        max.0, max.1
+    );
+    println!(
+        "worst per-run slowdown {:.2}x at {} (paper: slowdowns occur but are \
+         smaller than the speedups)",
+        min.0, min.1
+    );
+    if max.0 < 2.0 {
+        println!("WARNING: no large production speedup observed");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,147 @@
+//! Microbenchmarks of the L3 hot paths (DESIGN.md §7): interceptor call
+//! overhead, namespace resolution, flow-network recompute, simulator
+//! event throughput, flusher copy throughput.
+//!
+//! The per-call interceptor budget comes from Table 2: AFNI issues ~300k
+//! glibc calls over ~100–800 s of compute, so interception must stay well
+//! under ~1 µs/call to keep total overhead < 0.5%.
+
+use std::time::Instant;
+
+use sea::config::{ClusterConfig, DatasetKind, PipelineKind, SeaConfig, Strategy, WorkloadSpec};
+use sea::flusher::flush_pass;
+use sea::intercept::{OpenMode, SeaIo};
+use sea::namespace::clean_path;
+use sea::pathrules::{PathRules, SeaLists};
+use sea::simcore::FlowNet;
+use sea::testing::tempdir::tempdir;
+use sea::util::MIB;
+
+fn bench(label: &str, iters: u64, mut f: impl FnMut()) -> f64 {
+    // warmup
+    for _ in 0..iters.min(100) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let (value, unit) = if per < 1e-6 {
+        (per * 1e9, "ns")
+    } else if per < 1e-3 {
+        (per * 1e6, "us")
+    } else {
+        (per * 1e3, "ms")
+    };
+    println!("{label:44} {value:9.1} {unit}/op ({:.2} Mop/s)", 1e-6 / per);
+    per
+}
+
+fn main() {
+    println!("\n# L3 microbenchmarks\n");
+
+    // --- interceptor ------------------------------------------------------
+    let dir = tempdir("micro");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 4096 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .build();
+    let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+
+    let fd = sea.create("/bench/file.dat").unwrap();
+    let buf = vec![7u8; 4096];
+    let per_write = bench("intercepted 4 KiB write (tmpfs tier)", 20_000, || {
+        sea.write(fd, &buf).unwrap();
+    });
+    sea.close(fd).unwrap();
+
+    let fd = sea.open("/bench/file.dat", OpenMode::Read).unwrap();
+    let mut rbuf = vec![0u8; 4096];
+    bench("intercepted 4 KiB read (tmpfs tier)", 20_000, || {
+        sea.read(fd, &mut rbuf).unwrap();
+        sea.lseek(fd, std::io::SeekFrom::Start(0)).unwrap();
+    });
+    sea.close(fd).unwrap();
+
+    bench("stat through namespace", 100_000, || {
+        sea.stat("/bench/file.dat").unwrap();
+    });
+
+    let mut i = 0u64;
+    bench("create+close+unlink cycle", 5_000, || {
+        let p = format!("/bench/cycle-{i}");
+        i += 1;
+        let fd = sea.create(&p).unwrap();
+        sea.close(fd).unwrap();
+        sea.unlink(&p).unwrap();
+    });
+
+    // Table 2 budget check: AFNI 305k calls over 816 s compute -> per-call
+    // overhead must stay below ~1 us for <0.05% overhead.
+    let overhead_pct = per_write * 305_555.0 / 816.0 * 100.0;
+    println!(
+        "  -> AFNI/HCP budget: 305k calls at this cost = {overhead_pct:.3}% of compute"
+    );
+
+    // --- namespace / rules -------------------------------------------------
+    bench("clean_path (5 components)", 200_000, || {
+        std::hint::black_box(clean_path("/a/b/../c/./d/e"));
+    });
+
+    let rules = PathRules::parse(r".*sub-\d+/func/.*_bold\.nii(\.gz)?$\n.*\.tmp$").unwrap();
+    bench("regex list match (2 patterns)", 200_000, || {
+        std::hint::black_box(rules.matches("/ds/sub-042/func/sub-042_task-rest_bold.nii.gz"));
+    });
+
+    // --- flow network -------------------------------------------------------
+    let mut net = FlowNet::new();
+    let rids: Vec<_> = (0..75)
+        .map(|i| net.add_resource(format!("r{i}"), 1e9))
+        .collect();
+    for f in 0..60 {
+        let path = vec![rids[f % 75], rids[(f * 7 + 3) % 75]];
+        net.add_flow(1e12, path, 1.0 + (f % 8) as f64, f);
+    }
+    bench("fair-share recompute (75 res, 60 flows)", 2_000, || {
+        net.recompute();
+    });
+
+    // --- simulator event throughput -----------------------------------------
+    let cluster = ClusterConfig::dedicated();
+    let spec = WorkloadSpec::new(PipelineKind::Spm, DatasetKind::Hcp, 1)
+        .busy_writers(6)
+        .strategy(Strategy::Baseline);
+    let t0 = Instant::now();
+    let result = sea::experiments::run_cell(&cluster, &spec).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "simulator: {} events in {:.2}s = {:.0} kev/s (SPM/HCP/6bw baseline cell)",
+        result.events,
+        dt,
+        result.events as f64 / dt / 1e3
+    );
+
+    // --- flusher copy throughput --------------------------------------------
+    let dir2 = tempdir("micro-flush");
+    let cfg2 = SeaConfig::builder(dir2.subdir("mount"))
+        .cache("tmpfs", dir2.subdir("tmpfs"), 4096 * MIB)
+        .persist("lustre", dir2.subdir("lustre"), 100_000 * MIB)
+        .build();
+    let sea2 = SeaIo::mount_with(cfg2, SeaLists::flush_all(), |t| t).unwrap();
+    let fd = sea2.create("/flush/big.dat").unwrap();
+    let chunk = vec![1u8; 1 << 20];
+    for _ in 0..64 {
+        sea2.write(fd, &chunk).unwrap();
+    }
+    sea2.close(fd).unwrap();
+    let t0 = Instant::now();
+    let report = flush_pass(sea2.core(), false);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "flusher: {} MiB copied in {:.3}s = {:.0} MiB/s",
+        report.bytes_flushed >> 20,
+        dt,
+        (report.bytes_flushed >> 20) as f64 / dt
+    );
+}

@@ -1,0 +1,46 @@
+//! Table 2: pipeline execution characteristics — measured from generated
+//! traces (1 image, 1 process) against the paper's values. The traces are
+//! calibrated from this table, so this bench is the consistency check that
+//! the generator reproduces all four columns within tolerance.
+
+use sea::experiments::report::markdown_table;
+use sea::experiments::tables::table2_rows;
+
+fn main() {
+    let rows = table2_rows();
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}/{}", r.pipeline, r.dataset),
+                format!("{:.0} / {}", r.output_mb_measured, r.output_mb_paper),
+                format!("{} / {}", r.total_calls_measured, r.total_calls_paper),
+                format!("{} / {}", r.lustre_calls_measured, r.lustre_calls_paper),
+                format!("{:.1} / {:.1}", r.compute_s_measured, r.compute_s_paper),
+                format!("{:.1}%", r.worst_rel_error() * 100.0),
+            ]
+        })
+        .collect();
+    println!("\n# Table 2 — pipeline characteristics (measured / paper)\n");
+    println!(
+        "{}",
+        markdown_table(
+            &[
+                "Tool/Dataset",
+                "Output MB",
+                "Total glibc",
+                "Lustre calls",
+                "Compute s",
+                "worst err"
+            ],
+            &table
+        )
+    );
+    let worst = rows
+        .iter()
+        .map(|r| r.worst_rel_error())
+        .fold(0.0f64, f64::max);
+    println!("worst relative error across all cells: {:.1}%", worst * 100.0);
+    assert!(worst < 0.2, "trace generator drifted from Table 2");
+    println!("all cells within 20% of the paper's measurements");
+}

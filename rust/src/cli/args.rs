@@ -1,0 +1,137 @@
+//! Tiny argument parser (no `clap` in the vendored crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+    /// Option keys consumed so far (for unknown-option diagnostics).
+    known: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    args.options.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.known.push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&mut self, name: &str) -> Option<String> {
+        self.known.push(name.to_string());
+        self.options.get(name).cloned()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&mut self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    pub fn opt_or<T: std::str::FromStr>(&mut self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+
+    pub fn require(&mut self, name: &str) -> Result<String> {
+        self.opt(name)
+            .ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+
+    /// Error on unrecognised options/flags (call after all lookups).
+    pub fn finish(&self) -> Result<()> {
+        for k in self.options.keys() {
+            if !self.known.contains(k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !self.known.contains(f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let mut a = Args::parse(&argv("sim --procs 8 --flush --seed=42 extra")).unwrap();
+        assert_eq!(a.positional, vec!["sim", "extra"]);
+        assert_eq!(a.opt_or("procs", 0usize).unwrap(), 8);
+        assert!(a.flag("flush"));
+        assert_eq!(a.opt_or("seed", 0u64).unwrap(), 42);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut a = Args::parse(&argv("--bogus 1")).unwrap();
+        let _ = a.flag("known");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_required_reported() {
+        let mut a = Args::parse(&argv("run")).unwrap();
+        let err = a.require("data").unwrap_err();
+        assert!(err.to_string().contains("--data"));
+    }
+
+    #[test]
+    fn bad_parse_reported_with_context() {
+        let mut a = Args::parse(&argv("--procs banana")).unwrap();
+        let err = a.opt_or("procs", 1usize).unwrap_err();
+        assert!(err.to_string().contains("--procs"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let mut a = Args::parse(&argv("--flush --quick")).unwrap();
+        assert!(a.flag("flush"));
+        assert!(a.flag("quick"));
+    }
+}

@@ -1,0 +1,383 @@
+//! `sea` command-line interface (leader entrypoint).
+//!
+//! ```text
+//! sea sim          one simulated cell (cluster × workload), print makespan
+//! sea grid         regenerate a figure/table grid (fig2..fig5, table1/2)
+//! sea gen-dataset  write a synthetic BIDS tree with SNI1 volumes
+//! sea run          real mode: preprocess a dataset through Sea + XLA
+//! sea check        verify AOT artifacts load and execute
+//! sea help
+//! ```
+
+pub mod args;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{ClusterConfig, DatasetKind, PipelineKind, Strategy, WorkloadSpec};
+use crate::experiments::figures;
+use crate::experiments::report::{fmt_secs, fmt_speedup, markdown_table};
+use crate::experiments::tables;
+use args::Args;
+
+const HELP: &str = "\
+sea — hierarchical storage management in user space (paper reproduction)
+
+USAGE:
+  sea sim   [--cluster dedicated|beluga] --pipeline P --dataset D
+            [--procs N] [--busy N] [--strategy baseline|sea|tmpfs]
+            [--flush] [--seed N]
+  sea grid  --figure fig2|fig3|fig4|fig5|table1|table2 [--repeats N]
+  sea gen-dataset --out DIR [--dataset D] [--images N] [--seed N]
+  sea run   --data DIR --pipeline P [--dataset D] [--procs N]
+            [--throttle-mibps F] [--meta-ms N] [--strategy S] [--flush]
+            [--work DIR] [--compare]
+  sea check [--artifacts DIR]
+
+P in {afni, fsl, spm}; D in {ds001545, prevent_ad, hcp}.
+";
+
+fn parse_pipeline(s: &str) -> Result<PipelineKind> {
+    PipelineKind::parse(s).ok_or_else(|| anyhow!("unknown pipeline {s:?}"))
+}
+
+fn parse_dataset(s: &str) -> Result<DatasetKind> {
+    DatasetKind::parse(s).ok_or_else(|| anyhow!("unknown dataset {s:?}"))
+}
+
+fn parse_strategy(s: &str) -> Result<Strategy> {
+    match s.to_ascii_lowercase().as_str() {
+        "baseline" => Ok(Strategy::Baseline),
+        "sea" => Ok(Strategy::Sea),
+        "tmpfs" => Ok(Strategy::Tmpfs),
+        _ => bail!("unknown strategy {s:?}"),
+    }
+}
+
+fn parse_cluster(s: &str) -> Result<ClusterConfig> {
+    match s.to_ascii_lowercase().as_str() {
+        "dedicated" => Ok(ClusterConfig::dedicated()),
+        "beluga" | "production" => Ok(ClusterConfig::beluga()),
+        _ => bail!("unknown cluster {s:?}"),
+    }
+}
+
+fn cmd_sim(mut a: Args) -> Result<()> {
+    let cluster = parse_cluster(&a.opt("cluster").unwrap_or("dedicated".into()))?;
+    let pipeline = parse_pipeline(&a.require("pipeline")?)?;
+    let dataset = parse_dataset(&a.require("dataset")?)?;
+    let procs: usize = a.opt_or("procs", 1)?;
+    let busy: usize = a.opt_or("busy", 0)?;
+    let strategy = parse_strategy(&a.opt("strategy").unwrap_or("sea".into()))?;
+    let flush = a.flag("flush");
+    let seed: u64 = a.opt_or("seed", 0x5EA_5EED)?;
+    a.finish()?;
+
+    let spec = WorkloadSpec::new(pipeline, dataset, procs)
+        .strategy(strategy)
+        .busy_writers(busy)
+        .flush(flush)
+        .seed(seed);
+    let result = crate::experiments::run_cell(&cluster, &spec)?;
+    println!(
+        "{} on {}: makespan {} ({} events, {:.1} MB to lustre, {} stalled writes)",
+        spec.label(),
+        cluster.name,
+        fmt_secs(result.makespan),
+        result.events,
+        result.metrics.lustre_write_bytes / 1e6,
+        result.metrics.stalled_writes,
+    );
+    Ok(())
+}
+
+fn print_compare_rows(title: &str, rows: &[figures::CompareRow], reference: &str) {
+    println!("## {title}\n");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.label(),
+                fmt_secs(crate::stats::mean(&r.reference)),
+                fmt_secs(crate::stats::mean(&r.sea)),
+                fmt_speedup(r.speedup()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        markdown_table(&["cell", reference, "sea", "speedup"], &table)
+    );
+}
+
+fn cmd_grid(mut a: Args) -> Result<()> {
+    let figure = a.require("figure")?;
+    let repeats: usize = a.opt_or("repeats", figures::repeats())?;
+    a.finish()?;
+    match figure.as_str() {
+        "fig2" => {
+            let rows = figures::fig2_rows(repeats);
+            print_compare_rows(
+                "Figure 2 — dedicated cluster, Sea vs Baseline",
+                &rows,
+                "baseline",
+            );
+            let violations = figures::check_fig2_shape(&rows);
+            if violations.is_empty() {
+                println!("shape targets: all hold");
+            } else {
+                println!("shape violations: {violations:#?}");
+            }
+        }
+        "fig3" => print_compare_rows(
+            "Figure 3 — production cluster, Sea vs tmpfs (no flushing)",
+            &figures::fig3_rows(repeats),
+            "tmpfs",
+        ),
+        "fig4" => print_compare_rows(
+            "Figure 4 — production cluster, Sea vs Baseline (no flushing)",
+            &figures::fig4_rows(repeats),
+            "baseline",
+        ),
+        "fig5" => print_compare_rows(
+            "Figure 5 — production cluster, Sea vs Baseline (flushing)",
+            &figures::fig5_rows(repeats),
+            "baseline",
+        ),
+        "table1" => {
+            let rows: Vec<Vec<String>> = tables::table1_rows()
+                .iter()
+                .map(|r| {
+                    vec![
+                        r.dataset.to_string(),
+                        r.total_size_mb.to_string(),
+                        r.total_images.to_string(),
+                        r.images_per_experiment.to_string(),
+                        r.processed_mb.to_string(),
+                    ]
+                })
+                .collect();
+            println!(
+                "{}",
+                markdown_table(
+                    &["dataset", "total MB", "images", "n", "processed MB"],
+                    &rows
+                )
+            );
+        }
+        "table2" => {
+            let rows: Vec<Vec<String>> = tables::table2_rows()
+                .iter()
+                .map(|r| {
+                    vec![
+                        format!("{}/{}", r.pipeline, r.dataset),
+                        format!("{:.0} ({})", r.output_mb_measured, r.output_mb_paper),
+                        format!(
+                            "{} ({})",
+                            r.total_calls_measured, r.total_calls_paper
+                        ),
+                        format!(
+                            "{} ({})",
+                            r.lustre_calls_measured, r.lustre_calls_paper
+                        ),
+                        format!("{:.1} ({:.1})", r.compute_s_measured, r.compute_s_paper),
+                        format!("{:.1}%", r.worst_rel_error() * 100.0),
+                    ]
+                })
+                .collect();
+            println!(
+                "{}",
+                markdown_table(
+                    &[
+                        "tool/dataset",
+                        "out MB (paper)",
+                        "glibc (paper)",
+                        "lustre (paper)",
+                        "compute s (paper)",
+                        "worst err"
+                    ],
+                    &rows
+                )
+            );
+        }
+        other => bail!("unknown figure {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_gen_dataset(mut a: Args) -> Result<()> {
+    let out = a.require("out")?;
+    let dataset = parse_dataset(&a.opt("dataset").unwrap_or("prevent_ad".into()))?;
+    let images: usize = a.opt_or("images", 4)?;
+    let seed: u64 = a.opt_or("seed", 42)?;
+    a.finish()?;
+    let layout = crate::dataset::BidsLayout::scaled(dataset, images);
+    let imgs = crate::dataset::generate_bids_tree(std::path::Path::new(&out), &layout, seed)?;
+    println!("wrote {} images under {out} (shape {:?})", imgs.len(), layout.shape);
+    Ok(())
+}
+
+fn cmd_run(mut a: Args) -> Result<()> {
+    let data = a.require("data")?;
+    let pipeline = parse_pipeline(&a.require("pipeline")?)?;
+    let dataset = parse_dataset(&a.opt("dataset").unwrap_or("prevent_ad".into()))?;
+    let procs: usize = a.opt_or("procs", 1)?;
+    let throttle: Option<f64> = a.opt_parse("throttle-mibps")?;
+    let meta_ms: Option<u64> = a.opt_parse("meta-ms")?;
+    let strategy = parse_strategy(&a.opt("strategy").unwrap_or("sea".into()))?;
+    let flush = a.flag("flush");
+    let compare = a.flag("compare");
+    let work = a
+        .opt("work")
+        .unwrap_or_else(|| format!("{data}-seawork"));
+    let artifacts = a
+        .opt("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(crate::runtime::default_artifacts_dir);
+    a.finish()?;
+
+    let mut cfg = crate::pipeline::executor::RealRunConfig::new(
+        &data, &work, pipeline, dataset,
+    );
+    cfg.nprocs = procs;
+    cfg.strategy = strategy;
+    cfg.flush_all = flush;
+    cfg.lustre_bandwidth = throttle.map(|m| m * crate::util::MIB as f64);
+    cfg.lustre_meta = meta_ms.map(std::time::Duration::from_millis);
+    cfg.artifacts_dir = artifacts.clone();
+
+    let name = crate::runtime::artifact_name(pipeline, dataset);
+    let (svc, _guard) =
+        crate::runtime::ComputeService::start(&artifacts, Some(vec![name]))?;
+
+    if compare {
+        let pristine = std::path::PathBuf::from(&data);
+        let scratch = std::path::PathBuf::from(&work);
+        let cmp = crate::coordinator::compare_real(
+            &pristine,
+            &scratch,
+            &cfg,
+            Strategy::Baseline,
+            &svc,
+        )?;
+        println!(
+            "baseline {} vs sea {} -> speedup {} ({} fewer files on lustre)",
+            fmt_secs(cmp.reference.total_secs()),
+            fmt_secs(cmp.sea.total_secs()),
+            fmt_speedup(cmp.speedup()),
+            cmp.persist_files_saved(),
+        );
+    } else {
+        let report = crate::pipeline::executor::run_real(&cfg, &svc)?;
+        println!(
+            "{} images, makespan {} (+drain {}), {} glibc calls \
+             ({} to lustre), {} files on lustre",
+            report.images,
+            fmt_secs(report.makespan_secs),
+            fmt_secs(report.drain_secs),
+            report.stats.total(),
+            report.stats.persist_calls,
+            report.files_on_persist,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_check(mut a: Args) -> Result<()> {
+    let dir = a
+        .opt("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(crate::runtime::default_artifacts_dir);
+    a.finish()?;
+    let (svc, _guard) = crate::runtime::ComputeService::start(&dir, None)?;
+    let mut rng = crate::util::Rng::new(1);
+    for info in svc.artifacts()? {
+        let (_h, voxels) = crate::dataset::volume::synthetic_volume(info.shape, &mut rng);
+        let out = svc.preprocess(&info.name, voxels)?;
+        anyhow::ensure!(
+            out.preprocessed.iter().all(|v| v.is_finite()),
+            "{}: non-finite outputs",
+            info.name
+        );
+        println!("{} ok (shape {:?})", info.name, info.shape);
+    }
+    Ok(())
+}
+
+/// CLI entrypoint; returns the process exit code.
+pub fn main(argv: Vec<String>) -> Result<i32> {
+    let args = Args::parse(&argv[1.min(argv.len())..])?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let rest: Vec<String> = argv
+        .iter()
+        .skip(1)
+        .filter(|a| *a != cmd)
+        .cloned()
+        .collect();
+    let sub = Args::parse(&rest)?;
+    match cmd {
+        "sim" => cmd_sim(sub)?,
+        "grid" => cmd_grid(sub)?,
+        "gen-dataset" => cmd_gen_dataset(sub)?,
+        "run" => cmd_run(sub)?,
+        "check" => cmd_check(sub)?,
+        "help" | "--help" | "-h" => print!("{HELP}"),
+        other => {
+            eprintln!("unknown command {other:?}\n{HELP}");
+            return Ok(2);
+        }
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(cmd: &str) -> Result<i32> {
+        let argv: Vec<String> =
+            std::iter::once("sea".to_string())
+                .chain(cmd.split_whitespace().map(String::from))
+                .collect();
+        main(argv)
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert_eq!(run("help").unwrap(), 0);
+        assert_eq!(run("frobnicate").unwrap(), 2);
+    }
+
+    #[test]
+    fn sim_one_cell() {
+        assert_eq!(
+            run("sim --pipeline afni --dataset prevent_ad --procs 1 --busy 0").unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn sim_rejects_bad_pipeline() {
+        assert!(run("sim --pipeline nipype --dataset hcp").is_err());
+    }
+
+    #[test]
+    fn grid_tables_print() {
+        assert_eq!(run("grid --figure table1").unwrap(), 0);
+        assert_eq!(run("grid --figure table2").unwrap(), 0);
+    }
+
+    #[test]
+    fn gen_dataset_writes_tree() {
+        let dir = crate::testing::tempdir::tempdir("cli-gen");
+        let out = dir.path().join("ds");
+        assert_eq!(
+            run(&format!(
+                "gen-dataset --out {} --dataset ds001545 --images 2",
+                out.display()
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(out.join("sub-01/func").exists());
+    }
+}

@@ -1,0 +1,181 @@
+//! Cluster descriptions for simulation mode (paper §4.3 Infrastructure).
+//!
+//! Two presets reproduce the paper's testbeds:
+//! * [`ClusterConfig::dedicated`] — the controlled cluster: 8 compute nodes,
+//!   256 GiB RAM, 125 GiB tmpfs, CentOS 8; 4 Lustre ZFS storage nodes with
+//!   44 HDD OSTs + 1 MDS/MDT; 20 Gbps ethernet.
+//! * [`ClusterConfig::beluga`] — the production cluster: 16 usable nodes (of
+//!   977), 186 GiB RAM, 480 GiB local SSD, 2× Intel 6148 (40 cores);
+//!   100 Gbps EDR InfiniBand; Lustre scratch 2.6 PiB over 38 OSTs + 2 MDTs.
+
+use crate::util::{GB, GIB, MIB};
+#[cfg(test)]
+use crate::util::TIB;
+
+/// Lustre file-system shape + performance parameters.
+#[derive(Debug, Clone)]
+pub struct LustreParams {
+    pub n_ost: usize,
+    /// Sustained bandwidth per OST (bytes/s). HDD-backed ZFS OST ≈ 150 MB/s.
+    pub ost_bandwidth: f64,
+    pub n_mdt: usize,
+    /// Mean metadata-op service time per MDT (seconds). An idle Lustre
+    /// MDS serves RPCs in ~100–300 µs; contention effects are modelled
+    /// separately (busy-writer queueing at the OSTs).
+    pub mds_op_time: f64,
+    /// Stripe count per file (paper uses default striping = 1).
+    pub stripe_count: usize,
+}
+
+impl LustreParams {
+    pub fn aggregate_bandwidth(&self) -> f64 {
+        self.n_ost as f64 * self.ost_bandwidth
+    }
+
+    pub fn mds_ops_per_sec(&self) -> f64 {
+        self.n_mdt as f64 / self.mds_op_time
+    }
+}
+
+/// One compute node's local resources.
+#[derive(Debug, Clone)]
+pub struct NodeParams {
+    pub cores: usize,
+    pub mem_bytes: u64,
+    /// tmpfs capacity available to Sea.
+    pub tmpfs_bytes: u64,
+    /// Local SSD capacity (0 = no local disk, as on the dedicated cluster).
+    pub ssd_bytes: u64,
+    /// Memory copy bandwidth (tmpfs read/write), bytes/s.
+    pub mem_bandwidth: f64,
+    /// Local SSD bandwidth, bytes/s.
+    pub ssd_bandwidth: f64,
+    /// NIC bandwidth towards Lustre, bytes/s.
+    pub net_bandwidth: f64,
+    /// Page-cache budget for dirty data (Linux dirty limits), bytes.
+    pub dirty_limit_bytes: u64,
+}
+
+/// Whole-cluster simulation parameters.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub name: &'static str,
+    pub n_nodes: usize,
+    pub node: NodeParams,
+    pub lustre: LustreParams,
+}
+
+impl ClusterConfig {
+    /// The paper's controlled, dedicated cluster.
+    pub fn dedicated() -> Self {
+        ClusterConfig {
+            name: "dedicated",
+            n_nodes: 8,
+            node: NodeParams {
+                cores: 16,
+                mem_bytes: 256 * GIB,
+                tmpfs_bytes: 125 * GIB,
+                ssd_bytes: 0, // no compute-local disk on the dedicated cluster
+                mem_bandwidth: 4.0 * GIB as f64,
+                ssd_bandwidth: 0.0,
+                net_bandwidth: 20.0 / 8.0 * GB as f64, // 20 Gbps ethernet
+                // paper §3.2: ~100 GB of page cache for dirty data per node
+                dirty_limit_bytes: 100 * GB,
+            },
+            lustre: LustreParams {
+                n_ost: 44,
+                ost_bandwidth: 150.0 * MIB as f64, // HDD OST
+                n_mdt: 1,
+                mds_op_time: 0.25e-3,
+                stripe_count: 1,
+            },
+        }
+    }
+
+    /// The paper's production cluster (Beluga, Digital Alliance of Canada).
+    pub fn beluga() -> Self {
+        ClusterConfig {
+            name: "beluga",
+            n_nodes: 16, // "we used up to 16 general compute nodes"
+            node: NodeParams {
+                cores: 40, // 2x Intel Gold 6148
+                mem_bytes: 186 * GIB,
+                tmpfs_bytes: 93 * GIB, // tmpfs defaults to mem/2
+                ssd_bytes: 480 * GIB,
+                mem_bandwidth: 6.0 * GIB as f64,
+                ssd_bandwidth: 500.0 * MIB as f64,
+                net_bandwidth: 100.0 / 8.0 * GB as f64, // EDR InfiniBand
+                dirty_limit_bytes: 74 * GIB,            // ~40% of RAM
+            },
+            lustre: LustreParams {
+                n_ost: 38,
+                // 2.6 PiB / 38 OSTs = 69.8 TiB each; production-class targets
+                ost_bandwidth: 1.0 * GIB as f64,
+                n_mdt: 2,
+                mds_op_time: 0.1e-3,
+                stripe_count: 1,
+            },
+        }
+    }
+
+    /// Usable page cache per Lustre OST on this cluster (paper §3.2 quotes
+    /// ~44 GB dirty cache per OST on the dedicated cluster).
+    pub fn dirty_cache_per_ost(&self) -> f64 {
+        (self.n_nodes as u64 * self.node.dirty_limit_bytes) as f64
+            / self.lustre.n_ost as f64
+    }
+
+    pub fn total_tmpfs(&self) -> u64 {
+        self.n_nodes as u64 * self.node.tmpfs_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedicated_matches_paper() {
+        let c = ClusterConfig::dedicated();
+        assert_eq!(c.n_nodes, 8);
+        assert_eq!(c.lustre.n_ost, 44);
+        assert_eq!(c.lustre.n_mdt, 1);
+        assert_eq!(c.node.tmpfs_bytes, 125 * GIB);
+        assert_eq!(c.node.ssd_bytes, 0);
+    }
+
+    #[test]
+    fn beluga_matches_paper() {
+        let c = ClusterConfig::beluga();
+        assert_eq!(c.n_nodes, 16);
+        assert_eq!(c.lustre.n_ost, 38);
+        assert_eq!(c.lustre.n_mdt, 2);
+        assert_eq!(c.node.ssd_bytes, 480 * GIB);
+        // 2.6 PiB total => ~69.8 TiB per OST (sanity of the paper's numbers)
+        let per_ost = 2.6 * TIB as f64 * 1024.0 / 38.0;
+        assert!((per_ost / TIB as f64 - 69.8).abs() < 0.5);
+    }
+
+    #[test]
+    fn production_network_faster_than_dedicated() {
+        assert!(
+            ClusterConfig::beluga().node.net_bandwidth
+                > ClusterConfig::dedicated().node.net_bandwidth
+        );
+    }
+
+    #[test]
+    fn dirty_cache_per_ost_near_paper_estimate() {
+        // §3.2: "approximately 44 GB of dirty cache available per OST"
+        let got = ClusterConfig::dedicated().dirty_cache_per_ost();
+        assert!((got / 1e9 - 44.0).abs() < 30.0, "got {got}");
+    }
+
+    #[test]
+    fn aggregate_bw_positive() {
+        for c in [ClusterConfig::dedicated(), ClusterConfig::beluga()] {
+            assert!(c.lustre.aggregate_bandwidth() > 0.0);
+            assert!(c.lustre.mds_ops_per_sec() > 100.0);
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Minimal INI parser for `sea.ini` (no vendored serde/ini crate).
+//!
+//! Supports `[section]` headers, `key = value` pairs, `#`/`;` comments
+//! (full-line or trailing), blank lines, and repeated keys (last wins,
+//! except via [`Ini::get_all`] which returns every occurrence in order —
+//! used for repeated `cache = ...` lines).
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum IniError {
+    #[error("line {0}: missing ']' in section header: {1:?}")]
+    BadSection(usize, String),
+    #[error("line {0}: expected `key = value`, got {1:?}")]
+    BadPair(usize, String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Parsed INI document. Keys outside any `[section]` live in section `""`.
+#[derive(Debug, Default, Clone)]
+pub struct Ini {
+    /// section -> ordered (key, value) pairs
+    sections: BTreeMap<String, Vec<(String, String)>>,
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` or `;` starts a comment unless inside nothing fancy (no quoting
+    // in sea.ini); trailing comments require preceding whitespace so values
+    // like regexes containing '#' after non-space survive.
+    let mut prev_ws = true;
+    for (i, c) in line.char_indices() {
+        if (c == '#' || c == ';') && prev_ws {
+            return &line[..i];
+        }
+        prev_ws = c.is_whitespace();
+    }
+    line
+}
+
+impl Ini {
+    pub fn parse(text: &str) -> Result<Ini, IniError> {
+        let mut ini = Ini::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| IniError::BadSection(lineno + 1, raw.to_string()))?;
+                section = name.trim().to_string();
+                ini.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| IniError::BadPair(lineno + 1, raw.to_string()))?;
+            ini.sections
+                .entry(section.clone())
+                .or_default()
+                .push((k.trim().to_string(), v.trim().to_string()));
+        }
+        Ok(ini)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Ini, IniError> {
+        Ok(Ini::parse(&std::fs::read_to_string(path)?)?)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.contains_key(section)
+    }
+
+    /// Last value for `key` in `section`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.iter().rev().find_map(|(k, v)| {
+            (k == key).then_some(v.as_str())
+        })
+    }
+
+    /// Every value for `key` in `section`, in file order.
+    pub fn get_all(&self, section: &str, key: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|pairs| {
+                pairs
+                    .iter()
+                    .filter(|(k, _)| k == key)
+                    .map(|(_, v)| v.as_str())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// All (key, value) pairs of a section, in file order.
+    pub fn pairs(&self, section: &str) -> &[(String, String)] {
+        self.sections
+            .get(section)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, section: &str, key: &str)
+        -> Option<Result<T, T::Err>> {
+        self.get(section, key).map(str::parse)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key).map(|v| {
+            matches!(v.to_ascii_lowercase().as_str(), "1" | "true" | "yes" | "on")
+        })
+    }
+
+    pub fn set(&mut self, section: &str, key: &str, value: &str) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .push((key.to_string(), value.to_string()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Sea configuration
+mount = /scratch/user/mount
+
+[caches]
+cache = tmpfs:/dev/shm/sea:125G      ; fastest
+cache = ssd:/local/sea:480G
+persist = lustre:/scratch/user
+
+[flusher]
+interval_ms = 250
+enabled = true
+"#;
+
+    #[test]
+    fn parses_sections_and_keys() {
+        let ini = Ini::parse(SAMPLE).unwrap();
+        assert_eq!(ini.get("", "mount"), Some("/scratch/user/mount"));
+        assert_eq!(ini.get("flusher", "interval_ms"), Some("250"));
+        assert_eq!(ini.get_bool("flusher", "enabled"), Some(true));
+    }
+
+    #[test]
+    fn repeated_keys_kept_in_order() {
+        let ini = Ini::parse(SAMPLE).unwrap();
+        let caches = ini.get_all("caches", "cache");
+        assert_eq!(caches.len(), 2);
+        assert!(caches[0].starts_with("tmpfs:"));
+        assert!(caches[1].starts_with("ssd:"));
+        // `get` returns the last occurrence
+        assert_eq!(ini.get("caches", "cache"), Some("ssd:/local/sea:480G"));
+    }
+
+    #[test]
+    fn trailing_comments_stripped() {
+        let ini = Ini::parse("k = v  ; note\n").unwrap();
+        assert_eq!(ini.get("", "k"), Some("v"));
+    }
+
+    #[test]
+    fn hash_inside_value_survives() {
+        let ini = Ini::parse("re = .*sub-\\d+#1.*\n").unwrap();
+        assert_eq!(ini.get("", "re"), Some(".*sub-\\d+#1.*"));
+    }
+
+    #[test]
+    fn bad_section_rejected() {
+        assert!(matches!(
+            Ini::parse("[oops\n"),
+            Err(IniError::BadSection(1, _))
+        ));
+    }
+
+    #[test]
+    fn bad_pair_rejected() {
+        assert!(matches!(
+            Ini::parse("[s]\njust a line\n"),
+            Err(IniError::BadPair(2, _))
+        ));
+    }
+
+    #[test]
+    fn empty_and_missing_lookups() {
+        let ini = Ini::parse("").unwrap();
+        assert_eq!(ini.get("x", "y"), None);
+        assert!(ini.get_all("x", "y").is_empty());
+    }
+
+    #[test]
+    fn get_parsed_types() {
+        let ini = Ini::parse("[a]\nn = 42\nf = 2.5\n").unwrap();
+        assert_eq!(ini.get_parsed::<u32>("a", "n").unwrap().unwrap(), 42);
+        assert_eq!(ini.get_parsed::<f64>("a", "f").unwrap().unwrap(), 2.5);
+        assert!(ini.get_parsed::<u32>("a", "f").unwrap().is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Configuration: `sea.ini` parsing, cluster presets, workload grid.
+
+pub mod cluster;
+pub mod ini;
+pub mod sea;
+pub mod workload;
+
+pub use cluster::{ClusterConfig, LustreParams, NodeParams};
+pub use ini::Ini;
+pub use sea::{CacheDef, SeaConfig, SeaConfigError};
+pub use workload::{DatasetKind, PipelineKind, Strategy, WorkloadSpec};

@@ -1,0 +1,284 @@
+//! `sea.ini` — the user-facing Sea configuration (paper §2.1).
+//!
+//! The file tells Sea which storage locations it may use, their priority
+//! order, the mountpoint, and where the flush/evict/prefetch list files
+//! live. Example mirroring the paper's setup:
+//!
+//! ```ini
+//! mount = /tmp/sea/mount
+//!
+//! [caches]
+//! cache   = tmpfs:/dev/shm/sea:125G      # priority 0 (fastest)
+//! cache   = ssd:/local/sea:480G          # priority 1
+//! persist = lustre:/scratch/user/out     # long-term shared storage
+//!
+//! [lists]
+//! flushlist    = .sea_flushlist
+//! evictlist    = .sea_evictlist
+//! prefetchlist = .sea_prefetchlist
+//!
+//! [flusher]
+//! enabled     = true
+//! interval_ms = 200
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use thiserror::Error;
+
+use super::ini::{Ini, IniError};
+use crate::util::parse_bytes;
+
+#[derive(Debug, Error)]
+pub enum SeaConfigError {
+    #[error(transparent)]
+    Ini(#[from] IniError),
+    #[error("missing required key {0:?}")]
+    Missing(&'static str),
+    #[error("bad cache spec {0:?} (want name:path:capacity)")]
+    BadCacheSpec(String),
+    #[error("{0}")]
+    BadValue(String),
+}
+
+/// One cache (fast storage Sea may redirect to). Priority = declaration
+/// order, 0 fastest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheDef {
+    pub name: String,
+    pub root: PathBuf,
+    pub capacity: u64,
+}
+
+/// Parsed `sea.ini`.
+#[derive(Debug, Clone)]
+pub struct SeaConfig {
+    /// The empty-directory view through which applications address files.
+    pub mountpoint: PathBuf,
+    /// Caches in priority order (index 0 = fastest, tried first on write).
+    pub caches: Vec<CacheDef>,
+    /// Persistent shared storage (the paper's Lustre) — flush target and
+    /// final fallthrough when every cache is full.
+    pub persist: CacheDef,
+    pub flushlist: PathBuf,
+    pub evictlist: PathBuf,
+    pub prefetchlist: PathBuf,
+    pub flusher_enabled: bool,
+    pub flusher_interval_ms: u64,
+    /// Copy-loop buffer size for flusher/prefetcher transfers.
+    pub copy_buf_bytes: usize,
+}
+
+fn parse_cache_spec(spec: &str) -> Result<CacheDef, SeaConfigError> {
+    let parts: Vec<&str> = spec.splitn(3, ':').collect();
+    if parts.len() != 3 {
+        return Err(SeaConfigError::BadCacheSpec(spec.to_string()));
+    }
+    let capacity = parse_bytes(parts[2])
+        .map_err(|e| SeaConfigError::BadValue(format!("{spec:?}: {e}")))?;
+    Ok(CacheDef {
+        name: parts[0].to_string(),
+        root: PathBuf::from(parts[1]),
+        capacity,
+    })
+}
+
+impl SeaConfig {
+    pub fn parse(text: &str) -> Result<SeaConfig, SeaConfigError> {
+        let ini = Ini::parse(text)?;
+        let mountpoint = ini
+            .get("", "mount")
+            .ok_or(SeaConfigError::Missing("mount"))?
+            .into();
+        let caches = ini
+            .get_all("caches", "cache")
+            .into_iter()
+            .map(parse_cache_spec)
+            .collect::<Result<Vec<_>, _>>()?;
+        let persist = parse_cache_spec(
+            ini.get("caches", "persist")
+                .ok_or(SeaConfigError::Missing("caches.persist"))?,
+        )?;
+        let list = |key: &str, default: &str| -> PathBuf {
+            ini.get("lists", key).unwrap_or(default).into()
+        };
+        Ok(SeaConfig {
+            mountpoint,
+            caches,
+            persist,
+            flushlist: list("flushlist", ".sea_flushlist"),
+            evictlist: list("evictlist", ".sea_evictlist"),
+            prefetchlist: list("prefetchlist", ".sea_prefetchlist"),
+            flusher_enabled: ini.get_bool("flusher", "enabled").unwrap_or(true),
+            flusher_interval_ms: ini
+                .get_parsed("flusher", "interval_ms")
+                .transpose()
+                .map_err(|e| SeaConfigError::BadValue(format!("interval_ms: {e}")))?
+                .unwrap_or(200),
+            copy_buf_bytes: ini
+                .get("flusher", "copy_buf")
+                .map(|v| {
+                    parse_bytes(v)
+                        .map(|b| b as usize)
+                        .map_err(SeaConfigError::BadValue)
+                })
+                .transpose()?
+                .unwrap_or(1 << 20),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<SeaConfig, SeaConfigError> {
+        Ok(SeaConfig::parse(&std::fs::read_to_string(path).map_err(IniError::Io)?)?)
+    }
+
+    /// Programmatic construction for tests/examples: tiers fastest-first,
+    /// last entry is the persistent store.
+    pub fn builder(mountpoint: impl Into<PathBuf>) -> SeaConfigBuilder {
+        SeaConfigBuilder {
+            mountpoint: mountpoint.into(),
+            caches: Vec::new(),
+            persist: None,
+            flusher_enabled: true,
+            flusher_interval_ms: 200,
+        }
+    }
+
+    /// Total cache capacity (excluding persistent storage).
+    pub fn cache_capacity(&self) -> u64 {
+        self.caches.iter().map(|c| c.capacity).sum()
+    }
+}
+
+/// Builder used by examples and tests.
+#[derive(Debug)]
+pub struct SeaConfigBuilder {
+    mountpoint: PathBuf,
+    caches: Vec<CacheDef>,
+    persist: Option<CacheDef>,
+    flusher_enabled: bool,
+    flusher_interval_ms: u64,
+}
+
+impl SeaConfigBuilder {
+    pub fn cache(mut self, name: &str, root: impl Into<PathBuf>, capacity: u64) -> Self {
+        self.caches.push(CacheDef {
+            name: name.to_string(),
+            root: root.into(),
+            capacity,
+        });
+        self
+    }
+
+    pub fn persist(mut self, name: &str, root: impl Into<PathBuf>, capacity: u64) -> Self {
+        self.persist = Some(CacheDef {
+            name: name.to_string(),
+            root: root.into(),
+            capacity,
+        });
+        self
+    }
+
+    pub fn flusher(mut self, enabled: bool, interval_ms: u64) -> Self {
+        self.flusher_enabled = enabled;
+        self.flusher_interval_ms = interval_ms;
+        self
+    }
+
+    pub fn build(self) -> SeaConfig {
+        SeaConfig {
+            mountpoint: self.mountpoint,
+            persist: self.persist.expect("builder: persist tier required"),
+            caches: self.caches,
+            flushlist: ".sea_flushlist".into(),
+            evictlist: ".sea_evictlist".into(),
+            prefetchlist: ".sea_prefetchlist".into(),
+            flusher_enabled: self.flusher_enabled,
+            flusher_interval_ms: self.flusher_interval_ms,
+            copy_buf_bytes: 1 << 20,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::GIB;
+
+    const SAMPLE: &str = r#"
+mount = /tmp/sea/mount
+[caches]
+cache   = tmpfs:/dev/shm/sea:125G
+cache   = ssd:/local/sea:480G
+persist = lustre:/scratch/user/out:2.6T
+[lists]
+flushlist = /etc/sea/.sea_flushlist
+[flusher]
+enabled = false
+interval_ms = 50
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = SeaConfig::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.mountpoint, PathBuf::from("/tmp/sea/mount"));
+        assert_eq!(cfg.caches.len(), 2);
+        assert_eq!(cfg.caches[0].name, "tmpfs");
+        assert_eq!(cfg.caches[0].capacity, 125 * GIB);
+        assert_eq!(cfg.persist.name, "lustre");
+        assert_eq!(cfg.flushlist, PathBuf::from("/etc/sea/.sea_flushlist"));
+        assert_eq!(cfg.evictlist, PathBuf::from(".sea_evictlist")); // default
+        assert!(!cfg.flusher_enabled);
+        assert_eq!(cfg.flusher_interval_ms, 50);
+    }
+
+    #[test]
+    fn priority_is_declaration_order() {
+        let cfg = SeaConfig::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.caches[0].name, "tmpfs");
+        assert_eq!(cfg.caches[1].name, "ssd");
+    }
+
+    #[test]
+    fn missing_mount_rejected() {
+        let err = SeaConfig::parse("[caches]\npersist = l:/x:1G\n").unwrap_err();
+        assert!(matches!(err, SeaConfigError::Missing("mount")));
+    }
+
+    #[test]
+    fn missing_persist_rejected() {
+        let err = SeaConfig::parse("mount = /m\n").unwrap_err();
+        assert!(matches!(err, SeaConfigError::Missing("caches.persist")));
+    }
+
+    #[test]
+    fn bad_cache_spec_rejected() {
+        let err =
+            SeaConfig::parse("mount=/m\n[caches]\ncache = nope\npersist=l:/x:1G\n")
+                .unwrap_err();
+        assert!(matches!(err, SeaConfigError::BadCacheSpec(_)));
+    }
+
+    #[test]
+    fn builder_round_trip() {
+        let cfg = SeaConfig::builder("/mnt")
+            .cache("tmpfs", "/dev/shm/s", GIB)
+            .cache("ssd", "/local/s", 4 * GIB)
+            .persist("lustre", "/lus", 100 * GIB)
+            .flusher(true, 100)
+            .build();
+        assert_eq!(cfg.cache_capacity(), 5 * GIB);
+        assert_eq!(cfg.caches[0].name, "tmpfs");
+        assert_eq!(cfg.flusher_interval_ms, 100);
+    }
+
+    #[test]
+    fn zero_caches_is_valid_baseline() {
+        // Sea with no caches degenerates to pass-through (the Baseline).
+        let cfg = SeaConfig::parse(
+            "mount=/m\n[caches]\npersist = lustre:/lus:1T\n",
+        )
+        .unwrap();
+        assert!(cfg.caches.is_empty());
+        assert_eq!(cfg.cache_capacity(), 0);
+    }
+}

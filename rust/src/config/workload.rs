@@ -1,0 +1,218 @@
+//! Workload specification: which pipeline × dataset × parallelism × load.
+//!
+//! Mirrors the paper's experimental grid (§4.2–4.3): pipelines {AFNI, FSL
+//! Feat, SPM} × datasets {ds001545, PREVENT-AD, HCP} × {1, 8, 16} processes
+//! × {0, 6} busy-writer nodes, Sea vs Baseline, flushing on/off.
+
+use std::fmt;
+
+/// The three toolboxes benchmarked by the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PipelineKind {
+    Afni,
+    FslFeat,
+    Spm,
+}
+
+impl PipelineKind {
+    pub const ALL: [PipelineKind; 3] =
+        [PipelineKind::Afni, PipelineKind::FslFeat, PipelineKind::Spm];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PipelineKind::Afni => "afni",
+            PipelineKind::FslFeat => "fsl",
+            PipelineKind::Spm => "spm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "afni" => Some(PipelineKind::Afni),
+            "fsl" | "feat" | "fsl-feat" | "fslfeat" => Some(PipelineKind::FslFeat),
+            "spm" => Some(PipelineKind::Spm),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for PipelineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The three fMRI datasets (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DatasetKind {
+    Ds001545,
+    PreventAd,
+    Hcp,
+}
+
+impl DatasetKind {
+    pub const ALL: [DatasetKind; 3] =
+        [DatasetKind::Ds001545, DatasetKind::PreventAd, DatasetKind::Hcp];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DatasetKind::Ds001545 => "ds001545",
+            DatasetKind::PreventAd => "prevent_ad",
+            DatasetKind::Hcp => "hcp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "ds001545" => Some(DatasetKind::Ds001545),
+            "prevent_ad" | "preventad" => Some(DatasetKind::PreventAd),
+            "hcp" => Some(DatasetKind::Hcp),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DatasetKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Storage strategy under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// All I/O directly on Lustre (through the page cache).
+    Baseline,
+    /// Sea redirection with the configured cache hierarchy.
+    Sea,
+    /// Everything in tmpfs, no flushing — the overhead yardstick (Fig 3).
+    Tmpfs,
+}
+
+impl Strategy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Strategy::Baseline => "baseline",
+            Strategy::Sea => "sea",
+            Strategy::Tmpfs => "tmpfs",
+        }
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One experimental cell.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub pipeline: PipelineKind,
+    pub dataset: DatasetKind,
+    /// Concurrent application processes, one image each (paper: 1, 8, 16).
+    pub nprocs: usize,
+    /// Busy-writer nodes degrading Lustre (paper: 0 or 6).
+    pub busy_writer_nodes: usize,
+    pub strategy: Strategy,
+    /// Flush all outputs to persistent storage (production experiments).
+    pub flush_enabled: bool,
+    /// Prefetch inputs into the fastest cache (paper: SPM only).
+    pub prefetch_enabled: bool,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    pub fn new(pipeline: PipelineKind, dataset: DatasetKind, nprocs: usize) -> Self {
+        WorkloadSpec {
+            pipeline,
+            dataset,
+            nprocs,
+            busy_writer_nodes: 0,
+            strategy: Strategy::Sea,
+            flush_enabled: false,
+            // the paper always prefetches for SPM (memmap input updates)
+            prefetch_enabled: pipeline == PipelineKind::Spm,
+            seed: 0x5EA_5EED,
+        }
+    }
+
+    pub fn strategy(mut self, s: Strategy) -> Self {
+        self.strategy = s;
+        self
+    }
+
+    pub fn busy_writers(mut self, nodes: usize) -> Self {
+        self.busy_writer_nodes = nodes;
+        self
+    }
+
+    pub fn flush(mut self, enabled: bool) -> Self {
+        self.flush_enabled = enabled;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Label used in reports: `spm/hcp p=16 bw=6 sea`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{} p={} bw={} {}{}",
+            self.pipeline,
+            self.dataset,
+            self.nprocs,
+            self.busy_writer_nodes,
+            self.strategy,
+            if self.flush_enabled { "+flush" } else { "" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        for p in PipelineKind::ALL {
+            assert_eq!(PipelineKind::parse(p.as_str()), Some(p));
+        }
+        for d in DatasetKind::ALL {
+            assert_eq!(DatasetKind::parse(d.as_str()), Some(d));
+        }
+        assert_eq!(PipelineKind::parse("FEAT"), Some(PipelineKind::FslFeat));
+        assert_eq!(DatasetKind::parse("PREVENT-AD"), Some(DatasetKind::PreventAd));
+        assert_eq!(PipelineKind::parse("nipype"), None);
+    }
+
+    #[test]
+    fn spm_defaults_to_prefetch() {
+        assert!(WorkloadSpec::new(PipelineKind::Spm, DatasetKind::Hcp, 1)
+            .prefetch_enabled);
+        assert!(!WorkloadSpec::new(PipelineKind::Afni, DatasetKind::Hcp, 1)
+            .prefetch_enabled);
+    }
+
+    #[test]
+    fn label_is_informative() {
+        let w = WorkloadSpec::new(PipelineKind::Spm, DatasetKind::Hcp, 16)
+            .strategy(Strategy::Sea)
+            .busy_writers(6)
+            .flush(true);
+        assert_eq!(w.label(), "spm/hcp p=16 bw=6 sea+flush");
+    }
+
+    #[test]
+    fn builder_chains() {
+        let w = WorkloadSpec::new(PipelineKind::Afni, DatasetKind::Ds001545, 8)
+            .strategy(Strategy::Baseline)
+            .busy_writers(6)
+            .seed(99);
+        assert_eq!(w.strategy, Strategy::Baseline);
+        assert_eq!(w.busy_writer_nodes, 6);
+        assert_eq!(w.seed, 99);
+    }
+}

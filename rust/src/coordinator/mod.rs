@@ -1,0 +1,157 @@
+//! Experiment coordination (the leader): runs strategy comparisons on
+//! identical fresh copies of a dataset, both in real mode and across
+//! simulated grids, and assembles comparison reports.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::Strategy;
+use crate::pipeline::executor::{run_real, RealRunConfig, RealRunReport};
+use crate::runtime::ComputeService;
+
+/// Sea vs reference comparison on the same workload.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub reference_strategy: Strategy,
+    pub reference: RealRunReport,
+    pub sea: RealRunReport,
+}
+
+impl Comparison {
+    /// Baseline-makespan over Sea-makespan (the paper's speedup).
+    pub fn speedup(&self) -> f64 {
+        self.reference.total_secs() / self.sea.total_secs()
+    }
+
+    /// Files the reference put on Lustre minus Sea's (quota saving, §3.6).
+    pub fn persist_files_saved(&self) -> i64 {
+        self.reference.files_on_persist as i64 - self.sea.files_on_persist as i64
+    }
+}
+
+fn copy_tree(from: &Path, to: &Path) -> std::io::Result<()> {
+    std::fs::create_dir_all(to)?;
+    let mut stack = vec![from.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for e in std::fs::read_dir(&dir)?.flatten() {
+            let p = e.path();
+            let rel = p.strip_prefix(from).unwrap();
+            let dst = to.join(rel);
+            if p.is_dir() {
+                std::fs::create_dir_all(&dst)?;
+                stack.push(p);
+            } else {
+                if let Some(parent) = dst.parent() {
+                    std::fs::create_dir_all(parent)?;
+                }
+                std::fs::copy(&p, &dst)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run `strategy` on a *fresh copy* of the pristine dataset (runs mutate
+/// their data root: baselines write derivatives, flushes copy outputs).
+pub fn run_on_fresh_copy(
+    pristine: &Path,
+    scratch: &Path,
+    base_cfg: &RealRunConfig,
+    strategy: Strategy,
+    svc: &ComputeService,
+) -> Result<RealRunReport> {
+    let tag = strategy.as_str();
+    let data: PathBuf = scratch.join(format!("data-{tag}"));
+    let work: PathBuf = scratch.join(format!("work-{tag}"));
+    copy_tree(pristine, &data)?;
+    let mut cfg = base_cfg.clone();
+    cfg.data_root = data;
+    cfg.work_root = work;
+    cfg.strategy = strategy;
+    run_real(&cfg, svc)
+}
+
+/// Compare Sea against `reference` on identical copies of the dataset.
+pub fn compare_real(
+    pristine: &Path,
+    scratch: &Path,
+    base_cfg: &RealRunConfig,
+    reference: Strategy,
+    svc: &ComputeService,
+) -> Result<Comparison> {
+    let reference_report =
+        run_on_fresh_copy(pristine, scratch, base_cfg, reference, svc)?;
+    let sea_report =
+        run_on_fresh_copy(pristine, scratch, base_cfg, Strategy::Sea, svc)?;
+    Ok(Comparison {
+        reference_strategy: reference,
+        reference: reference_report,
+        sea: sea_report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetKind, PipelineKind};
+    use crate::dataset::bids::{generate_bids_tree, BidsLayout};
+    use crate::runtime::artifact_name;
+    use crate::testing::tempdir::tempdir;
+    use crate::util::MIB;
+
+    fn have_artifacts() -> bool {
+        crate::runtime::default_artifacts_dir()
+            .join("manifest.tsv")
+            .exists()
+    }
+
+    #[test]
+    fn comparison_on_throttled_lustre_favours_sea() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let dir = tempdir("coord");
+        let pristine = dir.subdir("pristine");
+        generate_bids_tree(
+            &pristine,
+            &BidsLayout::scaled(DatasetKind::PreventAd, 2),
+            3,
+        )
+        .unwrap();
+        let mut cfg = RealRunConfig::new(
+            &pristine, // replaced per run
+            dir.subdir("unused"),
+            PipelineKind::Afni,
+            DatasetKind::PreventAd,
+        );
+        cfg.nprocs = 2;
+        cfg.cache_capacity = 64 * MIB;
+        // degraded "Lustre": 2 MiB/s + 3 ms per metadata op
+        cfg.lustre_bandwidth = Some(2.0 * MIB as f64);
+        cfg.lustre_meta = Some(std::time::Duration::from_millis(3));
+        let (svc, _guard) = ComputeService::start(
+            &cfg.artifacts_dir,
+            Some(vec![artifact_name(cfg.pipeline, cfg.dataset)]),
+        )
+        .unwrap();
+        let cmp = compare_real(
+            &pristine,
+            dir.path(),
+            &cfg,
+            Strategy::Baseline,
+            &svc,
+        )
+        .unwrap();
+        assert!(
+            cmp.speedup() > 1.5,
+            "speedup={:.2} (base {:.2}s sea {:.2}s)",
+            cmp.speedup(),
+            cmp.reference.total_secs(),
+            cmp.sea.total_secs()
+        );
+        // Sea without flushing leaves fewer files on Lustre.
+        assert!(cmp.persist_files_saved() > 0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Synthetic BIDS-like dataset trees for real-mode experiments.
+//!
+//! Mirrors the layout of the paper's datasets (BIDS: `sub-XX[/ses-YY]/func/
+//! sub-XX_task-rest_bold` plus JSON sidecars) at laptop scale, with image
+//! files in the SNI1 volume format so the XLA runtime can actually
+//! preprocess them.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use super::volume::{synthetic_volume, write_volume};
+use crate::config::DatasetKind;
+use crate::util::Rng;
+
+/// Shape of a generated tree.
+#[derive(Debug, Clone)]
+pub struct BidsLayout {
+    pub dataset: DatasetKind,
+    pub n_subjects: usize,
+    pub sessions_per_subject: usize,
+    /// Volume shape per image, (T, Z, Y, X).
+    pub shape: (usize, usize, usize, usize),
+    /// Emit JSON sidecars (doubles the file count, like real BIDS).
+    pub sidecars: bool,
+}
+
+impl BidsLayout {
+    /// Scaled-down layout for `dataset` with `n_images` functional images.
+    pub fn scaled(dataset: DatasetKind, n_images: usize) -> BidsLayout {
+        let spec = super::DatasetSpec::catalog(dataset);
+        BidsLayout {
+            dataset,
+            n_subjects: n_images,
+            sessions_per_subject: 1,
+            shape: spec.artifact_shape,
+            sidecars: true,
+        }
+    }
+
+    pub fn n_images(&self) -> usize {
+        self.n_subjects * self.sessions_per_subject
+    }
+}
+
+/// One generated image's paths.
+#[derive(Debug, Clone)]
+pub struct BidsImage {
+    /// Logical path relative to the dataset root (absolute, `/sub-01/...`).
+    pub logical: String,
+    pub subject: usize,
+    pub session: usize,
+}
+
+/// Write the tree under `root`; returns the images in generation order.
+pub fn generate_bids_tree(
+    root: &Path,
+    layout: &BidsLayout,
+    seed: u64,
+) -> std::io::Result<Vec<BidsImage>> {
+    let mut rng = Rng::new(seed);
+    let mut images = Vec::new();
+    for subj in 1..=layout.n_subjects {
+        for ses in 1..=layout.sessions_per_subject {
+            let rel = if layout.sessions_per_subject > 1 {
+                format!("sub-{subj:02}/ses-{ses:02}/func")
+            } else {
+                format!("sub-{subj:02}/func")
+            };
+            let dir = root.join(&rel);
+            std::fs::create_dir_all(&dir)?;
+            let stem = format!("sub-{subj:02}_task-rest_bold");
+            let img_path: PathBuf = dir.join(format!("{stem}.sni"));
+            let (header, voxels) = synthetic_volume(layout.shape, &mut rng);
+            let f = std::fs::File::create(&img_path)?;
+            write_volume(std::io::BufWriter::new(f), header, &voxels)?;
+            if layout.sidecars {
+                let mut side = std::fs::File::create(dir.join(format!("{stem}.json")))?;
+                writeln!(
+                    side,
+                    "{{\"RepetitionTime\": 2.0, \"TaskName\": \"rest\", \
+                     \"Dataset\": \"{}\", \"SliceTiming\": \"interleaved\"}}",
+                    layout.dataset
+                )?;
+            }
+            images.push(BidsImage {
+                logical: format!("/{rel}/{stem}.sni"),
+                subject: subj,
+                session: ses,
+            });
+        }
+    }
+    Ok(images)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::volume::read_volume;
+    use crate::testing::tempdir::tempdir;
+
+    #[test]
+    fn tree_structure_and_count() {
+        let dir = tempdir("bids");
+        let layout = BidsLayout::scaled(DatasetKind::PreventAd, 3);
+        let images = generate_bids_tree(dir.path(), &layout, 42).unwrap();
+        assert_eq!(images.len(), 3);
+        for img in &images {
+            let p = dir.path().join(img.logical.trim_start_matches('/'));
+            assert!(p.exists(), "{p:?}");
+            let (h, v) = read_volume(std::fs::File::open(&p).unwrap()).unwrap();
+            assert_eq!(h.shape(), layout.shape);
+            assert!(!v.is_empty());
+            // sidecar next to it
+            assert!(p.with_extension("json").exists());
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let d1 = tempdir("bids-a");
+        let d2 = tempdir("bids-b");
+        let layout = BidsLayout::scaled(DatasetKind::Ds001545, 2);
+        generate_bids_tree(d1.path(), &layout, 7).unwrap();
+        generate_bids_tree(d2.path(), &layout, 7).unwrap();
+        let img = "sub-01/func/sub-01_task-rest_bold.sni";
+        let a = std::fs::read(d1.path().join(img)).unwrap();
+        let b = std::fs::read(d2.path().join(img)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn multi_session_layout() {
+        let dir = tempdir("bids-ses");
+        let layout = BidsLayout {
+            dataset: DatasetKind::Hcp,
+            n_subjects: 2,
+            sessions_per_subject: 2,
+            shape: (2, 2, 4, 4),
+            sidecars: false,
+        };
+        let images = generate_bids_tree(dir.path(), &layout, 1).unwrap();
+        assert_eq!(images.len(), 4);
+        assert!(images[0].logical.contains("/ses-01/"));
+        assert!(dir
+            .path()
+            .join("sub-02/ses-02/func/sub-02_task-rest_bold.sni")
+            .exists());
+    }
+}

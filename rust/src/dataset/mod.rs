@@ -1,0 +1,142 @@
+//! Datasets: the paper's Table 1 catalog + synthetic BIDS generation.
+//!
+//! Simulation mode uses the catalog numbers directly (full scale).
+//! Real mode generates scaled-down but structurally faithful BIDS trees
+//! with our raw-volume image format ("SNI1") that the XLA runtime can
+//! load, preprocess and write back.
+
+pub mod bids;
+pub mod volume;
+
+pub use bids::{generate_bids_tree, BidsLayout};
+pub use volume::{read_volume, volume_bytes, write_volume, VolumeHeader};
+
+use crate::config::DatasetKind;
+use crate::util::MB;
+
+/// Table 1 row (plus per-image input size used throughout the paper).
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub kind: DatasetKind,
+    /// Table 1 "Total Size (MB)".
+    pub total_size_mb: u64,
+    /// Table 1 "Total Number of images" (files).
+    pub total_images: u64,
+    /// Table 1 "Total compressed size processed (MB)" per experiment size.
+    /// Index = experiment parallelism {1, 8, 16}.
+    pub processed_mb: [(usize, u64); 3],
+    /// Artifact shape (T, Z, Y, X) the AOT model was lowered for.
+    pub artifact_shape: (usize, usize, usize, usize),
+}
+
+impl DatasetSpec {
+    pub fn catalog(kind: DatasetKind) -> DatasetSpec {
+        match kind {
+            DatasetKind::PreventAd => DatasetSpec {
+                kind,
+                total_size_mb: 289_532,
+                total_images: 53_061,
+                processed_mb: [(1, 52), (8, 402), (16, 732)],
+                artifact_shape: (8, 8, 16, 16),
+            },
+            DatasetKind::Ds001545 => DatasetSpec {
+                kind,
+                total_size_mb: 27_377,
+                total_images: 1_778,
+                processed_mb: [(1, 282), (8, 2_115), (16, 4_167)],
+                artifact_shape: (12, 12, 24, 24),
+            },
+            DatasetKind::Hcp => DatasetSpec {
+                kind,
+                total_size_mb: 83_140_079,
+                total_images: 15_716_060,
+                processed_mb: [(1, 1_301), (8, 5_998), (16, 8_328)],
+                artifact_shape: (16, 16, 32, 32),
+            },
+        }
+    }
+
+    pub fn all() -> Vec<DatasetSpec> {
+        DatasetKind::ALL.iter().map(|k| Self::catalog(*k)).collect()
+    }
+
+    /// Compressed input bytes processed by a single process in an
+    /// `nprocs`-way experiment (Table 1 interpolated per process).
+    pub fn input_bytes_per_image(&self, nprocs: usize) -> u64 {
+        // exact Table 1 cells for 1/8/16; otherwise scale from the nearest
+        let total_mb = self
+            .processed_mb
+            .iter()
+            .find(|(n, _)| *n == nprocs)
+            .map(|(_, mb)| *mb)
+            .unwrap_or_else(|| {
+                // linear interp on per-image size between known points
+                let per1 = self.processed_mb[0].1 as f64;
+                let per16 =
+                    self.processed_mb[2].1 as f64 / self.processed_mb[2].0 as f64;
+                let f = (nprocs.min(16) as f64 - 1.0) / 15.0;
+                ((per1 * (1.0 - f) + per16 * f) * nprocs as f64) as u64
+            });
+        total_mb * MB / nprocs.max(1) as u64
+    }
+
+    /// Mean image file size in the full dataset (for file-count arguments).
+    pub fn mean_file_size(&self) -> u64 {
+        self.total_size_mb * MB / self.total_images.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_matches_table1() {
+        let hcp = DatasetSpec::catalog(DatasetKind::Hcp);
+        assert_eq!(hcp.total_size_mb, 83_140_079);
+        assert_eq!(hcp.total_images, 15_716_060);
+        assert_eq!(hcp.processed_mb[0], (1, 1_301));
+        let pad = DatasetSpec::catalog(DatasetKind::PreventAd);
+        assert_eq!(pad.total_images, 53_061);
+        assert_eq!(pad.processed_mb[2], (16, 732));
+        let ds = DatasetSpec::catalog(DatasetKind::Ds001545);
+        assert_eq!(ds.processed_mb[1], (8, 2_115));
+    }
+
+    #[test]
+    fn per_image_bytes_match_table1_cells() {
+        let hcp = DatasetSpec::catalog(DatasetKind::Hcp);
+        assert_eq!(hcp.input_bytes_per_image(1), 1_301 * MB);
+        assert_eq!(hcp.input_bytes_per_image(8), 5_998 * MB / 8);
+        assert_eq!(hcp.input_bytes_per_image(16), 8_328 * MB / 16);
+    }
+
+    #[test]
+    fn hcp_images_are_largest_per_image() {
+        // §2.2: speedups ordered by image size HCP > ds001545 > PREVENT-AD
+        let per_image = |k: DatasetKind| {
+            DatasetSpec::catalog(k).input_bytes_per_image(1)
+        };
+        assert!(per_image(DatasetKind::Hcp) > per_image(DatasetKind::Ds001545));
+        assert!(
+            per_image(DatasetKind::Ds001545) > per_image(DatasetKind::PreventAd)
+        );
+    }
+
+    #[test]
+    fn interpolation_monotone_for_other_sizes() {
+        let ds = DatasetSpec::catalog(DatasetKind::Ds001545);
+        let b4 = ds.input_bytes_per_image(4);
+        assert!(b4 <= ds.input_bytes_per_image(1));
+        assert!(b4 > 0);
+    }
+
+    #[test]
+    fn mean_file_sizes_sane() {
+        for spec in DatasetSpec::all() {
+            let m = spec.mean_file_size();
+            assert!(m > 1_000, "{:?}: {m}", spec.kind);
+            assert!(m < 100 * MB, "{:?}: {m}", spec.kind);
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! "SNI1" raw volume format: the minimal NIfTI-like container real-mode
+//! pipelines read and write.
+//!
+//! Layout: 32-byte header (magic `SNI1`, u32 dims T/Z/Y/X, u32 dtype tag,
+//! u32 reserved ×2) followed by little-endian f32 voxels in (T,Z,Y,X)
+//! C-order. The Rust runtime reads these into XLA literals and writes
+//! preprocessed results back in the same container.
+
+use std::io::{Read, Write};
+
+pub const MAGIC: [u8; 4] = *b"SNI1";
+pub const HEADER_BYTES: usize = 32;
+const DTYPE_F32: u32 = 1;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VolumeHeader {
+    pub t: u32,
+    pub z: u32,
+    pub y: u32,
+    pub x: u32,
+}
+
+impl VolumeHeader {
+    pub fn voxels(&self) -> usize {
+        self.t as usize * self.z as usize * self.y as usize * self.x as usize
+    }
+
+    pub fn data_bytes(&self) -> usize {
+        self.voxels() * 4
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize, usize) {
+        (self.t as usize, self.z as usize, self.y as usize, self.x as usize)
+    }
+}
+
+/// Total file size of a volume with shape (t, z, y, x).
+pub fn volume_bytes(shape: (usize, usize, usize, usize)) -> u64 {
+    (HEADER_BYTES + shape.0 * shape.1 * shape.2 * shape.3 * 4) as u64
+}
+
+/// Serialise header + voxels to a writer.
+pub fn write_volume<W: Write>(
+    mut w: W,
+    header: VolumeHeader,
+    voxels: &[f32],
+) -> std::io::Result<()> {
+    assert_eq!(voxels.len(), header.voxels(), "voxel count mismatch");
+    let mut head = [0u8; HEADER_BYTES];
+    head[..4].copy_from_slice(&MAGIC);
+    head[4..8].copy_from_slice(&header.t.to_le_bytes());
+    head[8..12].copy_from_slice(&header.z.to_le_bytes());
+    head[12..16].copy_from_slice(&header.y.to_le_bytes());
+    head[16..20].copy_from_slice(&header.x.to_le_bytes());
+    head[20..24].copy_from_slice(&DTYPE_F32.to_le_bytes());
+    w.write_all(&head)?;
+    // bulk-convert voxels to LE bytes
+    let mut buf = Vec::with_capacity(voxels.len() * 4);
+    for v in voxels {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+fn bad(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Deserialise a volume from a reader.
+pub fn read_volume<R: Read>(mut r: R) -> std::io::Result<(VolumeHeader, Vec<f32>)> {
+    let mut head = [0u8; HEADER_BYTES];
+    r.read_exact(&mut head)?;
+    if head[..4] != MAGIC {
+        return Err(bad("not an SNI1 volume (bad magic)"));
+    }
+    let rd = |i: usize| u32::from_le_bytes(head[i..i + 4].try_into().unwrap());
+    let header = VolumeHeader {
+        t: rd(4),
+        z: rd(8),
+        y: rd(12),
+        x: rd(16),
+    };
+    if rd(20) != DTYPE_F32 {
+        return Err(bad("unsupported dtype"));
+    }
+    if header.voxels() == 0 || header.voxels() > (1 << 28) {
+        return Err(bad("implausible dimensions"));
+    }
+    let mut buf = vec![0u8; header.data_bytes()];
+    r.read_exact(&mut buf)?;
+    let voxels = buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((header, voxels))
+}
+
+/// Generate a brain-ish synthetic volume (bright ellipsoid + noise +
+/// slow temporal drift), matching what the Python tests use.
+pub fn synthetic_volume(
+    shape: (usize, usize, usize, usize),
+    rng: &mut crate::util::Rng,
+) -> (VolumeHeader, Vec<f32>) {
+    let (t, z, y, x) = shape;
+    let header = VolumeHeader {
+        t: t as u32,
+        z: z as u32,
+        y: y as u32,
+        x: x as u32,
+    };
+    let mut voxels = Vec::with_capacity(header.voxels());
+    for ti in 0..t {
+        let drift = 10.0 * ti as f64 / t.max(1) as f64;
+        for zi in 0..z {
+            let zz = 2.0 * zi as f64 / (z.max(2) - 1) as f64 - 1.0;
+            for yi in 0..y {
+                let yy = 2.0 * yi as f64 / (y.max(2) - 1) as f64 - 1.0;
+                for xi in 0..x {
+                    let xx = 2.0 * xi as f64 / (x.max(2) - 1) as f64 - 1.0;
+                    let inside = zz * zz + yy * yy + xx * xx < 0.8;
+                    let base = if inside { 500.0 + drift } else { 0.0 };
+                    voxels.push((base + rng.normal_scaled(0.0, 5.0)).max(0.0) as f32);
+                }
+            }
+        }
+    }
+    (header, voxels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn round_trip() {
+        let mut rng = Rng::new(1);
+        let (h, v) = synthetic_volume((4, 4, 8, 8), &mut rng);
+        let mut buf = Vec::new();
+        write_volume(&mut buf, h, &v).unwrap();
+        assert_eq!(buf.len() as u64, volume_bytes((4, 4, 8, 8)));
+        let (h2, v2) = read_volume(&buf[..]).unwrap();
+        assert_eq!(h, h2);
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = vec![0u8; 64];
+        assert!(read_volume(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut rng = Rng::new(2);
+        let (h, v) = synthetic_volume((2, 2, 4, 4), &mut rng);
+        let mut buf = Vec::new();
+        write_volume(&mut buf, h, &v).unwrap();
+        buf.truncate(buf.len() - 10);
+        assert!(read_volume(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn synthetic_volume_is_brainish() {
+        let mut rng = Rng::new(3);
+        let (h, v) = synthetic_volume((2, 8, 16, 16), &mut rng);
+        // centre voxel bright, corner dark
+        let idx = |t: usize, z: usize, y: usize, x: usize| {
+            ((t * h.z as usize + z) * h.y as usize + y) * h.x as usize + x
+        };
+        assert!(v[idx(0, 4, 8, 8)] > 300.0);
+        assert!(v[idx(0, 0, 0, 0)] < 100.0);
+        assert!(v.iter().all(|x| x.is_finite() && *x >= 0.0));
+    }
+
+    #[test]
+    fn prop_round_trip_any_shape() {
+        crate::testing::check_n(24, |g| {
+            let shape = (
+                g.usize_in(1, 6),
+                g.usize_in(1, 6),
+                g.usize_in(1, 10),
+                g.usize_in(1, 10),
+            );
+            let mut rng = Rng::new(g.u64_in(0, u64::MAX - 1));
+            let (h, v) = synthetic_volume(shape, &mut rng);
+            let mut buf = Vec::new();
+            write_volume(&mut buf, h, &v).map_err(|e| e.to_string())?;
+            let (h2, v2) = read_volume(&buf[..]).map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(h.shape(), h2.shape());
+            crate::prop_assert!(v == v2, "voxels differ");
+            Ok(())
+        });
+    }
+}

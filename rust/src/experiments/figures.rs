@@ -1,0 +1,374 @@
+//! Grid definitions for every figure in the paper's evaluation.
+//!
+//! * **Fig 2** — dedicated cluster, Sea vs Baseline, {0, 6} busy writers,
+//!   3 pipelines × 3 datasets × {1, 8, 16} processes.
+//! * **Fig 3** — production cluster, Sea vs tmpfs, flushing disabled.
+//! * **Fig 4** — production cluster, Sea vs Baseline, flushing disabled,
+//!   ambient (sampled) background load.
+//! * **Fig 5** — production cluster, Sea vs Baseline, flushing enabled
+//!   (AFNI and SPM, as in the paper).
+//!
+//! Each `rows()` replays the full grid on the simulator and returns one
+//! row per cell; the bench targets print them and EXPERIMENTS.md records
+//! paper-vs-measured.
+
+use crate::config::{
+    ClusterConfig, DatasetKind, PipelineKind, Strategy, WorkloadSpec,
+};
+use crate::experiments::runner::run_cell;
+use crate::util::Rng;
+
+/// One (cell, strategy-pair) comparison row.
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    pub pipeline: PipelineKind,
+    pub dataset: DatasetKind,
+    pub nprocs: usize,
+    pub busy_writers: usize,
+    pub flush: bool,
+    /// Makespans per repeat (seconds) for the reference strategy.
+    pub reference: Vec<f64>,
+    /// Makespans per repeat for Sea.
+    pub sea: Vec<f64>,
+}
+
+impl CompareRow {
+    pub fn speedup(&self) -> f64 {
+        crate::stats::mean(&self.reference) / crate::stats::mean(&self.sea)
+    }
+
+    /// Largest per-repeat (baseline_i / sea_i) ratio — the paper reports
+    /// per-run observations ("the maximum speedup observed was ...").
+    pub fn max_pair_ratio(&self) -> f64 {
+        self.reference
+            .iter()
+            .zip(&self.sea)
+            .map(|(r, s)| r / s)
+            .fold(0.0, f64::max)
+    }
+
+    /// Smallest per-repeat ratio (Sea's occasional slowdowns).
+    pub fn min_pair_ratio(&self) -> f64 {
+        self.reference
+            .iter()
+            .zip(&self.sea)
+            .map(|(r, s)| r / s)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn label(&self) -> String {
+        let bw = if self.busy_writers == usize::MAX {
+            "ambient".to_string()
+        } else {
+            self.busy_writers.to_string()
+        };
+        format!(
+            "{}/{} p={} bw={}{}",
+            self.pipeline,
+            self.dataset,
+            self.nprocs,
+            bw,
+            if self.flush { " +flush" } else { "" }
+        )
+    }
+}
+
+pub const PROCS: [usize; 3] = [1, 8, 16];
+
+/// Repeats per cell (`SEA_BENCH_REPEATS` overrides; quick mode = 1).
+pub fn repeats() -> usize {
+    std::env::var("SEA_BENCH_REPEATS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2)
+}
+
+fn run_pair(
+    cluster: &ClusterConfig,
+    base_spec: &WorkloadSpec,
+    reference: Strategy,
+    n_repeats: usize,
+) -> CompareRow {
+    let mut ref_runs = Vec::new();
+    let mut sea_runs = Vec::new();
+    for rep in 0..n_repeats {
+        let seed = 0x5EA0 + rep as u64 * 7919;
+        let r = run_cell(
+            cluster,
+            &base_spec.clone().strategy(reference).seed(seed),
+        )
+        .expect("reference run");
+        let s = run_cell(
+            cluster,
+            &base_spec.clone().strategy(Strategy::Sea).seed(seed),
+        )
+        .expect("sea run");
+        ref_runs.push(r.makespan);
+        sea_runs.push(s.makespan);
+    }
+    CompareRow {
+        pipeline: base_spec.pipeline,
+        dataset: base_spec.dataset,
+        nprocs: base_spec.nprocs,
+        busy_writers: base_spec.busy_writer_nodes,
+        flush: base_spec.flush_enabled,
+        reference: ref_runs,
+        sea: sea_runs,
+    }
+}
+
+/// Figure 2: the controlled-cluster grid.
+pub fn fig2_rows(n_repeats: usize) -> Vec<CompareRow> {
+    let cluster = ClusterConfig::dedicated();
+    let mut rows = Vec::new();
+    for busy in [0usize, 6] {
+        for pipeline in PipelineKind::ALL {
+            for dataset in DatasetKind::ALL {
+                for nprocs in PROCS {
+                    let spec = WorkloadSpec::new(pipeline, dataset, nprocs)
+                        .busy_writers(busy);
+                    rows.push(run_pair(&cluster, &spec, Strategy::Baseline, n_repeats));
+                }
+            }
+        }
+    }
+    rows
+}
+
+/// Figure 3: Sea vs tmpfs on the production cluster (overhead check).
+pub fn fig3_rows(n_repeats: usize) -> Vec<CompareRow> {
+    let cluster = ClusterConfig::beluga();
+    let mut rows = Vec::new();
+    for pipeline in PipelineKind::ALL {
+        for dataset in DatasetKind::ALL {
+            for nprocs in PROCS {
+                let spec = WorkloadSpec::new(pipeline, dataset, nprocs);
+                rows.push(run_pair(&cluster, &spec, Strategy::Tmpfs, n_repeats));
+            }
+        }
+    }
+    rows
+}
+
+/// Ambient production load profile: calm most of the time, moderately
+/// loaded sometimes, occasionally badly degraded (the paper's §2.5
+/// "highly variable" environment — up to 900 of Beluga's 977 nodes may be
+/// hammering 38 OSTs, so the heavy level exceeds the dedicated cluster's
+/// controlled 6 nodes). Runs cycle through the profile *stratified* so
+/// the grid deterministically covers every condition.
+pub const AMBIENT_PROFILE: [usize; 4] = [0, 0, 6, 60];
+
+#[allow(dead_code)] // kept for randomized (non-stratified) studies
+fn ambient_busy_nodes(rng: &mut Rng) -> usize {
+    *rng.choice(&AMBIENT_PROFILE)
+}
+
+/// Production comparison: every individual run sees its *own* ambient
+/// load — Sea and Baseline executions happen at different times and find
+/// different cluster states, which is how the paper gets both occasional
+/// large speedups and occasional Sea slowdowns on the shared cluster.
+/// Baseline and Sea walk the profile with different offsets (their
+/// submission times differ); `jitter` desynchronises cells.
+fn run_ambient_pair(
+    cluster: &ClusterConfig,
+    base_spec: &WorkloadSpec,
+    n_repeats: usize,
+    rng: &mut Rng,
+) -> CompareRow {
+    let mut ref_runs = Vec::new();
+    let mut sea_runs = Vec::new();
+    let jitter = rng.usize_in(0, AMBIENT_PROFILE.len() - 1);
+    for rep in 0..n_repeats {
+        let seed = 0xBE1A + rep as u64 * 6151;
+        let base_load = AMBIENT_PROFILE[(jitter + rep) % AMBIENT_PROFILE.len()];
+        let sea_load = AMBIENT_PROFILE[(jitter + rep + 1) % AMBIENT_PROFILE.len()];
+        let r = run_cell(
+            cluster,
+            &base_spec
+                .clone()
+                .strategy(Strategy::Baseline)
+                .busy_writers(base_load)
+                .seed(seed),
+        )
+        .expect("baseline run");
+        let s = run_cell(
+            cluster,
+            &base_spec
+                .clone()
+                .strategy(Strategy::Sea)
+                .busy_writers(sea_load)
+                .seed(seed),
+        )
+        .expect("sea run");
+        ref_runs.push(r.makespan);
+        sea_runs.push(s.makespan);
+    }
+    CompareRow {
+        pipeline: base_spec.pipeline,
+        dataset: base_spec.dataset,
+        nprocs: base_spec.nprocs,
+        busy_writers: usize::MAX, // ambient: varies per run
+        flush: base_spec.flush_enabled,
+        reference: ref_runs,
+        sea: sea_runs,
+    }
+}
+
+/// Figure 4: production cluster, Sea vs Baseline, flushing disabled.
+pub fn fig4_rows(n_repeats: usize) -> Vec<CompareRow> {
+    let cluster = ClusterConfig::beluga();
+    let mut rng = Rng::new(0xBE1);
+    let mut rows = Vec::new();
+    for pipeline in PipelineKind::ALL {
+        for dataset in DatasetKind::ALL {
+            for nprocs in PROCS {
+                let spec = WorkloadSpec::new(pipeline, dataset, nprocs);
+                rows.push(run_ambient_pair(&cluster, &spec, n_repeats, &mut rng));
+            }
+        }
+    }
+    rows
+}
+
+/// Figure 5: production cluster, flushing enabled (AFNI + SPM, per paper).
+pub fn fig5_rows(n_repeats: usize) -> Vec<CompareRow> {
+    let cluster = ClusterConfig::beluga();
+    let mut rng = Rng::new(0xBE5);
+    let mut rows = Vec::new();
+    for pipeline in [PipelineKind::Afni, PipelineKind::Spm] {
+        for dataset in DatasetKind::ALL {
+            for nprocs in PROCS {
+                let spec =
+                    WorkloadSpec::new(pipeline, dataset, nprocs).flush(true);
+                rows.push(run_ambient_pair(&cluster, &spec, n_repeats, &mut rng));
+            }
+        }
+    }
+    rows
+}
+
+/// Paper-shape assertions shared by the benches and the test suite:
+/// returns human-readable violations (empty = all shape targets hold).
+pub fn check_fig2_shape(rows: &[CompareRow]) -> Vec<String> {
+    let mut violations = Vec::new();
+    let cell = |p: PipelineKind, d: DatasetKind, n: usize, b: usize| {
+        rows.iter()
+            .find(|r| {
+                r.pipeline == p && r.dataset == d && r.nprocs == n && r.busy_writers == b
+            })
+            .map(CompareRow::speedup)
+    };
+    // Headline: SPM/HCP/1proc/6bw is the biggest speedup in the grid.
+    if let Some(headline) = cell(PipelineKind::Spm, DatasetKind::Hcp, 1, 6) {
+        if headline < 5.0 {
+            violations.push(format!("headline SPM/HCP speedup too small: {headline:.2}"));
+        }
+        for r in rows {
+            if r.speedup() > headline + 1e-9 {
+                violations.push(format!(
+                    "{} speedup {:.2} exceeds headline {:.2}",
+                    r.label(),
+                    r.speedup(),
+                    headline
+                ));
+            }
+        }
+    }
+    // Without busy writers, Sea ≈ Baseline everywhere (within 25%).
+    for r in rows.iter().filter(|r| r.busy_writers == 0) {
+        let s = r.speedup();
+        if !(0.75..=1.4).contains(&s) {
+            violations.push(format!("{}: no-writer speedup {s:.2} not ≈1", r.label()));
+        }
+    }
+    // FSL benefits least among pipelines (averaged over its cells).
+    let mean_speedup = |p: PipelineKind| {
+        let v: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.pipeline == p && r.busy_writers == 6)
+            .map(CompareRow::speedup)
+            .collect();
+        crate::stats::mean(&v)
+    };
+    let fsl = mean_speedup(PipelineKind::FslFeat);
+    if mean_speedup(PipelineKind::Spm) <= fsl || mean_speedup(PipelineKind::Afni) <= fsl
+    {
+        violations.push(format!("FSL (avg {fsl:.2}) is not the smallest beneficiary"));
+    }
+    // Speedups shrink with parallelism for the headline pipeline.
+    if let (Some(p1), Some(p16)) = (
+        cell(PipelineKind::Spm, DatasetKind::Hcp, 1, 6),
+        cell(PipelineKind::Spm, DatasetKind::Hcp, 16, 6),
+    ) {
+        if p16 > p1 {
+            violations.push(format!(
+                "parallelism did not shrink SPM/HCP speedup: p1={p1:.2} p16={p16:.2}"
+            ));
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_singleproc_slice_has_paper_shape() {
+        // Run the 1-process slice of Fig 2 (fast) and check shape targets.
+        let cluster = ClusterConfig::dedicated();
+        let mut rows = Vec::new();
+        for busy in [0usize, 6] {
+            for pipeline in PipelineKind::ALL {
+                for dataset in DatasetKind::ALL {
+                    let spec =
+                        WorkloadSpec::new(pipeline, dataset, 1).busy_writers(busy);
+                    rows.push(run_pair(&cluster, &spec, Strategy::Baseline, 1));
+                }
+            }
+        }
+        // headline + neutrality + FSL-least checks on the slice
+        let violations: Vec<String> = check_fig2_shape(&rows)
+            .into_iter()
+            // parallelism check not applicable to the 1-proc slice
+            .filter(|v| !v.contains("parallelism"))
+            .collect();
+        assert!(violations.is_empty(), "{violations:#?}");
+    }
+
+    #[test]
+    fn fig3_sea_matches_tmpfs() {
+        // Overhead check on a fast subset: Sea within 10% of tmpfs.
+        let cluster = ClusterConfig::beluga();
+        for pipeline in PipelineKind::ALL {
+            let spec = WorkloadSpec::new(pipeline, DatasetKind::PreventAd, 1);
+            let row = run_pair(&cluster, &spec, Strategy::Tmpfs, 1);
+            let s = row.speedup();
+            assert!((0.9..=1.1).contains(&s), "{}: {s}", row.label());
+        }
+    }
+
+    #[test]
+    fn ambient_load_is_mostly_calm() {
+        let mut rng = Rng::new(1);
+        let samples: Vec<usize> = (0..300).map(|_| ambient_busy_nodes(&mut rng)).collect();
+        let calm = samples.iter().filter(|&&b| b == 0).count();
+        assert!(calm > 100, "calm={calm}");
+        assert!(samples.iter().any(|&b| b >= 6));
+    }
+
+    #[test]
+    fn compare_row_helpers() {
+        let row = CompareRow {
+            pipeline: PipelineKind::Spm,
+            dataset: DatasetKind::Hcp,
+            nprocs: 1,
+            busy_writers: 6,
+            flush: true,
+            reference: vec![100.0, 110.0],
+            sea: vec![10.0, 11.0],
+        };
+        assert!((row.speedup() - 10.0).abs() < 1e-9);
+        assert_eq!(row.label(), "spm/hcp p=1 bw=6 +flush");
+    }
+}

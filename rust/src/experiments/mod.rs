@@ -1,0 +1,12 @@
+//! Experiment harness: one module per paper figure/table (DESIGN.md §5).
+//!
+//! Each figure module exposes a `rows()` function the corresponding
+//! `cargo bench` target calls to regenerate the paper's series; the
+//! benches print the rows and EXPERIMENTS.md records paper-vs-measured.
+
+pub mod figures;
+pub mod report;
+pub mod tables;
+pub mod runner;
+
+pub use runner::{run_cell, RunResult};

@@ -1,0 +1,63 @@
+//! Report formatting: markdown tables for the bench targets.
+
+/// Render rows as a GitHub-flavoured markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push('|');
+    for h in headers {
+        out.push_str(&format!(" {h} |"));
+    }
+    out.push('\n');
+    out.push('|');
+    for _ in headers {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push('|');
+        for cell in row {
+            out.push_str(&format!(" {cell} |"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// `12.3x` style speedup formatting.
+pub fn fmt_speedup(s: f64) -> String {
+    format!("{s:.2}x")
+}
+
+/// `1h23m` / `45.2s` humanised seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 3600.0 {
+        format!("{:.0}h{:02.0}m", (s / 3600.0).floor(), (s % 3600.0) / 60.0)
+    } else if s >= 120.0 {
+        format!("{:.1}m", s / 60.0)
+    } else {
+        format!("{s:.1}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let t = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("| a |"));
+        assert!(lines[1].starts_with("|---|"));
+        assert!(lines[2].contains("| 1 |"));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_speedup(12.345), "12.35x");
+        assert_eq!(fmt_secs(45.23), "45.2s");
+        assert_eq!(fmt_secs(300.0), "5.0m");
+        assert_eq!(fmt_secs(7260.0), "2h01m");
+    }
+}

@@ -1,0 +1,139 @@
+//! Simulation-mode cell runner: assemble a cluster + workload, run it,
+//! return the makespan and metrics.
+
+use crate::config::{ClusterConfig, Strategy, WorkloadSpec};
+use crate::lustre::{BusyWriterActor, ClusterRes};
+use crate::pagecache::{SimWorld, WritebackActor};
+use crate::pipeline::sim_actor::{ProcActor, SeaFlusherActor};
+use crate::pipeline::trace::generate_trace;
+use crate::simcore::{Engine, SimError};
+use crate::util::Rng;
+
+/// Outcome of one simulated experiment cell.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub makespan: f64,
+    pub metrics: crate::pagecache::SimMetrics,
+    pub events: u64,
+}
+
+/// Run one (cluster, workload) cell to completion on the virtual clock.
+pub fn run_cell(cluster: &ClusterConfig, spec: &WorkloadSpec) -> Result<RunResult, SimError> {
+    let mut engine: Engine<SimWorld> = Engine::new();
+    let res = ClusterRes::build(&mut engine, cluster, spec.busy_writer_nodes);
+
+    // Background load degrading Lustre.
+    BusyWriterActor::spawn_nodes(&mut engine, &res.busy_net, &res.osts);
+
+    // Kernel writeback daemons (page-cache drain) per application node.
+    for node in 0..cluster.n_nodes {
+        engine.add_daemon(Box::new(WritebackActor::new(
+            node,
+            res.node_net[node],
+            res.osts.clone(),
+        )));
+    }
+
+    // Application processes, one image each.
+    let mut rng = Rng::new(spec.seed);
+    for p in 0..spec.nprocs {
+        let trace = generate_trace(
+            spec.pipeline,
+            spec.dataset,
+            spec.nprocs,
+            p,
+            &mut rng.fork(p as u64),
+        );
+        engine.add_actor(Box::new(ProcActor::new(
+            trace,
+            res.clone(),
+            spec.strategy,
+            spec.prefetch_enabled,
+            p,
+        )));
+    }
+
+    let mut world = SimWorld::new(cluster, spec.strategy, spec.nprocs, spec.seed ^ 0xF1);
+    world.set_busy_writers(spec.busy_writer_nodes, cluster.lustre.n_ost);
+    world.flush_enabled = spec.flush_enabled && spec.strategy == Strategy::Sea;
+    if world.flush_enabled {
+        // flushing-enabled runs include the final drain in the makespan
+        engine.add_actor(Box::new(SeaFlusherActor::new(res)));
+    }
+
+    let makespan = engine.run(&mut world)?;
+    Ok(RunResult {
+        makespan,
+        metrics: world.metrics,
+        events: engine.events_processed(),
+    })
+}
+
+/// Makespans for the same cell under two strategies; speedup = a/b.
+pub fn speedup(
+    cluster: &ClusterConfig,
+    spec: &WorkloadSpec,
+    baseline: Strategy,
+    test: Strategy,
+) -> Result<(RunResult, RunResult, f64), SimError> {
+    let base = run_cell(cluster, &spec.clone().strategy(baseline))?;
+    let sea = run_cell(cluster, &spec.clone().strategy(test))?;
+    let s = base.makespan / sea.makespan;
+    Ok((base, sea, s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetKind, PipelineKind};
+
+    fn spec(p: PipelineKind, d: DatasetKind, n: usize) -> WorkloadSpec {
+        WorkloadSpec::new(p, d, n)
+    }
+
+    #[test]
+    fn cell_runs_and_reports() {
+        let cluster = ClusterConfig::dedicated();
+        let r = run_cell(
+            &cluster,
+            &spec(PipelineKind::Afni, DatasetKind::PreventAd, 1),
+        )
+        .unwrap();
+        assert!(r.makespan > 0.0);
+        assert!(r.events > 0);
+    }
+
+    #[test]
+    fn spm_hcp_degraded_speedup_is_large() {
+        // The paper's headline cell: SPM × HCP × 1 proc × 6 busy writers.
+        let cluster = ClusterConfig::dedicated();
+        let w = spec(PipelineKind::Spm, DatasetKind::Hcp, 1).busy_writers(6);
+        let (_b, _s, speedup) =
+            super::speedup(&cluster, &w, Strategy::Baseline, Strategy::Sea).unwrap();
+        assert!(speedup > 3.0, "speedup={speedup}");
+    }
+
+    #[test]
+    fn no_busy_writers_sea_is_neutral() {
+        // §2.3: without degradation, Sea ≈ Baseline.
+        let cluster = ClusterConfig::dedicated();
+        let w = spec(PipelineKind::Afni, DatasetKind::Ds001545, 1);
+        let (_b, _s, sp) =
+            super::speedup(&cluster, &w, Strategy::Baseline, Strategy::Sea).unwrap();
+        assert!(sp > 0.8 && sp < 2.0, "speedup={sp}");
+    }
+
+    #[test]
+    fn fsl_benefits_least() {
+        let cluster = ClusterConfig::dedicated();
+        let sp_of = |p| {
+            let w = spec(p, DatasetKind::PreventAd, 1).busy_writers(6);
+            super::speedup(&cluster, &w, Strategy::Baseline, Strategy::Sea)
+                .unwrap()
+                .2
+        };
+        let fsl = sp_of(PipelineKind::FslFeat);
+        let spm = sp_of(PipelineKind::Spm);
+        assert!(spm > fsl, "spm={spm} fsl={fsl}");
+    }
+}

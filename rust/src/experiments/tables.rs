@@ -1,0 +1,138 @@
+//! Table 1 and Table 2 regeneration.
+//!
+//! Table 1 (dataset characteristics) comes from the dataset catalog +
+//! generator; Table 2 (pipeline execution characteristics) is *measured*
+//! by replaying each generated trace through the call-accounting used in
+//! Baseline mode and comparing against the paper's numbers. The traces
+//! are calibrated from the same table, so this is a consistency check of
+//! the trace generator (documented as such in EXPERIMENTS.md), plus the
+//! compute/output columns that flow into every figure.
+
+use crate::config::{DatasetKind, PipelineKind};
+use crate::dataset::DatasetSpec;
+use crate::pipeline::profiles::PipelineProfile;
+use crate::pipeline::trace::generate_trace;
+use crate::util::Rng;
+
+/// One Table 1 row (per dataset × experiment size).
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub dataset: DatasetKind,
+    pub total_size_mb: u64,
+    pub total_images: u64,
+    pub images_per_experiment: usize,
+    pub processed_mb: u64,
+}
+
+pub fn table1_rows() -> Vec<Table1Row> {
+    let mut rows = Vec::new();
+    for spec in DatasetSpec::all() {
+        for (n, mb) in spec.processed_mb {
+            rows.push(Table1Row {
+                dataset: spec.kind,
+                total_size_mb: spec.total_size_mb,
+                total_images: spec.total_images,
+                images_per_experiment: n,
+                processed_mb: mb,
+            });
+        }
+    }
+    rows
+}
+
+/// One Table 2 row: measured (from the trace) vs paper.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub pipeline: PipelineKind,
+    pub dataset: DatasetKind,
+    pub output_mb_measured: f64,
+    pub output_mb_paper: u64,
+    pub total_calls_measured: u64,
+    pub total_calls_paper: u64,
+    pub lustre_calls_measured: u64,
+    pub lustre_calls_paper: u64,
+    pub compute_s_measured: f64,
+    pub compute_s_paper: f64,
+}
+
+impl Table2Row {
+    /// Worst relative error across the four measured columns.
+    pub fn worst_rel_error(&self) -> f64 {
+        let rel = |got: f64, want: f64| ((got - want) / want).abs();
+        [
+            rel(self.output_mb_measured, self.output_mb_paper as f64),
+            rel(
+                self.total_calls_measured as f64,
+                self.total_calls_paper as f64,
+            ),
+            rel(
+                self.lustre_calls_measured as f64,
+                self.lustre_calls_paper as f64,
+            ),
+            rel(self.compute_s_measured, self.compute_s_paper),
+        ]
+        .into_iter()
+        .fold(0.0, f64::max)
+    }
+}
+
+pub fn table2_rows() -> Vec<Table2Row> {
+    let mut rows = Vec::new();
+    for profile in PipelineProfile::all() {
+        let mut rng = Rng::new(0x7AB1E2);
+        let trace = generate_trace(profile.pipeline, profile.dataset, 1, 0, &mut rng);
+        rows.push(Table2Row {
+            pipeline: profile.pipeline,
+            dataset: profile.dataset,
+            output_mb_measured: trace.output_bytes() as f64 / 1e6,
+            output_mb_paper: profile.output_mb,
+            total_calls_measured: trace.total_calls(),
+            total_calls_paper: profile.total_glibc_calls,
+            lustre_calls_measured: trace.dataset_calls(),
+            lustre_calls_paper: profile.lustre_calls,
+            compute_s_measured: trace.compute_secs(),
+            compute_s_paper: profile.compute_secs,
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_nine_rows_matching_catalog() {
+        let rows = table1_rows();
+        assert_eq!(rows.len(), 9);
+        let hcp16 = rows
+            .iter()
+            .find(|r| r.dataset == DatasetKind::Hcp && r.images_per_experiment == 16)
+            .unwrap();
+        assert_eq!(hcp16.processed_mb, 8_328);
+        assert_eq!(hcp16.total_images, 15_716_060);
+    }
+
+    #[test]
+    fn table2_within_twenty_percent_everywhere() {
+        for row in table2_rows() {
+            assert!(
+                row.worst_rel_error() < 0.2,
+                "{}/{}: {:.1}%",
+                row.pipeline,
+                row.dataset,
+                row.worst_rel_error() * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn table2_compute_column_within_jitter() {
+        // exact modulo the modelled ±2% run-to-run compute noise
+        for row in table2_rows() {
+            let rel = (row.compute_s_measured - row.compute_s_paper).abs()
+                / row.compute_s_paper;
+            assert!(rel < 0.07, "{}/{}: {rel}", row.pipeline, row.dataset);
+        }
+    }
+}

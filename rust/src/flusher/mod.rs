@@ -1,0 +1,431 @@
+//! Background data-management threads (paper §2.1, §3.4).
+//!
+//! The **flusher** moves data from caches to persistent storage without
+//! interrupting ongoing processing: a separate thread periodically scans
+//! for dirty files matching `.sea_flushlist` regexes and copies them to
+//! the persistent tier. Files matching both flush and evict lists are
+//! **moved** (flushed once, cache copy dropped). Files matching only the
+//! evict list are cache-only scratch: they are deleted at drain time and
+//! *never* reach Lustre — the mechanism behind the paper's §3.6 quota
+//! argument. Unmount drains: everything flush-listed is persisted before
+//! the session ends (the paper's production "flushing enabled" runs
+//! include this in the makespan).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::SeaConfig;
+use crate::intercept::{CallStats, SeaCore, SeaError, SeaIo};
+use crate::pathrules::{Disposition, SeaLists};
+use crate::tiers::Tier;
+
+/// What one flusher pass (or a drain) accomplished.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct FlushReport {
+    /// Files copied to the persistent tier (replica kept in cache).
+    pub flushed: usize,
+    /// Files moved (flushed + cache copy dropped).
+    pub moved: usize,
+    /// Cache-only files evicted without ever being persisted.
+    pub evicted: usize,
+    pub bytes_flushed: u64,
+    pub errors: usize,
+}
+
+impl FlushReport {
+    pub fn merge(&mut self, other: &FlushReport) {
+        self.flushed += other.flushed;
+        self.moved += other.moved;
+        self.evicted += other.evicted;
+        self.bytes_flushed += other.bytes_flushed;
+        self.errors += other.errors;
+    }
+}
+
+/// One synchronous flusher pass over the namespace.
+///
+/// `force` flushes even files that are still open (used by drain, when the
+/// application has finished but descriptors may remain accounted).
+pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
+    let mut report = FlushReport::default();
+    let persist = core.tiers.persist_idx();
+
+    for entry in core.ns.dirty_files() {
+        if entry.open && !force {
+            continue; // don't race ongoing writes
+        }
+        let disposition = core.lists.disposition(&entry.logical);
+        let wants_flush = matches!(disposition, Disposition::Flush | Disposition::Move);
+        if !wants_flush {
+            continue;
+        }
+        if entry.master == persist {
+            // already physically on the persistent tier: just mark clean
+            core.ns.update(&entry.logical, |m| {
+                m.dirty = false;
+                m.flushed = true;
+            });
+            continue;
+        }
+        match core.copy_between(&entry.logical, entry.master, persist) {
+            Ok(bytes) => {
+                report.bytes_flushed += bytes;
+                core.counters.bump_persist();
+                core.ns.update(&entry.logical, |m| {
+                    m.dirty = false;
+                    m.flushed = true;
+                    if !m.replicas.contains(&persist) {
+                        m.replicas.push(persist);
+                    }
+                });
+                if disposition == Disposition::Move {
+                    drop_cache_replicas(core, &entry.logical);
+                    report.moved += 1;
+                } else {
+                    report.flushed += 1;
+                }
+            }
+            Err(_) => report.errors += 1,
+        }
+    }
+
+    // Eviction of clean, closed, flushed files that are move/evict-listed.
+    for (logical, meta) in core.ns.evictable_files() {
+        let disposition = core.lists.disposition(&logical);
+        let evictable = matches!(disposition, Disposition::Evict | Disposition::Move);
+        if !evictable || !meta.flushed {
+            continue; // unflushed evict-only scratch is handled at drain
+        }
+        if meta.replicas.iter().any(|&t| t != persist) {
+            drop_cache_replicas(core, &logical);
+            report.evicted += 1;
+        }
+    }
+    report
+}
+
+/// Remove every cache replica of `logical`, leaving (at most) the persist
+/// copy; the persist copy becomes the master.
+fn drop_cache_replicas(core: &SeaCore, logical: &str) {
+    let persist = core.tiers.persist_idx();
+    if let Some(meta) = core.ns.lookup(logical) {
+        for &tier in &meta.replicas {
+            if tier != persist {
+                core.delete_replica(logical, tier, meta.size);
+                core.ns.drop_replica(logical, tier);
+            }
+        }
+    }
+}
+
+/// Final drain at unmount: force-flush everything flush-listed, then
+/// delete evict-only scratch from the caches (it never reaches Lustre).
+pub fn drain(core: &SeaCore) -> FlushReport {
+    let mut report = flush_pass(core, true);
+    let persist = core.tiers.persist_idx();
+    for logical in core.ns.all_paths() {
+        if core.lists.disposition(&logical) == Disposition::Evict {
+            if let Some(meta) = core.ns.lookup(&logical) {
+                let cache_only = meta.replicas.iter().all(|&t| t != persist);
+                if cache_only {
+                    for &tier in &meta.replicas {
+                        core.delete_replica(&logical, tier, meta.size);
+                    }
+                    core.ns.remove(&logical);
+                    report.evicted += 1;
+                }
+            }
+        }
+    }
+    report
+}
+
+/// Handle to the background flusher thread.
+pub struct FlusherHandle {
+    core: Arc<SeaCore>,
+    join: Option<std::thread::JoinHandle<FlushReport>>,
+}
+
+impl FlusherHandle {
+    /// Spawn the flusher loop: pass every `interval`, drain on shutdown.
+    pub fn spawn(core: Arc<SeaCore>, interval: Duration) -> FlusherHandle {
+        let loop_core = core.clone();
+        let join = std::thread::Builder::new()
+            .name("sea-flusher".into())
+            .spawn(move || {
+                let mut total = FlushReport::default();
+                loop {
+                    if loop_core.shutdown.load(Ordering::Acquire) {
+                        total.merge(&drain(&loop_core));
+                        return total;
+                    }
+                    total.merge(&flush_pass(&loop_core, false));
+                    std::thread::sleep(interval);
+                }
+            })
+            .expect("spawn sea-flusher");
+        FlusherHandle {
+            core,
+            join: Some(join),
+        }
+    }
+
+    /// Signal shutdown, wait for the final drain, return the cumulative
+    /// report.
+    pub fn shutdown(mut self) -> FlushReport {
+        self.core.shutdown.store(true, Ordering::Release);
+        self.join
+            .take()
+            .expect("flusher already shut down")
+            .join()
+            .expect("sea-flusher panicked")
+    }
+}
+
+impl Drop for FlusherHandle {
+    fn drop(&mut self) {
+        if let Some(join) = self.join.take() {
+            self.core.shutdown.store(true, Ordering::Release);
+            let _ = join.join();
+        }
+    }
+}
+
+/// A mounted Sea session: the interceptor plus its background flusher.
+/// This is the top-level object examples and the real-mode executor use.
+pub struct SeaSession {
+    io: SeaIo,
+    flusher: Option<FlusherHandle>,
+}
+
+impl SeaSession {
+    /// Mount and (if enabled in `cfg`) start the flusher thread.
+    pub fn start(
+        cfg: SeaConfig,
+        lists: SeaLists,
+        shape_persist: impl FnOnce(Tier) -> Tier,
+    ) -> Result<SeaSession, SeaError> {
+        let interval = Duration::from_millis(cfg.flusher_interval_ms);
+        let flusher_enabled = cfg.flusher_enabled;
+        let io = SeaIo::mount_with(cfg, lists, shape_persist)?;
+        let flusher = flusher_enabled
+            .then(|| FlusherHandle::spawn(io.core().clone(), interval));
+        Ok(SeaSession { io, flusher })
+    }
+
+    pub fn io(&self) -> &SeaIo {
+        &self.io
+    }
+
+    /// Run one synchronous flush pass right now.
+    pub fn flush_now(&self) -> FlushReport {
+        flush_pass(self.io.core(), false)
+    }
+
+    /// Unmount: drain everything, stop threads, return final accounting.
+    pub fn unmount(mut self) -> (CallStats, FlushReport) {
+        let report = match self.flusher.take() {
+            Some(handle) => handle.shutdown(),
+            None => drain(self.io.core()),
+        };
+        (self.io.stats(), report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::intercept::OpenMode;
+    use crate::pathrules::PathRules;
+    use crate::testing::tempdir::{tempdir, TempDirGuard};
+    use crate::util::MIB;
+
+    fn lists(flush: &str, evict: &str) -> SeaLists {
+        SeaLists::new(
+            PathRules::parse(flush).unwrap(),
+            PathRules::parse(evict).unwrap(),
+            PathRules::empty(),
+        )
+    }
+
+    fn setup(lists: SeaLists) -> (TempDirGuard, SeaIo) {
+        let dir = tempdir("flusher");
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), MIB)
+            .persist("lustre", dir.subdir("lustre"), 100 * MIB)
+            .build();
+        let sea = SeaIo::mount_with(cfg, lists, |t| t).unwrap();
+        (dir, sea)
+    }
+
+    fn write_file(sea: &SeaIo, path: &str, data: &[u8]) {
+        let fd = sea.create(path).unwrap();
+        sea.write(fd, data).unwrap();
+        sea.close(fd).unwrap();
+    }
+
+    #[test]
+    fn flush_copies_and_keeps_replica() {
+        let (_g, sea) = setup(lists(r".*\.out$", ""));
+        write_file(&sea, "/r/a.out", b"result");
+        let rep = flush_pass(sea.core(), false);
+        assert_eq!(rep.flushed, 1);
+        assert_eq!(rep.bytes_flushed, 6);
+        let meta = sea.core().ns.lookup("/r/a.out").unwrap();
+        assert!(!meta.dirty);
+        assert!(meta.flushed);
+        assert_eq!(meta.replicas.len(), 2);
+        // physical file exists on persist
+        let persist = sea.core().tiers.persist();
+        assert!(persist.physical("/r/a.out").exists());
+        // reads still hit the cache replica
+        assert_eq!(sea.stat("/r/a.out").unwrap().tier, "tmpfs");
+    }
+
+    #[test]
+    fn move_drops_cache_copy() {
+        let (_g, sea) = setup(lists(r".*\.out$", r".*\.out$"));
+        write_file(&sea, "/r/a.out", b"result");
+        let rep = flush_pass(sea.core(), false);
+        assert_eq!(rep.moved, 1);
+        let meta = sea.core().ns.lookup("/r/a.out").unwrap();
+        let persist = sea.core().tiers.persist_idx();
+        assert_eq!(meta.replicas, vec![persist]);
+        assert_eq!(sea.core().tiers.get(0).used(), 0);
+        assert_eq!(sea.stat("/r/a.out").unwrap().tier, "lustre");
+    }
+
+    #[test]
+    fn unlisted_files_never_flushed() {
+        let (_g, sea) = setup(lists(r".*\.out$", ""));
+        write_file(&sea, "/r/scratch.tmp", b"junk");
+        let rep = flush_pass(sea.core(), false);
+        assert_eq!(rep.flushed + rep.moved, 0);
+        assert!(!sea
+            .core()
+            .tiers
+            .persist()
+            .physical("/r/scratch.tmp")
+            .exists());
+    }
+
+    #[test]
+    fn open_files_skipped_until_forced() {
+        let (_g, sea) = setup(lists(".*", ""));
+        let fd = sea.create("/busy.out").unwrap();
+        sea.write(fd, b"partial").unwrap();
+        let rep = flush_pass(sea.core(), false);
+        assert_eq!(rep.flushed, 0, "open file must not flush");
+        let rep = flush_pass(sea.core(), true);
+        assert_eq!(rep.flushed, 1, "force flush at drain");
+        sea.close(fd).unwrap();
+    }
+
+    #[test]
+    fn evict_only_scratch_never_reaches_persist() {
+        let (_g, sea) = setup(lists("", r".*\.tmp$"));
+        write_file(&sea, "/work/x.tmp", &[0u8; 256]);
+        flush_pass(sea.core(), false);
+        // still cache-resident: eviction of unflushed scratch waits for drain
+        assert!(sea.core().ns.exists("/work/x.tmp"));
+        let rep = drain(sea.core());
+        assert_eq!(rep.evicted, 1);
+        assert!(!sea.core().ns.exists("/work/x.tmp"));
+        assert!(!sea.core().tiers.persist().physical("/work/x.tmp").exists());
+        assert_eq!(sea.core().tiers.get(0).used(), 0);
+    }
+
+    #[test]
+    fn flushed_then_evict_listed_file_dropped_from_cache() {
+        let (_g, sea) = setup(lists(r".*\.inter$", r".*\.inter$"));
+        write_file(&sea, "/i.inter", &[1u8; 64]);
+        let rep = flush_pass(sea.core(), false);
+        assert_eq!(rep.moved, 1);
+        // quota argument: exactly one file on persist, zero cache bytes
+        assert_eq!(sea.core().ns.files_on_tier(sea.core().tiers.persist_idx()), 1);
+        assert_eq!(sea.core().tiers.get(0).used(), 0);
+    }
+
+    #[test]
+    fn background_thread_flushes_and_drains() {
+        let dir = tempdir("bg");
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), MIB)
+            .persist("lustre", dir.subdir("lustre"), 100 * MIB)
+            .flusher(true, 10)
+            .build();
+        let session = SeaSession::start(cfg, lists(".*", ""), |t| t).unwrap();
+        write_file(session.io(), "/a.out", b"one");
+        std::thread::sleep(Duration::from_millis(60));
+        // background pass should have flushed already
+        assert!(!session.io().core().ns.lookup("/a.out").unwrap().dirty);
+        write_file(session.io(), "/b.out", b"two");
+        let (stats, report) = session.unmount();
+        assert!(report.flushed >= 2, "report={report:?}");
+        assert!(stats.create == 2);
+    }
+
+    #[test]
+    fn drain_is_idempotent() {
+        let (_g, sea) = setup(lists(".*", ""));
+        write_file(&sea, "/a.out", b"x");
+        let r1 = drain(sea.core());
+        let r2 = drain(sea.core());
+        assert_eq!(r1.flushed, 1);
+        assert_eq!(r2.flushed + r2.moved + r2.evicted, 0);
+    }
+
+    #[test]
+    fn rewrite_after_flush_makes_dirty_again() {
+        let (_g, sea) = setup(lists(".*", ""));
+        write_file(&sea, "/a.out", b"v1");
+        flush_pass(sea.core(), false);
+        assert!(!sea.core().ns.lookup("/a.out").unwrap().dirty);
+        let fd = sea.open("/a.out", OpenMode::ReadWrite).unwrap();
+        sea.write(fd, b"v2").unwrap();
+        sea.close(fd).unwrap();
+        let meta = sea.core().ns.lookup("/a.out").unwrap();
+        assert!(meta.dirty);
+        // stale persist replica dropped by record_write
+        assert_eq!(meta.replicas, vec![0]);
+        let rep = flush_pass(sea.core(), false);
+        assert_eq!(rep.flushed, 1);
+    }
+
+    #[test]
+    fn prop_quota_invariant_only_flushlisted_on_persist() {
+        // After a drain, the set of files physically on the persistent tier
+        // is exactly the flush/move-listed ones (paper §3.6).
+        crate::testing::check_n(16, |g| {
+            let (_dir, sea) = setup(lists(r".*\.keep$", r".*\.tmp$"));
+            let mut keep = 0usize;
+            for _ in 0..g.usize_in(1, 12) {
+                let base = g.logical_path(2);
+                let (path, is_keep) = if g.bool() {
+                    (format!("{base}.keep"), true)
+                } else {
+                    (format!("{base}.tmp"), false)
+                };
+                if sea.core().ns.exists(&path) {
+                    continue;
+                }
+                let fd = sea.create(&path).map_err(|e| e.to_string())?;
+                sea.write(fd, &[7u8; 32]).map_err(|e| e.to_string())?;
+                sea.close(fd).map_err(|e| e.to_string())?;
+                if is_keep {
+                    keep += 1;
+                }
+            }
+            drain(sea.core());
+            let persist = sea.core().tiers.persist_idx();
+            let on_persist = sea.core().ns.files_on_tier(persist);
+            crate::prop_assert_eq!(on_persist, keep);
+            // and no .tmp file exists anywhere anymore
+            for p in sea.core().ns.all_paths() {
+                crate::prop_assert!(!p.ends_with(".tmp"), "{p} survived drain");
+            }
+            Ok(())
+        });
+    }
+}

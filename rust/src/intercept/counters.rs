@@ -1,0 +1,166 @@
+//! glibc-call accounting (Table 2 columns "Total glibc calls" and "Glibc
+//! Lustre calls").
+//!
+//! Every `SeaIo` entry point increments its counter; operations whose
+//! target tier is the persistent store additionally count as persist
+//! (Lustre) calls. Lock-free so the hot path stays cheap.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+macro_rules! call_kinds {
+    ($($name:ident),+ $(,)?) => {
+        /// The intercepted call types.
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+        #[allow(non_camel_case_types)]
+        pub enum CallKind { $($name),+ }
+
+        impl CallKind {
+            pub const ALL: &'static [CallKind] = &[$(CallKind::$name),+];
+
+            pub fn as_str(&self) -> &'static str {
+                match self { $(CallKind::$name => stringify!($name)),+ }
+            }
+        }
+
+        /// Lock-free per-kind counters.
+        #[derive(Debug, Default)]
+        pub struct CallCounters {
+            $($name: AtomicU64,)+
+            persist_calls: AtomicU64,
+            bytes_written_cache: AtomicU64,
+            bytes_written_persist: AtomicU64,
+            bytes_read_cache: AtomicU64,
+            bytes_read_persist: AtomicU64,
+        }
+
+        /// Point-in-time snapshot of [`CallCounters`].
+        #[derive(Debug, Clone, Default, PartialEq, Eq)]
+        pub struct CallStats {
+            $(pub $name: u64,)+
+            /// Calls whose target tier was the persistent store.
+            pub persist_calls: u64,
+            pub bytes_written_cache: u64,
+            pub bytes_written_persist: u64,
+            pub bytes_read_cache: u64,
+            pub bytes_read_persist: u64,
+        }
+
+        impl CallCounters {
+            pub fn bump(&self, kind: CallKind) {
+                match kind {
+                    $(CallKind::$name => self.$name.fetch_add(1, Ordering::Relaxed)),+
+                };
+            }
+
+            pub fn snapshot(&self) -> CallStats {
+                CallStats {
+                    $($name: self.$name.load(Ordering::Relaxed),)+
+                    persist_calls: self.persist_calls.load(Ordering::Relaxed),
+                    bytes_written_cache: self.bytes_written_cache.load(Ordering::Relaxed),
+                    bytes_written_persist: self.bytes_written_persist.load(Ordering::Relaxed),
+                    bytes_read_cache: self.bytes_read_cache.load(Ordering::Relaxed),
+                    bytes_read_persist: self.bytes_read_persist.load(Ordering::Relaxed),
+                }
+            }
+        }
+
+        impl CallStats {
+            /// Total intercepted calls (Table 2 "Total glibc calls").
+            pub fn total(&self) -> u64 {
+                0 $(+ self.$name)+
+            }
+        }
+    };
+}
+
+call_kinds!(
+    open, create, close, read, write, lseek, stat, unlink, rename, mkdir,
+    readdir, fsync,
+);
+
+impl CallCounters {
+    /// Count a call that targeted the persistent tier.
+    pub fn bump_persist(&self) {
+        self.persist_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_written(&self, bytes: u64, to_persist: bool) {
+        if to_persist {
+            self.bytes_written_persist.fetch_add(bytes, Ordering::Relaxed);
+        } else {
+            self.bytes_written_cache.fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+
+    pub fn add_read(&self, bytes: u64, from_persist: bool) {
+        if from_persist {
+            self.bytes_read_persist.fetch_add(bytes, Ordering::Relaxed);
+        } else {
+            self.bytes_read_cache.fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+}
+
+impl CallStats {
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written_cache + self.bytes_written_persist
+    }
+
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read_cache + self.bytes_read_persist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_and_snapshot() {
+        let c = CallCounters::default();
+        c.bump(CallKind::open);
+        c.bump(CallKind::write);
+        c.bump(CallKind::write);
+        c.bump_persist();
+        c.add_written(100, false);
+        c.add_written(50, true);
+        c.add_read(7, true);
+        let s = c.snapshot();
+        assert_eq!(s.open, 1);
+        assert_eq!(s.write, 2);
+        assert_eq!(s.total(), 3);
+        assert_eq!(s.persist_calls, 1);
+        assert_eq!(s.bytes_written(), 150);
+        assert_eq!(s.bytes_written_persist, 50);
+        assert_eq!(s.bytes_read_persist, 7);
+    }
+
+    #[test]
+    fn concurrent_bumps_are_exact() {
+        use std::sync::Arc;
+        let c = Arc::new(CallCounters::default());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.bump(CallKind::read);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.snapshot().read, 8000);
+    }
+
+    #[test]
+    fn all_kinds_covered() {
+        let c = CallCounters::default();
+        for k in CallKind::ALL {
+            c.bump(*k);
+        }
+        assert_eq!(c.snapshot().total(), CallKind::ALL.len() as u64);
+    }
+}

@@ -1,0 +1,837 @@
+//! The interception layer: Sea's user-space equivalent of the paper's
+//! `LD_PRELOAD` glibc shim.
+//!
+//! In the paper, Sea interposes on glibc file calls so unmodified binaries
+//! (AFNI/FSL/SPM) are redirected transparently. Here the same *policy* is
+//! exposed as the [`SeaIo`] API — the full POSIX-like call surface
+//! (open/create/read/write/lseek/close/stat/unlink/rename/mkdir/readdir/
+//! fsync) — which the pipeline workers call for every file operation. The
+//! redirection decision per call is identical to the paper's shim:
+//!
+//! * **writes** land on the highest-priority cache with capacity, spilling
+//!   to the next tier (finally Lustre) when caches fill;
+//! * **reads** come from the fastest tier holding a current replica;
+//! * every call is counted ([`counters`]) so Table 2's glibc-call columns
+//!   can be regenerated.
+
+pub mod counters;
+
+pub use counters::{CallCounters, CallKind, CallStats};
+
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::SeaConfig;
+use crate::namespace::{clean_path, Namespace};
+use crate::pathrules::SeaLists;
+use crate::tiers::{Tier, TierIdx, TierSet};
+
+/// Shared state between application threads (via [`SeaIo`]) and the
+/// background flusher/evictor/prefetcher threads (`crate::flusher`).
+pub struct SeaCore {
+    pub cfg: SeaConfig,
+    pub tiers: TierSet,
+    pub ns: Namespace,
+    pub lists: SeaLists,
+    pub counters: CallCounters,
+    pub shutdown: AtomicBool,
+}
+
+impl std::fmt::Debug for SeaCore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SeaCore")
+            .field("tiers", &self.tiers.len())
+            .field("files", &self.ns.len())
+            .finish()
+    }
+}
+
+impl SeaCore {
+    fn tier(&self, idx: TierIdx) -> &Tier {
+        self.tiers.get(idx)
+    }
+
+    fn is_persist(&self, idx: TierIdx) -> bool {
+        idx == self.tiers.persist_idx()
+    }
+
+    /// Copy a file's bytes between tiers (used by flusher, prefetcher and
+    /// spill). Honest waiting: both tiers' throttles apply. Returns bytes
+    /// copied.
+    pub fn copy_between(
+        &self,
+        logical: &str,
+        from: TierIdx,
+        to: TierIdx,
+    ) -> std::io::Result<u64> {
+        let src_path = self.tier(from).physical(logical);
+        let dst_path = self.tier(to).physical(logical);
+        if let Some(parent) = dst_path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        self.tier(from).wait_meta();
+        self.tier(to).wait_meta();
+        let mut src = std::fs::File::open(&src_path)?;
+        let mut dst = std::fs::File::create(&dst_path)?;
+        let mut buf = vec![0u8; self.cfg.copy_buf_bytes.max(4096)];
+        let mut total = 0u64;
+        loop {
+            let n = src.read(&mut buf)?;
+            if n == 0 {
+                break;
+            }
+            self.tier(from).wait_data(n as u64);
+            self.tier(to).wait_data(n as u64);
+            dst.write_all(&buf[..n])?;
+            total += n as u64;
+        }
+        dst.sync_all().ok();
+        Ok(total)
+    }
+
+    /// Delete the physical replica of `logical` on `tier` and release its
+    /// capacity reservation.
+    pub fn delete_replica(&self, logical: &str, tier: TierIdx, size: u64) {
+        let path = self.tier(tier).physical(logical);
+        self.tier(tier).wait_meta();
+        let _ = std::fs::remove_file(path);
+        if !self.is_persist(tier) {
+            self.tier(tier).release(size);
+        }
+    }
+}
+
+/// File-descriptor flags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpenMode {
+    Read,
+    /// Read + write on the existing content (SPM's memmap-update pattern).
+    ReadWrite,
+}
+
+/// Result of [`SeaIo::stat`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SeaStat {
+    pub size: u64,
+    pub tier: String,
+    pub dirty: bool,
+}
+
+/// A Sea file descriptor.
+pub type Fd = u64;
+
+struct OpenFile {
+    logical: String,
+    tier: TierIdx,
+    file: std::fs::File,
+    writable: bool,
+    /// Position mirror (for size accounting without fstat).
+    pos: u64,
+    /// Current known size (reservation already accounted to `tier`).
+    size: u64,
+}
+
+/// Errors from the interception layer.
+#[derive(Debug, thiserror::Error)]
+pub enum SeaError {
+    #[error("no such file in Sea namespace: {0}")]
+    NotFound(String),
+    #[error("bad file descriptor {0}")]
+    BadFd(Fd),
+    #[error("file descriptor {0} not open for writing")]
+    NotWritable(Fd),
+    #[error("io error on {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error(transparent)]
+    Rules(#[from] crate::pathrules::RulesError),
+    #[error(transparent)]
+    PlainIo(#[from] std::io::Error),
+}
+
+fn io_err(path: &str, source: std::io::Error) -> SeaError {
+    SeaError::Io {
+        path: path.to_string(),
+        source,
+    }
+}
+
+/// The user-facing Sea handle: mount, do I/O through it, unmount.
+pub struct SeaIo {
+    core: Arc<SeaCore>,
+    fds: Mutex<HashMap<Fd, OpenFile>>,
+    next_fd: AtomicU64,
+}
+
+impl SeaIo {
+    /// Mount Sea: build tiers from `cfg`, load the three lists, register
+    /// pre-existing files found on the persistent tier, then prefetch
+    /// matching inputs to the fastest cache. `shape_persist` lets callers
+    /// shape the persistent tier (throttle/metadata latency) to emulate a
+    /// degraded Lustre.
+    pub fn mount_with(
+        cfg: SeaConfig,
+        lists: SeaLists,
+        shape_persist: impl FnOnce(Tier) -> Tier,
+    ) -> Result<SeaIo, SeaError> {
+        let tiers = TierSet::new(&cfg.caches, &cfg.persist, shape_persist)?;
+        let core = Arc::new(SeaCore {
+            tiers,
+            ns: Namespace::new(),
+            lists,
+            counters: CallCounters::default(),
+            shutdown: AtomicBool::new(false),
+            cfg,
+        });
+        let sea = SeaIo {
+            core,
+            fds: Mutex::new(HashMap::new()),
+            next_fd: AtomicU64::new(3), // 0..2 reserved, as in POSIX
+        };
+        sea.register_existing()?;
+        sea.prefetch_pass()?;
+        Ok(sea)
+    }
+
+    /// Mount with lists loaded from the config's list files and an
+    /// unshaped persistent tier.
+    pub fn mount(cfg: SeaConfig) -> Result<SeaIo, SeaError> {
+        let lists =
+            SeaLists::load(&cfg.flushlist, &cfg.evictlist, &cfg.prefetchlist)?;
+        SeaIo::mount_with(cfg, lists, |t| t)
+    }
+
+    pub fn core(&self) -> &Arc<SeaCore> {
+        &self.core
+    }
+
+    pub fn stats(&self) -> CallStats {
+        self.core.counters.snapshot()
+    }
+
+    /// Walk the persistent tier and register every file (the input dataset
+    /// already on Lustre) as clean, persisted, master-on-persist.
+    fn register_existing(&self) -> Result<(), SeaError> {
+        let persist = self.core.tiers.persist_idx();
+        let root = self.core.tier(persist).root().to_path_buf();
+        let mut stack = vec![root.clone()];
+        while let Some(dir) = stack.pop() {
+            let entries = match std::fs::read_dir(&dir) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
+            for entry in entries.flatten() {
+                let p = entry.path();
+                if p.is_dir() {
+                    stack.push(p);
+                } else if let Ok(rel) = p.strip_prefix(&root) {
+                    let logical = format!("/{}", rel.to_string_lossy());
+                    let size = entry.metadata().map(|m| m.len()).unwrap_or(0);
+                    self.core.ns.create(&logical, persist);
+                    self.core.ns.update(&logical, |m| {
+                        m.size = size;
+                        m.dirty = false;
+                        m.flushed = true;
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Move prefetch-listed files to the fastest cache with space
+    /// (paper §2.1: "a rudimentary prefetch thread").
+    fn prefetch_pass(&self) -> Result<(), SeaError> {
+        if self.core.lists.prefetch.is_empty() || self.core.tiers.caches().is_empty() {
+            return Ok(());
+        }
+        let persist = self.core.tiers.persist_idx();
+        for logical in self.core.ns.all_paths() {
+            if !self.core.lists.should_prefetch(&logical) {
+                continue;
+            }
+            let Some(meta) = self.core.ns.lookup(&logical) else { continue };
+            if meta.master != persist {
+                continue; // already cached
+            }
+            // fastest cache with room
+            let mut target = None;
+            for (idx, tier) in self.core.tiers.caches().iter().enumerate() {
+                if tier.try_reserve(meta.size) {
+                    target = Some(idx);
+                    break;
+                }
+            }
+            let Some(target) = target else { continue };
+            match self.core.copy_between(&logical, persist, target) {
+                Ok(_) => {
+                    self.core.ns.add_replica(&logical, target);
+                }
+                Err(e) => {
+                    self.core.tier(target).release(meta.size);
+                    return Err(io_err(&logical, e));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn alloc_fd(&self) -> Fd {
+        self.next_fd.fetch_add(1, Ordering::Relaxed)
+    }
+
+    // ------------------------------------------------------------------
+    // The intercepted call surface
+    // ------------------------------------------------------------------
+
+    /// `creat`/`open(O_CREAT|O_TRUNC)`: place a new file by write policy.
+    pub fn create(&self, path: &str) -> Result<Fd, SeaError> {
+        self.core.counters.bump(CallKind::create);
+        let logical = clean_path(path);
+        // Policy: highest-priority cache with room (0-byte reservation
+        // grows with writes); always succeeds at the persistent tier.
+        let tier = self.core.tiers.place_write(0);
+        if self.core.is_persist(tier) {
+            self.core.counters.bump_persist();
+        }
+        let physical = self.core.tier(tier).physical(&logical);
+        if let Some(parent) = physical.parent() {
+            std::fs::create_dir_all(parent).map_err(|e| io_err(&logical, e))?;
+        }
+        self.core.tier(tier).wait_meta();
+        let file =
+            std::fs::File::create(&physical).map_err(|e| io_err(&logical, e))?;
+        // Replace any previous entry (truncate semantics).
+        if let Some(prev) = self.core.ns.create(&logical, tier) {
+            for rep in prev.replicas {
+                if rep != tier {
+                    self.core.delete_replica(&logical, rep, prev.size);
+                } else if !self.core.is_persist(rep) {
+                    self.core.tier(rep).release(prev.size);
+                }
+            }
+        }
+        self.core.ns.update(&logical, |m| m.open_count += 1);
+        let fd = self.alloc_fd();
+        self.fds.lock().unwrap().insert(
+            fd,
+            OpenFile {
+                logical,
+                tier,
+                file,
+                writable: true,
+                pos: 0,
+                size: 0,
+            },
+        );
+        Ok(fd)
+    }
+
+    /// `open` for read or read-write on an existing file: redirected to the
+    /// fastest tier holding a current replica.
+    pub fn open(&self, path: &str, mode: OpenMode) -> Result<Fd, SeaError> {
+        self.core.counters.bump(CallKind::open);
+        let logical = clean_path(path);
+        let meta = self
+            .core
+            .ns
+            .lookup(&logical)
+            .ok_or_else(|| SeaError::NotFound(logical.clone()))?;
+        let tier = meta.fastest_replica();
+        if self.core.is_persist(tier) {
+            self.core.counters.bump_persist();
+        }
+        self.core.tier(tier).wait_meta();
+        let physical = self.core.tier(tier).physical(&logical);
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(mode == OpenMode::ReadWrite)
+            .open(&physical)
+            .map_err(|e| io_err(&logical, e))?;
+        self.core.ns.update(&logical, |m| m.open_count += 1);
+        let fd = self.alloc_fd();
+        self.fds.lock().unwrap().insert(
+            fd,
+            OpenFile {
+                logical,
+                tier,
+                file,
+                writable: mode == OpenMode::ReadWrite,
+                pos: 0,
+                size: meta.size,
+            },
+        );
+        Ok(fd)
+    }
+
+    pub fn write(&self, fd: Fd, buf: &[u8]) -> Result<usize, SeaError> {
+        self.core.counters.bump(CallKind::write);
+        let mut fds = self.fds.lock().unwrap();
+        let of = fds.get_mut(&fd).ok_or(SeaError::BadFd(fd))?;
+        if !of.writable {
+            return Err(SeaError::NotWritable(fd));
+        }
+        let new_end = of.pos + buf.len() as u64;
+        let growth = new_end.saturating_sub(of.size);
+        let persist = self.core.is_persist(of.tier);
+        if growth > 0 && !persist && !self.core.tier(of.tier).try_reserve(growth) {
+            // Cache full: spill the whole file to the next tier with room.
+            Self::spill_locked(&self.core, of, growth)?;
+        }
+        let persist = self.core.is_persist(of.tier);
+        if persist {
+            self.core.counters.bump_persist();
+        }
+        self.core.tier(of.tier).wait_data(buf.len() as u64);
+        of.file.write_all(buf).map_err(|e| io_err(&of.logical, e))?;
+        of.pos = new_end;
+        if new_end > of.size {
+            of.size = new_end;
+        }
+        self.core.counters.add_written(buf.len() as u64, persist);
+        self.core.ns.record_write(&of.logical, of.size);
+        Ok(buf.len())
+    }
+
+    /// Move the open file to the next tier that can hold `size + growth`
+    /// (ultimately the persistent tier) and continue there.
+    fn spill_locked(
+        core: &Arc<SeaCore>,
+        of: &mut OpenFile,
+        growth: u64,
+    ) -> Result<(), SeaError> {
+        let needed = of.size + growth;
+        let start = of.tier + 1;
+        let persist = core.tiers.persist_idx();
+        let mut target = persist;
+        for idx in start..persist {
+            if core.tier(idx).try_reserve(needed) {
+                target = idx;
+                break;
+            }
+        }
+        if target == persist {
+            core.tiers.get(persist).try_reserve(needed);
+        }
+        of.file.sync_all().ok();
+        core.copy_between(&of.logical, of.tier, target)
+            .map_err(|e| io_err(&of.logical, e))?;
+        // Release the old tier and reopen on the new one at the same pos.
+        let old = of.tier;
+        core.delete_replica(&of.logical, old, of.size);
+        let physical = core.tier(target).physical(&of.logical);
+        let mut file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&physical)
+            .map_err(|e| io_err(&of.logical, e))?;
+        file.seek(SeekFrom::Start(of.pos))
+            .map_err(|e| io_err(&of.logical, e))?;
+        of.file = file;
+        of.tier = target;
+        core.ns.update(&of.logical, |m| {
+            m.master = target;
+            m.replicas = vec![target];
+        });
+        Ok(())
+    }
+
+    pub fn read(&self, fd: Fd, buf: &mut [u8]) -> Result<usize, SeaError> {
+        self.core.counters.bump(CallKind::read);
+        let mut fds = self.fds.lock().unwrap();
+        let of = fds.get_mut(&fd).ok_or(SeaError::BadFd(fd))?;
+        let persist = self.core.is_persist(of.tier);
+        if persist {
+            self.core.counters.bump_persist();
+        }
+        let n = of.file.read(buf).map_err(|e| io_err(&of.logical, e))?;
+        self.core.tier(of.tier).wait_data(n as u64);
+        of.pos += n as u64;
+        self.core.counters.add_read(n as u64, persist);
+        Ok(n)
+    }
+
+    pub fn lseek(&self, fd: Fd, pos: SeekFrom) -> Result<u64, SeaError> {
+        self.core.counters.bump(CallKind::lseek);
+        let mut fds = self.fds.lock().unwrap();
+        let of = fds.get_mut(&fd).ok_or(SeaError::BadFd(fd))?;
+        let new = of.file.seek(pos).map_err(|e| io_err(&of.logical, e))?;
+        of.pos = new;
+        Ok(new)
+    }
+
+    pub fn fsync(&self, fd: Fd) -> Result<(), SeaError> {
+        self.core.counters.bump(CallKind::fsync);
+        let fds = self.fds.lock().unwrap();
+        let of = fds.get(&fd).ok_or(SeaError::BadFd(fd))?;
+        of.file.sync_all().map_err(|e| io_err(&of.logical, e))
+    }
+
+    pub fn close(&self, fd: Fd) -> Result<(), SeaError> {
+        self.core.counters.bump(CallKind::close);
+        let of = self
+            .fds
+            .lock()
+            .unwrap()
+            .remove(&fd)
+            .ok_or(SeaError::BadFd(fd))?;
+        self.core
+            .ns
+            .update(&of.logical, |m| m.open_count = m.open_count.saturating_sub(1));
+        Ok(())
+    }
+
+    pub fn stat(&self, path: &str) -> Result<SeaStat, SeaError> {
+        self.core.counters.bump(CallKind::stat);
+        let logical = clean_path(path);
+        let meta = self
+            .core
+            .ns
+            .lookup(&logical)
+            .ok_or_else(|| SeaError::NotFound(logical.clone()))?;
+        let tier = meta.fastest_replica();
+        if self.core.is_persist(tier) {
+            self.core.counters.bump_persist();
+            self.core.tier(tier).wait_meta();
+        }
+        Ok(SeaStat {
+            size: meta.size,
+            tier: self.core.tier(tier).name.clone(),
+            dirty: meta.dirty,
+        })
+    }
+
+    pub fn unlink(&self, path: &str) -> Result<(), SeaError> {
+        self.core.counters.bump(CallKind::unlink);
+        let logical = clean_path(path);
+        let meta = self
+            .core
+            .ns
+            .remove(&logical)
+            .ok_or_else(|| SeaError::NotFound(logical.clone()))?;
+        for tier in meta.replicas {
+            if self.core.is_persist(tier) {
+                self.core.counters.bump_persist();
+            }
+            self.core.delete_replica(&logical, tier, meta.size);
+        }
+        Ok(())
+    }
+
+    pub fn rename(&self, from: &str, to: &str) -> Result<(), SeaError> {
+        self.core.counters.bump(CallKind::rename);
+        let from_l = clean_path(from);
+        let to_l = clean_path(to);
+        let meta = self
+            .core
+            .ns
+            .lookup(&from_l)
+            .ok_or_else(|| SeaError::NotFound(from_l.clone()))?;
+        for &tier in &meta.replicas {
+            if self.core.is_persist(tier) {
+                self.core.counters.bump_persist();
+            }
+            self.core.tier(tier).wait_meta();
+            let src = self.core.tier(tier).physical(&from_l);
+            let dst = self.core.tier(tier).physical(&to_l);
+            if let Some(parent) = dst.parent() {
+                std::fs::create_dir_all(parent).map_err(|e| io_err(&to_l, e))?;
+            }
+            std::fs::rename(&src, &dst).map_err(|e| io_err(&from_l, e))?;
+        }
+        self.core.ns.rename(&from_l, &to_l);
+        Ok(())
+    }
+
+    pub fn mkdir(&self, path: &str) -> Result<(), SeaError> {
+        self.core.counters.bump(CallKind::mkdir);
+        // Directories are mirrored lazily; nothing physical required here.
+        let _ = clean_path(path);
+        Ok(())
+    }
+
+    pub fn readdir(&self, path: &str) -> Result<Vec<String>, SeaError> {
+        self.core.counters.bump(CallKind::readdir);
+        Ok(self.core.ns.list_dir(&clean_path(path)))
+    }
+
+    /// Total bytes and file count currently resident per tier (diagnostics
+    /// + the paper's §3.6 quota argument).
+    pub fn tier_usage(&self) -> Vec<(String, u64, usize)> {
+        (0..self.core.tiers.len())
+            .map(|idx| {
+                let t = self.core.tier(idx);
+                (t.name.clone(), t.used(), self.core.ns.files_on_tier(idx))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SeaConfig;
+    use crate::testing::tempdir::{tempdir, TempDirGuard};
+    use crate::util::MIB;
+
+    fn setup(cache_cap: u64) -> (TempDirGuard, SeaIo) {
+        let dir = tempdir("intercept");
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), cache_cap)
+            .persist("lustre", dir.subdir("lustre"), 100 * MIB)
+            .build();
+        let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+        (dir, sea)
+    }
+
+    #[test]
+    fn create_write_read_round_trip() {
+        let (_g, sea) = setup(MIB);
+        let fd = sea.create("/out/result.nii").unwrap();
+        sea.write(fd, b"hello sea").unwrap();
+        sea.close(fd).unwrap();
+
+        let fd = sea.open("/out/result.nii", OpenMode::Read).unwrap();
+        let mut buf = [0u8; 16];
+        let n = sea.read(fd, &mut buf).unwrap();
+        assert_eq!(&buf[..n], b"hello sea");
+        sea.close(fd).unwrap();
+
+        let st = sea.stat("/out/result.nii").unwrap();
+        assert_eq!(st.size, 9);
+        assert_eq!(st.tier, "tmpfs"); // redirected to the cache
+        assert!(st.dirty);
+    }
+
+    #[test]
+    fn writes_fall_through_when_cache_full() {
+        let (_g, sea) = setup(16); // 16-byte cache
+        let fd = sea.create("/big.dat").unwrap();
+        sea.write(fd, &[7u8; 64]).unwrap(); // overflows the cache -> spill
+        sea.close(fd).unwrap();
+        let st = sea.stat("/big.dat").unwrap();
+        assert_eq!(st.size, 64);
+        assert_eq!(st.tier, "lustre");
+        // The cache reservation was released by the spill.
+        assert_eq!(sea.core().tiers.get(0).used(), 0);
+    }
+
+    #[test]
+    fn second_file_spills_first_stays() {
+        let (_g, sea) = setup(32);
+        let a = sea.create("/a").unwrap();
+        sea.write(a, &[1u8; 30]).unwrap();
+        sea.close(a).unwrap();
+        let b = sea.create("/b").unwrap();
+        sea.write(b, &[2u8; 30]).unwrap();
+        sea.close(b).unwrap();
+        assert_eq!(sea.stat("/a").unwrap().tier, "tmpfs");
+        assert_eq!(sea.stat("/b").unwrap().tier, "lustre");
+    }
+
+    #[test]
+    fn open_missing_file_fails() {
+        let (_g, sea) = setup(MIB);
+        assert!(matches!(
+            sea.open("/nope", OpenMode::Read),
+            Err(SeaError::NotFound(_))
+        ));
+        assert!(matches!(sea.stat("/nope"), Err(SeaError::NotFound(_))));
+    }
+
+    #[test]
+    fn existing_persist_files_registered_and_readable() {
+        let dir = tempdir("existing");
+        let lustre = dir.subdir("lustre");
+        std::fs::create_dir_all(lustre.join("sub-01/func")).unwrap();
+        std::fs::write(lustre.join("sub-01/func/bold.nii"), b"voxels").unwrap();
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), MIB)
+            .persist("lustre", &lustre, 100 * MIB)
+            .build();
+        let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+        let st = sea.stat("/sub-01/func/bold.nii").unwrap();
+        assert_eq!(st.size, 6);
+        assert_eq!(st.tier, "lustre");
+        assert!(!st.dirty);
+        let fd = sea.open("/sub-01/func/bold.nii", OpenMode::Read).unwrap();
+        let mut buf = [0u8; 8];
+        let n = sea.read(fd, &mut buf).unwrap();
+        assert_eq!(&buf[..n], b"voxels");
+    }
+
+    #[test]
+    fn prefetch_moves_input_to_cache() {
+        let dir = tempdir("prefetch");
+        let lustre = dir.subdir("lustre");
+        std::fs::write(lustre.join("input.nii"), vec![9u8; 100]).unwrap();
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), MIB)
+            .persist("lustre", &lustre, 100 * MIB)
+            .build();
+        let lists = SeaLists::new(
+            Default::default(),
+            Default::default(),
+            crate::pathrules::PathRules::from_patterns(&[r".*input.*"]).unwrap(),
+        );
+        let sea = SeaIo::mount_with(cfg, lists, |t| t).unwrap();
+        // read now comes from the cache replica
+        assert_eq!(sea.stat("/input.nii").unwrap().tier, "tmpfs");
+        // persist copy still exists (prefetch copies, not moves)
+        let meta = sea.core().ns.lookup("/input.nii").unwrap();
+        assert_eq!(meta.replicas.len(), 2);
+    }
+
+    #[test]
+    fn rw_open_redirects_update_to_cache_replica() {
+        // The SPM memmap pattern: input prefetched to tmpfs, then updated
+        // in place — updates must hit the cache, not Lustre.
+        let dir = tempdir("rw");
+        let lustre = dir.subdir("lustre");
+        std::fs::write(lustre.join("input.nii"), vec![1u8; 10]).unwrap();
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), MIB)
+            .persist("lustre", &lustre, 100 * MIB)
+            .build();
+        let lists = SeaLists::new(
+            Default::default(),
+            Default::default(),
+            crate::pathrules::PathRules::from_patterns(&[r".*input.*"]).unwrap(),
+        );
+        let sea = SeaIo::mount_with(cfg, lists, |t| t).unwrap();
+        let fd = sea.open("/input.nii", OpenMode::ReadWrite).unwrap();
+        sea.write(fd, &[2u8; 4]).unwrap();
+        sea.close(fd).unwrap();
+        let stats = sea.stats();
+        assert_eq!(stats.bytes_written_persist, 0, "update went to Lustre!");
+        assert_eq!(stats.bytes_written_cache, 4);
+    }
+
+    #[test]
+    fn unlink_removes_all_replicas_and_reservation() {
+        let (_g, sea) = setup(MIB);
+        let fd = sea.create("/tmp.dat").unwrap();
+        sea.write(fd, &[0u8; 128]).unwrap();
+        sea.close(fd).unwrap();
+        assert_eq!(sea.core().tiers.get(0).used(), 128);
+        sea.unlink("/tmp.dat").unwrap();
+        assert_eq!(sea.core().tiers.get(0).used(), 0);
+        assert!(matches!(sea.stat("/tmp.dat"), Err(SeaError::NotFound(_))));
+    }
+
+    #[test]
+    fn rename_keeps_content_and_tier() {
+        let (_g, sea) = setup(MIB);
+        let fd = sea.create("/a/b.tmp").unwrap();
+        sea.write(fd, b"xyz").unwrap();
+        sea.close(fd).unwrap();
+        sea.rename("/a/b.tmp", "/a/b.final").unwrap();
+        let st = sea.stat("/a/b.final").unwrap();
+        assert_eq!(st.size, 3);
+        let fd = sea.open("/a/b.final", OpenMode::Read).unwrap();
+        let mut buf = [0u8; 4];
+        let n = sea.read(fd, &mut buf).unwrap();
+        assert_eq!(&buf[..n], b"xyz");
+    }
+
+    #[test]
+    fn readdir_shows_mountpoint_view() {
+        let (_g, sea) = setup(MIB);
+        for p in ["/d/one", "/d/two", "/d/sub/three"] {
+            let fd = sea.create(p).unwrap();
+            sea.close(fd).unwrap();
+        }
+        assert_eq!(sea.readdir("/d").unwrap(), vec!["one", "sub", "two"]);
+    }
+
+    #[test]
+    fn counters_track_calls_and_persist_targets() {
+        let (_g, sea) = setup(16);
+        let fd = sea.create("/x").unwrap(); // -> cache
+        sea.write(fd, &[0u8; 8]).unwrap(); // cache write
+        sea.write(fd, &[0u8; 100]).unwrap(); // spill -> persist write
+        sea.close(fd).unwrap();
+        let s = sea.stats();
+        assert_eq!(s.create, 1);
+        assert_eq!(s.write, 2);
+        assert_eq!(s.close, 1);
+        assert!(s.persist_calls >= 1, "spilled write should count persist");
+        assert_eq!(s.total(), 4);
+    }
+
+    #[test]
+    fn seek_and_partial_reads() {
+        let (_g, sea) = setup(MIB);
+        let fd = sea.create("/s.bin").unwrap();
+        sea.write(fd, b"0123456789").unwrap();
+        sea.lseek(fd, SeekFrom::Start(4)).unwrap();
+        let mut buf = [0u8; 3];
+        // fd was opened write-only via create; reopen for read
+        sea.close(fd).unwrap();
+        let fd = sea.open("/s.bin", OpenMode::Read).unwrap();
+        sea.lseek(fd, SeekFrom::Start(4)).unwrap();
+        let n = sea.read(fd, &mut buf).unwrap();
+        assert_eq!(&buf[..n], b"456");
+        sea.close(fd).unwrap();
+    }
+
+    #[test]
+    fn bad_fd_errors() {
+        let (_g, sea) = setup(MIB);
+        assert!(matches!(sea.close(99), Err(SeaError::BadFd(99))));
+        assert!(matches!(sea.read(99, &mut [0u8; 1]), Err(SeaError::BadFd(99))));
+        assert!(matches!(sea.write(99, &[1]), Err(SeaError::BadFd(99))));
+    }
+
+    #[test]
+    fn read_only_fd_rejects_write() {
+        let (_g, sea) = setup(MIB);
+        let fd = sea.create("/f").unwrap();
+        sea.write(fd, b"a").unwrap();
+        sea.close(fd).unwrap();
+        let fd = sea.open("/f", OpenMode::Read).unwrap();
+        assert!(matches!(sea.write(fd, b"b"), Err(SeaError::NotWritable(_))));
+    }
+
+    #[test]
+    fn prop_write_read_round_trip_any_sizes() {
+        crate::testing::check_n(24, |g| {
+            let (_g, sea) = setup(MIB);
+            let chunks: Vec<Vec<u8>> = g.vec(1, 6, |g| {
+                let n = g.usize_in(0, 2048);
+                (0..n).map(|i| (i % 251) as u8).collect()
+            });
+            let fd = sea.create("/p.bin").map_err(|e| e.to_string())?;
+            let mut expect = Vec::new();
+            for c in &chunks {
+                sea.write(fd, c).map_err(|e| e.to_string())?;
+                expect.extend_from_slice(c);
+            }
+            sea.close(fd).map_err(|e| e.to_string())?;
+            let fd = sea.open("/p.bin", OpenMode::Read).map_err(|e| e.to_string())?;
+            let mut got = vec![0u8; expect.len() + 16];
+            let mut off = 0;
+            loop {
+                let n = sea.read(fd, &mut got[off..]).map_err(|e| e.to_string())?;
+                if n == 0 {
+                    break;
+                }
+                off += n;
+                if off >= got.len() {
+                    break;
+                }
+            }
+            crate::prop_assert_eq!(off, expect.len());
+            crate::prop_assert!(got[..off] == expect[..], "content mismatch");
+            let st = sea.stat("/p.bin").map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(st.size as usize, expect.len());
+            Ok(())
+        });
+    }
+}

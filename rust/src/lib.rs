@@ -1,0 +1,38 @@
+//! # Sea — hierarchical storage management in user space
+//!
+//! Rust + JAX + Pallas reproduction of *"Hierarchical storage management in
+//! user space for neuroimaging applications"* (Hayot-Sasson & Glatard,
+//! 2024). Sea intercepts application file I/O and redirects it across a
+//! hierarchy of caches (tmpfs, local SSD) in front of a shared parallel
+//! file system (Lustre), with background flush/evict/prefetch threads
+//! driven by regex lists.
+//!
+//! The crate has two faces sharing one policy core (see DESIGN.md §2):
+//!
+//! * **Real mode** — [`intercept::SeaIo`] is an actual user-space
+//!   redirection layer over directory-backed tiers ([`tiers`]), with real
+//!   flusher/evictor/prefetcher threads ([`flusher`]); pipeline compute
+//!   runs through AOT-compiled XLA artifacts ([`runtime`]).
+//! * **Simulation mode** — a discrete-event cluster simulator
+//!   ([`simcore`], [`lustre`], [`pagecache`]) replays the paper's
+//!   experiments at full scale to regenerate every figure and table
+//!   ([`experiments`]).
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod experiments;
+pub mod flusher;
+pub mod intercept;
+pub mod lustre;
+pub mod namespace;
+pub mod pagecache;
+pub mod pathrules;
+pub mod pipeline;
+pub mod runtime;
+pub mod simcore;
+pub mod stats;
+pub mod testing;
+pub mod tiers;
+pub mod util;

@@ -1,0 +1,189 @@
+//! Busy writers: the paper's controlled Lustre degradation (§4.3).
+//!
+//! "an Apache Spark application that continuously read and wrote
+//! approximately 1000 × 617 MiB blocks using 64 threads, with a 5 seconds
+//! sleep between reads and writes", on 6 nodes. Each node is modelled as
+//! [`STREAMS_PER_NODE`] concurrent streams whose fair-share weights sum to
+//! 64 (the thread count), cycling write → read → sleep and rotating the
+//! target OST so the load spreads across the pool like Spark's block
+//! placement does.
+
+use crate::pagecache::SimWorld;
+use crate::simcore::{Action, Actor, Ctx, ResourceId};
+use crate::util::MIB;
+
+/// Concurrent streams modelling one busy node's 64 writer threads.
+pub const STREAMS_PER_NODE: usize = 8;
+/// Spark block size from the paper.
+pub const BLOCK_BYTES: f64 = 617.0 * MIB as f64;
+/// Threads represented by one stream.
+pub const THREADS_PER_STREAM: f64 = 64.0 / STREAMS_PER_NODE as f64;
+/// Sleep between reads and writes (paper: 5 s).
+pub const SLEEP_SECS: f64 = 5.0;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    Write,
+    Read,
+    Sleep,
+}
+
+/// One stream of a busy-writer node.
+pub struct BusyWriterActor {
+    node_net: ResourceId,
+    osts: Vec<ResourceId>,
+    ost_cursor: usize,
+    phase: Phase,
+    /// Distinct stride per stream so streams hit different OSTs.
+    stride: usize,
+}
+
+impl BusyWriterActor {
+    pub fn new(node_net: ResourceId, osts: Vec<ResourceId>, stream_idx: usize) -> Self {
+        let n = osts.len().max(1);
+        BusyWriterActor {
+            node_net,
+            ost_cursor: (stream_idx * 7) % n,
+            osts,
+            phase: Phase::Write,
+            stride: 1 + stream_idx % 5,
+        }
+    }
+
+    /// Spawn all streams for `busy_nodes` nodes into `engine` as daemons.
+    pub fn spawn_nodes(
+        engine: &mut crate::simcore::Engine<SimWorld>,
+        busy_nets: &[ResourceId],
+        osts: &[ResourceId],
+    ) {
+        for net in busy_nets {
+            for s in 0..STREAMS_PER_NODE {
+                engine.add_daemon(Box::new(BusyWriterActor::new(
+                    *net,
+                    osts.to_vec(),
+                    s,
+                )));
+            }
+        }
+    }
+
+    fn next_ost(&mut self) -> ResourceId {
+        self.ost_cursor = (self.ost_cursor + self.stride) % self.osts.len();
+        self.osts[self.ost_cursor]
+    }
+}
+
+impl Actor<SimWorld> for BusyWriterActor {
+    fn step(&mut self, _world: &mut SimWorld, _ctx: &Ctx) -> Action {
+        match self.phase {
+            Phase::Write => {
+                self.phase = Phase::Read;
+                let ost = self.next_ost();
+                Action::Transfer {
+                    demand: BLOCK_BYTES * THREADS_PER_STREAM,
+                    path: vec![self.node_net, ost],
+                    weight: THREADS_PER_STREAM,
+                }
+            }
+            Phase::Read => {
+                self.phase = Phase::Sleep;
+                let ost = self.next_ost();
+                Action::Transfer {
+                    demand: BLOCK_BYTES * THREADS_PER_STREAM,
+                    path: vec![self.node_net, ost],
+                    weight: THREADS_PER_STREAM,
+                }
+            }
+            Phase::Sleep => {
+                self.phase = Phase::Write;
+                Action::Sleep(SLEEP_SECS)
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        "busy-writer".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, Strategy};
+    use crate::lustre::ClusterRes;
+    use crate::simcore::Engine;
+
+    /// An app transfer that measures how long 1 GiB to one OST takes.
+    struct AppTransfer {
+        path: Vec<ResourceId>,
+        started: bool,
+    }
+    impl Actor<SimWorld> for AppTransfer {
+        fn step(&mut self, _w: &mut SimWorld, _c: &Ctx) -> Action {
+            if self.started {
+                Action::Done
+            } else {
+                self.started = true;
+                Action::transfer(1e9, self.path.clone())
+            }
+        }
+    }
+
+    fn run_app_with_busy(busy_nodes: usize) -> f64 {
+        let cluster = ClusterConfig::dedicated();
+        let mut eng: Engine<SimWorld> = Engine::new();
+        let res = ClusterRes::build(&mut eng, &cluster, busy_nodes);
+        BusyWriterActor::spawn_nodes(&mut eng, &res.busy_net, &res.osts);
+        eng.add_actor(Box::new(AppTransfer {
+            path: vec![res.node_net[0], res.osts[0]],
+            started: false,
+        }));
+        let mut world = SimWorld::new(&cluster, Strategy::Baseline, 1, 42);
+        eng.run(&mut world).unwrap()
+    }
+
+    #[test]
+    fn busy_writers_degrade_app_transfers() {
+        let alone = run_app_with_busy(0);
+        let degraded = run_app_with_busy(6);
+        assert!(
+            degraded > 1.5 * alone,
+            "alone={alone:.2}s degraded={degraded:.2}s"
+        );
+    }
+
+    #[test]
+    fn one_gib_alone_at_ost_speed() {
+        // 1 GB at 150 MiB/s OST ≈ 6.4 s (NIC is faster, OST bottlenecks)
+        let alone = run_app_with_busy(0);
+        assert!((alone - 1e9 / (150.0 * MIB as f64)).abs() < 0.5, "{alone}");
+    }
+
+    #[test]
+    fn phases_cycle_write_read_sleep() {
+        let mut eng: Engine<SimWorld> = Engine::new();
+        let net = eng.add_resource("n", 1e12);
+        let ost = eng.add_resource("o", 1e12);
+        let mut actor = BusyWriterActor::new(net, vec![ost], 0);
+        let mut world =
+            SimWorld::new(&ClusterConfig::dedicated(), Strategy::Baseline, 1, 1);
+        let ctx = Ctx { now: 0.0, actor: 0 };
+        let a1 = actor.step(&mut world, &ctx);
+        let a2 = actor.step(&mut world, &ctx);
+        let a3 = actor.step(&mut world, &ctx);
+        assert!(matches!(a1, Action::Transfer { .. }));
+        assert!(matches!(a2, Action::Transfer { .. }));
+        match a3 {
+            Action::Sleep(s) => assert_eq!(s, SLEEP_SECS),
+            other => panic!("expected sleep, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stream_weights_sum_to_thread_count() {
+        assert_eq!(
+            (STREAMS_PER_NODE as f64 * THREADS_PER_STREAM) as u32,
+            64
+        );
+    }
+}

@@ -1,0 +1,149 @@
+//! Lustre + cluster resource model and the busy-writer load generators.
+//!
+//! Builds the simulation's resource graph from a [`ClusterConfig`]:
+//! per-application-node CPU/memory/NIC resources, one bandwidth resource
+//! per OST, a shared MDS (ops/second), and dedicated NICs for busy-writer
+//! nodes. Busy writers reproduce the paper's §4.3 degradation workload:
+//! per node, an Apache-Spark-like application with 64 threads continuously
+//! writing and reading ~617 MiB blocks with 5-second sleeps, modelled as
+//! 8 concurrent streams of fair-share weight 8 targeting rotating OSTs.
+
+pub mod busy;
+
+pub use busy::BusyWriterActor;
+
+use crate::config::ClusterConfig;
+use crate::pagecache::SimWorld;
+use crate::simcore::{Engine, ResourceId};
+
+/// Resource handles of the simulated cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterRes {
+    /// Per application node.
+    pub node_cpu: Vec<ResourceId>,
+    pub node_mem: Vec<ResourceId>,
+    pub node_net: Vec<ResourceId>,
+    /// Per busy-writer node.
+    pub busy_net: Vec<ResourceId>,
+    /// One per OST.
+    pub osts: Vec<ResourceId>,
+    /// Metadata service (capacity = metadata ops per second).
+    pub mds: ResourceId,
+    /// Cores per application node.
+    pub cores: f64,
+}
+
+impl ClusterRes {
+    /// Build all resources into `engine`.
+    pub fn build(
+        engine: &mut Engine<SimWorld>,
+        cluster: &ClusterConfig,
+        busy_nodes: usize,
+    ) -> ClusterRes {
+        let n = cluster.n_nodes;
+        let mut node_cpu = Vec::with_capacity(n);
+        let mut node_mem = Vec::with_capacity(n);
+        let mut node_net = Vec::with_capacity(n);
+        for i in 0..n {
+            node_cpu.push(
+                engine.add_resource(format!("cpu-n{i}"), cluster.node.cores as f64),
+            );
+            node_mem.push(
+                engine.add_resource(format!("mem-n{i}"), cluster.node.mem_bandwidth),
+            );
+            node_net.push(
+                engine.add_resource(format!("net-n{i}"), cluster.node.net_bandwidth),
+            );
+        }
+        let busy_net = (0..busy_nodes)
+            .map(|i| {
+                engine.add_resource(format!("busy-net-{i}"), cluster.node.net_bandwidth)
+            })
+            .collect();
+        let osts = (0..cluster.lustre.n_ost)
+            .map(|i| {
+                engine.add_resource(format!("ost-{i}"), cluster.lustre.ost_bandwidth)
+            })
+            .collect();
+        let mds = engine.add_resource("mds", cluster.lustre.mds_ops_per_sec());
+        ClusterRes {
+            node_cpu,
+            node_mem,
+            node_net,
+            busy_net,
+            osts,
+            mds,
+            cores: cluster.node.cores as f64,
+        }
+    }
+
+    /// OST hosting a file (default striping = 1): stable hash of the path.
+    pub fn ost_for(&self, logical: &str) -> ResourceId {
+        let mut h = 0xcbf29ce484222325u64; // FNV-1a
+        for b in logical.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        self.osts[(h % self.osts.len() as u64) as usize]
+    }
+
+    /// Application node hosting process `proc_idx` (round-robin).
+    pub fn node_of(&self, proc_idx: usize) -> usize {
+        proc_idx % self.node_cpu.len()
+    }
+
+    /// Aggregate OST bandwidth (diagnostics).
+    pub fn aggregate_ost_bw(&self, engine: &Engine<SimWorld>) -> f64 {
+        self.osts.iter().map(|o| engine.net.capacity(*o)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Strategy;
+
+    #[test]
+    fn build_counts_match_cluster() {
+        let cluster = ClusterConfig::dedicated();
+        let mut eng: Engine<SimWorld> = Engine::new();
+        let res = ClusterRes::build(&mut eng, &cluster, 6);
+        assert_eq!(res.node_cpu.len(), 8);
+        assert_eq!(res.osts.len(), 44);
+        assert_eq!(res.busy_net.len(), 6);
+        assert_eq!(res.cores, 16.0);
+        let agg = res.aggregate_ost_bw(&eng);
+        assert!((agg - cluster.lustre.aggregate_bandwidth()).abs() < 1.0);
+    }
+
+    #[test]
+    fn ost_for_is_stable_and_spread() {
+        let cluster = ClusterConfig::dedicated();
+        let mut eng: Engine<SimWorld> = Engine::new();
+        let res = ClusterRes::build(&mut eng, &cluster, 0);
+        let a = res.ost_for("/ds/sub-01/bold.nii");
+        assert_eq!(a, res.ost_for("/ds/sub-01/bold.nii"));
+        // different files spread across more than one OST
+        let distinct: std::collections::HashSet<_> =
+            (0..100).map(|i| res.ost_for(&format!("/f{i}"))).collect();
+        assert!(distinct.len() > 10, "only {} OSTs hit", distinct.len());
+    }
+
+    #[test]
+    fn node_of_round_robins() {
+        let cluster = ClusterConfig::dedicated();
+        let mut eng: Engine<SimWorld> = Engine::new();
+        let res = ClusterRes::build(&mut eng, &cluster, 0);
+        assert_eq!(res.node_of(0), 0);
+        assert_eq!(res.node_of(8), 0);
+        assert_eq!(res.node_of(9), 1);
+    }
+
+    #[test]
+    fn world_builds_for_both_clusters() {
+        for c in [ClusterConfig::dedicated(), ClusterConfig::beluga()] {
+            let w = SimWorld::new(&c, Strategy::Sea, 16, 0);
+            assert_eq!(w.dirty.len(), c.n_nodes);
+        }
+    }
+}

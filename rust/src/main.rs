@@ -1,0 +1,12 @@
+//! Leader entrypoint: `sea <command>` (see `sea help`).
+
+fn main() {
+    let code = match sea::cli::main(std::env::args().collect()) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}

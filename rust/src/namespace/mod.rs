@@ -1,0 +1,439 @@
+//! The Sea mountpoint namespace (paper §2.1).
+//!
+//! Applications address files through the mountpoint: an empty directory
+//! that "behaves as a view to all the files and directories stored within
+//! Sea". This module is the registry behind that view: for every logical
+//! path it records which tiers hold a copy, where the *master* (most
+//! recent) copy lives, whether the file is dirty (not yet persisted), and
+//! open/pin state the flusher must respect. Directory structure is
+//! mirrored across tiers lazily on write (the paper mirrors eagerly at
+//! mount; lazy mirroring is equivalent and avoids the paper's noted
+//! startup cost for large trees).
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use crate::tiers::TierIdx;
+
+/// Normalise a logical path: collapse `//`, resolve `.` and `..`, ensure a
+/// single leading `/`.
+pub fn clean_path(path: &str) -> String {
+    let mut out: Vec<&str> = Vec::new();
+    for comp in path.split('/') {
+        match comp {
+            "" | "." => {}
+            ".." => {
+                out.pop();
+            }
+            c => out.push(c),
+        }
+    }
+    let mut s = String::with_capacity(path.len());
+    for c in &out {
+        s.push('/');
+        s.push_str(c);
+    }
+    if s.is_empty() {
+        s.push('/');
+    }
+    s
+}
+
+/// Parent directory of a clean logical path (`/a/b/c` → `/a/b`).
+pub fn parent_of(path: &str) -> &str {
+    match path.rfind('/') {
+        Some(0) | None => "/",
+        Some(i) => &path[..i],
+    }
+}
+
+/// Per-file record.
+#[derive(Debug, Clone)]
+pub struct FileMeta {
+    pub size: u64,
+    /// Tier holding the authoritative copy.
+    pub master: TierIdx,
+    /// All tiers holding a (current) copy, including `master`.
+    pub replicas: Vec<TierIdx>,
+    /// True when the master copy postdates the persistent copy.
+    pub dirty: bool,
+    /// Number of open file descriptors (flusher must not evict while > 0).
+    pub open_count: u32,
+    /// File has been persisted at least once.
+    pub flushed: bool,
+}
+
+impl FileMeta {
+    fn new(master: TierIdx) -> FileMeta {
+        FileMeta {
+            size: 0,
+            master,
+            replicas: vec![master],
+            dirty: true,
+            open_count: 0,
+            flushed: false,
+        }
+    }
+
+    pub fn has_replica(&self, tier: TierIdx) -> bool {
+        self.replicas.contains(&tier)
+    }
+
+    /// Fastest tier holding a copy (smallest index = highest priority).
+    pub fn fastest_replica(&self) -> TierIdx {
+        *self.replicas.iter().min().expect("file with no replicas")
+    }
+}
+
+/// Point-in-time description used by the flusher.
+#[derive(Debug, Clone)]
+pub struct DirtyEntry {
+    pub logical: String,
+    pub size: u64,
+    pub master: TierIdx,
+    pub open: bool,
+}
+
+/// The mountpoint registry. Interior mutability: shared by the interceptor
+/// (application threads) and the flusher/prefetcher threads.
+#[derive(Debug, Default)]
+pub struct Namespace {
+    files: RwLock<HashMap<String, FileMeta>>,
+}
+
+impl Namespace {
+    pub fn new() -> Self {
+        Namespace::default()
+    }
+
+    /// Register a new file with its master on `tier` (create/truncate).
+    /// Returns the previous meta if the path existed.
+    pub fn create(&self, logical: &str, tier: TierIdx) -> Option<FileMeta> {
+        let mut files = self.files.write().unwrap();
+        files.insert(clean_path(logical), FileMeta::new(tier))
+    }
+
+    pub fn lookup(&self, logical: &str) -> Option<FileMeta> {
+        self.files.read().unwrap().get(&clean_path(logical)).cloned()
+    }
+
+    pub fn exists(&self, logical: &str) -> bool {
+        self.files.read().unwrap().contains_key(&clean_path(logical))
+    }
+
+    pub fn len(&self) -> usize {
+        self.files.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.read().unwrap().is_empty()
+    }
+
+    /// Apply `f` to the file's meta; returns false if the path is unknown.
+    pub fn update<F: FnOnce(&mut FileMeta)>(&self, logical: &str, f: F) -> bool {
+        let mut files = self.files.write().unwrap();
+        match files.get_mut(&clean_path(logical)) {
+            Some(meta) => {
+                f(meta);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Grow the file size by `delta` and mark dirty (a write happened).
+    pub fn record_write(&self, logical: &str, new_size: u64) -> bool {
+        self.update(logical, |m| {
+            m.size = new_size;
+            m.dirty = true;
+            // a write invalidates stale replicas: only master remains
+            m.replicas.retain(|&t| t == m.master);
+            if m.replicas.is_empty() {
+                m.replicas.push(m.master);
+            }
+        })
+    }
+
+    /// Record a replica on `tier` (flush/prefetch copied the file).
+    pub fn add_replica(&self, logical: &str, tier: TierIdx) -> bool {
+        self.update(logical, |m| {
+            if !m.replicas.contains(&tier) {
+                m.replicas.push(tier);
+            }
+        })
+    }
+
+    /// Drop the replica on `tier`; if it was the master, the new master is
+    /// the fastest remaining replica. Returns the remaining replica count,
+    /// or None if the path is unknown.
+    pub fn drop_replica(&self, logical: &str, tier: TierIdx) -> Option<usize> {
+        let mut files = self.files.write().unwrap();
+        let key = clean_path(logical);
+        let meta = files.get_mut(&key)?;
+        meta.replicas.retain(|&t| t != tier);
+        if meta.replicas.is_empty() {
+            files.remove(&key);
+            return Some(0);
+        }
+        if meta.master == tier {
+            meta.master = *meta.replicas.iter().min().unwrap();
+        }
+        Some(meta.replicas.len())
+    }
+
+    /// Remove the file entirely (unlink). Returns its last meta.
+    pub fn remove(&self, logical: &str) -> Option<FileMeta> {
+        self.files.write().unwrap().remove(&clean_path(logical))
+    }
+
+    /// Rename; fails (returns false) if the source is unknown.
+    pub fn rename(&self, from: &str, to: &str) -> bool {
+        let mut files = self.files.write().unwrap();
+        match files.remove(&clean_path(from)) {
+            Some(meta) => {
+                files.insert(clean_path(to), meta);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Direct children (names) of a logical directory — the mountpoint
+    /// readdir view, merged across tiers by construction.
+    pub fn list_dir(&self, dir: &str) -> Vec<String> {
+        let prefix = {
+            let c = clean_path(dir);
+            if c == "/" {
+                c
+            } else {
+                format!("{c}/")
+            }
+        };
+        let files = self.files.read().unwrap();
+        let mut names: Vec<String> = files
+            .keys()
+            .filter_map(|k| k.strip_prefix(&prefix))
+            .map(|rest| match rest.find('/') {
+                Some(i) => rest[..i].to_string(),
+                None => rest.to_string(),
+            })
+            .collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// Snapshot of dirty files (flusher input), in no particular order.
+    pub fn dirty_files(&self) -> Vec<DirtyEntry> {
+        let files = self.files.read().unwrap();
+        files
+            .iter()
+            .filter(|(_, m)| m.dirty)
+            .map(|(k, m)| DirtyEntry {
+                logical: k.clone(),
+                size: m.size,
+                master: m.master,
+                open: m.open_count > 0,
+            })
+            .collect()
+    }
+
+    /// Snapshot of clean, closed files (eviction candidates).
+    pub fn evictable_files(&self) -> Vec<(String, FileMeta)> {
+        let files = self.files.read().unwrap();
+        files
+            .iter()
+            .filter(|(_, m)| !m.dirty && m.open_count == 0)
+            .map(|(k, m)| (k.clone(), m.clone()))
+            .collect()
+    }
+
+    /// All logical paths (diagnostics / mountpoint walk).
+    pub fn all_paths(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.files.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Count of files whose master or any replica is on `tier`.
+    pub fn files_on_tier(&self, tier: TierIdx) -> usize {
+        self.files
+            .read()
+            .unwrap()
+            .values()
+            .filter(|m| m.has_replica(tier))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_path_cases() {
+        assert_eq!(clean_path("/a/b/c"), "/a/b/c");
+        assert_eq!(clean_path("a//b/"), "/a/b");
+        assert_eq!(clean_path("/a/./b/../c"), "/a/c");
+        assert_eq!(clean_path("/"), "/");
+        assert_eq!(clean_path("../.."), "/");
+    }
+
+    #[test]
+    fn parent_of_cases() {
+        assert_eq!(parent_of("/a/b/c"), "/a/b");
+        assert_eq!(parent_of("/a"), "/");
+        assert_eq!(parent_of("/"), "/");
+    }
+
+    #[test]
+    fn create_lookup_remove_cycle() {
+        let ns = Namespace::new();
+        assert!(ns.create("/d/f.nii", 0).is_none());
+        let meta = ns.lookup("/d/f.nii").unwrap();
+        assert_eq!(meta.master, 0);
+        assert!(meta.dirty);
+        assert_eq!(meta.replicas, vec![0]);
+        assert!(ns.remove("/d/f.nii").is_some());
+        assert!(!ns.exists("/d/f.nii"));
+    }
+
+    #[test]
+    fn record_write_invalidates_replicas() {
+        let ns = Namespace::new();
+        ns.create("/f", 1);
+        ns.add_replica("/f", 2);
+        ns.update("/f", |m| m.dirty = false);
+        ns.record_write("/f", 100);
+        let m = ns.lookup("/f").unwrap();
+        assert!(m.dirty);
+        assert_eq!(m.size, 100);
+        assert_eq!(m.replicas, vec![1]); // stale replica dropped
+    }
+
+    #[test]
+    fn drop_replica_promotes_master() {
+        let ns = Namespace::new();
+        ns.create("/f", 0);
+        ns.add_replica("/f", 2);
+        assert_eq!(ns.drop_replica("/f", 0), Some(1));
+        let m = ns.lookup("/f").unwrap();
+        assert_eq!(m.master, 2);
+        // dropping the last replica removes the file
+        assert_eq!(ns.drop_replica("/f", 2), Some(0));
+        assert!(!ns.exists("/f"));
+    }
+
+    #[test]
+    fn rename_moves_meta() {
+        let ns = Namespace::new();
+        ns.create("/a", 0);
+        ns.record_write("/a", 42);
+        assert!(ns.rename("/a", "/b/c"));
+        assert!(!ns.exists("/a"));
+        assert_eq!(ns.lookup("/b/c").unwrap().size, 42);
+        assert!(!ns.rename("/missing", "/x"));
+    }
+
+    #[test]
+    fn list_dir_merges_children() {
+        let ns = Namespace::new();
+        ns.create("/d/x.nii", 0);
+        ns.create("/d/sub/y.nii", 1);
+        ns.create("/d/sub/z.nii", 2);
+        ns.create("/other/w.nii", 0);
+        assert_eq!(ns.list_dir("/d"), vec!["sub".to_string(), "x.nii".to_string()]);
+        assert_eq!(ns.list_dir("/d/sub"), vec!["y.nii", "z.nii"]);
+        assert_eq!(ns.list_dir("/"), vec!["d", "other"]);
+        assert!(ns.list_dir("/none").is_empty());
+    }
+
+    #[test]
+    fn dirty_and_evictable_views_disjoint() {
+        let ns = Namespace::new();
+        ns.create("/dirty", 0);
+        ns.create("/clean", 0);
+        ns.update("/clean", |m| m.dirty = false);
+        ns.create("/open", 0);
+        ns.update("/open", |m| {
+            m.dirty = false;
+            m.open_count = 1;
+        });
+        let dirty: Vec<String> = ns.dirty_files().into_iter().map(|d| d.logical).collect();
+        assert_eq!(dirty, vec!["/dirty"]);
+        let evictable: Vec<String> =
+            ns.evictable_files().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(evictable, vec!["/clean"]);
+    }
+
+    #[test]
+    fn files_on_tier_counts_replicas() {
+        let ns = Namespace::new();
+        ns.create("/a", 0);
+        ns.create("/b", 1);
+        ns.add_replica("/b", 0);
+        assert_eq!(ns.files_on_tier(0), 2);
+        assert_eq!(ns.files_on_tier(1), 1);
+        assert_eq!(ns.files_on_tier(9), 0);
+    }
+
+    #[test]
+    fn prop_clean_path_idempotent_and_absolute() {
+        crate::testing::check(|g| {
+            let raw = format!(
+                "{}/{}//{}/./../{}",
+                if g.bool() { "" } else { "/" },
+                g.path_component(),
+                g.path_component(),
+                g.path_component()
+            );
+            let once = clean_path(&raw);
+            crate::prop_assert!(once.starts_with('/'), "{once}");
+            crate::prop_assert_eq!(clean_path(&once), once);
+            crate::prop_assert!(!once.contains("//"));
+            crate::prop_assert!(!once.contains("/./"));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_namespace_ops_keep_master_in_replicas() {
+        crate::testing::check(|g| {
+            let ns = Namespace::new();
+            let paths: Vec<String> = (0..g.usize_in(1, 8))
+                .map(|_| g.logical_path(3))
+                .collect();
+            for _ in 0..g.usize_in(1, 40) {
+                let p = g.choice(&paths).clone();
+                match g.usize_in(0, 4) {
+                    0 => {
+                        ns.create(&p, g.usize_in(0, 2));
+                    }
+                    1 => {
+                        ns.record_write(&p, g.u64_in(0, 1000));
+                    }
+                    2 => {
+                        ns.add_replica(&p, g.usize_in(0, 2));
+                    }
+                    3 => {
+                        ns.drop_replica(&p, g.usize_in(0, 2));
+                    }
+                    _ => {
+                        ns.remove(&p);
+                    }
+                }
+            }
+            for path in ns.all_paths() {
+                let m = ns.lookup(&path).unwrap();
+                crate::prop_assert!(
+                    m.replicas.contains(&m.master),
+                    "{path}: master {} not in replicas {:?}",
+                    m.master,
+                    m.replicas
+                );
+                crate::prop_assert!(!m.replicas.is_empty());
+            }
+            Ok(())
+        });
+    }
+}

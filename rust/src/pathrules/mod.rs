@@ -1,0 +1,242 @@
+//! Regex-driven data-placement lists (paper §2.1).
+//!
+//! Users populate three files with regular expressions over logical paths:
+//! `.sea_flushlist` (persist these), `.sea_evictlist` (cache-only, remove
+//! when done), `.sea_prefetchlist` (move to the fastest cache up front).
+//! A path matching *both* flush and evict lists is a **move**: flush once,
+//! then drop the cached copy instead of keeping a replica.
+//!
+//! List files: one regex per line; blank lines and `#` comments ignored.
+
+use std::path::Path;
+
+use regex::Regex;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum RulesError {
+    #[error("bad regex {pattern:?}: {source}")]
+    BadRegex {
+        pattern: String,
+        source: regex::Error,
+    },
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// A compiled list of path regexes (one of the three Sea lists).
+#[derive(Debug, Default, Clone)]
+pub struct PathRules {
+    patterns: Vec<Regex>,
+}
+
+impl PathRules {
+    pub fn empty() -> Self {
+        PathRules::default()
+    }
+
+    pub fn from_patterns<S: AsRef<str>>(patterns: &[S]) -> Result<Self, RulesError> {
+        let compiled = patterns
+            .iter()
+            .map(|p| {
+                Regex::new(p.as_ref()).map_err(|source| RulesError::BadRegex {
+                    pattern: p.as_ref().to_string(),
+                    source,
+                })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(PathRules { patterns: compiled })
+    }
+
+    /// Parse a list file: one regex per line, `#` comments, blanks skipped.
+    pub fn parse(text: &str) -> Result<Self, RulesError> {
+        let lines: Vec<&str> = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .collect();
+        PathRules::from_patterns(&lines)
+    }
+
+    /// Load from a file; a missing file is an empty list (the paper's
+    /// default: nothing flushed, nothing evicted, nothing prefetched).
+    pub fn load(path: &Path) -> Result<Self, RulesError> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => PathRules::parse(&text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                Ok(PathRules::empty())
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    pub fn matches(&self, logical_path: &str) -> bool {
+        self.patterns.iter().any(|r| r.is_match(logical_path))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.patterns.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.patterns.len()
+    }
+}
+
+/// What the flusher should do with a file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Disposition {
+    /// Not listed: stays in cache, never copied to persistent storage.
+    Keep,
+    /// Copy to persistent storage, keep the cached replica (reread fast).
+    Flush,
+    /// Cache-only scratch: delete from cache when safe; never persisted.
+    Evict,
+    /// In both lists: *move* — persist once, then drop the cached copy.
+    Move,
+}
+
+/// The three Sea lists together.
+#[derive(Debug, Default, Clone)]
+pub struct SeaLists {
+    pub flush: PathRules,
+    pub evict: PathRules,
+    pub prefetch: PathRules,
+}
+
+impl SeaLists {
+    pub fn new(flush: PathRules, evict: PathRules, prefetch: PathRules) -> Self {
+        SeaLists {
+            flush,
+            evict,
+            prefetch,
+        }
+    }
+
+    /// Load the three list files (missing files = empty lists).
+    pub fn load(
+        flushlist: &Path,
+        evictlist: &Path,
+        prefetchlist: &Path,
+    ) -> Result<Self, RulesError> {
+        Ok(SeaLists {
+            flush: PathRules::load(flushlist)?,
+            evict: PathRules::load(evictlist)?,
+            prefetch: PathRules::load(prefetchlist)?,
+        })
+    }
+
+    /// Convenience for experiments: flush everything, evict nothing.
+    pub fn flush_all() -> Self {
+        SeaLists {
+            flush: PathRules::from_patterns(&[".*"]).unwrap(),
+            evict: PathRules::empty(),
+            prefetch: PathRules::empty(),
+        }
+    }
+
+    pub fn disposition(&self, logical_path: &str) -> Disposition {
+        match (
+            self.flush.matches(logical_path),
+            self.evict.matches(logical_path),
+        ) {
+            (true, true) => Disposition::Move,
+            (true, false) => Disposition::Flush,
+            (false, true) => Disposition::Evict,
+            (false, false) => Disposition::Keep,
+        }
+    }
+
+    pub fn should_prefetch(&self, logical_path: &str) -> bool {
+        self.prefetch.matches(logical_path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_skips_comments_and_blanks() {
+        let rules = PathRules::parse("# outputs\n\n.*\\.nii\\.gz$\n  \n").unwrap();
+        assert_eq!(rules.len(), 1);
+        assert!(rules.matches("/out/sub-01_bold.nii.gz"));
+        assert!(!rules.matches("/out/sub-01_bold.json"));
+    }
+
+    #[test]
+    fn bad_regex_is_reported_with_pattern() {
+        let err = PathRules::parse("valid.*\n[unclosed\n").unwrap_err();
+        match err {
+            RulesError::BadRegex { pattern, .. } => assert_eq!(pattern, "[unclosed"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_file_is_empty_list() {
+        let rules = PathRules::load(Path::new("/nonexistent/.sea_flushlist")).unwrap();
+        assert!(rules.is_empty());
+        assert!(!rules.matches("/anything"));
+    }
+
+    #[test]
+    fn dispositions_cover_the_matrix() {
+        let lists = SeaLists::new(
+            PathRules::parse(".*\\.out$\n.*\\.tmpout$").unwrap(),
+            PathRules::parse(".*\\.tmp$\n.*\\.tmpout$").unwrap(),
+            PathRules::parse(".*input.*").unwrap(),
+        );
+        assert_eq!(lists.disposition("/d/final.out"), Disposition::Flush);
+        assert_eq!(lists.disposition("/d/scratch.tmp"), Disposition::Evict);
+        assert_eq!(lists.disposition("/d/x.tmpout"), Disposition::Move);
+        assert_eq!(lists.disposition("/d/other.json"), Disposition::Keep);
+        assert!(lists.should_prefetch("/data/input/sub-01.nii.gz"));
+    }
+
+    #[test]
+    fn flush_all_helper() {
+        let lists = SeaLists::flush_all();
+        assert_eq!(lists.disposition("/any/thing"), Disposition::Flush);
+        assert!(!lists.should_prefetch("/any/thing"));
+    }
+
+    #[test]
+    fn bids_style_patterns() {
+        // The paper populates lists with regexes over BIDS-like trees.
+        let rules =
+            PathRules::parse(r"sub-\d+/ses-\d+/func/.*_bold\.nii(\.gz)?$").unwrap();
+        assert!(rules.matches("/mnt/sub-01/ses-02/func/sub-01_task-rest_bold.nii.gz"));
+        assert!(rules.matches("/mnt/sub-99/ses-01/func/x_bold.nii"));
+        assert!(!rules.matches("/mnt/sub-01/anat/T1w.nii.gz"));
+    }
+
+    #[test]
+    fn prop_move_iff_flush_and_evict() {
+        crate::testing::check(|g| {
+            // alternating generated literal patterns
+            let p1 = g.path_component();
+            let p2 = g.path_component();
+            let lists = SeaLists::new(
+                PathRules::from_patterns(&[format!(".*{p1}.*")]).unwrap(),
+                PathRules::from_patterns(&[format!(".*{p2}.*")]).unwrap(),
+                PathRules::empty(),
+            );
+            let path = format!("/x/{}/{}", p1, p2);
+            crate::prop_assert_eq!(lists.disposition(&path), Disposition::Move);
+            let only_flush = format!("/x/{}/zz+", p1.to_uppercase());
+            if !only_flush.contains(&p2) && only_flush.to_lowercase().contains(&p1) {
+                // uppercase breaks the literal match: Keep
+                crate::prop_assert_eq!(
+                    lists.disposition(&only_flush),
+                    if only_flush.contains(&p1) {
+                        Disposition::Flush
+                    } else {
+                        Disposition::Keep
+                    }
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,11 @@
+//! Pipeline models: Table 2 profiles, storage-agnostic I/O traces, the
+//! simulation replayer and (real mode) the thread-worker executor.
+
+pub mod executor;
+pub mod profiles;
+pub mod sim_actor;
+pub mod trace;
+
+pub use profiles::{IoStyle, PipelineProfile};
+pub use sim_actor::{ProcActor, SeaFlusherActor};
+pub use trace::{generate_trace, OutFile, Trace, TraceOp};

@@ -1,0 +1,220 @@
+//! Pipeline execution characteristics — the paper's Table 2, verbatim.
+//!
+//! These measurements (single fMRI image, single application process, on
+//! the dedicated cluster) calibrate the trace generator: output volume,
+//! glibc call counts, Lustre-targeted call counts and compute time per
+//! (toolbox, dataset) cell. The per-tool I/O *style* constants below encode
+//! the qualitative behaviour the paper describes: AFNI writes large
+//! intermediates in bursts with few Lustre calls but an enormous number of
+//! local glibc calls; FSL Feat is compute-bound with many small Lustre
+//! writes; SPM updates its inputs in place through a memory map (the
+//! reason the paper always prefetches for SPM).
+
+use crate::config::{DatasetKind, PipelineKind};
+use crate::util::{KIB, MB, MIB};
+
+/// One Table 2 row.
+#[derive(Debug, Clone)]
+pub struct PipelineProfile {
+    pub pipeline: PipelineKind,
+    pub dataset: DatasetKind,
+    /// Table 2 "Output Size (MB)".
+    pub output_mb: u64,
+    /// Table 2 "Total glibc calls".
+    pub total_glibc_calls: u64,
+    /// Table 2 "Glibc Lustre calls".
+    pub lustre_calls: u64,
+    /// Table 2 "Compute time (s)".
+    pub compute_secs: f64,
+}
+
+impl PipelineProfile {
+    /// The Table 2 cell for (pipeline, dataset).
+    pub fn table2(pipeline: PipelineKind, dataset: DatasetKind) -> PipelineProfile {
+        use DatasetKind::*;
+        use PipelineKind::*;
+        let (output_mb, total, lustre, compute) = match (pipeline, dataset) {
+            (Afni, PreventAd) => (540, 272_342, 4_118, 103.25),
+            (Afni, Ds001545) => (3_063, 281_660, 4_340, 280.30),
+            (Afni, Hcp) => (18_720, 305_555, 5_137, 816.16),
+            (FslFeat, PreventAd) => (254, 191_148, 28_099, 1_338.29),
+            (FslFeat, Ds001545) => (551, 192_404, 28_371, 2_145.96),
+            (FslFeat, Hcp) => (1_608, 192_445, 28_997, 6_596.46),
+            (Spm, PreventAd) => (331, 42_329, 18_257, 483.67),
+            (Spm, Ds001545) => (744, 54_481, 27_770, 446.53),
+            (Spm, Hcp) => (2_083, 62_234, 33_477, 715.43),
+        };
+        PipelineProfile {
+            pipeline,
+            dataset,
+            output_mb,
+            total_glibc_calls: total,
+            lustre_calls: lustre,
+            compute_secs: compute,
+        }
+    }
+
+    pub fn all() -> Vec<PipelineProfile> {
+        let mut v = Vec::new();
+        for p in PipelineKind::ALL {
+            for d in DatasetKind::ALL {
+                v.push(Self::table2(p, d));
+            }
+        }
+        v
+    }
+
+    pub fn output_bytes(&self) -> u64 {
+        self.output_mb * MB
+    }
+
+    /// Calls not aimed at dataset storage (libraries, /tmp, pipes, ...).
+    pub fn local_calls(&self) -> u64 {
+        self.total_glibc_calls - self.lustre_calls
+    }
+
+    /// The style constants for this pipeline (see [`IoStyle`]).
+    pub fn style(&self) -> IoStyle {
+        IoStyle::of(self.pipeline)
+    }
+
+    /// Output bytes per second of compute — the data-intensiveness measure
+    /// behind the paper's §3.2 analysis.
+    pub fn write_intensity(&self) -> f64 {
+        self.output_bytes() as f64 / self.compute_secs
+    }
+}
+
+/// Qualitative I/O behaviour per toolbox (paper §2.2 and §4.1.2).
+#[derive(Debug, Clone)]
+pub struct IoStyle {
+    /// Number of pipeline stages (compute/write alternation granularity).
+    pub stages: usize,
+    /// Output files produced (AFNI: BRIK/HEAD pairs per step; FSL: a FEAT
+    /// directory full of reports; SPM: a few volumes).
+    pub out_files: usize,
+    /// Mean bytes per write call (burstiness: AFNI large, FSL small).
+    pub write_chunk: u64,
+    /// Mean bytes per read call on the input.
+    pub read_chunk: u64,
+    /// Fraction of the input updated in place through a memmap (SPM only).
+    pub inplace_update_frac: f64,
+    /// Fraction of output files deleted again before the run ends
+    /// (scratch the evict list can keep off Lustre entirely).
+    pub scratch_frac: f64,
+    /// Fraction of metadata calls that are *synchronous object-touching*
+    /// operations (create/rename/unlink allocate OST objects and queue
+    /// behind bulk RPCs on a loaded Lustre); the rest are cached stats or
+    /// buffered appends. AFNI creates thousands of BRIK/HEAD/1D files;
+    /// FSL Feat mostly appends to reports and logs.
+    pub sync_meta_frac: f64,
+}
+
+impl IoStyle {
+    pub fn of(pipeline: PipelineKind) -> IoStyle {
+        match pipeline {
+            PipelineKind::Afni => IoStyle {
+                stages: 8,
+                out_files: 32,
+                write_chunk: 4 * MIB,
+                read_chunk: MIB,
+                inplace_update_frac: 0.0,
+                scratch_frac: 0.25,
+                sync_meta_frac: 0.3,
+            },
+            PipelineKind::FslFeat => IoStyle {
+                stages: 12,
+                out_files: 48,
+                write_chunk: 64 * KIB,
+                read_chunk: MIB,
+                inplace_update_frac: 0.0,
+                scratch_frac: 0.15,
+                sync_meta_frac: 0.04,
+            },
+            PipelineKind::Spm => IoStyle {
+                stages: 6,
+                out_files: 8,
+                write_chunk: MIB,
+                read_chunk: 512 * KIB,
+                inplace_update_frac: 1.0,
+                scratch_frac: 0.0,
+                sync_meta_frac: 0.3,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_exact_cells() {
+        let p = PipelineProfile::table2(PipelineKind::Spm, DatasetKind::Hcp);
+        assert_eq!(p.output_mb, 2_083);
+        assert_eq!(p.total_glibc_calls, 62_234);
+        assert_eq!(p.lustre_calls, 33_477);
+        assert!((p.compute_secs - 715.43).abs() < 1e-9);
+
+        let p = PipelineProfile::table2(PipelineKind::Afni, DatasetKind::PreventAd);
+        assert_eq!(p.output_mb, 540);
+        assert_eq!(p.lustre_calls, 4_118);
+    }
+
+    #[test]
+    fn all_covers_grid() {
+        assert_eq!(PipelineProfile::all().len(), 9);
+    }
+
+    #[test]
+    fn afni_has_most_local_calls() {
+        // §2.2: "the AFNI pipeline performs a very high number of glibc calls"
+        for d in DatasetKind::ALL {
+            let afni = PipelineProfile::table2(PipelineKind::Afni, d).local_calls();
+            let fsl = PipelineProfile::table2(PipelineKind::FslFeat, d).local_calls();
+            let spm = PipelineProfile::table2(PipelineKind::Spm, d).local_calls();
+            assert!(afni > fsl && afni > spm, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn fsl_is_most_compute_bound() {
+        for d in DatasetKind::ALL {
+            let fsl = PipelineProfile::table2(PipelineKind::FslFeat, d);
+            for p in [PipelineKind::Afni, PipelineKind::Spm] {
+                assert!(
+                    fsl.compute_secs > PipelineProfile::table2(p, d).compute_secs
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn afni_is_most_write_intensive() {
+        // §3.2: AFNI = shortest duration and largest output size
+        for d in DatasetKind::ALL {
+            let afni =
+                PipelineProfile::table2(PipelineKind::Afni, d).write_intensity();
+            for p in [PipelineKind::FslFeat, PipelineKind::Spm] {
+                assert!(
+                    afni > PipelineProfile::table2(p, d).write_intensity(),
+                    "{d:?} {p:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn only_spm_updates_in_place() {
+        assert!(IoStyle::of(PipelineKind::Spm).inplace_update_frac > 0.0);
+        assert_eq!(IoStyle::of(PipelineKind::Afni).inplace_update_frac, 0.0);
+        assert_eq!(IoStyle::of(PipelineKind::FslFeat).inplace_update_frac, 0.0);
+    }
+
+    #[test]
+    fn lustre_calls_never_exceed_total() {
+        for p in PipelineProfile::all() {
+            assert!(p.lustre_calls < p.total_glibc_calls, "{p:?}");
+        }
+    }
+}

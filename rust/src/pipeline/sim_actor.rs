@@ -1,0 +1,523 @@
+//! Trace replay actors: one simulated application process per trace, plus
+//! the simulated Sea flusher.
+//!
+//! [`ProcActor`] walks a [`Trace`] and translates every operation into
+//! engine actions according to the strategy under test — the same
+//! redirection decisions the real-mode interceptor makes:
+//!
+//! * **Baseline** — data ops go to Lustre through the node page cache
+//!   (memory-speed while the dirty pool fits, device-speed stall when it
+//!   doesn't); metadata ops queue at the MDS.
+//! * **Sea** — writes land in node tmpfs while it fits, spill to local SSD,
+//!   then fall through to the Lustre page-cache path; prefetched inputs
+//!   read at memory speed; in-place updates (SPM) hit the tmpfs replica;
+//!   metadata on cached files costs only CPU.
+//! * **Tmpfs** — everything at memory speed (the Fig 3 yardstick).
+
+use std::collections::VecDeque;
+
+use super::trace::{Trace, TraceOp};
+use crate::config::Strategy;
+use crate::lustre::ClusterRes;
+use crate::pagecache::{FlushItem, SimWorld};
+use crate::simcore::{Action, Actor, Ctx};
+
+/// CPU cost of one local (non-dataset) glibc call, seconds.
+pub const LOCAL_CALL_SECS: f64 = 2.0e-6;
+/// CPU cost of a metadata call served from Sea's cache tiers.
+pub const CACHED_META_SECS: f64 = 1.0e-6;
+
+/// One simulated application process.
+pub struct ProcActor {
+    trace: Trace,
+    res: ClusterRes,
+    strategy: Strategy,
+    prefetch: bool,
+    node: usize,
+    proc_idx: usize,
+    op_idx: usize,
+    pending: VecDeque<Action>,
+    done_reported: bool,
+    started: bool,
+}
+
+impl ProcActor {
+    pub fn new(
+        trace: Trace,
+        res: ClusterRes,
+        strategy: Strategy,
+        prefetch: bool,
+        proc_idx: usize,
+    ) -> Self {
+        let node = res.node_of(proc_idx);
+        ProcActor {
+            trace,
+            res,
+            strategy,
+            prefetch,
+            node,
+            proc_idx,
+            op_idx: 0,
+            pending: VecDeque::new(),
+            done_reported: false,
+            started: false,
+        }
+    }
+
+    fn cpu(&self, secs: f64, weight: f64) -> Action {
+        Action::Transfer {
+            demand: secs * weight,
+            path: vec![self.res.node_cpu[self.node]],
+            weight,
+        }
+    }
+
+    /// A write of `bytes` to Lustre through the client page cache.
+    ///
+    /// The Lustre client buffers up to `OSC_DIRTY_CAP` per file/OST at
+    /// memory speed (drained later by writeback); everything beyond blocks
+    /// at the OST's contended drain rate — queueing the actions models
+    /// exactly that. The node-wide dirty limit caps buffering too.
+    fn lustre_write(&mut self, world: &mut SimWorld, logical: &str, bytes: u64) {
+        let burst_room = if world.dirty_fits(self.node, bytes) {
+            crate::pagecache::OSC_DIRTY_CAP
+        } else {
+            0 // node dirty limit hit: no buffering at all
+        };
+        let buffered = bytes.min(burst_room);
+        if buffered > 0 {
+            world.dirty[self.node] += buffered as f64;
+            let a = self.mem_io_quiet(buffered);
+            self.pending.push_back(a);
+        }
+        let excess = bytes - buffered;
+        if excess > 0 {
+            world.metrics.stalled_writes += 1;
+            world.metrics.lustre_write_bytes += excess as f64;
+            self.pending.push_back(Action::transfer(
+                excess as f64,
+                vec![self.res.node_net[self.node], self.res.ost_for(logical)],
+            ));
+        }
+    }
+
+    fn mem_io_quiet(&self, bytes: u64) -> Action {
+        Action::transfer(bytes as f64, vec![self.res.node_mem[self.node]])
+    }
+
+    /// Synchronous-small-op queueing latency for `calls` operations
+    /// against loaded OSTs (reads, memmap updates).
+    fn sync_latency(&self, world: &mut SimWorld, calls: u64) -> Action {
+        Action::Sleep(calls as f64 * world.ost_op_delay())
+    }
+
+    fn lustre_read(&self, world: &mut SimWorld, logical: &str, bytes: u64) -> Action {
+        world.metrics.lustre_read_bytes += bytes as f64;
+        Action::transfer(
+            bytes as f64,
+            vec![self.res.node_net[self.node], self.res.ost_for(logical)],
+        )
+    }
+
+    fn mem_io(&self, world: &mut SimWorld, bytes: u64, write: bool) -> Action {
+        if write {
+            world.metrics.cache_write_bytes += bytes as f64;
+        } else {
+            world.metrics.cache_read_bytes += bytes as f64;
+        }
+        Action::transfer(bytes as f64, vec![self.res.node_mem[self.node]])
+    }
+
+    fn mds(&self, world: &mut SimWorld, calls: u64) -> Action {
+        world.metrics.mds_ops += calls as f64;
+        world.metrics.lustre_calls += calls;
+        Action::transfer(calls as f64, vec![self.res.mds])
+    }
+
+    /// Stable id for (proc, out-file) used by the flush queue.
+    fn file_id(&self, file: usize) -> u64 {
+        (self.proc_idx as u64) << 32 | file as u64
+    }
+
+    /// Translate one trace op into >= 1 actions (queued), mutating world
+    /// accounting at issue time.
+    fn translate(&mut self, op: TraceOp, world: &mut SimWorld) {
+        match op {
+            TraceOp::Compute { secs } => {
+                // the process tries to use every core (paper §2.2)
+                let a = self.cpu(secs, self.res.cores);
+                self.pending.push_back(a);
+            }
+            TraceOp::LocalOps { count } => {
+                world.metrics.total_calls += count;
+                let a = self.cpu(count as f64 * LOCAL_CALL_SECS, 1.0);
+                self.pending.push_back(a);
+            }
+            TraceOp::ReadInput { bytes, calls } => {
+                world.metrics.total_calls += calls;
+                let cached_input = self.strategy == Strategy::Tmpfs
+                    || (self.strategy == Strategy::Sea && self.prefetch);
+                if cached_input {
+                    let a = self.mem_io(world, bytes, false);
+                    self.pending.push_back(a);
+                } else {
+                    // Sequential reads are pipelined by client readahead:
+                    // bandwidth-bound (contended share), no per-op RTT.
+                    world.metrics.lustre_calls += calls;
+                    let a =
+                        self.lustre_read(world, &self.trace.input_logical.clone(), bytes);
+                    self.pending.push_back(a);
+                }
+            }
+            TraceOp::WriteOutput { file, bytes, calls } => {
+                world.metrics.total_calls += calls;
+                let logical = self.trace.out_files[file].logical.clone();
+                let a = match self.strategy {
+                    Strategy::Tmpfs => self.mem_io(world, bytes, true),
+                    Strategy::Baseline => {
+                        world.metrics.lustre_calls += calls;
+                        world.metrics.files_to_lustre += 1;
+                        self.lustre_write(world, &logical, bytes);
+                        return; // actions already queued
+                    }
+                    Strategy::Sea => {
+                        if world.tmpfs_fits(self.node, bytes) {
+                            world.tmpfs_used[self.node] += bytes as f64;
+                            if world.flush_enabled && !self.trace.out_files[file].scratch
+                            {
+                                world.flush_queue.push_back(FlushItem {
+                                    node: self.node,
+                                    bytes,
+                                    file_id: self.file_id(file),
+                                });
+                            }
+                            self.mem_io(world, bytes, true)
+                        } else if world.ssd_fits(self.node, bytes) {
+                            world.ssd_used[self.node] += bytes as f64;
+                            if world.flush_enabled && !self.trace.out_files[file].scratch
+                            {
+                                world.flush_queue.push_back(FlushItem {
+                                    node: self.node,
+                                    bytes,
+                                    file_id: self.file_id(file),
+                                });
+                            }
+                            world.metrics.cache_write_bytes += bytes as f64;
+                            // SSD bandwidth modelled via the node NIC-free
+                            // local path: use mem resource scaled? SSD has
+                            // its own speed: approximate with a dedicated
+                            // fraction of memory bandwidth (see DESIGN).
+                            Action::transfer(
+                                bytes as f64,
+                                vec![self.res.node_mem[self.node]],
+                            )
+                        } else {
+                            // caches full: fall through to Lustre
+                            world.metrics.lustre_calls += calls;
+                            world.metrics.files_to_lustre += 1;
+                            self.lustre_write(world, &logical, bytes);
+                            return; // actions already queued
+                        }
+                    }
+                };
+                self.pending.push_back(a);
+            }
+            TraceOp::MetaInput { calls } | TraceOp::MetaOutput { calls } => {
+                world.metrics.total_calls += calls;
+                match self.strategy {
+                    Strategy::Baseline => {
+                        let a = self.mds(world, calls);
+                        self.pending.push_back(a);
+                        // create/rename/unlink also allocate OST objects:
+                        // that fraction queues behind bulk RPCs.
+                        let style =
+                            crate::pipeline::profiles::IoStyle::of(self.trace.pipeline);
+                        let sync_ops =
+                            (calls as f64 * style.sync_meta_frac).round() as u64;
+                        if sync_ops > 0 {
+                            let lat = self.sync_latency(world, sync_ops);
+                            self.pending.push_back(lat);
+                        }
+                    }
+                    // Sea/tmpfs: namespace ops served from cache tiers
+                    _ => {
+                        let a = self.cpu(calls as f64 * CACHED_META_SECS, 1.0);
+                        self.pending.push_back(a);
+                    }
+                }
+            }
+            TraceOp::UpdateInput { bytes, calls } => {
+                world.metrics.total_calls += calls;
+                // Without prefetch the input's master copy stays on
+                // Lustre, so even under Sea the memmap updates go there —
+                // the reason the paper *always* prefetches for SPM (§3.4).
+                let effective = if self.strategy == Strategy::Sea && !self.prefetch {
+                    Strategy::Baseline
+                } else {
+                    self.strategy
+                };
+                match effective {
+                    Strategy::Baseline => {
+                        // SPM's memmap pattern without prefetch: every
+                        // update is a synchronous read-modify-write of
+                        // Lustre pages — bandwidth both ways plus per-op
+                        // queueing delay at the loaded OST. This is the
+                        // paper's dominant degradation mechanism (§3.4).
+                        world.metrics.lustre_calls += calls;
+                        let logical = self.trace.input_logical.clone();
+                        let read = self.lustre_read(world, &logical, bytes.max(1));
+                        self.pending.push_back(read);
+                        self.lustre_write(world, &logical, bytes.max(1));
+                        // The RMW round-trip count scales with the *bytes*
+                        // touched (page runs of ~32 KiB), which is why the
+                        // paper sees the largest speedups on the largest
+                        // images (§2.2): HCP memmaps suffer ~5x the RPCs
+                        // of PREVENT-AD's despite similar call counts.
+                        let rpcs = (bytes / (32 << 10)).max(1);
+                        let lat = self.sync_latency(world, rpcs.min(4 * calls.max(1)));
+                        self.pending.push_back(lat);
+                    }
+                    _ => {
+                        let a = self.mem_io(world, bytes.max(1), true);
+                        self.pending.push_back(a);
+                    }
+                }
+            }
+            TraceOp::Unlink { file } => {
+                world.metrics.total_calls += 1;
+                let a = match self.strategy {
+                    Strategy::Baseline => {
+                        world.metrics.lustre_calls += 1;
+                        self.mds(world, 1)
+                    }
+                    _ => {
+                        // eviction before flush: scratch never reaches Lustre
+                        world.evict_pending(self.file_id(file));
+                        let bytes = self.trace.out_files[file].bytes as f64;
+                        if world.tmpfs_used[self.node] >= bytes {
+                            world.tmpfs_used[self.node] -= bytes;
+                        }
+                        self.cpu(CACHED_META_SECS, 1.0)
+                    }
+                };
+                self.pending.push_back(a);
+            }
+        }
+    }
+}
+
+impl Actor<SimWorld> for ProcActor {
+    fn step(&mut self, world: &mut SimWorld, _ctx: &Ctx) -> Action {
+        if !self.started {
+            self.started = true;
+            if self.strategy == Strategy::Sea && self.prefetch {
+                // The prefetcher's initial bulk copy of the input from
+                // Lustre into tmpfs — the "initial read" the paper blames
+                // for Sea's occasional slowdowns (§2.3).
+                let logical = self.trace.input_logical.clone();
+                let bytes = self.trace.input_bytes;
+                let a = self.lustre_read(world, &logical, bytes);
+                self.pending.push_back(a);
+                let lat = self.sync_latency(world, 4); // open/stat round trips
+                self.pending.push_back(lat);
+                world.tmpfs_used[self.node] += bytes as f64;
+            }
+        }
+        loop {
+            if let Some(a) = self.pending.pop_front() {
+                return a;
+            }
+            if self.op_idx >= self.trace.ops.len() {
+                if !self.done_reported {
+                    self.done_reported = true;
+                    world.procs_done += 1;
+                }
+                return Action::Done;
+            }
+            let op = self.trace.ops[self.op_idx].clone();
+            self.op_idx += 1;
+            self.translate(op, world);
+        }
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "proc-{}-{}/{}",
+            self.proc_idx, self.trace.pipeline, self.trace.dataset
+        )
+    }
+}
+
+/// The simulated Sea flusher: drains the flush queue to Lustre in the
+/// background; when flushing is enabled it is *essential* (the paper's
+/// production runs include the final drain in the makespan).
+pub struct SeaFlusherActor {
+    res: ClusterRes,
+    interval: f64,
+    in_flight: Option<FlushItem>,
+    ost_cursor: usize,
+}
+
+impl SeaFlusherActor {
+    pub fn new(res: ClusterRes) -> Self {
+        SeaFlusherActor {
+            res,
+            interval: 0.2,
+            in_flight: None,
+            ost_cursor: 0,
+        }
+    }
+}
+
+impl Actor<SimWorld> for SeaFlusherActor {
+    fn step(&mut self, world: &mut SimWorld, _ctx: &Ctx) -> Action {
+        if let Some(item) = self.in_flight.take() {
+            world.metrics.lustre_write_bytes += item.bytes as f64;
+            world.metrics.files_to_lustre += 1;
+        }
+        if let Some(item) = world.flush_queue.pop_front() {
+            self.ost_cursor = (self.ost_cursor + 1) % self.res.osts.len();
+            let path = vec![
+                self.res.node_mem[item.node], // read from tmpfs
+                self.res.node_net[item.node],
+                self.res.osts[self.ost_cursor],
+            ];
+            let bytes = item.bytes as f64;
+            self.in_flight = Some(item);
+            Action::transfer(bytes, path)
+        } else if world.procs_done >= world.n_procs {
+            Action::Done // drained after the last process finished
+        } else {
+            Action::Sleep(self.interval)
+        }
+    }
+
+    fn label(&self) -> String {
+        "sea-flusher".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, DatasetKind, PipelineKind, Strategy};
+    use crate::pipeline::trace::generate_trace;
+    use crate::simcore::Engine;
+    use crate::util::Rng;
+
+    fn run_one(strategy: Strategy, flush: bool) -> (f64, SimWorld) {
+        let cluster = ClusterConfig::dedicated();
+        let mut eng: Engine<SimWorld> = Engine::new();
+        let res = ClusterRes::build(&mut eng, &cluster, 0);
+        let mut rng = Rng::new(5);
+        let trace =
+            generate_trace(PipelineKind::Afni, DatasetKind::PreventAd, 1, 0, &mut rng);
+        eng.add_actor(Box::new(ProcActor::new(
+            trace,
+            res.clone(),
+            strategy,
+            false,
+            0,
+        )));
+        let mut world = SimWorld::new(&cluster, strategy, 1, 7);
+        world.flush_enabled = flush;
+        if flush && strategy == Strategy::Sea {
+            eng.add_actor(Box::new(SeaFlusherActor::new(res)));
+        }
+        let t = eng.run(&mut world).unwrap();
+        (t, world)
+    }
+
+    #[test]
+    fn baseline_completes_near_compute_time() {
+        // Undegraded Lustre + page cache: makespan ≈ compute time (103 s)
+        // plus modest I/O overhead — the paper's no-busy-writer finding.
+        let (t, world) = run_one(Strategy::Baseline, false);
+        assert!(t > 100.0, "t={t}");
+        assert!(t < 140.0, "t={t}");
+        assert_eq!(world.procs_done, 1);
+        assert!(world.metrics.mds_ops > 0.0);
+    }
+
+    #[test]
+    fn sea_and_tmpfs_close_without_degradation() {
+        let (t_sea, _) = run_one(Strategy::Sea, false);
+        let (t_tmp, _) = run_one(Strategy::Tmpfs, false);
+        let rel = (t_sea - t_tmp).abs() / t_tmp;
+        assert!(rel < 0.1, "sea={t_sea} tmpfs={t_tmp}");
+    }
+
+    #[test]
+    fn sea_writes_stay_in_cache_without_flush() {
+        let (_, world) = run_one(Strategy::Sea, false);
+        assert_eq!(world.metrics.files_to_lustre, 0);
+        assert!(world.tmpfs_used[0] > 0.0);
+        assert!(world.metrics.cache_write_bytes > 0.0);
+    }
+
+    #[test]
+    fn sea_flush_drains_to_lustre() {
+        let (t_flush, world) = run_one(Strategy::Sea, true);
+        assert!(world.metrics.files_to_lustre > 0);
+        assert!(world.flush_queue.is_empty());
+        let (t_noflush, _) = run_one(Strategy::Sea, false);
+        assert!(t_flush >= t_noflush, "flush={t_flush} noflush={t_noflush}");
+    }
+
+    #[test]
+    fn scratch_files_evicted_never_flushed() {
+        // AFNI traces mark scratch files; with flushing on, unlinked
+        // scratch must be evicted from the queue, not flushed.
+        let (_, world) = run_one(Strategy::Sea, true);
+        assert!(world.metrics.files_evicted_unflushed == 0); // scratch never queued
+        // (scratch is excluded at queue time; eviction counter applies to
+        // queued-then-unlinked files, exercised in the flusher test below)
+    }
+
+    #[test]
+    fn compute_contention_stretches_makespan() {
+        // 2 procs/node vs 1: compute-bound FSL should take ~2x as long.
+        let cluster = ClusterConfig::dedicated();
+        let run_n = |nprocs: usize| {
+            let mut eng: Engine<SimWorld> = Engine::new();
+            let res = ClusterRes::build(&mut eng, &cluster, 0);
+            let mut rng = Rng::new(5);
+            for p in 0..nprocs {
+                let trace = generate_trace(
+                    PipelineKind::FslFeat,
+                    DatasetKind::PreventAd,
+                    nprocs,
+                    p,
+                    &mut rng,
+                );
+                eng.add_actor(Box::new(ProcActor::new(
+                    trace,
+                    res.clone(),
+                    Strategy::Baseline,
+                    false,
+                    p,
+                )));
+            }
+            let mut world = SimWorld::new(&cluster, Strategy::Baseline, nprocs, 7);
+            eng.run(&mut world).unwrap()
+        };
+        let t8 = run_n(8); // 1 proc/node -> no contention
+        let t16 = run_n(16); // 2 procs/node -> ~2x compute
+        assert!(t16 > 1.5 * t8, "t8={t8} t16={t16}");
+    }
+
+    #[test]
+    fn evict_pending_path_exercised() {
+        // Force a queued flush item then unlink it via the actor logic.
+        let cluster = ClusterConfig::dedicated();
+        let mut world = SimWorld::new(&cluster, Strategy::Sea, 1, 7);
+        world.flush_enabled = true;
+        world.flush_queue.push_back(FlushItem {
+            node: 0,
+            bytes: 100,
+            file_id: 42,
+        });
+        assert!(world.evict_pending(42));
+        assert_eq!(world.metrics.files_evicted_unflushed, 1);
+    }
+}

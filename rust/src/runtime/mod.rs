@@ -1,0 +1,333 @@
+//! PJRT runtime: load the AOT-compiled preprocessing graphs and execute
+//! them from the Rust hot path. Python never runs here.
+//!
+//! `make artifacts` lowers each (pipeline × dataset) JAX graph to HLO
+//! *text* (see `python/compile/aot.py` — xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos, text round-trips cleanly) plus a
+//! `manifest.tsv`. This module parses the manifest, compiles every
+//! artifact on the PJRT CPU client, and exposes typed execution.
+//!
+//! The `xla` crate's handles wrap raw C pointers (`!Send`), so the
+//! [`ComputeService`] owns client + executables on a dedicated thread and
+//! serves requests over channels — worker threads stay pure Rust.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{DatasetKind, PipelineKind};
+
+/// One artifact row from `manifest.tsv`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub pipeline: PipelineKind,
+    pub dataset: DatasetKind,
+    /// (T, Z, Y, X)
+    pub shape: (usize, usize, usize, usize),
+}
+
+impl ArtifactInfo {
+    pub fn voxels(&self) -> usize {
+        self.shape.0 * self.shape.1 * self.shape.2 * self.shape.3
+    }
+
+    pub fn hlo_path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.hlo.txt", self.name))
+    }
+}
+
+/// Parse `artifacts/manifest.tsv`.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactInfo>> {
+    let path = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+    let mut rows = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('\t').collect();
+        if parts.len() != 7 {
+            bail!("manifest row needs 7 fields: {line:?}");
+        }
+        let pipeline = PipelineKind::parse(parts[1])
+            .ok_or_else(|| anyhow!("unknown pipeline {:?}", parts[1]))?;
+        let dataset = DatasetKind::parse(parts[2])
+            .ok_or_else(|| anyhow!("unknown dataset {:?}", parts[2]))?;
+        let dim = |i: usize| -> Result<usize> {
+            parts[i].parse().with_context(|| format!("bad dim {:?}", parts[i]))
+        };
+        rows.push(ArtifactInfo {
+            name: parts[0].to_string(),
+            pipeline,
+            dataset,
+            shape: (dim(3)?, dim(4)?, dim(5)?, dim(6)?),
+        });
+    }
+    Ok(rows)
+}
+
+/// Output of one preprocessing execution.
+#[derive(Debug, Clone)]
+pub struct PreprocOutput {
+    /// (T, Z, Y, X) preprocessed image.
+    pub preprocessed: Vec<f32>,
+    /// (Z, Y, X) temporal mean volume.
+    pub mean_vol: Vec<f32>,
+    /// (Z, Y, X) binary brain mask.
+    pub mask: Vec<f32>,
+}
+
+/// Everything owned by the PJRT thread.
+struct LoadedArtifacts {
+    exes: HashMap<String, (ArtifactInfo, xla::PjRtLoadedExecutable)>,
+}
+
+fn compile_all(dir: &Path, only: Option<&[String]>) -> Result<LoadedArtifacts> {
+    let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+    let mut exes = HashMap::new();
+    for info in load_manifest(dir)? {
+        if let Some(names) = only {
+            if !names.contains(&info.name) {
+                continue;
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            info.hlo_path(dir)
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO for {}: {e}", info.name))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", info.name))?;
+        exes.insert(info.name.clone(), (info, exe));
+    }
+    Ok(LoadedArtifacts { exes })
+}
+
+fn run_one(
+    arts: &LoadedArtifacts,
+    name: &str,
+    voxels: &[f32],
+) -> Result<PreprocOutput> {
+    let (info, exe) = arts
+        .exes
+        .get(name)
+        .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+    if voxels.len() != info.voxels() {
+        bail!(
+            "{name}: got {} voxels, artifact shape {:?} needs {}",
+            voxels.len(),
+            info.shape,
+            info.voxels()
+        );
+    }
+    let (t, z, y, x) = info.shape;
+    let input = xla::Literal::vec1(voxels)
+        .reshape(&[t as i64, z as i64, y as i64, x as i64])
+        .map_err(|e| anyhow!("reshape: {e}"))?;
+    let result = exe
+        .execute::<xla::Literal>(&[input])
+        .map_err(|e| anyhow!("execute {name}: {e}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e}"))?;
+    let (pre, mean, mask) = result.to_tuple3().map_err(|e| anyhow!("tuple3: {e}"))?;
+    Ok(PreprocOutput {
+        preprocessed: pre.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+        mean_vol: mean.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+        mask: mask.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+    })
+}
+
+enum Request {
+    Run {
+        name: String,
+        voxels: Vec<f32>,
+        reply: mpsc::Sender<Result<PreprocOutput>>,
+    },
+    List {
+        reply: mpsc::Sender<Vec<ArtifactInfo>>,
+    },
+    Shutdown,
+}
+
+/// Thread-safe front end to the PJRT thread. Clone the handle freely; all
+/// clones speak to the same executor thread.
+#[derive(Clone)]
+pub struct ComputeService {
+    tx: mpsc::Sender<Request>,
+}
+
+/// Join guard returned by [`ComputeService::start`].
+pub struct ComputeServiceGuard {
+    tx: mpsc::Sender<Request>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ComputeService {
+    /// Spawn the PJRT thread, compiling all artifacts in `dir`
+    /// (or the subset `only`). Blocks until compilation finishes.
+    pub fn start(
+        dir: &Path,
+        only: Option<Vec<String>>,
+    ) -> Result<(ComputeService, ComputeServiceGuard)> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dir = dir.to_path_buf();
+        let join = std::thread::Builder::new()
+            .name("sea-pjrt".into())
+            .spawn(move || {
+                let arts = match compile_all(&dir, only.as_deref()) {
+                    Ok(a) => {
+                        let _ = ready_tx.send(Ok(()));
+                        a
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Run {
+                            name,
+                            voxels,
+                            reply,
+                        } => {
+                            let _ = reply.send(run_one(&arts, &name, &voxels));
+                        }
+                        Request::List { reply } => {
+                            let infos =
+                                arts.exes.values().map(|(i, _)| i.clone()).collect();
+                            let _ = reply.send(infos);
+                        }
+                        Request::Shutdown => return,
+                    }
+                }
+            })
+            .context("spawning sea-pjrt thread")?;
+        ready_rx
+            .recv()
+            .context("pjrt thread died during compilation")??;
+        Ok((
+            ComputeService { tx: tx.clone() },
+            ComputeServiceGuard {
+                tx,
+                join: Some(join),
+            },
+        ))
+    }
+
+    /// Execute artifact `name` on `voxels` (blocking).
+    pub fn preprocess(&self, name: &str, voxels: Vec<f32>) -> Result<PreprocOutput> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Run {
+                name: name.to_string(),
+                voxels,
+                reply,
+            })
+            .map_err(|_| anyhow!("pjrt thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt thread gone"))?
+    }
+
+    pub fn artifacts(&self) -> Result<Vec<ArtifactInfo>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::List { reply })
+            .map_err(|_| anyhow!("pjrt thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt thread gone"))
+    }
+}
+
+impl Drop for ComputeServiceGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Repo-root `artifacts/` directory (tests, examples, CLI default).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("SEA_ARTIFACTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Artifact name for a (pipeline, dataset) pair.
+pub fn artifact_name(pipeline: PipelineKind, dataset: DatasetKind) -> String {
+    format!("{pipeline}_{dataset}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        default_artifacts_dir().join("manifest.tsv").exists()
+    }
+
+    #[test]
+    fn manifest_parses_and_covers_grid() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rows = load_manifest(&default_artifacts_dir()).unwrap();
+        assert_eq!(rows.len(), 9);
+        for p in PipelineKind::ALL {
+            for d in DatasetKind::ALL {
+                assert!(
+                    rows.iter().any(|r| r.pipeline == p && r.dataset == d),
+                    "{p}/{d} missing"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        let dir = crate::testing::tempdir::tempdir("manifest");
+        std::fs::write(dir.path().join("manifest.tsv"), "a\tb\tc\n").unwrap();
+        assert!(load_manifest(dir.path()).is_err());
+    }
+
+    #[test]
+    fn compute_service_runs_spm_prevent_ad() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let (svc, _guard) = ComputeService::start(
+            &default_artifacts_dir(),
+            Some(vec!["spm_prevent_ad".into()]),
+        )
+        .unwrap();
+        let infos = svc.artifacts().unwrap();
+        assert_eq!(infos.len(), 1);
+        let info = infos[0].clone();
+        let mut rng = crate::util::Rng::new(3);
+        let (_h, voxels) =
+            crate::dataset::volume::synthetic_volume(info.shape, &mut rng);
+        let out = svc.preprocess(&info.name, voxels.clone()).unwrap();
+        assert_eq!(out.preprocessed.len(), info.voxels());
+        let vol = info.shape.1 * info.shape.2 * info.shape.3;
+        assert_eq!(out.mean_vol.len(), vol);
+        assert_eq!(out.mask.len(), vol);
+        // mask is binary, outputs finite
+        assert!(out.mask.iter().all(|&m| m == 0.0 || m == 1.0));
+        assert!(out.preprocessed.iter().all(|v| v.is_finite()));
+        // wrong voxel count is rejected
+        assert!(svc.preprocess(&info.name, vec![0.0; 3]).is_err());
+        // unknown artifact is rejected
+        assert!(svc.preprocess("nope", voxels).is_err());
+    }
+}

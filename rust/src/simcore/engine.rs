@@ -1,0 +1,508 @@
+//! Discrete-event engine driving actors over the [`FlowNet`].
+//!
+//! Actors are sequential programs expressed as state machines: each time an
+//! actor is runnable the engine calls [`Actor::step`], which returns the
+//! next [`Action`] — sleep for virtual time, transfer demand through
+//! resources, or finish. The engine owns the virtual clock, an event heap,
+//! and the flow network; on every flow-set change it recomputes fair-share
+//! rates and reschedules the next completion (epoch-tagged events make the
+//! superseded ones inert).
+//!
+//! `W` is the experiment's shared world (page-cache counters, Sea state,
+//! metric sinks): every actor sees `&mut W` when stepped, which is how the
+//! flusher finds dirty files and pipeline processes update dirty-page
+//! accounting.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::flow::{FlowNet, ResourceId};
+
+pub type ActorId = usize;
+
+/// What an actor does next.
+#[derive(Debug, Clone)]
+pub enum Action {
+    /// Occupy `path` until `demand` units have flowed (fair-share `weight`).
+    Transfer {
+        demand: f64,
+        path: Vec<ResourceId>,
+        weight: f64,
+    },
+    /// Advance virtual time without occupying resources.
+    Sleep(f64),
+    /// Terminate this actor.
+    Done,
+}
+
+impl Action {
+    /// Convenience: unit-weight transfer.
+    pub fn transfer(demand: f64, path: Vec<ResourceId>) -> Action {
+        Action::Transfer {
+            demand,
+            path,
+            weight: 1.0,
+        }
+    }
+}
+
+/// Context visible to an actor during a step.
+pub struct Ctx {
+    pub now: f64,
+    pub actor: ActorId,
+}
+
+/// A sequential simulated process.
+pub trait Actor<W> {
+    fn step(&mut self, world: &mut W, ctx: &Ctx) -> Action;
+    /// Label for diagnostics.
+    fn label(&self) -> String {
+        "actor".into()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ActorState {
+    Runnable,
+    Sleeping,
+    Transferring,
+    Done,
+}
+
+struct Slot<W> {
+    actor: Box<dyn Actor<W>>,
+    state: ActorState,
+    daemon: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum EventKind {
+    Wake(ActorId),
+    FlowCheck { epoch: u64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Errors surfaced by [`Engine::run`].
+#[derive(Debug, thiserror::Error)]
+pub enum SimError {
+    #[error("deadlock at t={t}: {pending} actor(s) pending but no events/flows")]
+    Deadlock { t: f64, pending: usize },
+    #[error("event budget exhausted after {0} events (runaway simulation?)")]
+    Budget(u64),
+}
+
+/// The simulation engine.
+pub struct Engine<W> {
+    pub net: FlowNet,
+    clock: f64,
+    events: BinaryHeap<Reverse<Event>>,
+    slots: Vec<Slot<W>>,
+    epoch: u64,
+    seq: u64,
+    essential_pending: usize,
+    processed: u64,
+    max_events: u64,
+}
+
+impl<W> Engine<W> {
+    pub fn new() -> Self {
+        Engine {
+            net: FlowNet::new(),
+            clock: 0.0,
+            events: BinaryHeap::new(),
+            slots: Vec::new(),
+            epoch: 0,
+            seq: 0,
+            essential_pending: 0,
+            processed: 0,
+            max_events: 200_000_000,
+        }
+    }
+
+    pub fn with_event_budget(mut self, max_events: u64) -> Self {
+        self.max_events = max_events;
+        self
+    }
+
+    pub fn now(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn add_resource(&mut self, label: impl Into<String>, capacity: f64) -> ResourceId {
+        self.net.add_resource(label, capacity)
+    }
+
+    /// Register an actor that must finish for the run to complete.
+    pub fn add_actor(&mut self, actor: Box<dyn Actor<W>>) -> ActorId {
+        self.essential_pending += 1;
+        self.push_slot(actor, false)
+    }
+
+    /// Register a background actor (busy writer, writeback) that does not
+    /// gate completion.
+    pub fn add_daemon(&mut self, actor: Box<dyn Actor<W>>) -> ActorId {
+        self.push_slot(actor, true)
+    }
+
+    fn push_slot(&mut self, actor: Box<dyn Actor<W>>, daemon: bool) -> ActorId {
+        self.slots.push(Slot {
+            actor,
+            state: ActorState::Runnable,
+            daemon,
+        });
+        self.slots.len() - 1
+    }
+
+    fn push_event(&mut self, time: f64, kind: EventKind) {
+        self.seq += 1;
+        self.events.push(Reverse(Event {
+            time,
+            seq: self.seq,
+            kind,
+        }));
+    }
+
+    fn step_actor(&mut self, id: ActorId, world: &mut W) {
+        if self.slots[id].state == ActorState::Done {
+            return;
+        }
+        let ctx = Ctx {
+            now: self.clock,
+            actor: id,
+        };
+        let action = self.slots[id].actor.step(world, &ctx);
+        match action {
+            Action::Sleep(dt) => {
+                assert!(dt >= 0.0, "negative sleep from {}", self.slots[id].actor.label());
+                self.slots[id].state = ActorState::Sleeping;
+                self.push_event(self.clock + dt, EventKind::Wake(id));
+            }
+            Action::Transfer {
+                demand,
+                path,
+                weight,
+            } => {
+                self.slots[id].state = ActorState::Transferring;
+                self.net.add_flow(demand, path, weight, id);
+            }
+            Action::Done => {
+                self.slots[id].state = ActorState::Done;
+                if !self.slots[id].daemon {
+                    self.essential_pending -= 1;
+                }
+            }
+        }
+    }
+
+    /// Recompute rates and schedule the next flow completion check.
+    fn reschedule_flows(&mut self) {
+        self.net.recompute();
+        self.epoch += 1;
+        if let Some((_fid, dt)) = self.net.next_completion() {
+            let epoch = self.epoch;
+            self.push_event(self.clock + dt.max(0.0), EventKind::FlowCheck { epoch });
+        }
+    }
+
+    /// Drive the simulation until every essential actor is done.
+    /// Returns the final virtual time (the makespan).
+    pub fn run(&mut self, world: &mut W) -> Result<f64, SimError> {
+        // Initial steps.
+        for id in 0..self.slots.len() {
+            self.step_actor(id, world);
+        }
+        self.reschedule_flows();
+
+        while self.essential_pending > 0 {
+            self.processed += 1;
+            if self.processed > self.max_events {
+                return Err(SimError::Budget(self.max_events));
+            }
+            let Some(Reverse(ev)) = self.events.pop() else {
+                return Err(SimError::Deadlock {
+                    t: self.clock,
+                    pending: self.essential_pending,
+                });
+            };
+            debug_assert!(ev.time >= self.clock - 1e-9, "time went backwards");
+            // Progress flows up to the event time at the current rates.
+            let dt = (ev.time - self.clock).max(0.0);
+            self.net.advance(dt);
+            self.clock = ev.time;
+
+            let flows_changed;
+            match ev.kind {
+                EventKind::Wake(id) => {
+                    self.slots[id].state = ActorState::Runnable;
+                    self.step_actor(id, world);
+                    flows_changed = self.net.needs_recompute();
+                }
+                EventKind::FlowCheck { epoch } => {
+                    if epoch != self.epoch {
+                        continue; // superseded by a newer rate allocation
+                    }
+                    let mut finished = self.net.finished_flows();
+                    if finished.is_empty() {
+                        // Numerical slack. If the nearest completion is
+                        // within clock epsilon, force-complete it: the
+                        // event time may no longer advance the f64 clock
+                        // (dt < eps*now) and rescheduling would livelock.
+                        match self.net.next_completion() {
+                            Some((fid, dt))
+                                if dt <= 1e-9 + f64::EPSILON * 4.0 * self.clock =>
+                            {
+                                finished.push(fid);
+                            }
+                            _ => {
+                                self.reschedule_flows();
+                                continue;
+                            }
+                        }
+                    }
+                    for fid in finished {
+                        if let Some(owner) = self.net.remove_flow(fid) {
+                            self.slots[owner].state = ActorState::Runnable;
+                            self.step_actor(owner, world);
+                        }
+                    }
+                    flows_changed = true;
+                }
+            }
+            if flows_changed || self.net.needs_recompute() {
+                self.reschedule_flows();
+            }
+        }
+        Ok(self.clock)
+    }
+}
+
+impl<W> Default for Engine<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Actor that runs a fixed script of actions.
+    struct Script {
+        actions: Vec<Action>,
+        idx: usize,
+        pub log: std::rc::Rc<std::cell::RefCell<Vec<(f64, usize)>>>,
+        id: usize,
+    }
+
+    impl Actor<()> for Script {
+        fn step(&mut self, _w: &mut (), ctx: &Ctx) -> Action {
+            self.log.borrow_mut().push((ctx.now, self.id));
+            let a = self
+                .actions
+                .get(self.idx)
+                .cloned()
+                .unwrap_or(Action::Done);
+            self.idx += 1;
+            a
+        }
+    }
+
+    fn script(
+        id: usize,
+        actions: Vec<Action>,
+        log: &std::rc::Rc<std::cell::RefCell<Vec<(f64, usize)>>>,
+    ) -> Box<Script> {
+        Box::new(Script {
+            actions,
+            idx: 0,
+            log: log.clone(),
+            id,
+        })
+    }
+
+    #[test]
+    fn sleep_advances_clock() {
+        let log = Default::default();
+        let mut eng: Engine<()> = Engine::new();
+        eng.add_actor(script(0, vec![Action::Sleep(2.5), Action::Sleep(1.0)], &log));
+        let t = eng.run(&mut ()).unwrap();
+        assert!((t - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_flows_share_then_speed_up() {
+        // cap 100; demands 100 & 200 started together:
+        // equal share 50/50 -> f1 done at t=2; f2 then gets 100 -> done t=3.
+        let log = Default::default();
+        let mut eng: Engine<()> = Engine::new();
+        let link = eng.add_resource("link", 100.0);
+        eng.add_actor(script(0, vec![Action::transfer(100.0, vec![link])], &log));
+        eng.add_actor(script(1, vec![Action::transfer(200.0, vec![link])], &log));
+        let t = eng.run(&mut ()).unwrap();
+        assert!((t - 3.0).abs() < 1e-6, "t={t}");
+    }
+
+    #[test]
+    fn sequential_transfers_add_up() {
+        let log = Default::default();
+        let mut eng: Engine<()> = Engine::new();
+        let link = eng.add_resource("link", 10.0);
+        eng.add_actor(script(
+            0,
+            vec![
+                Action::transfer(50.0, vec![link]),
+                Action::Sleep(1.0),
+                Action::transfer(30.0, vec![link]),
+            ],
+            &log,
+        ));
+        let t = eng.run(&mut ()).unwrap();
+        assert!((t - 9.0).abs() < 1e-6, "t={t}"); // 5 + 1 + 3
+    }
+
+    #[test]
+    fn daemon_does_not_block_completion() {
+        struct Forever;
+        impl Actor<()> for Forever {
+            fn step(&mut self, _w: &mut (), _c: &Ctx) -> Action {
+                Action::Sleep(0.5)
+            }
+        }
+        let log = Default::default();
+        let mut eng: Engine<()> = Engine::new();
+        eng.add_daemon(Box::new(Forever));
+        eng.add_actor(script(0, vec![Action::Sleep(1.0)], &log));
+        let t = eng.run(&mut ()).unwrap();
+        assert!((t - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn daemon_contends_for_bandwidth() {
+        // Daemon saturates the link forever; essential actor's 100-unit
+        // transfer on a 100-cap link takes 2s (half share) instead of 1s.
+        struct Hog {
+            link: ResourceId,
+        }
+        impl Actor<()> for Hog {
+            fn step(&mut self, _w: &mut (), _c: &Ctx) -> Action {
+                Action::transfer(1e18, vec![self.link])
+            }
+        }
+        let log = Default::default();
+        let mut eng: Engine<()> = Engine::new();
+        let link = eng.add_resource("link", 100.0);
+        eng.add_daemon(Box::new(Hog { link }));
+        eng.add_actor(script(0, vec![Action::transfer(100.0, vec![link])], &log));
+        let t = eng.run(&mut ()).unwrap();
+        assert!((t - 2.0).abs() < 1e-6, "t={t}");
+    }
+
+    #[test]
+    fn world_is_shared_between_actors() {
+        struct Inc;
+        impl Actor<u32> for Inc {
+            fn step(&mut self, w: &mut u32, _c: &Ctx) -> Action {
+                *w += 1;
+                Action::Done
+            }
+        }
+        let mut eng: Engine<u32> = Engine::new();
+        for _ in 0..5 {
+            eng.add_actor(Box::new(Inc));
+        }
+        let mut world = 0u32;
+        eng.run(&mut world).unwrap();
+        assert_eq!(world, 5);
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        struct WaitsForever;
+        impl Actor<()> for WaitsForever {
+            fn step(&mut self, _w: &mut (), _c: &Ctx) -> Action {
+                // transfer over a resource that is never... there is none;
+                // emulate deadlock with an empty event queue by sleeping on
+                // nothing: easiest is a flow that can't finish — but flows
+                // always progress. Instead: this actor is never stepped
+                // again because it returns Sleep(inf).
+                Action::Sleep(f64::INFINITY)
+            }
+        }
+        // Sleep(inf) schedules an event at t=inf; engine processes it and
+        // the actor sleeps forever again — caught by the event budget.
+        let mut eng: Engine<()> = Engine::new().with_event_budget(10);
+        eng.add_actor(Box::new(WaitsForever));
+        let err = eng.run(&mut ()).unwrap_err();
+        assert!(matches!(err, SimError::Budget(_)));
+    }
+
+    #[test]
+    fn event_ordering_is_stable_at_equal_times() {
+        let log: std::rc::Rc<std::cell::RefCell<Vec<(f64, usize)>>> = Default::default();
+        let mut eng: Engine<()> = Engine::new();
+        for i in 0..4 {
+            eng.add_actor(script(i, vec![Action::Sleep(1.0)], &log));
+        }
+        eng.run(&mut ()).unwrap();
+        // First wave (t=0) in registration order, second wave (t=1) too.
+        let entries = log.borrow();
+        let wave2: Vec<usize> = entries
+            .iter()
+            .filter(|(t, _)| *t == 1.0)
+            .map(|(_, id)| *id)
+            .collect();
+        assert_eq!(wave2, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn prop_parallel_transfers_conserve_work() {
+        // N equal flows on one link: makespan == total_demand / capacity.
+        crate::testing::check(|g| {
+            let cap = g.f64_in(10.0, 1e4);
+            let n = g.usize_in(1, 10);
+            let demand = g.f64_in(1.0, 1e4);
+            let log = Default::default();
+            let mut eng: Engine<()> = Engine::new();
+            let link = eng.add_resource("l", cap);
+            for i in 0..n {
+                eng.add_actor(script(i, vec![Action::transfer(demand, vec![link])], &log));
+            }
+            let t = eng.run(&mut ()).map_err(|e| e.to_string())?;
+            let expect = demand * n as f64 / cap;
+            crate::prop_assert!(
+                (t - expect).abs() < expect * 1e-6 + 1e-9,
+                "t={t} expect={expect}"
+            );
+            Ok(())
+        });
+    }
+}

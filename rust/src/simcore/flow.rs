@@ -1,0 +1,472 @@
+//! Weighted max-min fair bandwidth sharing — the flow-level network model.
+//!
+//! Resources (an OST, a NIC, a node's memory bus, the MDS, a CPU's cores)
+//! have a capacity in units/second. Flows (a file transfer, a metadata op,
+//! a compute phase) have a remaining demand and a *path*: the set of
+//! resources they occupy simultaneously. Rates are allocated by weighted
+//! max-min fairness (progressive filling): the classic model for TCP-like
+//! sharing, and the mechanism by which the paper's busy writers degrade
+//! Lustre for everyone (§2.2, §4.3).
+
+use std::collections::HashMap;
+
+/// Index of a resource registered with [`FlowNet::add_resource`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ResourceId(pub usize);
+
+/// Handle of an active flow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FlowId(pub u64);
+
+#[derive(Debug)]
+struct Resource {
+    capacity: f64,
+    label: String,
+}
+
+#[derive(Debug)]
+struct Flow {
+    remaining: f64,
+    /// Initial demand (for relative completion tolerance).
+    demand: f64,
+    /// Current fair-share rate (set by [`FlowNet::recompute`]).
+    rate: f64,
+    path: Vec<ResourceId>,
+    weight: f64,
+    /// Opaque tag returned to the engine when the flow completes
+    /// (the owning actor id).
+    pub owner: usize,
+}
+
+impl Flow {
+    /// Numerically finished: float residue after advancing by the exact
+    /// completion dt is O(eps * demand), so use a relative tolerance.
+    fn is_finished(&self) -> bool {
+        self.remaining <= 1e-9 + 1e-9 * self.demand
+    }
+}
+
+/// The set of resources + active flows with their current fair-share rates.
+#[derive(Debug, Default)]
+pub struct FlowNet {
+    resources: Vec<Resource>,
+    flows: HashMap<FlowId, Flow>,
+    next_id: u64,
+    dirty: bool,
+    /// Reused scratch for [`FlowNet::recompute`] (§Perf: the allocation-free
+    /// hot path — recompute runs on every flow-set change).
+    scratch: RecomputeScratch,
+}
+
+#[derive(Debug, Default)]
+struct RecomputeScratch {
+    ids: Vec<FlowId>,
+    weight: Vec<f64>,
+    frozen: Vec<bool>,
+    cap: Vec<f64>,
+    wsum: Vec<f64>,
+}
+
+impl FlowNet {
+    pub fn new() -> Self {
+        FlowNet::default()
+    }
+
+    pub fn add_resource(&mut self, label: impl Into<String>, capacity: f64) -> ResourceId {
+        assert!(capacity > 0.0, "resource capacity must be positive");
+        self.resources.push(Resource {
+            capacity,
+            label: label.into(),
+        });
+        ResourceId(self.resources.len() - 1)
+    }
+
+    pub fn resource_label(&self, id: ResourceId) -> &str {
+        &self.resources[id.0].label
+    }
+
+    pub fn capacity(&self, id: ResourceId) -> f64 {
+        self.resources[id.0].capacity
+    }
+
+    /// Change a resource's capacity (used for degradation scenarios).
+    pub fn set_capacity(&mut self, id: ResourceId, capacity: f64) {
+        assert!(capacity > 0.0);
+        self.resources[id.0].capacity = capacity;
+        self.dirty = true;
+    }
+
+    /// Start a flow of `demand` units over `path` with fair-share `weight`.
+    pub fn add_flow(
+        &mut self,
+        demand: f64,
+        path: Vec<ResourceId>,
+        weight: f64,
+        owner: usize,
+    ) -> FlowId {
+        assert!(demand > 0.0, "flow demand must be positive");
+        assert!(!path.is_empty(), "flow path must use >= 1 resource");
+        assert!(weight > 0.0);
+        let id = FlowId(self.next_id);
+        self.next_id += 1;
+        self.flows.insert(
+            id,
+            Flow {
+                remaining: demand,
+                demand,
+                rate: 0.0,
+                path,
+                weight,
+                owner,
+            },
+        );
+        self.dirty = true;
+        id
+    }
+
+    pub fn remove_flow(&mut self, id: FlowId) -> Option<usize> {
+        let f = self.flows.remove(&id)?;
+        self.dirty = true;
+        Some(f.owner)
+    }
+
+    pub fn owner(&self, id: FlowId) -> Option<usize> {
+        self.flows.get(&id).map(|f| f.owner)
+    }
+
+    pub fn remaining(&self, id: FlowId) -> Option<f64> {
+        self.flows.get(&id).map(|f| f.remaining)
+    }
+
+    pub fn rate(&self, id: FlowId) -> f64 {
+        self.flows.get(&id).map(|f| f.rate).unwrap_or(0.0)
+    }
+
+    pub fn n_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Progress every active flow by `dt` seconds at current rates.
+    pub fn advance(&mut self, dt: f64) {
+        if dt <= 0.0 {
+            return;
+        }
+        for flow in self.flows.values_mut() {
+            flow.remaining = (flow.remaining - flow.rate * dt).max(0.0);
+        }
+    }
+
+    /// Recompute weighted max-min fair rates (progressive filling).
+    ///
+    /// Allocation-free: all working state lives in reused scratch buffers
+    /// (see EXPERIMENTS.md §Perf for the before/after).
+    pub fn recompute(&mut self) {
+        self.dirty = false;
+        if self.flows.is_empty() {
+            return;
+        }
+        for f in self.flows.values_mut() {
+            f.rate = 0.0;
+        }
+        let s = &mut self.scratch;
+        s.ids.clear();
+        s.weight.clear();
+        s.frozen.clear();
+        s.cap.clear();
+        s.cap.extend(self.resources.iter().map(|r| r.capacity));
+        s.wsum.clear();
+        s.wsum.resize(self.resources.len(), 0.0);
+        for (id, f) in &self.flows {
+            s.ids.push(*id);
+            s.weight.push(f.weight);
+            s.frozen.push(false);
+            for r in &f.path {
+                s.wsum[r.0] += f.weight;
+            }
+        }
+        let mut remaining = s.ids.len();
+        let mut frozen_rates: Vec<(FlowId, f64)> = Vec::with_capacity(s.ids.len());
+        while remaining > 0 {
+            // bottleneck resource: minimal capacity-per-weight
+            let mut best: Option<(usize, f64)> = None;
+            for (ri, &ws) in s.wsum.iter().enumerate() {
+                if ws > 1e-12 {
+                    let share = s.cap[ri] / ws;
+                    if best.map_or(true, |(_, sh)| share < sh) {
+                        best = Some((ri, share));
+                    }
+                }
+            }
+            let Some((bottleneck, share)) = best else { break };
+            // freeze every unfrozen flow crossing the bottleneck
+            let mut froze_any = false;
+            for i in 0..s.ids.len() {
+                if s.frozen[i] {
+                    continue;
+                }
+                let flow = &self.flows[&s.ids[i]];
+                if !flow.path.iter().any(|r| r.0 == bottleneck) {
+                    continue;
+                }
+                froze_any = true;
+                s.frozen[i] = true;
+                remaining -= 1;
+                let w = s.weight[i];
+                let rate = (share * w).max(0.0);
+                frozen_rates.push((s.ids[i], rate));
+                for r in &flow.path {
+                    s.cap[r.0] = (s.cap[r.0] - rate).max(0.0);
+                    s.wsum[r.0] -= w;
+                }
+            }
+            if !froze_any {
+                break; // no flow uses the bottleneck: done
+            }
+        }
+        for (id, rate) in frozen_rates {
+            if let Some(f) = self.flows.get_mut(&id) {
+                f.rate = rate;
+            }
+        }
+    }
+
+    pub fn needs_recompute(&self) -> bool {
+        self.dirty
+    }
+
+    /// Earliest completion among active flows: `(flow, dt_from_now)`.
+    pub fn next_completion(&self) -> Option<(FlowId, f64)> {
+        let mut best: Option<(FlowId, f64)> = None;
+        for (id, f) in &self.flows {
+            if f.rate <= 1e-15 {
+                continue;
+            }
+            let dt = f.remaining / f.rate;
+            if best.map_or(true, |(_, b)| dt < b) {
+                best = Some((*id, dt));
+            }
+        }
+        best
+    }
+
+    /// Flows whose remaining demand is (numerically) exhausted.
+    pub fn finished_flows(&self) -> Vec<FlowId> {
+        self.flows
+            .iter()
+            .filter(|(_, f)| f.is_finished())
+            .map(|(id, _)| *id)
+            .collect()
+    }
+
+    /// Aggregate allocated rate crossing `resource` (diagnostics).
+    pub fn utilization(&self, resource: ResourceId) -> f64 {
+        self.flows
+            .iter()
+            .filter(|(_, f)| f.path.contains(&resource))
+            .map(|(id, _)| self.rate(*id))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net1() -> (FlowNet, ResourceId) {
+        let mut net = FlowNet::new();
+        let r = net.add_resource("link", 100.0);
+        (net, r)
+    }
+
+    #[test]
+    fn single_flow_gets_full_capacity() {
+        let (mut net, r) = net1();
+        let f = net.add_flow(1000.0, vec![r], 1.0, 0);
+        net.recompute();
+        assert!((net.rate(f) - 100.0).abs() < 1e-9);
+        let (fid, dt) = net.next_completion().unwrap();
+        assert_eq!(fid, f);
+        assert!((dt - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn equal_flows_split_evenly() {
+        let (mut net, r) = net1();
+        let a = net.add_flow(1000.0, vec![r], 1.0, 0);
+        let b = net.add_flow(1000.0, vec![r], 1.0, 1);
+        net.recompute();
+        assert!((net.rate(a) - 50.0).abs() < 1e-9);
+        assert!((net.rate(b) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_flows_split_by_weight() {
+        let (mut net, r) = net1();
+        let a = net.add_flow(1000.0, vec![r], 3.0, 0);
+        let b = net.add_flow(1000.0, vec![r], 1.0, 1);
+        net.recompute();
+        assert!((net.rate(a) - 75.0).abs() < 1e-9);
+        assert!((net.rate(b) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_resource_path_bottlenecked_by_slowest() {
+        let mut net = FlowNet::new();
+        let fast = net.add_resource("net", 1000.0);
+        let slow = net.add_resource("disk", 10.0);
+        let f = net.add_flow(100.0, vec![fast, slow], 1.0, 0);
+        net.recompute();
+        assert!((net.rate(f) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_min_reallocates_leftover() {
+        // Two resources: A cap 10 (flows f1 only), B cap 100 (f1 and f2).
+        // f1 bottlenecked at 10 on A; f2 should then get B's leftover 90.
+        let mut net = FlowNet::new();
+        let a = net.add_resource("a", 10.0);
+        let b = net.add_resource("b", 100.0);
+        let f1 = net.add_flow(1e6, vec![a, b], 1.0, 0);
+        let f2 = net.add_flow(1e6, vec![b], 1.0, 1);
+        net.recompute();
+        assert!((net.rate(f1) - 10.0).abs() < 1e-9, "{}", net.rate(f1));
+        assert!((net.rate(f2) - 90.0).abs() < 1e-9, "{}", net.rate(f2));
+    }
+
+    #[test]
+    fn advance_consumes_demand_and_finishes() {
+        let (mut net, r) = net1();
+        let f = net.add_flow(100.0, vec![r], 1.0, 7);
+        net.recompute();
+        net.advance(0.5);
+        assert!((net.remaining(f).unwrap() - 50.0).abs() < 1e-9);
+        net.advance(0.5);
+        assert_eq!(net.finished_flows(), vec![f]);
+        assert_eq!(net.remove_flow(f), Some(7));
+        assert_eq!(net.n_flows(), 0);
+    }
+
+    #[test]
+    fn capacity_change_degrades_rate() {
+        let (mut net, r) = net1();
+        let f = net.add_flow(1e6, vec![r], 1.0, 0);
+        net.recompute();
+        assert!((net.rate(f) - 100.0).abs() < 1e-9);
+        net.set_capacity(r, 25.0);
+        assert!(net.needs_recompute());
+        net.recompute();
+        assert!((net.rate(f) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_sums_rates() {
+        let (mut net, r) = net1();
+        net.add_flow(1e6, vec![r], 1.0, 0);
+        net.add_flow(1e6, vec![r], 1.0, 1);
+        net.recompute();
+        assert!((net.utilization(r) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn busy_writer_contention_shape() {
+        // 1 app flow vs 6*64 busy-writer weights on the same OST pool:
+        // the app's share collapses to 1/385 of aggregate — the Fig 2
+        // degradation mechanism.
+        let mut net = FlowNet::new();
+        let ost = net.add_resource("ost-pool", 6.6e9);
+        let app = net.add_flow(1e12, vec![ost], 1.0, 0);
+        let bw = net.add_flow(1e15, vec![ost], 384.0, 1);
+        net.recompute();
+        let expect_app = 6.6e9 / 385.0;
+        assert!((net.rate(app) - expect_app).abs() / expect_app < 1e-9);
+        assert!(net.rate(bw) > 6.5e9);
+    }
+
+    // -- property tests ----------------------------------------------------
+
+    #[test]
+    fn prop_rates_never_exceed_capacity() {
+        crate::testing::check(|g| {
+            let mut net = FlowNet::new();
+            let nres = g.usize_in(1, 5);
+            let rids: Vec<ResourceId> = (0..nres)
+                .map(|i| net.add_resource(format!("r{i}"), g.f64_in(1.0, 1e6)))
+                .collect();
+            let nflows = g.usize_in(1, 12);
+            for i in 0..nflows {
+                let mut path = Vec::new();
+                for r in &rids {
+                    if g.bool() {
+                        path.push(*r);
+                    }
+                }
+                if path.is_empty() {
+                    path.push(rids[g.usize_in(0, nres - 1)]);
+                }
+                net.add_flow(g.f64_in(1.0, 1e9), path, g.f64_in(0.1, 64.0), i);
+            }
+            net.recompute();
+            for (ri, rid) in rids.iter().enumerate() {
+                let used = net.utilization(*rid);
+                let cap = net.capacity(*rid);
+                crate::prop_assert!(
+                    used <= cap * (1.0 + 1e-6),
+                    "resource {ri}: used {used} > cap {cap}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_work_conserving_single_resource() {
+        // On one shared resource with pending demand, allocation = capacity.
+        crate::testing::check(|g| {
+            let mut net = FlowNet::new();
+            let cap = g.f64_in(1.0, 1e6);
+            let r = net.add_resource("r", cap);
+            let n = g.usize_in(1, 16);
+            for i in 0..n {
+                net.add_flow(g.f64_in(1.0, 1e9), vec![r], g.f64_in(0.1, 8.0), i);
+            }
+            net.recompute();
+            let used = net.utilization(r);
+            crate::prop_assert!(
+                (used - cap).abs() < cap * 1e-6,
+                "used {used} cap {cap}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_completion_order_matches_simulation() {
+        // Simulate to completion via advance(); total transferred must equal
+        // demand and completions must be consistent with next_completion().
+        crate::testing::check(|g| {
+            let mut net = FlowNet::new();
+            let r = net.add_resource("r", g.f64_in(10.0, 1000.0));
+            let n = g.usize_in(1, 6);
+            let mut pending: Vec<FlowId> = (0..n)
+                .map(|i| net.add_flow(g.f64_in(1.0, 500.0), vec![r], 1.0, i))
+                .collect();
+            let mut steps = 0;
+            while !pending.is_empty() {
+                net.recompute();
+                let (fid, dt) = match net.next_completion() {
+                    Some(x) => x,
+                    None => return Err("stalled with pending flows".into()),
+                };
+                net.advance(dt);
+                crate::prop_assert!(net.remaining(fid).unwrap() <= 1e-6);
+                for done in net.finished_flows() {
+                    net.remove_flow(done);
+                    pending.retain(|p| *p != done);
+                }
+                steps += 1;
+                crate::prop_assert!(steps <= 100, "too many steps");
+            }
+            Ok(())
+        });
+    }
+}

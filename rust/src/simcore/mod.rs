@@ -1,0 +1,13 @@
+//! Discrete-event, flow-level cluster simulator (virtual clock).
+//!
+//! Built from scratch (DESIGN.md §4): [`flow`] provides weighted max-min
+//! fair bandwidth sharing across resources; [`engine`] drives sequential
+//! actors over the flow network with an epoch-tagged event heap. The Lustre
+//! model, page-cache model, busy writers and pipeline replayers are actors
+//! in `crate::lustre`, `crate::pagecache` and `crate::pipeline`.
+
+pub mod engine;
+pub mod flow;
+
+pub use engine::{Action, Actor, ActorId, Ctx, Engine, SimError};
+pub use flow::{FlowId, FlowNet, ResourceId};

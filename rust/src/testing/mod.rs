@@ -1,0 +1,235 @@
+//! In-tree property-based testing mini-framework.
+//!
+//! The vendored crate set has no `proptest`, so this module provides the
+//! subset the test suite needs: a seeded generator handle ([`Gen`]), a
+//! runner ([`check`]) that reports the failing case number and seed, and a
+//! `prop_assert!` macro producing `Err(String)` instead of panicking so the
+//! runner can annotate failures. Re-running a failure is deterministic:
+//! `SEA_PROP_SEED=<seed> cargo test <name>`.
+
+use crate::util::Rng;
+
+/// Self-cleaning temporary directories for tests and examples (no
+/// `tempfile` crate in the vendored set).
+pub mod tempdir {
+    use std::path::{Path, PathBuf};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+
+    /// Removes the directory tree on drop.
+    pub struct TempDirGuard(PathBuf);
+
+    impl TempDirGuard {
+        pub fn path(&self) -> &Path {
+            &self.0
+        }
+
+        /// A fresh subdirectory (created) under this guard.
+        pub fn subdir(&self, name: &str) -> PathBuf {
+            let p = self.0.join(name);
+            std::fs::create_dir_all(&p).unwrap();
+            p
+        }
+    }
+
+    impl Drop for TempDirGuard {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
+    /// Create a unique temp directory tagged `tag`.
+    pub fn tempdir(tag: &str) -> TempDirGuard {
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let p = std::env::temp_dir().join(format!(
+            "sea-test-{tag}-{}-{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&p).unwrap();
+        TempDirGuard(p)
+    }
+}
+
+/// Number of cases per property (override with `SEA_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("SEA_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(96)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("SEA_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE_5EA)
+}
+
+/// Generator handle passed to properties; wraps the PRNG with
+/// domain-specific draw helpers.
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.usize_in(lo, hi)
+    }
+
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.u64_in(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_in(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool()
+    }
+
+    pub fn vec<T>(&mut self, len_lo: usize, len_hi: usize,
+                  mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_in(len_lo, len_hi);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// A path component: lowercase alphanumerics, 1..=10 chars.
+    pub fn path_component(&mut self) -> String {
+        const ALPHA: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_";
+        let n = self.usize_in(1, 10);
+        (0..n)
+            .map(|_| ALPHA[self.usize_in(0, ALPHA.len() - 1)] as char)
+            .collect()
+    }
+
+    /// An absolute logical path with 1..=`depth` components.
+    pub fn logical_path(&mut self, depth: usize) -> String {
+        let n = self.usize_in(1, depth.max(1));
+        let mut s = String::new();
+        for _ in 0..n {
+            s.push('/');
+            s.push_str(&self.path_component());
+        }
+        s
+    }
+
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choice(items)
+    }
+}
+
+/// Run `prop` for `cases` generated cases; panic with case + seed on failure.
+pub fn check_n(cases: usize, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed}): {msg}\n\
+                 reproduce with SEA_PROP_SEED={} SEA_PROP_CASES={}",
+                base, cases
+            );
+        }
+    }
+}
+
+/// Run `prop` for the default number of cases.
+pub fn check(prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    check_n(default_cases(), prop);
+}
+
+/// `prop_assert!(cond, "context {}", x)` — returns `Err` instead of panicking.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(format!(
+                "assertion failed: {} — {}",
+                stringify!($cond),
+                format!($($arg)+)
+            ));
+        }
+    };
+}
+
+/// `prop_assert_eq!(a, b)` with value printing.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+    ($a:expr, $b:expr, $($arg:tt)+) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?}) — {}",
+                stringify!($a), stringify!($b), a, b, format!($($arg)+)
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_n(32, |g| {
+            let v = g.usize_in(0, 10);
+            prop_assert!(v <= 10);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        check_n(32, |g| {
+            let v = g.usize_in(0, 10);
+            prop_assert!(v < 5, "v was {v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn logical_paths_are_absolute_and_clean() {
+        check_n(64, |g| {
+            let p = g.logical_path(4);
+            prop_assert!(p.starts_with('/'), "{p}");
+            prop_assert!(!p.contains("//"), "{p}");
+            prop_assert!(!p.ends_with('/'), "{p}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Gen::new(9);
+        let mut b = Gen::new(9);
+        for _ in 0..50 {
+            assert_eq!(a.logical_path(5), b.logical_path(5));
+        }
+    }
+}

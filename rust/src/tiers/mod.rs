@@ -1,0 +1,335 @@
+//! Storage tiers for real mode: directory-backed stores with capacity
+//! accounting and optional performance shaping.
+//!
+//! A [`Tier`] maps logical Sea paths to physical paths under its root
+//! directory and tracks used bytes with lock-free reservation. Performance
+//! shaping makes a plain directory behave like the paper's storage devices
+//! without the hardware:
+//!
+//! * [`Throttle`] — a token bucket capping data bandwidth (a degraded
+//!   Lustre OST pool under busy writers);
+//! * per-op metadata latency (a loaded Lustre MDS).
+//!
+//! Shaping is *honest waiting*: callers really block, so real-mode
+//! experiments measure true elapsed time.
+
+pub mod throttle;
+
+pub use throttle::Throttle;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::config::CacheDef;
+
+/// Index of a tier within a [`TierSet`]: caches first (0 = fastest),
+/// persistent store last.
+pub type TierIdx = usize;
+
+/// One directory-backed storage tier.
+#[derive(Debug)]
+pub struct Tier {
+    pub name: String,
+    root: PathBuf,
+    capacity: u64,
+    used: AtomicU64,
+    data_throttle: Option<Throttle>,
+    meta_latency: Option<Duration>,
+}
+
+impl Tier {
+    pub fn new(def: &CacheDef) -> std::io::Result<Tier> {
+        std::fs::create_dir_all(&def.root)?;
+        Ok(Tier {
+            name: def.name.clone(),
+            root: def.root.clone(),
+            capacity: def.capacity,
+            used: AtomicU64::new(0),
+            data_throttle: None,
+            meta_latency: None,
+        })
+    }
+
+    /// Cap data bandwidth (bytes/s) through this tier. The burst window is
+    /// 50 ms so even sub-second experiments see the cap.
+    pub fn with_bandwidth_limit(mut self, bytes_per_sec: f64) -> Tier {
+        self.data_throttle = Some(Throttle::with_burst(bytes_per_sec, 0.05));
+        self
+    }
+
+    /// Add fixed latency to every metadata operation on this tier.
+    pub fn with_meta_latency(mut self, latency: Duration) -> Tier {
+        self.meta_latency = Some(latency);
+        self
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used.load(Ordering::Relaxed)
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity.saturating_sub(self.used())
+    }
+
+    /// Physical path of a logical Sea path (which is always absolute,
+    /// e.g. `/sub-01/func/bold.nii`).
+    pub fn physical(&self, logical: &str) -> PathBuf {
+        debug_assert!(logical.starts_with('/'), "logical path must be absolute");
+        self.root.join(logical.trim_start_matches('/'))
+    }
+
+    /// Try to account for `bytes` more; false if the tier would overflow.
+    pub fn try_reserve(&self, bytes: u64) -> bool {
+        let mut cur = self.used.load(Ordering::Relaxed);
+        loop {
+            let next = match cur.checked_add(bytes) {
+                Some(n) if n <= self.capacity => n,
+                _ => return false,
+            };
+            match self.used.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    pub fn release(&self, bytes: u64) {
+        let mut cur = self.used.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(bytes);
+            match self.used.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Block for the tier's data-bandwidth budget before moving `bytes`.
+    pub fn wait_data(&self, bytes: u64) {
+        if let Some(t) = &self.data_throttle {
+            t.acquire(bytes as f64);
+        }
+    }
+
+    /// Block for one metadata operation (open/create/stat/unlink/rename).
+    pub fn wait_meta(&self) {
+        if let Some(d) = self.meta_latency {
+            std::thread::sleep(d);
+        }
+    }
+
+    pub fn is_throttled(&self) -> bool {
+        self.data_throttle.is_some() || self.meta_latency.is_some()
+    }
+}
+
+/// The ordered set of tiers Sea redirects across: caches fastest-first,
+/// persistent store last (mirrors `sea.ini` declaration order).
+#[derive(Debug)]
+pub struct TierSet {
+    tiers: Vec<Tier>,
+    /// Index of the persistent tier (always `tiers.len() - 1`).
+    persist: TierIdx,
+}
+
+impl TierSet {
+    /// Build from cache defs + the persistent def. The persistent tier may
+    /// be shaped by `shape_persist` (e.g. throttled to emulate degraded
+    /// Lustre).
+    pub fn new(
+        caches: &[CacheDef],
+        persist_def: &CacheDef,
+        shape_persist: impl FnOnce(Tier) -> Tier,
+    ) -> std::io::Result<TierSet> {
+        let mut tiers = caches.iter().map(Tier::new).collect::<Result<Vec<_>, _>>()?;
+        tiers.push(shape_persist(Tier::new(persist_def)?));
+        Ok(TierSet {
+            persist: tiers.len() - 1,
+            tiers,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tiers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // always at least the persistent tier
+    }
+
+    pub fn get(&self, idx: TierIdx) -> &Tier {
+        &self.tiers[idx]
+    }
+
+    pub fn persist_idx(&self) -> TierIdx {
+        self.persist
+    }
+
+    pub fn persist(&self) -> &Tier {
+        &self.tiers[self.persist]
+    }
+
+    /// Cache tiers in priority order (excludes the persistent tier).
+    pub fn caches(&self) -> &[Tier] {
+        &self.tiers[..self.persist]
+    }
+
+    /// First tier (fastest-first) that can take `bytes` more; falls back to
+    /// the persistent tier, which always accepts (matching the paper: when
+    /// caches fill, writes go to Lustre).
+    pub fn place_write(&self, bytes: u64) -> TierIdx {
+        for (idx, tier) in self.tiers[..self.persist].iter().enumerate() {
+            if tier.try_reserve(bytes) {
+                return idx;
+            }
+        }
+        // persistent tier: reserve without bound (shared FS quota is not
+        // Sea's concern; the paper's quota argument is about file *counts*)
+        self.tiers[self.persist].try_reserve(bytes);
+        self.persist
+    }
+
+    /// Fastest tier among `candidates` (smallest index).
+    pub fn fastest_of(&self, candidates: impl IntoIterator<Item = TierIdx>) -> Option<TierIdx> {
+        candidates.into_iter().min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CacheDef;
+    use crate::util::MIB;
+
+    use crate::testing::tempdir;
+
+    fn tmp(name: &str) -> (tempdir::TempDirGuard, CacheDef) {
+        let dir = tempdir::tempdir(name);
+        let def = CacheDef {
+            name: name.to_string(),
+            root: dir.path().to_path_buf(),
+            capacity: MIB,
+        };
+        (dir, def)
+    }
+
+    #[test]
+    fn physical_paths_nest_under_root() {
+        let (_g, def) = tmp("phys");
+        let tier = Tier::new(&def).unwrap();
+        let p = tier.physical("/sub-01/func/bold.nii");
+        assert!(p.starts_with(tier.root()));
+        assert!(p.ends_with("sub-01/func/bold.nii"));
+    }
+
+    #[test]
+    fn reserve_respects_capacity() {
+        let (_g, def) = tmp("cap");
+        let tier = Tier::new(&def).unwrap();
+        assert!(tier.try_reserve(MIB / 2));
+        assert!(tier.try_reserve(MIB / 2));
+        assert!(!tier.try_reserve(1));
+        tier.release(MIB / 2);
+        assert!(tier.try_reserve(MIB / 4));
+        assert_eq!(tier.free(), MIB / 4);
+    }
+
+    #[test]
+    fn release_saturates_at_zero() {
+        let (_g, def) = tmp("rel");
+        let tier = Tier::new(&def).unwrap();
+        tier.release(12345);
+        assert_eq!(tier.used(), 0);
+    }
+
+    #[test]
+    fn place_write_prefers_fastest_with_space() {
+        let (_g1, fast) = tmp("fast");
+        let (_g2, slow) = tmp("slow");
+        let (_g3, lus) = tmp("lus");
+        let ts = TierSet::new(&[fast, slow], &lus, |t| t).unwrap();
+        // Fill the fast tier
+        assert_eq!(ts.place_write(MIB), 0);
+        // Fast is full now; next goes to the second cache
+        assert_eq!(ts.place_write(MIB), 1);
+        // Both caches full: falls through to persist
+        assert_eq!(ts.place_write(MIB), ts.persist_idx());
+    }
+
+    #[test]
+    fn baseline_has_only_persist() {
+        let (_g, lus) = tmp("only");
+        let ts = TierSet::new(&[], &lus, |t| t).unwrap();
+        assert_eq!(ts.len(), 1);
+        assert_eq!(ts.place_write(123), ts.persist_idx());
+        assert!(ts.caches().is_empty());
+    }
+
+    #[test]
+    fn throttled_tier_blocks_for_bandwidth() {
+        let (_g, def) = tmp("thr");
+        let tier = Tier::new(&def).unwrap().with_bandwidth_limit(10.0 * MIB as f64);
+        let t0 = std::time::Instant::now();
+        // 1 MiB at 10 MiB/s with a 50 ms burst (0.5 MiB) -> ~50 ms wait
+        tier.wait_data(MIB);
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt >= 0.04, "dt={dt}");
+        assert!(tier.is_throttled());
+    }
+
+    #[test]
+    fn meta_latency_applies_per_op() {
+        let (_g, def) = tmp("meta");
+        let tier = Tier::new(&def)
+            .unwrap()
+            .with_meta_latency(Duration::from_millis(5));
+        let t0 = std::time::Instant::now();
+        for _ in 0..4 {
+            tier.wait_meta();
+        }
+        assert!(t0.elapsed().as_millis() >= 18);
+    }
+
+    #[test]
+    fn prop_concurrent_reserve_never_overflows() {
+        use std::sync::Arc;
+        let (_g, mut def) = tmp("conc");
+        def.capacity = 1000;
+        let tier = Arc::new(Tier::new(&def).unwrap());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let t = tier.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = 0u64;
+                for _ in 0..100 {
+                    if t.try_reserve(7) {
+                        got += 7;
+                    }
+                }
+                got
+            }));
+        }
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, tier.used());
+        assert!(tier.used() <= 1000);
+    }
+}

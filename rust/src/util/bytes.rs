@@ -1,0 +1,80 @@
+//! Byte-size constants, parsing and humanised formatting.
+
+pub const KB: u64 = 1_000;
+pub const MB: u64 = 1_000_000;
+pub const GB: u64 = 1_000_000_000;
+pub const TB: u64 = 1_000_000_000_000;
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+pub const TIB: u64 = 1 << 40;
+
+/// Humanised binary formatting: `1536 -> "1.5 KiB"`.
+pub fn format_bytes(n: u64) -> String {
+    const UNITS: [(&str, u64); 4] =
+        [("TiB", TIB), ("GiB", GIB), ("MiB", MIB), ("KiB", KIB)];
+    for (unit, size) in UNITS {
+        if n >= size {
+            return format!("{:.1} {unit}", n as f64 / size as f64);
+        }
+    }
+    format!("{n} B")
+}
+
+/// Parse sizes like `"64MiB"`, `"1.5 GB"`, `"283G"`, `"1024"` (bytes).
+/// Single-letter suffixes are binary (`K`=KiB) matching sea.ini convention.
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(s.len());
+    let (num, suffix) = s.split_at(split);
+    let value: f64 = num
+        .trim()
+        .parse()
+        .map_err(|e| format!("bad byte size {s:?}: {e}"))?;
+    let mult = match suffix.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1,
+        "k" | "kib" => KIB,
+        "m" | "mib" => MIB,
+        "g" | "gib" => GIB,
+        "t" | "tib" => TIB,
+        "kb" => KB,
+        "mb" => MB,
+        "gb" => GB,
+        "tb" => TB,
+        other => return Err(format!("unknown byte suffix {other:?} in {s:?}")),
+    };
+    Ok((value * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_each_magnitude() {
+        assert_eq!(format_bytes(512), "512 B");
+        assert_eq!(format_bytes(1536), "1.5 KiB");
+        assert_eq!(format_bytes(3 * MIB), "3.0 MiB");
+        assert_eq!(format_bytes(2 * GIB), "2.0 GiB");
+        assert_eq!(format_bytes(5 * TIB), "5.0 TiB");
+    }
+
+    #[test]
+    fn parses_round_trip() {
+        assert_eq!(parse_bytes("1024").unwrap(), 1024);
+        assert_eq!(parse_bytes("64MiB").unwrap(), 64 * MIB);
+        assert_eq!(parse_bytes("1.5 GiB").unwrap(), 3 * GIB / 2);
+        assert_eq!(parse_bytes("283 GB").unwrap(), 283 * GB);
+        assert_eq!(parse_bytes("125G").unwrap(), 125 * GIB);
+        assert_eq!(parse_bytes("2k").unwrap(), 2048);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_bytes("abc").is_err());
+        assert!(parse_bytes("12 parsecs").is_err());
+        assert!(parse_bytes("").is_err());
+    }
+}

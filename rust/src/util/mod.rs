@@ -1,0 +1,39 @@
+//! Small shared utilities: deterministic PRNG, byte-size formatting, timing.
+
+pub mod bytes;
+pub mod rng;
+
+pub use bytes::{format_bytes, parse_bytes, GB, GIB, KB, KIB, MB, MIB, TB, TIB};
+pub use rng::Rng;
+
+/// Monotonic stopwatch used by the real-mode benchmarks.
+#[derive(Debug)]
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.elapsed_secs() >= 0.004);
+    }
+}

@@ -1,0 +1,138 @@
+//! Integration: the three layers composed — AOT artifacts (L1 Pallas + L2
+//! JAX) executed from the Rust coordinator (L3) over Sea-managed storage.
+//! Skipped gracefully when `make artifacts` has not run.
+
+use sea::config::{DatasetKind, PipelineKind, Strategy};
+use sea::coordinator::compare_real;
+use sea::dataset::bids::{generate_bids_tree, BidsLayout};
+use sea::dataset::volume::synthetic_volume;
+use sea::pipeline::executor::RealRunConfig;
+use sea::runtime::{artifact_name, default_artifacts_dir, ComputeService};
+use sea::testing::tempdir::tempdir;
+use sea::util::{Rng, MIB};
+
+fn have_artifacts() -> bool {
+    let ok = default_artifacts_dir().join("manifest.tsv").exists();
+    if !ok {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn all_nine_artifacts_execute_with_sane_outputs() {
+    if !have_artifacts() {
+        return;
+    }
+    let (svc, _guard) = ComputeService::start(&default_artifacts_dir(), None).unwrap();
+    let infos = svc.artifacts().unwrap();
+    assert_eq!(infos.len(), 9);
+    let mut rng = Rng::new(1);
+    for info in infos {
+        let (_h, voxels) = synthetic_volume(info.shape, &mut rng);
+        let out = svc.preprocess(&info.name, voxels).unwrap();
+        assert!(
+            out.preprocessed.iter().all(|v| v.is_finite()),
+            "{}: non-finite",
+            info.name
+        );
+        assert!(out.mask.iter().all(|&m| m == 0.0 || m == 1.0), "{}", info.name);
+        // the brain mask should cover a plausible fraction of the volume
+        let frac = out.mask.iter().sum::<f32>() / out.mask.len() as f32;
+        assert!(
+            (0.05..0.95).contains(&frac),
+            "{}: mask fraction {frac}",
+            info.name
+        );
+    }
+}
+
+#[test]
+fn pipelines_produce_distinct_outputs() {
+    if !have_artifacts() {
+        return;
+    }
+    let (svc, _guard) = ComputeService::start(&default_artifacts_dir(), None).unwrap();
+    let mut rng = Rng::new(2);
+    let shape = (16, 16, 32, 32); // hcp artifact shape
+    let (_h, voxels) = synthetic_volume(shape, &mut rng);
+    let afni = svc.preprocess("afni_hcp", voxels.clone()).unwrap();
+    let spm = svc.preprocess("spm_hcp", voxels.clone()).unwrap();
+    let fsl = svc.preprocess("fsl_hcp", voxels).unwrap();
+    let diff = |a: &[f32], b: &[f32]| {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32
+    };
+    assert!(diff(&afni.preprocessed, &spm.preprocessed) > 1e-3);
+    assert!(diff(&afni.preprocessed, &fsl.preprocessed) > 1e-3);
+    assert!(diff(&spm.preprocessed, &fsl.preprocessed) > 1e-3);
+}
+
+#[test]
+fn degraded_lustre_comparison_favours_sea_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = tempdir("int-rt");
+    let pristine = dir.subdir("dataset");
+    generate_bids_tree(&pristine, &BidsLayout::scaled(DatasetKind::Hcp, 2), 5).unwrap();
+    let mut cfg = RealRunConfig::new(
+        &pristine,
+        dir.subdir("scratch"),
+        PipelineKind::Spm,
+        DatasetKind::Hcp,
+    );
+    cfg.nprocs = 2;
+    cfg.cache_capacity = 128 * MIB;
+    cfg.lustre_bandwidth = Some(2.0 * MIB as f64);
+    cfg.lustre_meta = Some(std::time::Duration::from_millis(2));
+    let (svc, _guard) = ComputeService::start(
+        &cfg.artifacts_dir,
+        Some(vec![artifact_name(cfg.pipeline, cfg.dataset)]),
+    )
+    .unwrap();
+    let cmp = compare_real(&pristine, dir.path(), &cfg, Strategy::Baseline, &svc).unwrap();
+    assert!(
+        cmp.speedup() > 1.2,
+        "speedup {:.2} (base {:.2}s, sea {:.2}s)",
+        cmp.speedup(),
+        cmp.reference.total_secs(),
+        cmp.sea.total_secs()
+    );
+    // Sea issued no data calls against the persistent tier during the run
+    // (prefetch happens at mount; outputs stay in cache without flushing).
+    assert_eq!(cmp.sea.stats.bytes_written_persist, 0);
+}
+
+#[test]
+fn volume_round_trip_through_real_pipeline_files() {
+    if !have_artifacts() {
+        return;
+    }
+    // Verify the SNI1 files written by the executor parse back with the
+    // artifact's shape.
+    let dir = tempdir("int-rt2");
+    let pristine = dir.subdir("dataset");
+    generate_bids_tree(&pristine, &BidsLayout::scaled(DatasetKind::PreventAd, 1), 6)
+        .unwrap();
+    let mut cfg = RealRunConfig::new(
+        &pristine,
+        dir.subdir("scratch"),
+        PipelineKind::Afni,
+        DatasetKind::PreventAd,
+    );
+    cfg.flush_all = true;
+    let (svc, _guard) = ComputeService::start(
+        &cfg.artifacts_dir,
+        Some(vec![artifact_name(cfg.pipeline, cfg.dataset)]),
+    )
+    .unwrap();
+    let report = sea::pipeline::executor::run_real(&cfg, &svc).unwrap();
+    assert!(report.flush.flushed + report.flush.moved >= 4);
+    let preproc = pristine
+        .join("derivatives/afni/sub-01/func/sub-01_task-rest_bold_preproc.sni");
+    let (h, v) =
+        sea::dataset::volume::read_volume(std::fs::File::open(&preproc).unwrap())
+            .unwrap();
+    assert_eq!(h.shape(), (8, 8, 16, 16));
+    assert!(v.iter().all(|x| x.is_finite()));
+}

@@ -1,0 +1,244 @@
+//! Integration: the real-mode Sea stack end to end — interception +
+//! namespace + tiers + rules + flusher threads working together.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sea::config::SeaConfig;
+use sea::flusher::SeaSession;
+use sea::intercept::{OpenMode, SeaIo};
+use sea::pathrules::{PathRules, SeaLists};
+use sea::testing::tempdir::{tempdir, TempDirGuard};
+use sea::util::MIB;
+
+fn session(cache: u64, flush: &str, evict: &str, dir: &TempDirGuard) -> SeaSession {
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), cache)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .flusher(true, 20)
+        .build();
+    let lists = SeaLists::new(
+        PathRules::parse(flush).unwrap(),
+        PathRules::parse(evict).unwrap(),
+        PathRules::empty(),
+    );
+    SeaSession::start(cfg, lists, |t| t).unwrap()
+}
+
+#[test]
+fn concurrent_workers_share_one_mount() {
+    let dir = tempdir("int-concurrent");
+    let sess = session(512 * MIB, r".*\.out$", r".*\.tmp$", &dir);
+    let sea: &SeaIo = sess.io();
+
+    std::thread::scope(|scope| {
+        for w in 0..8 {
+            scope.spawn(move || {
+                for i in 0..20 {
+                    let keep = format!("/w{w}/file-{i}.out");
+                    let fd = sea.create(&keep).unwrap();
+                    sea.write(fd, format!("w{w}i{i}").as_bytes()).unwrap();
+                    sea.close(fd).unwrap();
+                    let tmp = format!("/w{w}/scratch-{i}.tmp");
+                    let fd = sea.create(&tmp).unwrap();
+                    sea.write(fd, &[0u8; 256]).unwrap();
+                    sea.close(fd).unwrap();
+                }
+            });
+        }
+    });
+
+    // every keeper is readable with correct content
+    for w in 0..8 {
+        for i in 0..20 {
+            let p = format!("/w{w}/file-{i}.out");
+            let fd = sea.open(&p, OpenMode::Read).unwrap();
+            let mut buf = [0u8; 16];
+            let n = sea.read(fd, &mut buf).unwrap();
+            assert_eq!(&buf[..n], format!("w{w}i{i}").as_bytes());
+            sea.close(fd).unwrap();
+        }
+    }
+    let (stats, report) = sess.unmount();
+    assert_eq!(stats.create, 320);
+    assert_eq!(report.flushed + report.moved, 160, "{report:?}");
+    assert_eq!(report.evicted, 160);
+}
+
+#[test]
+fn flusher_thread_keeps_up_during_writes() {
+    let dir = tempdir("int-flusher");
+    let sess = session(512 * MIB, ".*", "", &dir);
+    let sea = sess.io();
+    for i in 0..10 {
+        let fd = sea.create(&format!("/out/vol-{i}.nii")).unwrap();
+        sea.write(fd, &vec![i as u8; 64 * 1024]).unwrap();
+        sea.close(fd).unwrap();
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    // background flusher has persisted most files already
+    let persisted = sea.core().ns.files_on_tier(sea.core().tiers.persist_idx());
+    assert!(persisted >= 5, "only {persisted} persisted in-flight");
+    let (_stats, report) = sess.unmount();
+    assert_eq!(report.flushed + report.moved, 10);
+}
+
+#[test]
+fn cache_pressure_spills_without_data_loss() {
+    let dir = tempdir("int-spill");
+    // cache fits only ~2 files of 1 MiB
+    let sess = session(2 * MIB + 100, "", "", &dir);
+    let sea = sess.io();
+    let payload: Vec<u8> = (0..MIB as usize).map(|i| (i % 251) as u8).collect();
+    for i in 0..6 {
+        let fd = sea.create(&format!("/d/big-{i}.dat")).unwrap();
+        sea.write(fd, &payload).unwrap();
+        sea.close(fd).unwrap();
+    }
+    // all six are intact wherever they landed
+    let mut on_cache = 0;
+    for i in 0..6 {
+        let p = format!("/d/big-{i}.dat");
+        let st = sea.stat(&p).unwrap();
+        assert_eq!(st.size, MIB);
+        if st.tier == "tmpfs" {
+            on_cache += 1;
+        }
+        let fd = sea.open(&p, OpenMode::Read).unwrap();
+        let mut buf = vec![0u8; MIB as usize];
+        let mut off = 0;
+        loop {
+            let n = sea.read(fd, &mut buf[off..]).unwrap();
+            if n == 0 {
+                break;
+            }
+            off += n;
+        }
+        sea.close(fd).unwrap();
+        assert_eq!(off, MIB as usize);
+        assert_eq!(buf[1234], payload[1234]);
+    }
+    assert!(on_cache >= 1 && on_cache <= 2, "on_cache={on_cache}");
+}
+
+#[test]
+fn throttled_persist_makes_sea_faster_than_baseline() {
+    // The core claim, real mode: on a degraded "Lustre", writing through
+    // Sea's cache is faster than writing directly.
+    let make = |use_cache: bool| -> f64 {
+        let dir = tempdir("int-thr");
+        let mut b = SeaConfig::builder(dir.subdir("mount"));
+        if use_cache {
+            b = b.cache("tmpfs", dir.subdir("tmpfs"), 512 * MIB);
+        }
+        let cfg = b
+            .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+            .flusher(false, 100)
+            .build();
+        let sess = SeaSession::start(cfg, SeaLists::default(), |t| {
+            t.with_bandwidth_limit(4.0 * MIB as f64)
+        })
+        .unwrap();
+        let sea = sess.io();
+        let t0 = std::time::Instant::now();
+        let payload = vec![1u8; 2 * MIB as usize];
+        for i in 0..3 {
+            let fd = sea.create(&format!("/out/f{i}")).unwrap();
+            sea.write(fd, &payload).unwrap();
+            sea.close(fd).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        sess.unmount();
+        dt
+    };
+    let baseline = make(false);
+    let with_sea = make(true);
+    assert!(
+        baseline > 3.0 * with_sea,
+        "baseline={baseline:.2}s sea={with_sea:.2}s"
+    );
+}
+
+#[test]
+fn prefetch_then_update_never_touches_persist() {
+    let dir = tempdir("int-prefetch");
+    let lustre = dir.subdir("lustre");
+    std::fs::create_dir_all(lustre.join("inputs")).unwrap();
+    std::fs::write(lustre.join("inputs/scan.nii"), vec![3u8; 4096]).unwrap();
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 64 * MIB)
+        .persist("lustre", &lustre, 100_000 * MIB)
+        .flusher(false, 100)
+        .build();
+    let lists = SeaLists::new(
+        PathRules::empty(),
+        PathRules::empty(),
+        PathRules::parse(r".*inputs/.*").unwrap(),
+    );
+    let sess = SeaSession::start(cfg, lists, |t| t).unwrap();
+    let sea = sess.io();
+    // SPM-style in-place update through the prefetched replica
+    let fd = sea.open("/inputs/scan.nii", OpenMode::ReadWrite).unwrap();
+    for _ in 0..50 {
+        sea.write(fd, &[9u8; 64]).unwrap();
+    }
+    sea.close(fd).unwrap();
+    let stats = sea.stats();
+    assert_eq!(stats.bytes_written_persist, 0);
+    assert_eq!(stats.bytes_written_cache, 50 * 64);
+    // original content on "Lustre" untouched
+    let on_lustre = std::fs::read(lustre.join("inputs/scan.nii")).unwrap();
+    assert_eq!(on_lustre, vec![3u8; 4096]);
+    sess.unmount();
+}
+
+#[test]
+fn sea_ini_file_round_trip_drives_session() {
+    // Full config-file path: write sea.ini + lists, mount from files.
+    let dir = tempdir("int-ini");
+    let lustre = dir.subdir("lustre");
+    let tmpfs = dir.subdir("tmpfs");
+    let flushlist = dir.path().join(".sea_flushlist");
+    std::fs::write(&flushlist, ".*\\.out$\n").unwrap();
+    let ini = format!(
+        "mount = {}\n[caches]\ncache = tmpfs:{}:64M\npersist = lustre:{}:1G\n\
+         [lists]\nflushlist = {}\n[flusher]\nenabled = true\ninterval_ms = 10\n",
+        dir.path().join("mount").display(),
+        tmpfs.display(),
+        lustre.display(),
+        flushlist.display(),
+    );
+    let ini_path = dir.path().join("sea.ini");
+    std::fs::write(&ini_path, ini).unwrap();
+
+    let cfg = SeaConfig::load(&ini_path).unwrap();
+    assert_eq!(cfg.caches.len(), 1);
+    let sea = SeaIo::mount(cfg).unwrap();
+    let fd = sea.create("/r/x.out").unwrap();
+    sea.write(fd, b"ok").unwrap();
+    sea.close(fd).unwrap();
+    let rep = sea::flusher::drain(sea.core());
+    assert_eq!(rep.flushed, 1);
+    assert!(lustre.join("r/x.out").exists());
+}
+
+#[test]
+fn mountpoint_view_is_consistent_across_tiers() {
+    let dir = tempdir("int-view");
+    let lustre = dir.subdir("lustre");
+    std::fs::create_dir_all(lustre.join("pre")).unwrap();
+    std::fs::write(lustre.join("pre/existing.nii"), b"x").unwrap();
+    let sess = session(64 * MIB, "", "", &dir);
+    drop(sess);
+    // remount over a lustre dir that has data
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs2"), 64 * MIB)
+        .persist("lustre", &lustre, 100_000 * MIB)
+        .build();
+    let sea = Arc::new(SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap());
+    // new file goes to cache, existing is on persist — one merged view
+    let fd = sea.create("/pre/new.nii").unwrap();
+    sea.close(fd).unwrap();
+    let names = sea.readdir("/pre").unwrap();
+    assert_eq!(names, vec!["existing.nii", "new.nii"]);
+}

@@ -1,0 +1,150 @@
+//! Integration: simulation mode across modules — cluster resources, busy
+//! writers, page cache, trace replay and the experiment runner.
+
+use sea::config::{ClusterConfig, DatasetKind, PipelineKind, Strategy, WorkloadSpec};
+use sea::experiments::run_cell;
+use sea::stats;
+
+fn speedup(cluster: &ClusterConfig, spec: &WorkloadSpec) -> f64 {
+    let b = run_cell(cluster, &spec.clone().strategy(Strategy::Baseline)).unwrap();
+    let s = run_cell(cluster, &spec.clone().strategy(Strategy::Sea)).unwrap();
+    b.makespan / s.makespan
+}
+
+#[test]
+fn headline_cell_speedup_in_paper_range() {
+    // SPM × 1 HCP image × 6 busy writers: paper avg 12.6x, max 32x.
+    let cluster = ClusterConfig::dedicated();
+    let spec = WorkloadSpec::new(PipelineKind::Spm, DatasetKind::Hcp, 1).busy_writers(6);
+    let s = speedup(&cluster, &spec);
+    assert!((5.0..40.0).contains(&s), "headline speedup {s:.1}");
+}
+
+#[test]
+fn dataset_ordering_matches_paper() {
+    // §2.2: HCP speedups > ds001545 > PREVENT-AD (largest images win),
+    // averaged over pipelines, 1 process, 6 busy writers.
+    let cluster = ClusterConfig::dedicated();
+    let avg = |d: DatasetKind| {
+        let v: Vec<f64> = PipelineKind::ALL
+            .iter()
+            .map(|p| speedup(&cluster, &WorkloadSpec::new(*p, d, 1).busy_writers(6)))
+            .collect();
+        stats::mean(&v)
+    };
+    let hcp = avg(DatasetKind::Hcp);
+    let ds = avg(DatasetKind::Ds001545);
+    let pad = avg(DatasetKind::PreventAd);
+    assert!(hcp > ds, "hcp={hcp:.2} ds={ds:.2}");
+    assert!(ds > pad, "ds={ds:.2} pad={pad:.2}");
+}
+
+#[test]
+fn flush_enabled_costs_but_persists() {
+    let cluster = ClusterConfig::beluga();
+    let spec = WorkloadSpec::new(PipelineKind::Afni, DatasetKind::Ds001545, 8);
+    let plain = run_cell(&cluster, &spec.clone()).unwrap();
+    let flushed = run_cell(&cluster, &spec.clone().flush(true)).unwrap();
+    assert!(flushed.makespan >= plain.makespan);
+    assert!(flushed.metrics.files_to_lustre > 0);
+    assert_eq!(plain.metrics.files_to_lustre, 0);
+}
+
+#[test]
+fn busy_writers_monotonically_degrade_baseline() {
+    let cluster = ClusterConfig::dedicated();
+    let mk = |busy| {
+        run_cell(
+            &cluster,
+            &WorkloadSpec::new(PipelineKind::Afni, DatasetKind::Hcp, 1)
+                .busy_writers(busy)
+                .strategy(Strategy::Baseline),
+        )
+        .unwrap()
+        .makespan
+    };
+    let m0 = mk(0);
+    let m3 = mk(3);
+    let m6 = mk(6);
+    assert!(m3 > m0, "m0={m0} m3={m3}");
+    assert!(m6 > m3, "m3={m3} m6={m6}");
+}
+
+#[test]
+fn sea_insensitive_to_busy_writers_without_flush() {
+    // Sea writes to tmpfs, so busy writers barely matter (reads aside).
+    let cluster = ClusterConfig::dedicated();
+    let mk = |busy| {
+        run_cell(
+            &cluster,
+            &WorkloadSpec::new(PipelineKind::Spm, DatasetKind::Hcp, 1).busy_writers(busy),
+        )
+        .unwrap()
+        .makespan
+    };
+    let calm = mk(0);
+    let degraded = mk(6);
+    assert!(
+        degraded < 1.5 * calm,
+        "sea degraded too much: {calm:.0}s -> {degraded:.0}s"
+    );
+}
+
+#[test]
+fn production_cluster_less_affected_than_dedicated() {
+    // Beluga's OSTs are ~7x faster; the same 6 busy-writer load hurts less.
+    let spec = WorkloadSpec::new(PipelineKind::Spm, DatasetKind::Hcp, 1)
+        .busy_writers(6);
+    let ded = speedup(&ClusterConfig::dedicated(), &spec);
+    let prod = speedup(&ClusterConfig::beluga(), &spec);
+    assert!(ded > prod, "dedicated={ded:.2} production={prod:.2}");
+}
+
+#[test]
+fn repeated_runs_vary_but_agree_in_sign() {
+    let cluster = ClusterConfig::dedicated();
+    let mut speedups = Vec::new();
+    for seed in 0..5u64 {
+        let spec = WorkloadSpec::new(PipelineKind::Afni, DatasetKind::PreventAd, 1)
+            .busy_writers(6)
+            .seed(seed * 1231);
+        speedups.push(speedup(&cluster, &spec));
+    }
+    let s = stats::summarize(&speedups);
+    assert!(s.min > 1.2, "{speedups:?}");
+    assert!(s.std > 0.0, "jitter should produce variance: {speedups:?}");
+}
+
+#[test]
+fn tmpfs_runs_are_busy_writer_invariant() {
+    let cluster = ClusterConfig::dedicated();
+    let mk = |busy| {
+        run_cell(
+            &cluster,
+            &WorkloadSpec::new(PipelineKind::FslFeat, DatasetKind::Ds001545, 1)
+                .busy_writers(busy)
+                .strategy(Strategy::Tmpfs),
+        )
+        .unwrap()
+        .makespan
+    };
+    let a = mk(0);
+    let b = mk(6);
+    assert!((a - b).abs() / a < 0.02, "tmpfs affected by busy writers: {a} vs {b}");
+}
+
+#[test]
+fn metrics_account_for_strategy() {
+    let cluster = ClusterConfig::dedicated();
+    let spec = WorkloadSpec::new(PipelineKind::Afni, DatasetKind::Ds001545, 1);
+    let base = run_cell(&cluster, &spec.clone().strategy(Strategy::Baseline)).unwrap();
+    let seam = run_cell(&cluster, &spec.clone().strategy(Strategy::Sea)).unwrap();
+    // Baseline pushes output bytes to lustre (page cache + writeback);
+    // Sea keeps them in cache.
+    assert!(base.metrics.lustre_write_bytes > 1e8);
+    assert!(seam.metrics.cache_write_bytes > 1e8);
+    assert_eq!(seam.metrics.files_to_lustre, 0);
+    // glibc accounting mirrors Table 2 magnitudes
+    assert!(base.metrics.total_calls > 250_000);
+    assert!(base.metrics.lustre_calls > 3_000);
+}
