@@ -1,10 +1,14 @@
 //! Microbenchmarks of the L3 hot paths (DESIGN.md §7): interceptor call
 //! overhead, namespace resolution, flow-network recompute, simulator
-//! event throughput, flusher copy throughput.
+//! event throughput, flusher copy throughput, and multi-threaded
+//! hot-path contention (the lock-sharding payoff).
 //!
 //! The per-call interceptor budget comes from Table 2: AFNI issues ~300k
 //! glibc calls over ~100–800 s of compute, so interception must stay well
 //! under ~1 µs/call to keep total overhead < 0.5%.
+//!
+//! Emits `BENCH_hotpath.json` (cwd) with the headline numbers so the perf
+//! trajectory across PRs is machine-readable.
 
 use std::time::Instant;
 
@@ -36,6 +40,108 @@ fn bench(label: &str, iters: u64, mut f: impl FnMut()) -> f64 {
     };
     println!("{label:44} {value:9.1} {unit}/op ({:.2} Mop/s)", 1e-6 / per);
     per
+}
+
+/// One full open/write/read/close/unlink cycle per iteration across
+/// `nthreads` workers on disjoint files; returns aggregate intercepted
+/// calls per second. This is the contention probe: before lock-sharding,
+/// all workers serialised on one fd-table mutex held across physical I/O.
+fn contention_calls_per_sec(nthreads: usize, iters: usize) -> f64 {
+    let dir = tempdir("micro-contend");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 4096 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .build();
+    let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+    let sea = &sea;
+    let payload = vec![7u8; 4096];
+    let payload = &payload;
+    // calls per iteration: create + write + close + open + read + close + unlink
+    const CALLS_PER_ITER: usize = 7;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..nthreads {
+            s.spawn(move || {
+                let mut rbuf = vec![0u8; 4096];
+                for i in 0..iters {
+                    let p = format!("/w{w}/f{i}.dat");
+                    let fd = sea.create(&p).unwrap();
+                    sea.write(fd, payload).unwrap();
+                    sea.close(fd).unwrap();
+                    let fd = sea.open(&p, OpenMode::Read).unwrap();
+                    sea.read(fd, &mut rbuf).unwrap();
+                    sea.close(fd).unwrap();
+                    sea.unlink(&p).unwrap();
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    (nthreads * iters * CALLS_PER_ITER) as f64 / dt
+}
+
+/// Aggregate cache-worker call rate while one fd is mid-flight in a
+/// throttled persist-tier write — the paper's degraded-Lustre scenario.
+/// Before sharding this collapsed (every call queued behind the one
+/// throttled write); now cache workers should be barely affected.
+fn throttled_foreground_calls_per_sec(cache_workers: usize) -> f64 {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    let dir = tempdir("micro-throttled");
+    // The heavy write (8 MiB) exceeds the whole cache (4 MiB), so its very
+    // first write spills an empty file straight to the throttled persist
+    // tier and then blocks ~2 s in the token bucket — without ever
+    // occupying cache capacity the foreground workers need.
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 4 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .build();
+    let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| {
+        t.with_bandwidth_limit(4.0 * MIB as f64)
+    })
+    .unwrap();
+    let sea = &sea;
+    let done = AtomicBool::new(false);
+    let done = &done;
+    let calls = AtomicU64::new(0);
+    let calls = &calls;
+    let mut window = 0.0f64;
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            let big = vec![9u8; 8 * MIB as usize];
+            let fd = sea.create("/heavy/big.dat").unwrap();
+            sea.write(fd, &big).unwrap();
+            sea.close(fd).unwrap();
+            done.store(true, Ordering::Release);
+        });
+        // Let the heavy writer reach the throttle wait, then measure.
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let t0 = Instant::now();
+        std::thread::scope(|inner| {
+            for w in 0..cache_workers {
+                inner.spawn(move || {
+                    let payload = vec![7u8; 4096];
+                    let mut rbuf = vec![0u8; 4096];
+                    let mut n = 0u64;
+                    let mut i = 0usize;
+                    while !done.load(Ordering::Acquire) {
+                        let p = format!("/cache/w{w}/f{i}.dat");
+                        i += 1;
+                        let fd = sea.create(&p).unwrap();
+                        sea.write(fd, &payload).unwrap();
+                        sea.close(fd).unwrap();
+                        let fd = sea.open(&p, OpenMode::Read).unwrap();
+                        sea.read(fd, &mut rbuf).unwrap();
+                        sea.close(fd).unwrap();
+                        sea.unlink(&p).unwrap();
+                        n += 7;
+                    }
+                    calls.fetch_add(n, Ordering::Relaxed);
+                });
+            }
+        });
+        window = t0.elapsed().as_secs_f64();
+    });
+    calls.load(Ordering::Relaxed) as f64 / window.max(1e-9)
 }
 
 fn main() {
@@ -144,4 +250,42 @@ fn main() {
         dt,
         (report.bytes_flushed >> 20) as f64 / dt
     );
+
+    // --- hot-path contention (lock-sharding payoff) -------------------------
+    println!("\n# hot-path contention\n");
+    let iters = 2_000;
+    let c1 = contention_calls_per_sec(1, iters);
+    println!("open/write/read/close/unlink, 1 thread   {c1:10.0} calls/s");
+    let c8 = contention_calls_per_sec(8, iters);
+    let scaling = c8 / c1;
+    println!(
+        "open/write/read/close/unlink, 8 threads  {c8:10.0} calls/s ({scaling:.2}x aggregate)"
+    );
+    let fg = throttled_foreground_calls_per_sec(7);
+    println!(
+        "7 cache workers vs throttled persist write {fg:8.0} calls/s (foreground unblocked)"
+    );
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"single_thread_write_us\": {:.3},\n",
+            "  \"afni_overhead_pct\": {:.4},\n",
+            "  \"contention_calls_per_sec_1t\": {:.0},\n",
+            "  \"contention_calls_per_sec_8t\": {:.0},\n",
+            "  \"aggregate_scaling_8t\": {:.2},\n",
+            "  \"throttled_foreground_calls_per_sec\": {:.0}\n",
+            "}}\n"
+        ),
+        per_write * 1e6,
+        overhead_pct,
+        c1,
+        c8,
+        scaling,
+        fg
+    );
+    match std::fs::write("BENCH_hotpath.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
 }

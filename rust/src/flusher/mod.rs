@@ -1,15 +1,25 @@
 //! Background data-management threads (paper §2.1, §3.4).
 //!
 //! The **flusher** moves data from caches to persistent storage without
-//! interrupting ongoing processing: a separate thread periodically scans
-//! for dirty files matching `.sea_flushlist` regexes and copies them to
-//! the persistent tier. Files matching both flush and evict lists are
-//! **moved** (flushed once, cache copy dropped). Files matching only the
-//! evict list are cache-only scratch: they are deleted at drain time and
-//! *never* reach Lustre — the mechanism behind the paper's §3.6 quota
-//! argument. Unmount drains: everything flush-listed is persisted before
-//! the session ends (the paper's production "flushing enabled" runs
-//! include this in the makespan).
+//! interrupting ongoing processing: a separate thread periodically drains
+//! the namespace's **incremental dirty queue** (paths that became dirty
+//! since the last pass — no O(all-files) rescan) and copies entries
+//! matching `.sea_flushlist` regexes to the persistent tier. Files
+//! matching both flush and evict lists are **moved** (flushed once, cache
+//! copy dropped). Files matching only the evict list are cache-only
+//! scratch: they are deleted at drain time and *never* reach Lustre — the
+//! mechanism behind the paper's §3.6 quota argument. Unmount drains:
+//! everything flush-listed is persisted before the session ends (the
+//! paper's production "flushing enabled" runs include this in the
+//! makespan).
+//!
+//! Queue discipline (see `crate::namespace` for the guarantees): a
+//! drained entry is consumed, so [`flush_pass`] re-queues anything it
+//! could not act on — files still open (unless `force`) and failed copies
+//! (counted in [`FlushReport::errors`]). Dirty files matching no flush
+//! list are dropped from the queue on first sight: they stay
+//! cache-resident by policy, and a rename to a flush-listed path
+//! re-enqueues them.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -51,71 +61,128 @@ pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
     let mut report = FlushReport::default();
     let persist = core.tiers.persist_idx();
 
-    for entry in core.ns.dirty_files() {
-        if entry.open && !force {
-            continue; // don't race ongoing writes
-        }
+    for entry in core.ns.take_dirty() {
+        // Policy first: files matching no flush list are dropped from the
+        // queue permanently (even while open), so a long-lived open
+        // scratch file doesn't get drained-and-requeued every pass.
         let disposition = core.lists.disposition(&entry.logical);
         let wants_flush = matches!(disposition, Disposition::Flush | Disposition::Move);
         if !wants_flush {
+            continue; // cache-resident by policy; not re-queued
+        }
+        if entry.open && !force {
+            // Don't race ongoing writes: hand the entry back so the next
+            // pass (or the drain) sees it again.
+            core.ns.mark_dirty(&entry.logical);
             continue;
         }
         if entry.master == persist {
             // already physically on the persistent tier: just mark clean
+            // (unless a write moved the version since the drain)
+            let mut stale = false;
             core.ns.update(&entry.logical, |m| {
-                m.dirty = false;
-                m.flushed = true;
+                if m.version == entry.version {
+                    m.dirty = false;
+                    m.flushed = true;
+                } else {
+                    stale = true;
+                }
             });
+            if stale {
+                core.ns.mark_dirty(&entry.logical);
+            }
             continue;
         }
         match core.copy_between(&entry.logical, entry.master, persist) {
             Ok(bytes) => {
-                report.bytes_flushed += bytes;
-                core.counters.bump_persist();
-                core.ns.update(&entry.logical, |m| {
-                    m.dirty = false;
+                // Record the persist replica either way (so a later unlink
+                // deletes the physical copy), but only mark clean if no
+                // write landed during the copy: the version check under
+                // the shard lock is what keeps a mid-copy write from
+                // being silently lost (the queue entry was consumed, and
+                // record_write on an already-dirty file does not
+                // re-enqueue).
+                let mut stale = false;
+                let updated = core.ns.update(&entry.logical, |m| {
                     m.flushed = true;
                     if !m.replicas.contains(&persist) {
                         m.replicas.push(persist);
                     }
+                    if m.version == entry.version {
+                        m.dirty = false;
+                    } else {
+                        stale = true;
+                    }
                 });
-                if disposition == Disposition::Move {
-                    drop_cache_replicas(core, &entry.logical);
-                    report.moved += 1;
+                if !updated {
+                    // Unlinked while we copied: the just-written persist
+                    // copy is untracked — delete it (or the next mount's
+                    // register_existing would resurrect a deleted file)
+                    // and count nothing: no bytes were durably flushed.
+                    core.delete_replica(&entry.logical, persist, entry.size);
+                    continue;
+                }
+                report.bytes_flushed += bytes;
+                core.counters.bump_persist();
+                if stale {
+                    // Outdated the moment it landed: leave the file dirty
+                    // and re-queue for a fresh copy (which overwrites the
+                    // stale persist bytes in place).
+                    core.ns.mark_dirty(&entry.logical);
+                } else if disposition == Disposition::Move {
+                    if drop_cache_replicas(core, &entry.logical) {
+                        report.moved += 1;
+                    } else {
+                        // Re-dirtied or reopened before the cache copy
+                        // could be detached: the flush itself succeeded;
+                        // the move completes on a later pass.
+                        report.flushed += 1;
+                    }
                 } else {
                     report.flushed += 1;
                 }
             }
-            Err(_) => report.errors += 1,
+            Err(_) => {
+                report.errors += 1;
+                // still dirty on disk: retry on a later pass
+                core.ns.mark_dirty(&entry.logical);
+            }
         }
     }
 
-    // Eviction of clean, closed, flushed files that are move/evict-listed.
-    for (logical, meta) in core.ns.evictable_files() {
-        let disposition = core.lists.disposition(&logical);
-        let evictable = matches!(disposition, Disposition::Evict | Disposition::Move);
-        if !evictable || !meta.flushed {
-            continue; // unflushed evict-only scratch is handled at drain
-        }
-        if meta.replicas.iter().any(|&t| t != persist) {
-            drop_cache_replicas(core, &logical);
+    // Eviction of clean, closed, flushed files that are move/evict-listed
+    // (unflushed evict-only scratch is handled at drain). The disposition
+    // filter runs inside the shard scan so unlisted files cost no clone.
+    let candidates = core.ns.evictable_paths(|logical, m| {
+        m.flushed
+            && matches!(
+                core.lists.disposition(logical),
+                Disposition::Evict | Disposition::Move
+            )
+    });
+    for logical in candidates {
+        if drop_cache_replicas(core, &logical) {
             report.evicted += 1;
         }
     }
     report
 }
 
-/// Remove every cache replica of `logical`, leaving (at most) the persist
-/// copy; the persist copy becomes the master.
-fn drop_cache_replicas(core: &SeaCore, logical: &str) {
+/// Atomically detach every cache replica of `logical` — only while the
+/// file is still clean and closed — then delete the physical copies; the
+/// persist copy becomes the master. Returns false when the file was
+/// re-dirtied or reopened first (a re-dirtied file is back in the dirty
+/// queue, so a later pass finishes the job).
+fn drop_cache_replicas(core: &SeaCore, logical: &str) -> bool {
     let persist = core.tiers.persist_idx();
-    if let Some(meta) = core.ns.lookup(logical) {
-        for &tier in &meta.replicas {
-            if tier != persist {
-                core.delete_replica(logical, tier, meta.size);
-                core.ns.drop_replica(logical, tier);
+    match core.ns.detach_cache_replicas(logical, persist) {
+        Some((size, dropped)) => {
+            for tier in dropped {
+                core.delete_replica(logical, tier, size);
             }
+            true
         }
+        None => false,
     }
 }
 
@@ -374,6 +441,28 @@ mod tests {
         let r2 = drain(sea.core());
         assert_eq!(r1.flushed, 1);
         assert_eq!(r2.flushed + r2.moved + r2.evicted, 0);
+    }
+
+    #[test]
+    fn failed_copy_counts_error_and_retries() {
+        let (_g, sea) = setup(lists(".*", ""));
+        write_file(&sea, "/lost.out", b"data");
+        // sabotage: delete the cached master behind Sea's back so the
+        // flush copy fails
+        let phys = sea.core().tiers.get(0).physical("/lost.out");
+        std::fs::remove_file(&phys).unwrap();
+        let rep = flush_pass(sea.core(), false);
+        assert_eq!(rep.errors, 1);
+        assert_eq!(rep.flushed + rep.moved, 0);
+        assert!(sea.core().ns.lookup("/lost.out").unwrap().dirty);
+        // the entry was re-queued: the next pass retries (and fails again)
+        let rep = flush_pass(sea.core(), false);
+        assert_eq!(rep.errors, 1);
+        // restore the file: the retry then succeeds
+        std::fs::write(&phys, b"data").unwrap();
+        let rep = flush_pass(sea.core(), false);
+        assert_eq!(rep.flushed, 1);
+        assert!(!sea.core().ns.lookup("/lost.out").unwrap().dirty);
     }
 
     #[test]

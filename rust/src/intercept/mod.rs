@@ -13,6 +13,29 @@
 //! * **reads** come from the fastest tier holding a current replica;
 //! * every call is counted ([`counters`]) so Table 2's glibc-call columns
 //!   can be regenerated.
+//!
+//! # Concurrency model
+//!
+//! The paper's overhead claim (< 1 µs of interception per call against
+//! AFNI's ~300k glibc calls) only holds if `nprocs` pipeline workers never
+//! serialise on shared state, so the hot path is lock-sharded:
+//!
+//! * the fd table is [`FD_SHARDS`] `RwLock`-protected maps from [`Fd`] to
+//!   a **per-fd handle** (`Arc<Mutex<OpenFile>>`). A call takes the shard
+//!   lock only long enough to clone the `Arc`, then does the physical
+//!   `read`/`write`/`seek` — and any [`Tier::wait_data`] throttle sleep —
+//!   under the per-fd mutex alone. A throttled persist-tier write on one
+//!   fd therefore stalls only callers of that same fd, never the table;
+//! * the namespace is sharded independently (see [`crate::namespace`]);
+//!   per-call bookkeeping (`record_write`, open counts) touches exactly
+//!   one namespace shard, briefly;
+//! * call counters and tier capacity accounting are lock-free atomics.
+//!
+//! Lock order (outer → inner): fd-shard lock → per-fd mutex → namespace
+//! shard lock. Tier throttles/capacity are atomics or self-contained and
+//! may be touched under any of these. The flusher threads never take fd
+//! locks, and `SeaIo` never holds a namespace lock across physical I/O,
+//! so the two sides cannot deadlock.
 
 pub mod counters;
 
@@ -22,10 +45,10 @@ use std::collections::HashMap;
 use std::io::{Read, Seek, SeekFrom, Write};
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::config::SeaConfig;
-use crate::namespace::{clean_path, Namespace};
+use crate::namespace::{CleanPath, Namespace};
 use crate::pathrules::SeaLists;
 use crate::tiers::{Tier, TierIdx, TierSet};
 
@@ -60,7 +83,9 @@ impl SeaCore {
 
     /// Copy a file's bytes between tiers (used by flusher, prefetcher and
     /// spill). Honest waiting: both tiers' throttles apply. Returns bytes
-    /// copied.
+    /// copied. The destination is durably synced: a failing `sync_all`
+    /// fails the copy, so the flusher counts it in `FlushReport.errors`
+    /// instead of reporting a silently-lost flush.
     pub fn copy_between(
         &self,
         logical: &str,
@@ -88,7 +113,7 @@ impl SeaCore {
             dst.write_all(&buf[..n])?;
             total += n as u64;
         }
-        dst.sync_all().ok();
+        dst.sync_all()?;
         Ok(total)
     }
 
@@ -124,7 +149,7 @@ pub struct SeaStat {
 pub type Fd = u64;
 
 struct OpenFile {
-    logical: String,
+    logical: CleanPath,
     tier: TierIdx,
     file: std::fs::File,
     writable: bool,
@@ -132,6 +157,46 @@ struct OpenFile {
     pos: u64,
     /// Current known size (reservation already accounted to `tier`).
     size: u64,
+}
+
+/// Number of fd-table shards (power of two; fds are allocated
+/// sequentially, so masking spreads adjacent fds over distinct shards).
+pub const FD_SHARDS: usize = 16;
+
+/// One fd-table shard: fd → per-fd handle.
+type FdShard = RwLock<HashMap<Fd, Arc<Mutex<OpenFile>>>>;
+
+/// The sharded fd table: a brief shard lock hands out the per-fd handle;
+/// all physical I/O then happens under that handle's own mutex.
+struct FdTable {
+    shards: Vec<FdShard>,
+}
+
+impl FdTable {
+    fn new() -> FdTable {
+        FdTable {
+            shards: (0..FD_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, fd: Fd) -> &FdShard {
+        &self.shards[(fd as usize) & (FD_SHARDS - 1)]
+    }
+
+    fn insert(&self, fd: Fd, of: OpenFile) {
+        self.shard(fd)
+            .write()
+            .unwrap()
+            .insert(fd, Arc::new(Mutex::new(of)));
+    }
+
+    fn get(&self, fd: Fd) -> Option<Arc<Mutex<OpenFile>>> {
+        self.shard(fd).read().unwrap().get(&fd).cloned()
+    }
+
+    fn remove(&self, fd: Fd) -> Option<Arc<Mutex<OpenFile>>> {
+        self.shard(fd).write().unwrap().remove(&fd)
+    }
 }
 
 /// Errors from the interception layer.
@@ -165,7 +230,7 @@ fn io_err(path: &str, source: std::io::Error) -> SeaError {
 /// The user-facing Sea handle: mount, do I/O through it, unmount.
 pub struct SeaIo {
     core: Arc<SeaCore>,
-    fds: Mutex<HashMap<Fd, OpenFile>>,
+    fds: FdTable,
     next_fd: AtomicU64,
 }
 
@@ -191,7 +256,7 @@ impl SeaIo {
         });
         let sea = SeaIo {
             core,
-            fds: Mutex::new(HashMap::new()),
+            fds: FdTable::new(),
             next_fd: AtomicU64::new(3), // 0..2 reserved, as in POSIX
         };
         sea.register_existing()?;
@@ -233,12 +298,10 @@ impl SeaIo {
                 } else if let Ok(rel) = p.strip_prefix(&root) {
                     let logical = format!("/{}", rel.to_string_lossy());
                     let size = entry.metadata().map(|m| m.len()).unwrap_or(0);
-                    self.core.ns.create(&logical, persist);
-                    self.core.ns.update(&logical, |m| {
-                        m.size = size;
-                        m.dirty = false;
-                        m.flushed = true;
-                    });
+                    // One locked op, no dirty-queue traffic: mounting over
+                    // a large existing dataset must not enqueue (and then
+                    // drain-and-discard) every input file.
+                    self.core.ns.register_clean(&logical, persist, size);
                 }
             }
         }
@@ -286,6 +349,11 @@ impl SeaIo {
         self.next_fd.fetch_add(1, Ordering::Relaxed)
     }
 
+    /// The per-fd handle for `fd` (brief shard read-lock, no I/O).
+    fn fd_handle(&self, fd: Fd) -> Result<Arc<Mutex<OpenFile>>, SeaError> {
+        self.fds.get(fd).ok_or(SeaError::BadFd(fd))
+    }
+
     // ------------------------------------------------------------------
     // The intercepted call surface
     // ------------------------------------------------------------------
@@ -293,7 +361,7 @@ impl SeaIo {
     /// `creat`/`open(O_CREAT|O_TRUNC)`: place a new file by write policy.
     pub fn create(&self, path: &str) -> Result<Fd, SeaError> {
         self.core.counters.bump(CallKind::create);
-        let logical = clean_path(path);
+        let logical = CleanPath::new(path);
         // Policy: highest-priority cache with room (0-byte reservation
         // grows with writes); always succeeds at the persistent tier.
         let tier = self.core.tiers.place_write(0);
@@ -319,7 +387,7 @@ impl SeaIo {
         }
         self.core.ns.update(&logical, |m| m.open_count += 1);
         let fd = self.alloc_fd();
-        self.fds.lock().unwrap().insert(
+        self.fds.insert(
             fd,
             OpenFile {
                 logical,
@@ -337,13 +405,12 @@ impl SeaIo {
     /// fastest tier holding a current replica.
     pub fn open(&self, path: &str, mode: OpenMode) -> Result<Fd, SeaError> {
         self.core.counters.bump(CallKind::open);
-        let logical = clean_path(path);
-        let meta = self
+        let logical = CleanPath::new(path);
+        let (tier, size) = self
             .core
             .ns
-            .lookup(&logical)
-            .ok_or_else(|| SeaError::NotFound(logical.clone()))?;
-        let tier = meta.fastest_replica();
+            .with_meta(&logical, |m| (m.fastest_replica(), m.size))
+            .ok_or_else(|| SeaError::NotFound(logical.to_string()))?;
         if self.core.is_persist(tier) {
             self.core.counters.bump_persist();
         }
@@ -356,7 +423,7 @@ impl SeaIo {
             .map_err(|e| io_err(&logical, e))?;
         self.core.ns.update(&logical, |m| m.open_count += 1);
         let fd = self.alloc_fd();
-        self.fds.lock().unwrap().insert(
+        self.fds.insert(
             fd,
             OpenFile {
                 logical,
@@ -364,7 +431,7 @@ impl SeaIo {
                 file,
                 writable: mode == OpenMode::ReadWrite,
                 pos: 0,
-                size: meta.size,
+                size,
             },
         );
         Ok(fd)
@@ -372,8 +439,8 @@ impl SeaIo {
 
     pub fn write(&self, fd: Fd, buf: &[u8]) -> Result<usize, SeaError> {
         self.core.counters.bump(CallKind::write);
-        let mut fds = self.fds.lock().unwrap();
-        let of = fds.get_mut(&fd).ok_or(SeaError::BadFd(fd))?;
+        let handle = self.fd_handle(fd)?;
+        let mut of = handle.lock().unwrap();
         if !of.writable {
             return Err(SeaError::NotWritable(fd));
         }
@@ -382,7 +449,7 @@ impl SeaIo {
         let persist = self.core.is_persist(of.tier);
         if growth > 0 && !persist && !self.core.tier(of.tier).try_reserve(growth) {
             // Cache full: spill the whole file to the next tier with room.
-            Self::spill_locked(&self.core, of, growth)?;
+            Self::spill_locked(&self.core, &mut of, growth)?;
         }
         let persist = self.core.is_persist(of.tier);
         if persist {
@@ -400,7 +467,8 @@ impl SeaIo {
     }
 
     /// Move the open file to the next tier that can hold `size + growth`
-    /// (ultimately the persistent tier) and continue there.
+    /// (ultimately the persistent tier) and continue there. Runs under the
+    /// caller's per-fd lock: only this fd blocks on the copy.
     fn spill_locked(
         core: &Arc<SeaCore>,
         of: &mut OpenFile,
@@ -444,8 +512,8 @@ impl SeaIo {
 
     pub fn read(&self, fd: Fd, buf: &mut [u8]) -> Result<usize, SeaError> {
         self.core.counters.bump(CallKind::read);
-        let mut fds = self.fds.lock().unwrap();
-        let of = fds.get_mut(&fd).ok_or(SeaError::BadFd(fd))?;
+        let handle = self.fd_handle(fd)?;
+        let mut of = handle.lock().unwrap();
         let persist = self.core.is_persist(of.tier);
         if persist {
             self.core.counters.bump_persist();
@@ -459,8 +527,8 @@ impl SeaIo {
 
     pub fn lseek(&self, fd: Fd, pos: SeekFrom) -> Result<u64, SeaError> {
         self.core.counters.bump(CallKind::lseek);
-        let mut fds = self.fds.lock().unwrap();
-        let of = fds.get_mut(&fd).ok_or(SeaError::BadFd(fd))?;
+        let handle = self.fd_handle(fd)?;
+        let mut of = handle.lock().unwrap();
         let new = of.file.seek(pos).map_err(|e| io_err(&of.logical, e))?;
         of.pos = new;
         Ok(new)
@@ -468,53 +536,54 @@ impl SeaIo {
 
     pub fn fsync(&self, fd: Fd) -> Result<(), SeaError> {
         self.core.counters.bump(CallKind::fsync);
-        let fds = self.fds.lock().unwrap();
-        let of = fds.get(&fd).ok_or(SeaError::BadFd(fd))?;
+        let handle = self.fd_handle(fd)?;
+        let of = handle.lock().unwrap();
         of.file.sync_all().map_err(|e| io_err(&of.logical, e))
     }
 
     pub fn close(&self, fd: Fd) -> Result<(), SeaError> {
         self.core.counters.bump(CallKind::close);
-        let of = self
-            .fds
-            .lock()
-            .unwrap()
-            .remove(&fd)
-            .ok_or(SeaError::BadFd(fd))?;
+        let handle = self.fds.remove(fd).ok_or(SeaError::BadFd(fd))?;
+        // Common case: the table held the last reference, so take the
+        // OpenFile by value — no lock, no path clone. Fall back to a
+        // locked clone if another thread is still mid-call on this fd.
+        let logical = match Arc::try_unwrap(handle) {
+            Ok(mutex) => mutex.into_inner().unwrap().logical,
+            Err(handle) => handle.lock().unwrap().logical.clone(),
+        };
         self.core
             .ns
-            .update(&of.logical, |m| m.open_count = m.open_count.saturating_sub(1));
+            .update(&logical, |m| m.open_count = m.open_count.saturating_sub(1));
         Ok(())
     }
 
     pub fn stat(&self, path: &str) -> Result<SeaStat, SeaError> {
         self.core.counters.bump(CallKind::stat);
-        let logical = clean_path(path);
-        let meta = self
+        let logical = CleanPath::new(path);
+        let (size, tier, dirty) = self
             .core
             .ns
-            .lookup(&logical)
-            .ok_or_else(|| SeaError::NotFound(logical.clone()))?;
-        let tier = meta.fastest_replica();
+            .with_meta(&logical, |m| (m.size, m.fastest_replica(), m.dirty))
+            .ok_or_else(|| SeaError::NotFound(logical.to_string()))?;
         if self.core.is_persist(tier) {
             self.core.counters.bump_persist();
             self.core.tier(tier).wait_meta();
         }
         Ok(SeaStat {
-            size: meta.size,
+            size,
             tier: self.core.tier(tier).name.clone(),
-            dirty: meta.dirty,
+            dirty,
         })
     }
 
     pub fn unlink(&self, path: &str) -> Result<(), SeaError> {
         self.core.counters.bump(CallKind::unlink);
-        let logical = clean_path(path);
+        let logical = CleanPath::new(path);
         let meta = self
             .core
             .ns
             .remove(&logical)
-            .ok_or_else(|| SeaError::NotFound(logical.clone()))?;
+            .ok_or_else(|| SeaError::NotFound(logical.to_string()))?;
         for tier in meta.replicas {
             if self.core.is_persist(tier) {
                 self.core.counters.bump_persist();
@@ -526,14 +595,14 @@ impl SeaIo {
 
     pub fn rename(&self, from: &str, to: &str) -> Result<(), SeaError> {
         self.core.counters.bump(CallKind::rename);
-        let from_l = clean_path(from);
-        let to_l = clean_path(to);
-        let meta = self
+        let from_l = CleanPath::new(from);
+        let to_l = CleanPath::new(to);
+        let replicas = self
             .core
             .ns
-            .lookup(&from_l)
-            .ok_or_else(|| SeaError::NotFound(from_l.clone()))?;
-        for &tier in &meta.replicas {
+            .with_meta(&from_l, |m| m.replicas.clone())
+            .ok_or_else(|| SeaError::NotFound(from_l.to_string()))?;
+        for &tier in &replicas {
             if self.core.is_persist(tier) {
                 self.core.counters.bump_persist();
             }
@@ -545,6 +614,27 @@ impl SeaIo {
             }
             std::fs::rename(&src, &dst).map_err(|e| io_err(&from_l, e))?;
         }
+        // All physical moves done: retire the overwritten destination so
+        // renames can't leak capacity (POSIX overwrite semantics — done
+        // only after every fs::rename succeeded, so a failed rename
+        // leaves the destination intact; self-rename overwrites itself).
+        // remove() returns the meta atomically, so a concurrent grower's
+        // reservation is released in full. Same-tier copies were replaced
+        // by fs::rename above (release the reservation only); cross-tier
+        // copies are deleted exactly like an unlink.
+        if to_l != from_l {
+            if let Some(old) = self.core.ns.remove(&to_l) {
+                for tier in old.replicas {
+                    if replicas.contains(&tier) {
+                        if !self.core.is_persist(tier) {
+                            self.core.tier(tier).release(old.size);
+                        }
+                    } else {
+                        self.core.delete_replica(&to_l, tier, old.size);
+                    }
+                }
+            }
+        }
         self.core.ns.rename(&from_l, &to_l);
         Ok(())
     }
@@ -552,13 +642,13 @@ impl SeaIo {
     pub fn mkdir(&self, path: &str) -> Result<(), SeaError> {
         self.core.counters.bump(CallKind::mkdir);
         // Directories are mirrored lazily; nothing physical required here.
-        let _ = clean_path(path);
+        let _ = CleanPath::new(path);
         Ok(())
     }
 
     pub fn readdir(&self, path: &str) -> Result<Vec<String>, SeaError> {
         self.core.counters.bump(CallKind::readdir);
-        Ok(self.core.ns.list_dir(&clean_path(path)))
+        Ok(self.core.ns.list_dir(path))
     }
 
     /// Total bytes and file count currently resident per tier (diagnostics
@@ -633,6 +723,26 @@ mod tests {
         sea.close(b).unwrap();
         assert_eq!(sea.stat("/a").unwrap().tier, "tmpfs");
         assert_eq!(sea.stat("/b").unwrap().tier, "lustre");
+    }
+
+    #[test]
+    fn create_on_full_cache_goes_straight_to_persist() {
+        let (_g, sea) = setup(64);
+        let a = sea.create("/fill").unwrap();
+        sea.write(a, &[1u8; 64]).unwrap(); // fills the cache exactly
+        sea.close(a).unwrap();
+        // The cache has zero free bytes: a new file must be placed on the
+        // persistent tier directly instead of grabbing a doomed 0-byte
+        // cache reservation that forces a whole-file spill on first write.
+        let b = sea.create("/next").unwrap();
+        sea.write(b, &[2u8; 8]).unwrap();
+        sea.close(b).unwrap();
+        assert_eq!(sea.stat("/fill").unwrap().tier, "tmpfs");
+        assert_eq!(sea.stat("/next").unwrap().tier, "lustre");
+        // the resident file's reservation was never disturbed
+        assert_eq!(sea.core().tiers.get(0).used(), 64);
+        let meta = sea.core().ns.lookup("/next").unwrap();
+        assert_eq!(meta.replicas, vec![sea.core().tiers.persist_idx()]);
     }
 
     #[test]
@@ -741,6 +851,29 @@ mod tests {
     }
 
     #[test]
+    fn rename_over_existing_releases_destination() {
+        let (_g, sea) = setup(MIB);
+        let fd = sea.create("/dst").unwrap();
+        sea.write(fd, &[1u8; 100]).unwrap();
+        sea.close(fd).unwrap();
+        let fd = sea.create("/src").unwrap();
+        sea.write(fd, &[2u8; 40]).unwrap();
+        sea.close(fd).unwrap();
+        assert_eq!(sea.core().tiers.get(0).used(), 140);
+        sea.rename("/src", "/dst").unwrap();
+        // the old destination's reservation must not leak
+        assert_eq!(sea.core().tiers.get(0).used(), 40);
+        assert!(matches!(sea.stat("/src"), Err(SeaError::NotFound(_))));
+        let st = sea.stat("/dst").unwrap();
+        assert_eq!(st.size, 40);
+        let fd = sea.open("/dst", OpenMode::Read).unwrap();
+        let mut buf = [0u8; 64];
+        let n = sea.read(fd, &mut buf).unwrap();
+        assert_eq!(&buf[..n], &[2u8; 40][..]);
+        sea.close(fd).unwrap();
+    }
+
+    #[test]
     fn readdir_shows_mountpoint_view() {
         let (_g, sea) = setup(MIB);
         for p in ["/d/one", "/d/two", "/d/sub/three"] {
@@ -797,6 +930,34 @@ mod tests {
         sea.close(fd).unwrap();
         let fd = sea.open("/f", OpenMode::Read).unwrap();
         assert!(matches!(sea.write(fd, b"b"), Err(SeaError::NotWritable(_))));
+    }
+
+    #[test]
+    fn concurrent_fds_on_distinct_files_make_progress() {
+        // 8 threads, each on its own fd: the sharded table must let them
+        // all write and read back without interference.
+        let (_g, sea) = setup(4 * MIB);
+        let sea = &sea;
+        std::thread::scope(|s| {
+            for w in 0..8 {
+                s.spawn(move || {
+                    let p = format!("/w{w}.dat");
+                    let fd = sea.create(&p).unwrap();
+                    for _ in 0..100 {
+                        sea.write(fd, &[w as u8; 512]).unwrap();
+                    }
+                    sea.close(fd).unwrap();
+                    let fd = sea.open(&p, OpenMode::Read).unwrap();
+                    let mut buf = [0u8; 512];
+                    let n = sea.read(fd, &mut buf).unwrap();
+                    assert_eq!(n, 512);
+                    assert!(buf.iter().all(|&b| b == w as u8));
+                    sea.close(fd).unwrap();
+                });
+            }
+        });
+        assert_eq!(sea.stats().write, 800);
+        assert_eq!(sea.core().tiers.get(0).used(), 8 * 100 * 512);
     }
 
     #[test]

@@ -9,11 +9,61 @@
 //! mirrored across tiers lazily on write (the paper mirrors eagerly at
 //! mount; lazy mirroring is equivalent and avoids the paper's noted
 //! startup cost for large trees).
+//!
+//! # Concurrency model
+//!
+//! The registry is sharded [`NS_SHARDS`]-ways by an FNV-1a hash of the
+//! clean logical path. Each shard is an independent `RwLock` over its
+//! file map plus that shard's slice of the **dirty queue**, so pipeline
+//! workers touching different files contend only when their paths hash to
+//! the same shard. Lock discipline:
+//!
+//! * shard locks are leaf locks — no I/O, no tier waits, and no other
+//!   shard lock is ever acquired while one is held, with the single
+//!   exception of [`Namespace::rename`] across shards, which always locks
+//!   the two shards in ascending index order (deadlock-free total order);
+//! * cross-shard read views ([`Namespace::all_paths`], [`Namespace::list_dir`],
+//!   [`Namespace::files_on_tier`], …) visit shards one at a time and are
+//!   therefore *not* atomic snapshots — callers (diagnostics, drain) must
+//!   tolerate concurrent mutation, exactly as with the previous single-map
+//!   implementation under a briefly released lock.
+//!
+//! # The incremental dirty queue
+//!
+//! Instead of the flusher re-scanning every file each pass, each shard
+//! keeps a set of paths that *became* dirty since the last drain.
+//! Guarantees:
+//!
+//! * every clean→dirty transition (including file creation, which starts
+//!   dirty, and renaming a dirty file to a new path) enqueues the path;
+//! * [`Namespace::take_dirty`] drains all shards and returns only entries
+//!   that are still dirty at drain time (stale queue entries — removed or
+//!   since-cleaned files — are dropped for free);
+//! * a drained entry is gone: callers that cannot act on one yet (file
+//!   still open, copy error) must re-queue it with
+//!   [`Namespace::mark_dirty`] or it will not be seen again. The flusher
+//!   deliberately does *not* re-queue dirty files that match no flush
+//!   list: they stay cache-resident, and renaming them re-enqueues if a
+//!   later name is flush-listed;
+//! * each entry snapshots [`FileMeta::version`] (bumped by every recorded
+//!   write). A consumer must only mark the file clean if the version is
+//!   unchanged under the shard lock — writes that land while a flush copy
+//!   is in flight therefore stay dirty and get re-queued instead of being
+//!   silently lost.
+//!
+//! Hot paths avoid re-normalising paths via [`CleanPath`] (a proven-clean
+//! logical path) and avoid cloning whole [`FileMeta`] records (with their
+//! replica `Vec`s) via [`Namespace::with_meta`].
 
-use std::collections::HashMap;
+use std::borrow::Cow;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
 use crate::tiers::TierIdx;
+
+/// Number of namespace shards (power of two; index = path-hash masked).
+pub const NS_SHARDS: usize = 16;
 
 /// Normalise a logical path: collapse `//`, resolve `.` and `..`, ensure a
 /// single leading `/`.
@@ -39,11 +89,102 @@ pub fn clean_path(path: &str) -> String {
     s
 }
 
+/// True if `path` is already a fixpoint of [`clean_path`].
+fn is_clean(path: &str) -> bool {
+    if path == "/" {
+        return true;
+    }
+    match path.strip_prefix('/') {
+        Some(rest) => rest.split('/').all(|c| !c.is_empty() && c != "." && c != ".."),
+        None => false,
+    }
+}
+
 /// Parent directory of a clean logical path (`/a/b/c` → `/a/b`).
 pub fn parent_of(path: &str) -> &str {
     match path.rfind('/') {
         Some(0) | None => "/",
         Some(i) => &path[..i],
+    }
+}
+
+/// A logical path proven to be in [`clean_path`] normal form.
+///
+/// The interceptor normalises each user-supplied path once at the call
+/// boundary and threads a `CleanPath` through every internal layer, so hot
+/// per-call paths (`record_write` on every intercepted `write`) skip both
+/// the re-normalisation and its `String` allocation.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CleanPath(String);
+
+impl CleanPath {
+    /// Normalise `path` (no-op allocation-wise only at construction; all
+    /// later uses are free).
+    pub fn new(path: &str) -> CleanPath {
+        CleanPath(clean_path(path))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+
+    pub fn into_string(self) -> String {
+        self.0
+    }
+}
+
+impl std::ops::Deref for CleanPath {
+    type Target = str;
+
+    fn deref(&self) -> &str {
+        &self.0
+    }
+}
+
+impl std::fmt::Display for CleanPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+impl std::borrow::Borrow<str> for CleanPath {
+    fn borrow(&self) -> &str {
+        &self.0
+    }
+}
+
+impl From<&str> for CleanPath {
+    fn from(path: &str) -> CleanPath {
+        CleanPath::new(path)
+    }
+}
+
+/// Path parameter accepted by [`Namespace`] methods: either a raw `&str`
+/// (normalised on the fly, borrowing when already clean) or a
+/// [`CleanPath`] (always borrowed — the zero-cost hot path).
+pub trait PathArg {
+    fn to_clean(&self) -> Cow<'_, str>;
+}
+
+impl PathArg for str {
+    fn to_clean(&self) -> Cow<'_, str> {
+        if is_clean(self) {
+            Cow::Borrowed(self)
+        } else {
+            Cow::Owned(clean_path(self))
+        }
+    }
+}
+
+impl PathArg for String {
+    fn to_clean(&self) -> Cow<'_, str> {
+        self.as_str().to_clean()
+    }
+}
+
+impl PathArg for CleanPath {
+    fn to_clean(&self) -> Cow<'_, str> {
+        Cow::Borrowed(self.as_str())
     }
 }
 
@@ -61,6 +202,13 @@ pub struct FileMeta {
     pub open_count: u32,
     /// File has been persisted at least once.
     pub flushed: bool,
+    /// Write generation, stamped from a **namespace-global** counter on
+    /// every recorded write, clean→dirty transition, and (re-)creation.
+    /// Global stamps are never reused across paths or file lifetimes, so
+    /// a flusher comparing its [`DirtyEntry`] snapshot cannot be
+    /// ABA-fooled by truncate or unlink+recreate — writes landing
+    /// *during* a flush copy are never silently marked clean.
+    pub version: u64,
 }
 
 impl FileMeta {
@@ -72,6 +220,7 @@ impl FileMeta {
             dirty: true,
             open_count: 0,
             flushed: false,
+            version: 0,
         }
     }
 
@@ -88,17 +237,102 @@ impl FileMeta {
 /// Point-in-time description used by the flusher.
 #[derive(Debug, Clone)]
 pub struct DirtyEntry {
-    pub logical: String,
+    pub logical: CleanPath,
     pub size: u64,
     pub master: TierIdx,
     pub open: bool,
+    /// [`FileMeta::version`] at drain time; compare before marking clean.
+    pub version: u64,
+}
+
+/// One shard: its slice of the file map plus its slice of the dirty queue.
+/// Both live under one lock so a clean→dirty transition and its enqueue
+/// are atomic.
+#[derive(Debug, Default)]
+struct ShardState {
+    files: HashMap<String, FileMeta>,
+    dirty: HashSet<String>,
+}
+
+impl ShardState {
+    /// Apply `f` under this shard's lock — the single place the
+    /// dirty-queue/version invariant is maintained. A clean→dirty
+    /// transition enqueues the path and takes a fresh global stamp;
+    /// `always_stamp` (a write happened) takes one unconditionally. Both
+    /// stamps are fetched under the lock, so a file's version never moves
+    /// backwards; updates that neither write nor dirty the file never
+    /// touch the shared counter.
+    fn update_inner<F: FnOnce(&mut FileMeta)>(
+        &mut self,
+        key: &str,
+        vgen: &AtomicU64,
+        always_stamp: bool,
+        f: F,
+    ) -> bool {
+        let Some(meta) = self.files.get_mut(key) else {
+            return false;
+        };
+        let was_dirty = meta.dirty;
+        f(meta);
+        let transitioned = meta.dirty && !was_dirty;
+        if always_stamp || transitioned {
+            meta.version = fresh_stamp(vgen);
+        }
+        if transitioned {
+            self.dirty.insert(key.to_string());
+        }
+        true
+    }
+
+    fn update<F: FnOnce(&mut FileMeta)>(&mut self, key: &str, vgen: &AtomicU64, f: F) -> bool {
+        self.update_inner(key, vgen, false, f)
+    }
+
+    fn update_stamped<F: FnOnce(&mut FileMeta)>(
+        &mut self,
+        key: &str,
+        vgen: &AtomicU64,
+        f: F,
+    ) -> bool {
+        self.update_inner(key, vgen, true, f)
+    }
 }
 
 /// The mountpoint registry. Interior mutability: shared by the interceptor
-/// (application threads) and the flusher/prefetcher threads.
-#[derive(Debug, Default)]
+/// (application threads) and the flusher/prefetcher threads. See the
+/// module docs for the sharding and lock-ordering rules.
+#[derive(Debug)]
 pub struct Namespace {
-    files: RwLock<HashMap<String, FileMeta>>,
+    shards: Vec<RwLock<ShardState>>,
+    /// Global write-generation source. Every issued stamp is unique
+    /// across all paths and file lifetimes (see [`FileMeta::version`]).
+    vgen: AtomicU64,
+}
+
+impl Default for Namespace {
+    fn default() -> Self {
+        Namespace {
+            shards: (0..NS_SHARDS).map(|_| RwLock::new(ShardState::default())).collect(),
+            vgen: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The single definition of a write-generation stamp: a value the global
+/// counter has never issued before (starts at 1; 0 is the pre-stamp
+/// placeholder in [`FileMeta::new`]).
+fn fresh_stamp(vgen: &AtomicU64) -> u64 {
+    vgen.fetch_add(1, Ordering::Relaxed).wrapping_add(1)
+}
+
+/// FNV-1a — cheap, stable, and good enough to spread paths over shards.
+fn shard_of(path: &str) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in path.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h as usize) & (NS_SHARDS - 1)
 }
 
 impl Namespace {
@@ -106,44 +340,91 @@ impl Namespace {
         Namespace::default()
     }
 
+    fn shard(&self, key: &str) -> &RwLock<ShardState> {
+        &self.shards[shard_of(key)]
+    }
+
     /// Register a new file with its master on `tier` (create/truncate).
-    /// Returns the previous meta if the path existed.
-    pub fn create(&self, logical: &str, tier: TierIdx) -> Option<FileMeta> {
-        let mut files = self.files.write().unwrap();
-        files.insert(clean_path(logical), FileMeta::new(tier))
+    /// Returns the previous meta if the path existed. New files start
+    /// dirty, so the path is enqueued for the flusher; the fresh meta gets
+    /// a brand-new global version (stamped under the shard lock), so a
+    /// flusher holding a pre-truncate (or pre-unlink) [`DirtyEntry`]
+    /// snapshot always sees it as stale.
+    pub fn create(&self, logical: &(impl PathArg + ?Sized), tier: TierIdx) -> Option<FileMeta> {
+        let key = logical.to_clean().into_owned();
+        let mut s = self.shard(&key).write().unwrap();
+        let mut meta = FileMeta::new(tier);
+        meta.version = fresh_stamp(&self.vgen);
+        s.dirty.insert(key.clone());
+        s.files.insert(key, meta)
     }
 
-    pub fn lookup(&self, logical: &str) -> Option<FileMeta> {
-        self.files.read().unwrap().get(&clean_path(logical)).cloned()
+    /// Full clone of the file's meta (cold paths and tests). Hot paths
+    /// should prefer [`Namespace::with_meta`], which does not clone the
+    /// replica `Vec`.
+    pub fn lookup(&self, logical: &(impl PathArg + ?Sized)) -> Option<FileMeta> {
+        let key = logical.to_clean();
+        self.shard(&key).read().unwrap().files.get(&*key).cloned()
     }
 
-    pub fn exists(&self, logical: &str) -> bool {
-        self.files.read().unwrap().contains_key(&clean_path(logical))
+    /// Apply a read-only projection to the file's meta under the shard
+    /// read-lock, without cloning it. Returns `None` if the path is
+    /// unknown.
+    pub fn with_meta<R>(
+        &self,
+        logical: &(impl PathArg + ?Sized),
+        f: impl FnOnce(&FileMeta) -> R,
+    ) -> Option<R> {
+        let key = logical.to_clean();
+        self.shard(&key).read().unwrap().files.get(&*key).map(f)
+    }
+
+    pub fn exists(&self, logical: &(impl PathArg + ?Sized)) -> bool {
+        let key = logical.to_clean();
+        self.shard(&key).read().unwrap().files.contains_key(&*key)
     }
 
     pub fn len(&self) -> usize {
-        self.files.read().unwrap().len()
+        self.shards.iter().map(|s| s.read().unwrap().files.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.files.read().unwrap().is_empty()
+        self.shards.iter().all(|s| s.read().unwrap().files.is_empty())
     }
 
     /// Apply `f` to the file's meta; returns false if the path is unknown.
-    pub fn update<F: FnOnce(&mut FileMeta)>(&self, logical: &str, f: F) -> bool {
-        let mut files = self.files.write().unwrap();
-        match files.get_mut(&clean_path(logical)) {
-            Some(meta) => {
-                f(meta);
-                true
-            }
-            None => false,
-        }
+    /// A clean→dirty transition made by `f` enqueues the path.
+    pub fn update<F: FnOnce(&mut FileMeta)>(
+        &self,
+        logical: &(impl PathArg + ?Sized),
+        f: F,
+    ) -> bool {
+        let key = logical.to_clean();
+        self.shard(&key).write().unwrap().update(&key, &self.vgen, f)
     }
 
-    /// Grow the file size by `delta` and mark dirty (a write happened).
-    pub fn record_write(&self, logical: &str, new_size: u64) -> bool {
-        self.update(logical, |m| {
+    /// Register a pre-existing, already-persisted file (the mount-time
+    /// walk of the persistent tier): clean, flushed, sized — one shard
+    /// lock round trip and no dirty-queue traffic, unlike
+    /// [`Namespace::create`] + [`Namespace::update`].
+    pub fn register_clean(&self, logical: &(impl PathArg + ?Sized), tier: TierIdx, size: u64) {
+        let key = logical.to_clean().into_owned();
+        let mut s = self.shard(&key).write().unwrap();
+        let meta = FileMeta {
+            size,
+            dirty: false,
+            flushed: true,
+            version: fresh_stamp(&self.vgen),
+            ..FileMeta::new(tier)
+        };
+        s.files.insert(key, meta);
+    }
+
+    /// Grow the file size to `new_size` and mark dirty (a write happened,
+    /// so the version is freshly stamped — under the shard lock).
+    pub fn record_write(&self, logical: &(impl PathArg + ?Sized), new_size: u64) -> bool {
+        let key = logical.to_clean();
+        self.shard(&key).write().unwrap().update_stamped(&key, &self.vgen, |m| {
             m.size = new_size;
             m.dirty = true;
             // a write invalidates stale replicas: only master remains
@@ -155,7 +436,7 @@ impl Namespace {
     }
 
     /// Record a replica on `tier` (flush/prefetch copied the file).
-    pub fn add_replica(&self, logical: &str, tier: TierIdx) -> bool {
+    pub fn add_replica(&self, logical: &(impl PathArg + ?Sized), tier: TierIdx) -> bool {
         self.update(logical, |m| {
             if !m.replicas.contains(&tier) {
                 m.replicas.push(tier);
@@ -163,35 +444,119 @@ impl Namespace {
         })
     }
 
+    /// Atomically detach every replica except `keep` from a file that is
+    /// still **clean and closed**, promoting `keep` to master. Returns
+    /// the file size and the detached tiers for physical cleanup, or
+    /// `None` if the file is unknown, dirty, open, lacks a `keep`
+    /// replica, or has nothing to detach. The dirty/open re-check under
+    /// the shard lock is what stops the flusher's move/evict cleanup from
+    /// deleting a replica that a concurrent write just made the only
+    /// up-to-date copy.
+    pub fn detach_cache_replicas(
+        &self,
+        logical: &(impl PathArg + ?Sized),
+        keep: TierIdx,
+    ) -> Option<(u64, Vec<TierIdx>)> {
+        let key = logical.to_clean();
+        let mut s = self.shard(&key).write().unwrap();
+        let meta = s.files.get_mut(&*key)?;
+        if meta.dirty || meta.open_count > 0 || !meta.replicas.contains(&keep) {
+            return None;
+        }
+        let dropped: Vec<TierIdx> =
+            meta.replicas.iter().copied().filter(|&t| t != keep).collect();
+        if dropped.is_empty() {
+            return None;
+        }
+        meta.replicas.retain(|&t| t == keep);
+        meta.master = keep;
+        Some((meta.size, dropped))
+    }
+
     /// Drop the replica on `tier`; if it was the master, the new master is
     /// the fastest remaining replica. Returns the remaining replica count,
     /// or None if the path is unknown.
-    pub fn drop_replica(&self, logical: &str, tier: TierIdx) -> Option<usize> {
-        let mut files = self.files.write().unwrap();
-        let key = clean_path(logical);
-        let meta = files.get_mut(&key)?;
-        meta.replicas.retain(|&t| t != tier);
-        if meta.replicas.is_empty() {
-            files.remove(&key);
-            return Some(0);
+    ///
+    /// Crate-internal and **unguarded**: it will drop the master replica
+    /// of a dirty or open file. Cleanup paths that race application I/O
+    /// (the flusher's move/evict) must use
+    /// [`Namespace::detach_cache_replicas`], which re-checks
+    /// clean-and-closed under the shard lock.
+    pub(crate) fn drop_replica(
+        &self,
+        logical: &(impl PathArg + ?Sized),
+        tier: TierIdx,
+    ) -> Option<usize> {
+        let key = logical.to_clean();
+        let mut s = self.shard(&key).write().unwrap();
+        let remaining = {
+            let meta = s.files.get_mut(&*key)?;
+            meta.replicas.retain(|&t| t != tier);
+            if meta.replicas.is_empty() {
+                0
+            } else {
+                if meta.master == tier {
+                    meta.master = *meta.replicas.iter().min().unwrap();
+                }
+                meta.replicas.len()
+            }
+        };
+        if remaining == 0 {
+            s.files.remove(&*key);
+            s.dirty.remove(&*key);
         }
-        if meta.master == tier {
-            meta.master = *meta.replicas.iter().min().unwrap();
-        }
-        Some(meta.replicas.len())
+        Some(remaining)
     }
 
     /// Remove the file entirely (unlink). Returns its last meta.
-    pub fn remove(&self, logical: &str) -> Option<FileMeta> {
-        self.files.write().unwrap().remove(&clean_path(logical))
+    pub fn remove(&self, logical: &(impl PathArg + ?Sized)) -> Option<FileMeta> {
+        let key = logical.to_clean();
+        let mut s = self.shard(&key).write().unwrap();
+        s.dirty.remove(&*key);
+        s.files.remove(&*key)
     }
 
-    /// Rename; fails (returns false) if the source is unknown.
-    pub fn rename(&self, from: &str, to: &str) -> bool {
-        let mut files = self.files.write().unwrap();
-        match files.remove(&clean_path(from)) {
+    /// Rename; fails (returns false) if the source is unknown. Cross-shard
+    /// renames lock both shards in ascending index order. A dirty file is
+    /// re-enqueued under its new name.
+    pub fn rename(&self, from: &(impl PathArg + ?Sized), to: &(impl PathArg + ?Sized)) -> bool {
+        let from_k = from.to_clean();
+        let to_k = to.to_clean().into_owned();
+        let (si, di) = (shard_of(&from_k), shard_of(&to_k));
+        if si == di {
+            let mut s = self.shards[si].write().unwrap();
+            Self::rename_same_shard(&mut s, &from_k, to_k)
+        } else {
+            let (lo, hi) = (si.min(di), si.max(di));
+            let mut a = self.shards[lo].write().unwrap();
+            let mut b = self.shards[hi].write().unwrap();
+            let (src, dst) = if si == lo {
+                (&mut *a, &mut *b)
+            } else {
+                (&mut *b, &mut *a)
+            };
+            match src.files.remove(&*from_k) {
+                Some(meta) => {
+                    src.dirty.remove(&*from_k);
+                    if meta.dirty {
+                        dst.dirty.insert(to_k.clone());
+                    }
+                    dst.files.insert(to_k, meta);
+                    true
+                }
+                None => false,
+            }
+        }
+    }
+
+    fn rename_same_shard(s: &mut ShardState, from_k: &str, to_k: String) -> bool {
+        match s.files.remove(from_k) {
             Some(meta) => {
-                files.insert(clean_path(to), meta);
+                s.dirty.remove(from_k);
+                if meta.dirty {
+                    s.dirty.insert(to_k.clone());
+                }
+                s.files.insert(to_k, meta);
                 true
             }
             None => false,
@@ -200,69 +565,156 @@ impl Namespace {
 
     /// Direct children (names) of a logical directory — the mountpoint
     /// readdir view, merged across tiers by construction.
-    pub fn list_dir(&self, dir: &str) -> Vec<String> {
+    pub fn list_dir(&self, dir: &(impl PathArg + ?Sized)) -> Vec<String> {
         let prefix = {
-            let c = clean_path(dir);
-            if c == "/" {
-                c
+            let c = dir.to_clean();
+            if &*c == "/" {
+                c.into_owned()
             } else {
                 format!("{c}/")
             }
         };
-        let files = self.files.read().unwrap();
-        let mut names: Vec<String> = files
-            .keys()
-            .filter_map(|k| k.strip_prefix(&prefix))
-            .map(|rest| match rest.find('/') {
-                Some(i) => rest[..i].to_string(),
-                None => rest.to_string(),
-            })
-            .collect();
+        let mut names: Vec<String> = Vec::new();
+        for shard in &self.shards {
+            let s = shard.read().unwrap();
+            names.extend(
+                s.files
+                    .keys()
+                    .filter_map(|k| k.strip_prefix(&prefix))
+                    .map(|rest| match rest.find('/') {
+                        Some(i) => rest[..i].to_string(),
+                        None => rest.to_string(),
+                    }),
+            );
+        }
         names.sort();
         names.dedup();
         names
     }
 
-    /// Snapshot of dirty files (flusher input), in no particular order.
+    /// Drain the incremental dirty queue: every path that became dirty
+    /// since the last drain and is still dirty now. Entries the caller
+    /// cannot act on must be re-queued via [`Namespace::mark_dirty`].
+    pub fn take_dirty(&self) -> Vec<DirtyEntry> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let mut s = shard.write().unwrap();
+            if s.dirty.is_empty() {
+                continue;
+            }
+            let drained = std::mem::take(&mut s.dirty);
+            for key in drained {
+                if let Some(m) = s.files.get(&key) {
+                    if m.dirty {
+                        out.push(DirtyEntry {
+                            size: m.size,
+                            master: m.master,
+                            open: m.open_count > 0,
+                            version: m.version,
+                            logical: CleanPath(key),
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Re-queue a path for the next [`Namespace::take_dirty`] drain (used
+    /// when a flush was skipped or failed). Returns false if the path is
+    /// unknown.
+    pub fn mark_dirty(&self, logical: &(impl PathArg + ?Sized)) -> bool {
+        let key = logical.to_clean();
+        let mut s = self.shard(&key).write().unwrap();
+        if s.files.contains_key(&*key) {
+            s.dirty.insert(key.into_owned());
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Full-scan snapshot of dirty files, in no particular order.
+    /// Diagnostics only — the flusher uses the O(dirty) incremental
+    /// [`Namespace::take_dirty`] instead.
     pub fn dirty_files(&self) -> Vec<DirtyEntry> {
-        let files = self.files.read().unwrap();
-        files
-            .iter()
-            .filter(|(_, m)| m.dirty)
-            .map(|(k, m)| DirtyEntry {
-                logical: k.clone(),
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let s = shard.read().unwrap();
+            out.extend(s.files.iter().filter(|(_, m)| m.dirty).map(|(k, m)| DirtyEntry {
+                logical: CleanPath(k.clone()),
                 size: m.size,
                 master: m.master,
                 open: m.open_count > 0,
-            })
-            .collect()
+                version: m.version,
+            }));
+        }
+        out
+    }
+
+    /// Paths of clean, closed files that `select` accepts, visited under
+    /// brief per-shard read locks. Unlike [`Namespace::evictable_files`],
+    /// nothing is cloned for rejected entries — the flusher's per-pass
+    /// eviction sweep over a large mounted dataset filters by disposition
+    /// before paying any allocation.
+    pub fn evictable_paths(
+        &self,
+        mut select: impl FnMut(&str, &FileMeta) -> bool,
+    ) -> Vec<String> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let s = shard.read().unwrap();
+            out.extend(
+                s.files
+                    .iter()
+                    .filter(|(k, m)| {
+                        !m.dirty && m.open_count == 0 && select(k.as_str(), m)
+                    })
+                    .map(|(k, _)| k.clone()),
+            );
+        }
+        out
     }
 
     /// Snapshot of clean, closed files (eviction candidates).
     pub fn evictable_files(&self) -> Vec<(String, FileMeta)> {
-        let files = self.files.read().unwrap();
-        files
-            .iter()
-            .filter(|(_, m)| !m.dirty && m.open_count == 0)
-            .map(|(k, m)| (k.clone(), m.clone()))
-            .collect()
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let s = shard.read().unwrap();
+            out.extend(
+                s.files
+                    .iter()
+                    .filter(|(_, m)| !m.dirty && m.open_count == 0)
+                    .map(|(k, m)| (k.clone(), m.clone())),
+            );
+        }
+        out
     }
 
     /// All logical paths (diagnostics / mountpoint walk).
     pub fn all_paths(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.files.read().unwrap().keys().cloned().collect();
+        let mut v: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.read().unwrap().files.keys().cloned().collect::<Vec<_>>())
+            .collect();
         v.sort();
         v
     }
 
     /// Count of files whose master or any replica is on `tier`.
     pub fn files_on_tier(&self, tier: TierIdx) -> usize {
-        self.files
-            .read()
-            .unwrap()
-            .values()
-            .filter(|m| m.has_replica(tier))
-            .count()
+        self.shards
+            .iter()
+            .map(|s| {
+                s.read()
+                    .unwrap()
+                    .files
+                    .values()
+                    .filter(|m| m.has_replica(tier))
+                    .count()
+            })
+            .sum()
     }
 }
 
@@ -277,6 +729,26 @@ mod tests {
         assert_eq!(clean_path("/a/./b/../c"), "/a/c");
         assert_eq!(clean_path("/"), "/");
         assert_eq!(clean_path("../.."), "/");
+    }
+
+    #[test]
+    fn is_clean_matches_clean_path_fixpoints() {
+        for raw in ["/a/b/c", "a//b/", "/a/./b/../c", "/", "../..", "/x/", "//", "/."] {
+            let cleaned = clean_path(raw);
+            assert!(is_clean(&cleaned), "{cleaned:?} should be clean");
+            assert_eq!(is_clean(raw), clean_path(raw) == raw, "{raw:?}");
+        }
+    }
+
+    #[test]
+    fn clean_path_arg_borrows_when_already_clean() {
+        assert!(matches!("/a/b".to_clean(), Cow::Borrowed(_)));
+        assert!(matches!("a//b".to_clean(), Cow::Owned(_)));
+        let p = CleanPath::new("/x/../y");
+        assert_eq!(p.as_str(), "/y");
+        assert!(matches!(p.to_clean(), Cow::Borrowed(_)));
+        // idempotent
+        assert_eq!(CleanPath::new(p.as_str()), p);
     }
 
     #[test]
@@ -296,6 +768,14 @@ mod tests {
         assert_eq!(meta.replicas, vec![0]);
         assert!(ns.remove("/d/f.nii").is_some());
         assert!(!ns.exists("/d/f.nii"));
+    }
+
+    #[test]
+    fn with_meta_projects_without_clone() {
+        let ns = Namespace::new();
+        ns.create("/f", 2);
+        assert_eq!(ns.with_meta("/f", |m| m.master), Some(2));
+        assert_eq!(ns.with_meta("/nope", |m| m.master), None);
     }
 
     #[test]
@@ -359,11 +839,133 @@ mod tests {
             m.dirty = false;
             m.open_count = 1;
         });
-        let dirty: Vec<String> = ns.dirty_files().into_iter().map(|d| d.logical).collect();
+        let dirty: Vec<String> =
+            ns.dirty_files().into_iter().map(|d| d.logical.into_string()).collect();
         assert_eq!(dirty, vec!["/dirty"]);
         let evictable: Vec<String> =
             ns.evictable_files().into_iter().map(|(k, _)| k).collect();
         assert_eq!(evictable, vec!["/clean"]);
+    }
+
+    #[test]
+    fn version_bumps_on_writes_and_dirty_transitions() {
+        let ns = Namespace::new();
+        ns.create("/f", 0);
+        let v0 = ns.with_meta("/f", |m| m.version).unwrap();
+        ns.record_write("/f", 10);
+        let v1 = ns.with_meta("/f", |m| m.version).unwrap();
+        assert!(v1 > v0, "record_write must move the version");
+        ns.update("/f", |m| m.dirty = false);
+        assert_eq!(ns.with_meta("/f", |m| m.version).unwrap(), v1);
+        ns.update("/f", |m| m.dirty = true); // clean→dirty transition
+        let v2 = ns.with_meta("/f", |m| m.version).unwrap();
+        assert!(v2 > v1);
+        // The drained entry snapshots the version: a later write makes
+        // the snapshot stale (what the flusher's clean-marking guards on).
+        let entry = ns.take_dirty().pop().unwrap();
+        assert_eq!(entry.version, v2);
+        ns.record_write("/f", 20);
+        assert!(ns.with_meta("/f", |m| m.version).unwrap() > entry.version);
+    }
+
+    #[test]
+    fn recreate_never_rewinds_version() {
+        // ABA guard: truncating or unlink+recreating while a flusher
+        // holds an old DirtyEntry snapshot must never reproduce the
+        // snapshot's version (stamps are globally unique).
+        let ns = Namespace::new();
+        ns.create("/f", 0);
+        ns.record_write("/f", 10);
+        let entry = ns.take_dirty().pop().unwrap();
+        ns.create("/f", 0); // truncate over existing
+        ns.record_write("/f", 5);
+        let v = ns.with_meta("/f", |m| m.version).unwrap();
+        assert_ne!(v, entry.version, "truncate replayed an old version");
+        assert!(v > entry.version);
+
+        let entry = ns.take_dirty().pop().unwrap();
+        ns.remove("/f"); // unlink …
+        ns.create("/f", 0); // … then recreate with the same write count
+        ns.record_write("/f", 7);
+        let v = ns.with_meta("/f", |m| m.version).unwrap();
+        assert_ne!(v, entry.version, "unlink+recreate replayed an old version");
+        assert!(v > entry.version);
+    }
+
+    #[test]
+    fn register_clean_skips_the_dirty_queue() {
+        let ns = Namespace::new();
+        ns.register_clean("/input/scan.nii", 1, 4096);
+        let m = ns.lookup("/input/scan.nii").unwrap();
+        assert!(!m.dirty);
+        assert!(m.flushed);
+        assert_eq!(m.size, 4096);
+        assert_eq!(m.master, 1);
+        assert_eq!(m.replicas, vec![1]);
+        assert!(ns.take_dirty().is_empty(), "mount-time registration must not enqueue");
+    }
+
+    #[test]
+    fn take_dirty_drains_and_dedups() {
+        let ns = Namespace::new();
+        ns.create("/f", 0);
+        for size in 1..100 {
+            ns.record_write("/f", size); // repeated writes: one queue entry
+        }
+        let drained = ns.take_dirty();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].logical.as_str(), "/f");
+        assert_eq!(drained[0].size, 99);
+        // drained means gone until something re-queues it
+        assert!(ns.take_dirty().is_empty());
+        assert!(ns.mark_dirty("/f"));
+        assert_eq!(ns.take_dirty().len(), 1);
+        assert!(!ns.mark_dirty("/unknown"));
+    }
+
+    #[test]
+    fn take_dirty_skips_cleaned_and_removed_entries() {
+        let ns = Namespace::new();
+        ns.create("/cleaned", 0);
+        ns.create("/removed", 0);
+        ns.update("/cleaned", |m| m.dirty = false);
+        ns.remove("/removed");
+        assert!(ns.take_dirty().is_empty());
+        // transition back to dirty re-enqueues exactly once
+        ns.update("/cleaned", |m| m.dirty = true);
+        assert_eq!(ns.take_dirty().len(), 1);
+    }
+
+    #[test]
+    fn rename_requeues_dirty_file_under_new_name() {
+        let ns = Namespace::new();
+        ns.create("/a.tmp", 0);
+        // simulate a flusher drain that dropped the (unlisted) entry
+        assert_eq!(ns.take_dirty().len(), 1);
+        assert!(ns.rename("/a.tmp", "/b.out"));
+        let drained = ns.take_dirty();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].logical.as_str(), "/b.out");
+    }
+
+    #[test]
+    fn sharded_ops_agree_with_global_views() {
+        let ns = Namespace::new();
+        let paths: Vec<String> = (0..64).map(|i| format!("/dir{}/f{}", i % 7, i)).collect();
+        for (i, p) in paths.iter().enumerate() {
+            ns.create(p, i % 3);
+        }
+        assert_eq!(ns.len(), 64);
+        assert_eq!(ns.all_paths().len(), 64);
+        assert_eq!(ns.dirty_files().len(), 64);
+        assert_eq!(ns.take_dirty().len(), 64);
+        let on0 = ns.files_on_tier(0);
+        let on1 = ns.files_on_tier(1);
+        let on2 = ns.files_on_tier(2);
+        assert_eq!(on0 + on1 + on2, 64);
+        for p in &paths {
+            assert!(ns.exists(p));
+        }
     }
 
     #[test]
@@ -392,6 +994,7 @@ mod tests {
             crate::prop_assert_eq!(clean_path(&once), once);
             crate::prop_assert!(!once.contains("//"));
             crate::prop_assert!(!once.contains("/./"));
+            crate::prop_assert!(is_clean(&once), "{once}");
             Ok(())
         });
     }
@@ -405,7 +1008,7 @@ mod tests {
                 .collect();
             for _ in 0..g.usize_in(1, 40) {
                 let p = g.choice(&paths).clone();
-                match g.usize_in(0, 4) {
+                match g.usize_in(0, 5) {
                     0 => {
                         ns.create(&p, g.usize_in(0, 2));
                     }
@@ -417,6 +1020,9 @@ mod tests {
                     }
                     3 => {
                         ns.drop_replica(&p, g.usize_in(0, 2));
+                    }
+                    4 => {
+                        ns.rename(&p, g.choice(&paths));
                     }
                     _ => {
                         ns.remove(&p);
@@ -432,6 +1038,12 @@ mod tests {
                     m.replicas
                 );
                 crate::prop_assert!(!m.replicas.is_empty());
+            }
+            // queue invariant: every queued entry that survives take_dirty
+            // refers to a live, dirty file
+            for e in ns.take_dirty() {
+                let m = ns.lookup(&e.logical).unwrap();
+                crate::prop_assert!(m.dirty, "{} drained but clean", e.logical);
             }
             Ok(())
         });

@@ -134,7 +134,10 @@ pub fn find_images(data_root: &Path) -> Vec<String> {
 
 fn read_whole(sea: &SeaIo, logical: &str) -> Result<Vec<u8>> {
     let fd = sea.open(logical, OpenMode::Read)?;
-    let mut data = Vec::new();
+    // Size is known to the namespace: preallocate instead of growing the
+    // buffer through repeated doubling (volumes are tens of MiB).
+    let size = sea.core().ns.with_meta(logical, |m| m.size).unwrap_or(0);
+    let mut data = Vec::with_capacity(size as usize);
     let mut buf = vec![0u8; 1 << 20];
     loop {
         let n = sea.read(fd, &mut buf)?;

@@ -196,9 +196,18 @@ impl TierSet {
     /// First tier (fastest-first) that can take `bytes` more; falls back to
     /// the persistent tier, which always accepts (matching the paper: when
     /// caches fill, writes go to Lustre).
+    ///
+    /// A zero-byte request (new-file placement before any data is written)
+    /// skips caches with no free bytes: `try_reserve(0)` would "succeed"
+    /// even on a completely full cache, and the first real write would
+    /// then be forced into a guaranteed whole-file spill.
     pub fn place_write(&self, bytes: u64) -> TierIdx {
         for (idx, tier) in self.tiers[..self.persist].iter().enumerate() {
-            if tier.try_reserve(bytes) {
+            if bytes == 0 {
+                if tier.free() > 0 {
+                    return idx;
+                }
+            } else if tier.try_reserve(bytes) {
                 return idx;
             }
         }
@@ -273,6 +282,22 @@ mod tests {
         assert_eq!(ts.place_write(MIB), 1);
         // Both caches full: falls through to persist
         assert_eq!(ts.place_write(MIB), ts.persist_idx());
+    }
+
+    #[test]
+    fn zero_byte_place_skips_full_caches() {
+        let (_g1, fast) = tmp("zb-fast");
+        let (_g2, lus) = tmp("zb-lus");
+        let ts = TierSet::new(&[fast], &lus, |t| t).unwrap();
+        assert_eq!(ts.place_write(0), 0, "empty cache takes new files");
+        assert!(ts.get(0).try_reserve(MIB)); // fill the cache completely
+        assert_eq!(
+            ts.place_write(0),
+            ts.persist_idx(),
+            "full cache must not accept a doomed 0-byte reservation"
+        );
+        ts.get(0).release(1);
+        assert_eq!(ts.place_write(0), 0, "any free byte re-enables the cache");
     }
 
     #[test]
