@@ -1,0 +1,145 @@
+//! Prefetcher / transfer-engine benchmarks (the arXiv:2108.10496
+//! overlap argument, measured): emits `BENCH_prefetch.json` (cwd) so the
+//! perf trajectory across PRs is machine-readable.
+//!
+//! Two headline numbers:
+//!
+//! * **cold-read makespan** — a foreground worker streams N
+//!   persist-resident volumes off a bandwidth-throttled "Lustre" with a
+//!   fixed compute step per volume. With BIDS readahead the background
+//!   prefetcher stages upcoming volumes into tmpfs *during* the compute
+//!   steps, so later reads hit the cache; without it every read pays the
+//!   throttle inline.
+//! * **flusher drain** — a dirty queue of N files drained through the
+//!   transfer engine with 8 workers vs 1 (serial baseline), against a
+//!   persist tier with per-op metadata latency: pipelining hides the
+//!   per-file metadata stalls that used to serialise the whole queue.
+
+use std::time::{Duration, Instant};
+
+use sea::config::SeaConfig;
+use sea::flusher::{flush_pass, SeaSession};
+use sea::intercept::{OpenMode, SeaIo};
+use sea::pathrules::SeaLists;
+use sea::testing::tempdir::tempdir;
+use sea::util::MIB;
+
+const KIB: usize = 1024;
+
+/// Foreground cold-read makespan over `FILES` volumes with a per-volume
+/// compute step, persist throttled to `BW` bytes/s.
+fn cold_read_makespan(readahead: bool) -> f64 {
+    const FILES: usize = 8;
+    const SIZE: usize = 128 * KIB;
+    const BW: f64 = 1024.0 * 1024.0; // 1 MiB/s -> ~125 ms per volume
+    const COMPUTE: Duration = Duration::from_millis(150);
+
+    let dir = tempdir("bench-prefetch");
+    let lustre = dir.subdir("lustre");
+    let vols = lustre.join("vol");
+    std::fs::create_dir_all(&vols).unwrap();
+    for i in 0..FILES {
+        std::fs::write(vols.join(format!("f{i:03}.sni")), vec![i as u8; SIZE]).unwrap();
+    }
+    let mut b = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 64 * MIB)
+        .persist("lustre", &lustre, 100_000 * MIB)
+        .flusher(false, 100)
+        .promote_on_read(false); // isolate the readahead effect
+    b = if readahead {
+        b.readahead(4)
+    } else {
+        b.readahead(0).prefetcher(false)
+    };
+    let sess = SeaSession::start(b.build(), SeaLists::default(), |t| {
+        t.with_bandwidth_limit(BW)
+    })
+    .unwrap();
+    let sea = sess.io();
+
+    let t0 = Instant::now();
+    let mut buf = vec![0u8; 64 * KIB];
+    for i in 0..FILES {
+        let p = format!("/vol/f{i:03}.sni");
+        let fd = sea.open(&p, OpenMode::Read).unwrap();
+        loop {
+            let n = sea.read(fd, &mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+        }
+        sea.close(fd).unwrap();
+        // the per-volume "compute" the staging overlaps with
+        std::thread::sleep(COMPUTE);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    sess.unmount();
+    dt
+}
+
+/// Drain `FILES` dirty files through the engine with `workers` copies in
+/// flight, against a persist tier with per-op metadata latency.
+fn flusher_drain_secs(workers: usize) -> f64 {
+    const FILES: usize = 12;
+    let dir = tempdir("bench-drain");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 256 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .flusher(false, 100)
+        .prefetcher(false)
+        .transfer_workers(workers)
+        .build();
+    let sea = SeaIo::mount_with(cfg, SeaLists::flush_all(), |t| {
+        t.with_meta_latency(Duration::from_millis(25))
+    })
+    .unwrap();
+    for i in 0..FILES {
+        let fd = sea.create(&format!("/out/r{i:02}.nii")).unwrap();
+        sea.write(fd, &vec![i as u8; 256 * KIB]).unwrap();
+        sea.close(fd).unwrap();
+    }
+    let t0 = Instant::now();
+    let rep = flush_pass(sea.core(), false);
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(rep.flushed, FILES, "{rep:?}");
+    assert_eq!(rep.errors, 0, "{rep:?}");
+    dt
+}
+
+fn main() {
+    println!("\n# prefetch / transfer-engine benchmarks\n");
+
+    let drain_serial = flusher_drain_secs(1);
+    println!("flusher drain, 12 files, 1 worker (serial)   {drain_serial:7.3} s");
+    let drain_pipelined = flusher_drain_secs(8);
+    let drain_speedup = drain_serial / drain_pipelined.max(1e-9);
+    println!(
+        "flusher drain, 12 files, 8 workers (pipelined){drain_pipelined:7.3} s ({drain_speedup:.2}x)"
+    );
+
+    let off = cold_read_makespan(false);
+    println!("cold read, 8 throttled volumes, no readahead {off:7.3} s");
+    let on = cold_read_makespan(true);
+    let read_speedup = off / on.max(1e-9);
+    println!(
+        "cold read, 8 throttled volumes, readahead=4   {on:7.3} s ({read_speedup:.2}x)"
+    );
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"drain_serial_secs\": {:.4},\n",
+            "  \"drain_pipelined_secs\": {:.4},\n",
+            "  \"drain_speedup\": {:.2},\n",
+            "  \"readahead_off_secs\": {:.4},\n",
+            "  \"readahead_on_secs\": {:.4},\n",
+            "  \"readahead_speedup\": {:.2}\n",
+            "}}\n"
+        ),
+        drain_serial, drain_pipelined, drain_speedup, off, on, read_speedup
+    );
+    match std::fs::write("BENCH_prefetch.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_prefetch.json"),
+        Err(e) => eprintln!("could not write BENCH_prefetch.json: {e}"),
+    }
+}

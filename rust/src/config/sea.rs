@@ -20,7 +20,29 @@
 //! [flusher]
 //! enabled     = true
 //! interval_ms = 200
+//! copy_buf    = 1M                       # buffer for every engine transfer
+//!
+//! [transfer]
+//! workers = 4                            # parallel tier-to-tier copies
+//!
+//! [prefetch]
+//! enabled         = true                 # background prefetcher thread
+//! promote_on_read = true                 # persist-resident reads migrate up
+//! readahead       = 2                    # BIDS sibling volumes staged ahead
 //! ```
+//!
+//! ## `.sea_prefetchlist` semantics
+//!
+//! The prefetch list is one regex per line over *logical* paths (blank
+//! lines and `#` comments ignored), exactly like the flush and evict
+//! lists. Every file already resident on the persistent tier at mount
+//! whose logical path matches is **staged**: copied (not moved — the
+//! persistent copy remains) into the fastest cache with room, pipelined
+//! across `transfer.workers` parallel copies. The list describes the
+//! *working set to pull forward* (the paper's SPM memmap inputs); the
+//! `[prefetch]` section above governs the *dynamic* feeds that continue
+//! after mount — promote-on-read and BIDS-aware readahead — which need
+//! no list at all.
 
 use std::path::{Path, PathBuf};
 
@@ -65,8 +87,21 @@ pub struct SeaConfig {
     pub prefetchlist: PathBuf,
     pub flusher_enabled: bool,
     pub flusher_interval_ms: u64,
-    /// Copy-loop buffer size for flusher/prefetcher transfers.
+    /// Copy-loop buffer size for **every** engine transfer (flush,
+    /// prefetch, spill) — the single configured buffer; no call site
+    /// carries its own.
     pub copy_buf_bytes: usize,
+    /// Transfer-engine worker pool size: how many tier-to-tier copies
+    /// may be in flight at once (`[transfer] workers`).
+    pub transfer_workers: usize,
+    /// Spawn the background prefetcher thread (`[prefetch] enabled`).
+    pub prefetcher_enabled: bool,
+    /// Reading a persist-resident file enqueues it for promotion into
+    /// the fastest cache with room (`[prefetch] promote_on_read`).
+    pub promote_on_read: bool,
+    /// How many same-scope BIDS sibling volumes to stage ahead when one
+    /// is opened; 0 disables readahead (`[prefetch] readahead`).
+    pub readahead_depth: usize,
 }
 
 fn parse_cache_spec(spec: &str) -> Result<CacheDef, SeaConfigError> {
@@ -124,6 +159,18 @@ impl SeaConfig {
                 })
                 .transpose()?
                 .unwrap_or(1 << 20),
+            transfer_workers: ini
+                .get_parsed("transfer", "workers")
+                .transpose()
+                .map_err(|e| SeaConfigError::BadValue(format!("transfer.workers: {e}")))?
+                .unwrap_or(4),
+            prefetcher_enabled: ini.get_bool("prefetch", "enabled").unwrap_or(true),
+            promote_on_read: ini.get_bool("prefetch", "promote_on_read").unwrap_or(true),
+            readahead_depth: ini
+                .get_parsed("prefetch", "readahead")
+                .transpose()
+                .map_err(|e| SeaConfigError::BadValue(format!("prefetch.readahead: {e}")))?
+                .unwrap_or(2),
         })
     }
 
@@ -140,6 +187,10 @@ impl SeaConfig {
             persist: None,
             flusher_enabled: true,
             flusher_interval_ms: 200,
+            transfer_workers: 4,
+            prefetcher_enabled: true,
+            promote_on_read: true,
+            readahead_depth: 2,
         }
     }
 
@@ -157,6 +208,10 @@ pub struct SeaConfigBuilder {
     persist: Option<CacheDef>,
     flusher_enabled: bool,
     flusher_interval_ms: u64,
+    transfer_workers: usize,
+    prefetcher_enabled: bool,
+    promote_on_read: bool,
+    readahead_depth: usize,
 }
 
 impl SeaConfigBuilder {
@@ -184,6 +239,30 @@ impl SeaConfigBuilder {
         self
     }
 
+    /// Transfer-engine worker pool size (parallel tier-to-tier copies).
+    pub fn transfer_workers(mut self, workers: usize) -> Self {
+        self.transfer_workers = workers;
+        self
+    }
+
+    /// Enable/disable the background prefetcher thread.
+    pub fn prefetcher(mut self, enabled: bool) -> Self {
+        self.prefetcher_enabled = enabled;
+        self
+    }
+
+    /// Enable/disable promote-on-read of persist-resident files.
+    pub fn promote_on_read(mut self, enabled: bool) -> Self {
+        self.promote_on_read = enabled;
+        self
+    }
+
+    /// BIDS sibling readahead depth (0 disables readahead).
+    pub fn readahead(mut self, depth: usize) -> Self {
+        self.readahead_depth = depth;
+        self
+    }
+
     pub fn build(self) -> SeaConfig {
         SeaConfig {
             mountpoint: self.mountpoint,
@@ -195,6 +274,10 @@ impl SeaConfigBuilder {
             flusher_enabled: self.flusher_enabled,
             flusher_interval_ms: self.flusher_interval_ms,
             copy_buf_bytes: 1 << 20,
+            transfer_workers: self.transfer_workers,
+            prefetcher_enabled: self.prefetcher_enabled,
+            promote_on_read: self.promote_on_read,
+            readahead_depth: self.readahead_depth,
         }
     }
 }
@@ -256,6 +339,35 @@ interval_ms = 50
             SeaConfig::parse("mount=/m\n[caches]\ncache = nope\npersist=l:/x:1G\n")
                 .unwrap_err();
         assert!(matches!(err, SeaConfigError::BadCacheSpec(_)));
+    }
+
+    #[test]
+    fn transfer_and_prefetch_sections_parse_with_defaults() {
+        let cfg = SeaConfig::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.transfer_workers, 4);
+        assert!(cfg.prefetcher_enabled);
+        assert!(cfg.promote_on_read);
+        assert_eq!(cfg.readahead_depth, 2);
+
+        let cfg = SeaConfig::parse(
+            "mount=/m\n[caches]\npersist = l:/x:1G\n\
+             [transfer]\nworkers = 8\n\
+             [prefetch]\nenabled = false\npromote_on_read = false\nreadahead = 5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.transfer_workers, 8);
+        assert!(!cfg.prefetcher_enabled);
+        assert!(!cfg.promote_on_read);
+        assert_eq!(cfg.readahead_depth, 5);
+    }
+
+    #[test]
+    fn bad_transfer_workers_rejected() {
+        let err = SeaConfig::parse(
+            "mount=/m\n[caches]\npersist = l:/x:1G\n[transfer]\nworkers = lots\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, SeaConfigError::BadValue(_)));
     }
 
     #[test]

@@ -15,11 +15,26 @@
 //!
 //! Queue discipline (see `crate::namespace` for the guarantees): a
 //! drained entry is consumed, so [`flush_pass`] re-queues anything it
-//! could not act on — files still open (unless `force`) and failed copies
-//! (counted in [`FlushReport::errors`]). Dirty files matching no flush
-//! list are dropped from the queue on first sight: they stay
-//! cache-resident by policy, and a rename to a flush-listed path
-//! re-enqueues them.
+//! could not act on — files still open (unless `force`), failed copies
+//! (counted in [`FlushReport::errors`]), and copies cancelled or fenced
+//! out by a racing metadata op. Dirty files matching no flush list are
+//! dropped from the queue on first sight: they stay cache-resident by
+//! policy, and a rename to a flush-listed path re-enqueues them.
+//!
+//! # Pipelined, fenced copies
+//!
+//! A pass drains the dirty queue in three phases: a serial sweep applies
+//! policy (drop/skip/re-queue) and collects copy jobs; the jobs then fan
+//! out over the transfer engine's bounded worker pool
+//! ([`crate::transfer::TransferEngine::run_batch`]) so one slow
+//! persist-tier file no longer delays the rest of the queue; a serial
+//! tail does the accounting. Each copy's namespace bookkeeping — record
+//! the persist replica, mark clean only if the version is unchanged —
+//! runs in the engine's commit closure *under the per-file fence*, so a
+//! rename/unlink/truncate racing the copy either waits for the whole
+//! commit or cancels the copy before any state is published. Eviction
+//! candidates come from the namespace's incremental evictable queue
+//! (clean-and-closed transitions), not a per-pass scan of every file.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -28,7 +43,9 @@ use std::time::Duration;
 use crate::config::SeaConfig;
 use crate::intercept::{CallStats, SeaCore, SeaError, SeaIo};
 use crate::pathrules::{Disposition, SeaLists};
+use crate::prefetch::PrefetcherHandle;
 use crate::tiers::Tier;
+use crate::transfer::{BatchJob, Outcome};
 
 /// What one flusher pass (or a drain) accomplished.
 #[derive(Debug, Default, Clone, PartialEq, Eq)]
@@ -53,6 +70,17 @@ impl FlushReport {
     }
 }
 
+/// What the under-fence commit of one flush copy observed.
+enum CopyVerdict {
+    /// Replica recorded, version unchanged: the file is clean.
+    Clean,
+    /// Replica recorded but a write landed mid-copy: still dirty.
+    Stale,
+    /// The namespace entry vanished mid-copy: the persist copy is
+    /// untracked and must be deleted.
+    Gone,
+}
+
 /// One synchronous flusher pass over the namespace.
 ///
 /// `force` flushes even files that are still open (used by drain, when the
@@ -61,6 +89,10 @@ pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
     let mut report = FlushReport::default();
     let persist = core.tiers.persist_idx();
 
+    // Phase 1 (serial): queue discipline — policy drops, open skips,
+    // already-persisted cleans — and collection of the copy jobs.
+    let mut entries: Vec<(crate::namespace::DirtyEntry, Disposition)> = Vec::new();
+    let mut jobs: Vec<BatchJob> = Vec::new();
     for entry in core.ns.take_dirty() {
         // Policy first: files matching no flush list are dropped from the
         // queue permanently (even while open), so a long-lived open
@@ -93,75 +125,131 @@ pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
             }
             continue;
         }
-        match core.copy_between(&entry.logical, entry.master, persist) {
-            Ok(bytes) => {
-                // Record the persist replica either way (so a later unlink
-                // deletes the physical copy), but only mark clean if no
-                // write landed during the copy: the version check under
-                // the shard lock is what keeps a mid-copy write from
-                // being silently lost (the queue entry was consumed, and
-                // record_write on an already-dirty file does not
-                // re-enqueue).
-                let mut stale = false;
-                let updated = core.ns.update(&entry.logical, |m| {
-                    m.flushed = true;
-                    if !m.replicas.contains(&persist) {
-                        m.replicas.push(persist);
-                    }
-                    if m.version == entry.version {
-                        m.dirty = false;
-                    } else {
-                        stale = true;
-                    }
-                });
-                if !updated {
-                    // Unlinked while we copied: the just-written persist
-                    // copy is untracked — delete it (or the next mount's
-                    // register_existing would resurrect a deleted file)
-                    // and count nothing: no bytes were durably flushed.
+        jobs.push(BatchJob {
+            logical: entry.logical.clone(),
+            from: entry.master,
+            to: persist,
+            token: entries.len(),
+        });
+        entries.push((entry, disposition));
+    }
+
+    // Phase 2: pipelined fenced copies over the engine's worker pool.
+    // The commit closure runs under the per-file fence, so recording the
+    // persist replica and the version check cannot interleave with a
+    // rename/unlink/truncate of the same path: the version check under
+    // the shard lock is what keeps a mid-copy write from being silently
+    // lost (the queue entry was consumed, and record_write on an
+    // already-dirty file does not re-enqueue).
+    let results = core.transfers.run_batch(core, jobs, |job: &BatchJob, _bytes: u64| {
+        let entry = &entries[job.token].0;
+        let mut stale = false;
+        let updated = core.ns.update(&entry.logical, |m| {
+            m.flushed = true;
+            if !m.replicas.contains(&persist) {
+                m.replicas.push(persist);
+            }
+            if m.version == entry.version {
+                m.dirty = false;
+            } else {
+                stale = true;
+            }
+        });
+        if !updated {
+            CopyVerdict::Gone
+        } else if stale {
+            CopyVerdict::Stale
+        } else {
+            CopyVerdict::Clean
+        }
+    });
+
+    // Phase 3 (serial): accounting and re-queues.
+    for (job, res) in results {
+        let (entry, disposition) = &entries[job.token];
+        match res {
+            Ok(Outcome::Done { bytes, commit: verdict }) => match verdict {
+                CopyVerdict::Gone => {
+                    // Vanished mid-copy (e.g. dropped to zero replicas):
+                    // the just-written persist copy is untracked — delete
+                    // it (or the next mount's register_existing would
+                    // resurrect a deleted file) and count nothing: no
+                    // bytes were durably flushed.
                     core.delete_replica(&entry.logical, persist, entry.size);
-                    continue;
                 }
-                report.bytes_flushed += bytes;
-                core.counters.bump_persist();
-                if stale {
+                CopyVerdict::Stale => {
                     // Outdated the moment it landed: leave the file dirty
                     // and re-queue for a fresh copy (which overwrites the
-                    // stale persist bytes in place).
+                    // stale persist bytes atomically).
+                    report.bytes_flushed += bytes;
+                    core.counters.bump_persist();
                     core.ns.mark_dirty(&entry.logical);
-                } else if disposition == Disposition::Move {
-                    if drop_cache_replicas(core, &entry.logical) {
-                        report.moved += 1;
+                }
+                CopyVerdict::Clean => {
+                    report.bytes_flushed += bytes;
+                    core.counters.bump_persist();
+                    if *disposition == Disposition::Move {
+                        if drop_cache_replicas(core, &entry.logical) {
+                            report.moved += 1;
+                        } else {
+                            // Re-dirtied or reopened before the cache copy
+                            // could be detached: the flush itself
+                            // succeeded; the move completes on a later
+                            // pass.
+                            report.flushed += 1;
+                        }
                     } else {
-                        // Re-dirtied or reopened before the cache copy
-                        // could be detached: the flush itself succeeded;
-                        // the move completes on a later pass.
                         report.flushed += 1;
                     }
-                } else {
-                    report.flushed += 1;
                 }
+            },
+            Ok(Outcome::Cancelled) | Ok(Outcome::Busy) => {
+                // Fenced out by a racing metadata op (or an overlapping
+                // transfer of the same path): whatever survives under
+                // whatever name is still dirty and re-queued — by us if
+                // the path still exists, by the rename's dirty-queue
+                // move if it doesn't.
+                core.ns.mark_dirty(&entry.logical);
             }
             Err(_) => {
-                report.errors += 1;
-                // still dirty on disk: retry on a later pass
-                core.ns.mark_dirty(&entry.logical);
+                // The copy source is the drain-time `entry.master`
+                // snapshot, so a benignly moved file is not a flush
+                // failure: a rename/unlink makes the path vanish (the
+                // renamed file's dirty-queue entry moved with it), and a
+                // spill moves the master tier and deletes the old
+                // physical copy mid-pass. Count (and retry) an error
+                // only when the file still exists where we read it.
+                match core.ns.with_meta(&entry.logical, |m| m.master) {
+                    None => {}
+                    Some(master) if master != entry.master => {
+                        // moved tiers (spill): re-queue so the next pass
+                        // copies from the new master.
+                        core.ns.mark_dirty(&entry.logical);
+                    }
+                    Some(_) => {
+                        report.errors += 1;
+                        // still dirty on disk: retry on a later pass
+                        core.ns.mark_dirty(&entry.logical);
+                    }
+                }
             }
         }
     }
 
     // Eviction of clean, closed, flushed files that are move/evict-listed
-    // (unflushed evict-only scratch is handled at drain). The disposition
-    // filter runs inside the shard scan so unlisted files cost no clone.
-    let candidates = core.ns.evictable_paths(|logical, m| {
-        m.flushed
+    // (unflushed evict-only scratch is handled at drain). Candidates are
+    // fed incrementally by clean-and-closed transitions — no per-pass
+    // walk of every file. A drained candidate that fails the disposition
+    // filter is simply dropped (renames onto evict-listed names
+    // re-enqueue); one that fails `drop_cache_replicas` was re-dirtied
+    // or reopened, and its next close/flush transition re-enqueues it.
+    for logical in core.ns.take_evictable() {
+        let eligible = core.ns.with_meta(&logical, |m| m.flushed).unwrap_or(false)
             && matches!(
-                core.lists.disposition(logical),
+                core.lists.disposition(&logical),
                 Disposition::Evict | Disposition::Move
-            )
-    });
-    for logical in candidates {
-        if drop_cache_replicas(core, &logical) {
+            );
+        if eligible && drop_cache_replicas(core, &logical) {
             report.evicted += 1;
         }
     }
@@ -190,6 +278,28 @@ fn drop_cache_replicas(core: &SeaCore, logical: &str) -> bool {
 /// delete evict-only scratch from the caches (it never reaches Lustre).
 pub fn drain(core: &SeaCore) -> FlushReport {
     let mut report = flush_pass(core, true);
+    // A force pass can still be fenced out of individual files
+    // (Outcome::Busy/Cancelled re-queues them) by a last in-flight
+    // transfer or a racing application thread. Since there is no later
+    // pass after a drain, retry a bounded number of times while
+    // flush-listed dirty files remain and the passes are not erroring —
+    // unmount must not silently strand a dirty file behind a
+    // just-released fence.
+    for _ in 0..4 {
+        if report.errors > 0 {
+            break;
+        }
+        let pending = core.ns.dirty_files().iter().any(|e| {
+            matches!(
+                core.lists.disposition(&e.logical),
+                Disposition::Flush | Disposition::Move
+            )
+        });
+        if !pending {
+            break;
+        }
+        report.merge(&flush_pass(core, true));
+    }
     let persist = core.tiers.persist_idx();
     for logical in core.ns.all_paths() {
         if core.lists.disposition(&logical) == Disposition::Evict {
@@ -259,15 +369,19 @@ impl Drop for FlusherHandle {
     }
 }
 
-/// A mounted Sea session: the interceptor plus its background flusher.
-/// This is the top-level object examples and the real-mode executor use.
+/// A mounted Sea session: the interceptor plus its background flusher
+/// and prefetcher threads. This is the top-level object examples and the
+/// real-mode executor use.
 pub struct SeaSession {
     io: SeaIo,
     flusher: Option<FlusherHandle>,
+    prefetcher: Option<PrefetcherHandle>,
 }
 
 impl SeaSession {
-    /// Mount and (if enabled in `cfg`) start the flusher thread.
+    /// Mount and (as enabled in `cfg`) start the flusher and prefetcher
+    /// threads. The prefetcher only spawns when there is a cache tier to
+    /// stage into.
     pub fn start(
         cfg: SeaConfig,
         lists: SeaLists,
@@ -275,10 +389,17 @@ impl SeaSession {
     ) -> Result<SeaSession, SeaError> {
         let interval = Duration::from_millis(cfg.flusher_interval_ms);
         let flusher_enabled = cfg.flusher_enabled;
+        let prefetcher_enabled = cfg.prefetcher_enabled && !cfg.caches.is_empty();
         let io = SeaIo::mount_with(cfg, lists, shape_persist)?;
         let flusher = flusher_enabled
             .then(|| FlusherHandle::spawn(io.core().clone(), interval));
-        Ok(SeaSession { io, flusher })
+        let prefetcher =
+            prefetcher_enabled.then(|| PrefetcherHandle::spawn(io.core().clone()));
+        Ok(SeaSession {
+            io,
+            flusher,
+            prefetcher,
+        })
     }
 
     pub fn io(&self) -> &SeaIo {
@@ -290,13 +411,27 @@ impl SeaSession {
         flush_pass(self.io.core(), false)
     }
 
-    /// Unmount: drain everything, stop threads, return final accounting.
+    /// Unmount: stop the prefetcher, drain everything, stop the flusher,
+    /// return final accounting.
     pub fn unmount(mut self) -> (CallStats, FlushReport) {
+        if let Some(handle) = self.prefetcher.take() {
+            handle.shutdown();
+        }
         let report = match self.flusher.take() {
             Some(handle) => handle.shutdown(),
             None => drain(self.io.core()),
         };
         (self.io.stats(), report)
+    }
+}
+
+impl Drop for SeaSession {
+    fn drop(&mut self) {
+        // Join the prefetcher before the flusher handle's drop runs its
+        // final drain: a staging copy still holding a file's fence would
+        // make the drain skip (re-queue) that file — and there is no
+        // later pass to pick it up.
+        self.prefetcher.take();
     }
 }
 
@@ -411,6 +546,42 @@ mod tests {
         assert_eq!(rep.moved, 1);
         // quota argument: exactly one file on persist, zero cache bytes
         assert_eq!(sea.core().ns.files_on_tier(sea.core().tiers.persist_idx()), 1);
+        assert_eq!(sea.core().tiers.get(0).used(), 0);
+    }
+
+    #[test]
+    fn pipelined_pass_flushes_whole_queue() {
+        let (_g, sea) = setup(lists(".*", ""));
+        for i in 0..12 {
+            write_file(&sea, &format!("/out/f{i}.out"), &[i as u8; 2048]);
+        }
+        let rep = flush_pass(sea.core(), false);
+        assert_eq!(rep.flushed, 12, "{rep:?}");
+        assert_eq!(rep.errors, 0);
+        assert_eq!(rep.bytes_flushed, 12 * 2048);
+        assert_eq!(sea.core().transfers.stats.completed(), 12);
+        for i in 0..12 {
+            let p = format!("/out/f{i}.out");
+            assert!(sea.core().tiers.persist().physical(&p).exists(), "{p}");
+            assert!(!sea.core().ns.lookup(&p).unwrap().dirty);
+        }
+    }
+
+    #[test]
+    fn rename_onto_evict_listed_name_feeds_eviction_queue() {
+        let (_g, sea) = setup(lists(r".*\.out$", r".*\.gone$"));
+        write_file(&sea, "/r/a.out", b"bytes");
+        let rep = flush_pass(sea.core(), false);
+        assert_eq!(rep.flushed, 1);
+        assert_eq!(rep.evicted, 0, ".out is not evict-listed");
+        sea.rename("/r/a.out", "/r/a.gone").unwrap();
+        // the rename of the clean, flushed file re-enqueued it as an
+        // eviction candidate under the new (evict-listed) name
+        let rep = flush_pass(sea.core(), false);
+        assert_eq!(rep.evicted, 1, "{rep:?}");
+        let persist = sea.core().tiers.persist_idx();
+        let meta = sea.core().ns.lookup("/r/a.gone").unwrap();
+        assert_eq!(meta.replicas, vec![persist]);
         assert_eq!(sea.core().tiers.get(0).used(), 0);
     }
 

@@ -31,11 +31,18 @@
 //!   one namespace shard, briefly;
 //! * call counters and tier capacity accounting are lock-free atomics.
 //!
-//! Lock order (outer → inner): fd-shard lock → per-fd mutex → namespace
-//! shard lock. Tier throttles/capacity are atomics or self-contained and
-//! may be touched under any of these. The flusher threads never take fd
-//! locks, and `SeaIo` never holds a namespace lock across physical I/O,
-//! so the two sides cannot deadlock.
+//! Lock order (outer → inner): fd-shard lock → per-fd mutex → **transfer
+//! fence** ([`crate::transfer::FenceMap`]) → namespace shard lock. Tier
+//! throttles/capacity are atomics or self-contained and may be touched
+//! under any of these. The flusher/prefetcher threads never take fd
+//! locks, `SeaIo` never holds a namespace lock across physical I/O, and
+//! fence holders only ever take namespace locks (the inner direction),
+//! so no side can deadlock another. Metadata ops that would invalidate
+//! an in-flight tier-to-tier copy — `create` (truncate), `unlink`,
+//! `rename` — claim the path's fence first (rename claims both paths in
+//! ascending order), which cancels and drains the copy; see the
+//! [`crate::transfer`] docs for why that closes the seed's stranded-copy
+//! and interleaved-inode windows.
 
 pub mod counters;
 
@@ -50,16 +57,24 @@ use std::sync::{Arc, Mutex, RwLock};
 use crate::config::SeaConfig;
 use crate::namespace::{CleanPath, Namespace};
 use crate::pathrules::SeaLists;
+use crate::prefetch::{PrefetchQueue, PrefetchRequest};
 use crate::tiers::{Tier, TierIdx, TierSet};
+use crate::transfer::{Outcome, TransferEngine};
 
 /// Shared state between application threads (via [`SeaIo`]) and the
-/// background flusher/evictor/prefetcher threads (`crate::flusher`).
+/// background flusher/evictor (`crate::flusher`) and prefetcher
+/// (`crate::prefetch`) threads.
 pub struct SeaCore {
     pub cfg: SeaConfig,
     pub tiers: TierSet,
     pub ns: Namespace,
     pub lists: SeaLists,
     pub counters: CallCounters,
+    /// The parallel fenced transfer engine every tier-to-tier byte move
+    /// goes through (flush, prefetch, spill).
+    pub transfers: TransferEngine,
+    /// Incremental staging-request queue feeding the prefetcher thread.
+    pub prefetch: PrefetchQueue,
     pub shutdown: AtomicBool,
 }
 
@@ -81,40 +96,28 @@ impl SeaCore {
         idx == self.tiers.persist_idx()
     }
 
-    /// Copy a file's bytes between tiers (used by flusher, prefetcher and
-    /// spill). Honest waiting: both tiers' throttles apply. Returns bytes
-    /// copied. The destination is durably synced: a failing `sync_all`
-    /// fails the copy, so the flusher counts it in `FlushReport.errors`
-    /// instead of reporting a silently-lost flush.
+    /// Copy a file's bytes between tiers, blocking until the path's
+    /// transfer fence is free. This is a thin wrapper over
+    /// [`TransferEngine::copy_now`]: fenced, atomic (temp + rename), the
+    /// engine's single configured buffer, and honest waiting on both
+    /// tiers' throttles. The destination is durably synced: a failing
+    /// `sync_all` fails the copy, so the flusher counts it in
+    /// `FlushReport.errors` instead of reporting a silently-lost flush.
+    /// A copy cancelled by a racing metadata op surfaces as an
+    /// `Interrupted` error.
     pub fn copy_between(
         &self,
         logical: &str,
         from: TierIdx,
         to: TierIdx,
     ) -> std::io::Result<u64> {
-        let src_path = self.tier(from).physical(logical);
-        let dst_path = self.tier(to).physical(logical);
-        if let Some(parent) = dst_path.parent() {
-            std::fs::create_dir_all(parent)?;
+        match self.transfers.copy_now(self, logical, from, to, |_| ())? {
+            Outcome::Done { bytes, .. } => Ok(bytes),
+            Outcome::Cancelled | Outcome::Busy => Err(std::io::Error::new(
+                std::io::ErrorKind::Interrupted,
+                "transfer cancelled by a concurrent metadata operation",
+            )),
         }
-        self.tier(from).wait_meta();
-        self.tier(to).wait_meta();
-        let mut src = std::fs::File::open(&src_path)?;
-        let mut dst = std::fs::File::create(&dst_path)?;
-        let mut buf = vec![0u8; self.cfg.copy_buf_bytes.max(4096)];
-        let mut total = 0u64;
-        loop {
-            let n = src.read(&mut buf)?;
-            if n == 0 {
-                break;
-            }
-            self.tier(from).wait_data(n as u64);
-            self.tier(to).wait_data(n as u64);
-            dst.write_all(&buf[..n])?;
-            total += n as u64;
-        }
-        dst.sync_all()?;
-        Ok(total)
     }
 
     /// Delete the physical replica of `logical` on `tier` and release its
@@ -236,9 +239,10 @@ pub struct SeaIo {
 
 impl SeaIo {
     /// Mount Sea: build tiers from `cfg`, load the three lists, register
-    /// pre-existing files found on the persistent tier, then prefetch
-    /// matching inputs to the fastest cache. `shape_persist` lets callers
-    /// shape the persistent tier (throttle/metadata latency) to emulate a
+    /// pre-existing files found on the persistent tier, then stage
+    /// prefetch-listed inputs into the fastest cache — pipelined over the
+    /// transfer engine's worker pool. `shape_persist` lets callers shape
+    /// the persistent tier (throttle/metadata latency) to emulate a
     /// degraded Lustre.
     pub fn mount_with(
         cfg: SeaConfig,
@@ -246,11 +250,14 @@ impl SeaIo {
         shape_persist: impl FnOnce(Tier) -> Tier,
     ) -> Result<SeaIo, SeaError> {
         let tiers = TierSet::new(&cfg.caches, &cfg.persist, shape_persist)?;
+        let transfers = TransferEngine::new(cfg.transfer_workers, cfg.copy_buf_bytes);
         let core = Arc::new(SeaCore {
             tiers,
             ns: Namespace::new(),
             lists,
             counters: CallCounters::default(),
+            transfers,
+            prefetch: PrefetchQueue::new(),
             shutdown: AtomicBool::new(false),
             cfg,
         });
@@ -260,7 +267,7 @@ impl SeaIo {
             next_fd: AtomicU64::new(3), // 0..2 reserved, as in POSIX
         };
         sea.register_existing()?;
-        sea.prefetch_pass()?;
+        crate::prefetch::stage_listed(&sea.core).map_err(|(path, e)| io_err(&path, e))?;
         Ok(sea)
     }
 
@@ -282,6 +289,9 @@ impl SeaIo {
 
     /// Walk the persistent tier and register every file (the input dataset
     /// already on Lustre) as clean, persisted, master-on-persist.
+    /// Interrupted-transfer temp files (`*.sea_tmp.*` — a crash between
+    /// copy and rename) are deleted, never registered: a half-written
+    /// flush copy must not resurrect as a logical file.
     fn register_existing(&self) -> Result<(), SeaError> {
         let persist = self.core.tiers.persist_idx();
         let root = self.core.tier(persist).root().to_path_buf();
@@ -295,6 +305,8 @@ impl SeaIo {
                 let p = entry.path();
                 if p.is_dir() {
                     stack.push(p);
+                } else if crate::transfer::is_temp_name(&entry.file_name().to_string_lossy()) {
+                    let _ = std::fs::remove_file(&p);
                 } else if let Ok(rel) = p.strip_prefix(&root) {
                     let logical = format!("/{}", rel.to_string_lossy());
                     let size = entry.metadata().map(|m| m.len()).unwrap_or(0);
@@ -308,41 +320,20 @@ impl SeaIo {
         Ok(())
     }
 
-    /// Move prefetch-listed files to the fastest cache with space
-    /// (paper §2.1: "a rudimentary prefetch thread").
-    fn prefetch_pass(&self) -> Result<(), SeaError> {
-        if self.core.lists.prefetch.is_empty() || self.core.tiers.caches().is_empty() {
-            return Ok(());
+    /// Hint that `path`'s BIDS siblings (same subject/session scope,
+    /// same extension) will be read soon. O(1): just enqueues a
+    /// readahead request — the prefetcher thread does the namespace walk
+    /// and stages up to `readahead_depth` persist-resident siblings, so
+    /// the interceptor's call budget is never spent on expansion. Also
+    /// triggered automatically when a persist-resident file is opened
+    /// for reading; the real-mode executor calls it per image.
+    pub fn advise_readahead(&self, path: &str) {
+        let core = &self.core;
+        if core.cfg.readahead_depth == 0 || core.tiers.caches().is_empty() {
+            return;
         }
-        let persist = self.core.tiers.persist_idx();
-        for logical in self.core.ns.all_paths() {
-            if !self.core.lists.should_prefetch(&logical) {
-                continue;
-            }
-            let Some(meta) = self.core.ns.lookup(&logical) else { continue };
-            if meta.master != persist {
-                continue; // already cached
-            }
-            // fastest cache with room
-            let mut target = None;
-            for (idx, tier) in self.core.tiers.caches().iter().enumerate() {
-                if tier.try_reserve(meta.size) {
-                    target = Some(idx);
-                    break;
-                }
-            }
-            let Some(target) = target else { continue };
-            match self.core.copy_between(&logical, persist, target) {
-                Ok(_) => {
-                    self.core.ns.add_replica(&logical, target);
-                }
-                Err(e) => {
-                    self.core.tier(target).release(meta.size);
-                    return Err(io_err(&logical, e));
-                }
-            }
-        }
-        Ok(())
+        core.prefetch
+            .push(PrefetchRequest::Readahead(CleanPath::new(path)));
     }
 
     fn alloc_fd(&self) -> Fd {
@@ -362,6 +353,11 @@ impl SeaIo {
     pub fn create(&self, path: &str) -> Result<Fd, SeaError> {
         self.core.counters.bump(CallKind::create);
         let logical = CleanPath::new(path);
+        // Fence first: a truncate-create racing an in-flight transfer of
+        // the same path cancels and drains it before touching the
+        // physical file, so a flush of the old incarnation can neither
+        // interleave bytes with the new one nor publish over it.
+        let _fence = self.core.transfers.fences.block(&logical);
         // Policy: highest-priority cache with room (0-byte reservation
         // grows with writes); always succeeds at the persistent tier.
         let tier = self.core.tiers.place_write(0);
@@ -422,6 +418,25 @@ impl SeaIo {
             .open(&physical)
             .map_err(|e| io_err(&logical, e))?;
         self.core.ns.update(&logical, |m| m.open_count += 1);
+        // Feed the prefetcher: a read served from the persistent tier is
+        // both a promotion candidate (this file) and a readahead trigger
+        // (its BIDS siblings). Pushes are cheap hints; the background
+        // thread re-validates before copying.
+        if mode == OpenMode::Read
+            && self.core.is_persist(tier)
+            && !self.core.tiers.caches().is_empty()
+        {
+            if self.core.cfg.promote_on_read {
+                self.core
+                    .prefetch
+                    .push(PrefetchRequest::Stage(logical.clone()));
+            }
+            if self.core.cfg.readahead_depth > 0 {
+                self.core
+                    .prefetch
+                    .push(PrefetchRequest::Readahead(logical.clone()));
+            }
+        }
         let fd = self.alloc_fd();
         self.fds.insert(
             fd,
@@ -462,7 +477,7 @@ impl SeaIo {
             of.size = new_end;
         }
         self.core.counters.add_written(buf.len() as u64, persist);
-        self.core.ns.record_write(&of.logical, of.size);
+        self.core.ns.record_write(&of.logical, of.size, of.tier);
         Ok(buf.len())
     }
 
@@ -488,8 +503,16 @@ impl SeaIo {
             core.tiers.get(persist).try_reserve(needed);
         }
         of.file.sync_all().ok();
-        core.copy_between(&of.logical, of.tier, target)
-            .map_err(|e| io_err(&of.logical, e))?;
+        // A failed (or fenced-out/cancelled) spill copy must hand back
+        // the reservation it just took on the target tier, or the
+        // capacity leaks for the session; the write then fails and the
+        // file stays where it was.
+        if let Err(e) = core.copy_between(&of.logical, of.tier, target) {
+            if target != persist {
+                core.tier(target).release(needed);
+            }
+            return Err(io_err(&of.logical, e));
+        }
         // Release the old tier and reopen on the new one at the same pos.
         let old = of.tier;
         core.delete_replica(&of.logical, old, of.size);
@@ -547,13 +570,29 @@ impl SeaIo {
         // Common case: the table held the last reference, so take the
         // OpenFile by value — no lock, no path clone. Fall back to a
         // locked clone if another thread is still mid-call on this fd.
-        let logical = match Arc::try_unwrap(handle) {
-            Ok(mutex) => mutex.into_inner().unwrap().logical,
-            Err(handle) => handle.lock().unwrap().logical.clone(),
+        let (logical, tier, writable) = match Arc::try_unwrap(handle) {
+            Ok(mutex) => {
+                let of = mutex.into_inner().unwrap();
+                (of.logical, of.tier, of.writable)
+            }
+            Err(handle) => {
+                let of = handle.lock().unwrap();
+                (of.logical.clone(), of.tier, of.writable)
+            }
         };
         self.core
             .ns
             .update(&logical, |m| m.open_count = m.open_count.saturating_sub(1));
+        // Closing a read-only persist-tier fd re-offers the file for
+        // promotion: the prefetcher skips open files, so the open-time
+        // hint may have been dropped while this descriptor pinned it.
+        if !writable
+            && self.core.is_persist(tier)
+            && self.core.cfg.promote_on_read
+            && !self.core.tiers.caches().is_empty()
+        {
+            self.core.prefetch.push(PrefetchRequest::Stage(logical));
+        }
         Ok(())
     }
 
@@ -579,6 +618,10 @@ impl SeaIo {
     pub fn unlink(&self, path: &str) -> Result<(), SeaError> {
         self.core.counters.bump(CallKind::unlink);
         let logical = CleanPath::new(path);
+        // Cancel and drain any in-flight transfer of this path: either
+        // it committed (its replica is in `meta.replicas` below and gets
+        // deleted like any other) or it aborted leaving nothing.
+        let _fence = self.core.transfers.fences.block(&logical);
         let meta = self
             .core
             .ns
@@ -597,6 +640,21 @@ impl SeaIo {
         self.core.counters.bump(CallKind::rename);
         let from_l = CleanPath::new(from);
         let to_l = CleanPath::new(to);
+        // Fence both ends before reading the replica list (ascending
+        // order, so concurrent renames cannot deadlock). Holding the
+        // fences across the physical renames closes the seed window
+        // where a flush commit landing between the replica snapshot and
+        // the namespace rename stranded the persist copy at the
+        // pre-rename path; a transfer of either path now either commits
+        // entirely before the snapshot or is cancelled.
+        let (first, second) = if from_l.as_str() <= to_l.as_str() {
+            (&from_l, &to_l)
+        } else {
+            (&to_l, &from_l)
+        };
+        let _fence_a = self.core.transfers.fences.block(first);
+        let _fence_b = (first.as_str() != second.as_str())
+            .then(|| self.core.transfers.fences.block(second));
         let replicas = self
             .core
             .ns
@@ -774,6 +832,63 @@ mod tests {
         let mut buf = [0u8; 8];
         let n = sea.read(fd, &mut buf).unwrap();
         assert_eq!(&buf[..n], b"voxels");
+    }
+
+    #[test]
+    fn stale_transfer_temps_filtered_and_cleaned_at_mount() {
+        let dir = tempdir("temps");
+        let lustre = dir.subdir("lustre");
+        std::fs::write(lustre.join("real.nii"), b"data").unwrap();
+        // a crash between copy and rename leaves a temp next to the dst
+        std::fs::write(lustre.join("real.nii.sea_tmp.42"), b"half").unwrap();
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), MIB)
+            .persist("lustre", &lustre, 100 * MIB)
+            .build();
+        let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+        assert!(sea.core().ns.exists("/real.nii"));
+        assert!(
+            !sea.core().ns.exists("/real.nii.sea_tmp.42"),
+            "temp registered as a logical file"
+        );
+        assert!(
+            !lustre.join("real.nii.sea_tmp.42").exists(),
+            "stale temp not cleaned up at mount"
+        );
+    }
+
+    #[test]
+    fn read_of_persist_file_queues_promote_and_readahead() {
+        let dir = tempdir("feed");
+        let lustre = dir.subdir("lustre");
+        std::fs::create_dir_all(lustre.join("sub-01/func")).unwrap();
+        for r in 1..=3 {
+            std::fs::write(
+                lustre.join(format!("sub-01/func/sub-01_run-{r}_bold.sni")),
+                vec![r as u8; 64],
+            )
+            .unwrap();
+        }
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), MIB)
+            .persist("lustre", &lustre, 100 * MIB)
+            .build();
+        let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+        let fd = sea
+            .open("/sub-01/func/sub-01_run-1_bold.sni", OpenMode::Read)
+            .unwrap();
+        // one promote hint for the file itself + one readahead hint
+        // (expansion happens on the prefetcher thread, never here)
+        assert_eq!(sea.core().prefetch.len(), 2);
+        sea.close(fd).unwrap();
+        // close re-offers the file; still queued, so it dedups
+        assert_eq!(sea.core().prefetch.len(), 2);
+        // a cache-resident read queues nothing
+        let fd = sea.create("/hot.dat").unwrap();
+        sea.close(fd).unwrap();
+        let fd = sea.open("/hot.dat", OpenMode::Read).unwrap();
+        sea.close(fd).unwrap();
+        assert_eq!(sea.core().prefetch.len(), 2);
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //!
 //! * **Real mode** — [`intercept::SeaIo`] is an actual user-space
 //!   redirection layer over directory-backed tiers ([`tiers`]), with real
-//!   flusher/evictor/prefetcher threads ([`flusher`]); pipeline compute
-//!   runs through AOT-compiled XLA artifacts ([`runtime`]).
+//!   flusher/evictor ([`flusher`]) and prefetcher ([`prefetch`]) threads
+//!   draining through a parallel fenced transfer engine ([`transfer`]);
+//!   pipeline compute runs through AOT-compiled XLA artifacts
+//!   ([`runtime`]).
 //! * **Simulation mode** — a discrete-event cluster simulator
 //!   ([`simcore`], [`lustre`], [`pagecache`]) replays the paper's
 //!   experiments at full scale to regenerate every figure and table
@@ -30,9 +32,11 @@ pub mod namespace;
 pub mod pagecache;
 pub mod pathrules;
 pub mod pipeline;
+pub mod prefetch;
 pub mod runtime;
 pub mod simcore;
 pub mod stats;
 pub mod testing;
 pub mod tiers;
+pub mod transfer;
 pub mod util;

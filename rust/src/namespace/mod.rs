@@ -51,6 +51,13 @@
 //!   is in flight therefore stay dirty and get re-queued instead of being
 //!   silently lost.
 //!
+//! The **evictable queue** applies the same incremental discipline to
+//! eviction candidates: every transition into clean-and-closed (a close,
+//! a flush commit, a staged replica) enqueues the path, and
+//! [`Namespace::take_evictable`] re-validates under the shard lock at
+//! drain time — the flusher no longer walks every file per pass to find
+//! eviction candidates.
+//!
 //! Hot paths avoid re-normalising paths via [`CleanPath`] (a proven-clean
 //! logical path) and avoid cloning whole [`FileMeta`] records (with their
 //! replica `Vec`s) via [`Namespace::with_meta`].
@@ -122,6 +129,13 @@ impl CleanPath {
     /// later uses are free).
     pub fn new(path: &str) -> CleanPath {
         CleanPath(clean_path(path))
+    }
+
+    /// Wrap a string already proven clean (a namespace key) without
+    /// re-normalising.
+    pub(crate) fn from_clean(path: String) -> CleanPath {
+        debug_assert!(is_clean(&path), "{path:?} is not in clean form");
+        CleanPath(path)
     }
 
     pub fn as_str(&self) -> &str {
@@ -245,13 +259,18 @@ pub struct DirtyEntry {
     pub version: u64,
 }
 
-/// One shard: its slice of the file map plus its slice of the dirty queue.
-/// Both live under one lock so a clean→dirty transition and its enqueue
-/// are atomic.
+/// One shard: its slice of the file map plus its slices of the dirty and
+/// evictable queues. All live under one lock so a state transition and
+/// its enqueue are atomic.
 #[derive(Debug, Default)]
 struct ShardState {
     files: HashMap<String, FileMeta>,
     dirty: HashSet<String>,
+    /// Paths that *became* clean-and-closed since the last
+    /// [`Namespace::take_evictable`] drain — the flusher's eviction
+    /// candidates, fed incrementally from close/flush transitions the
+    /// way `record_write` feeds `dirty` (no O(all-files) sweep).
+    evictable: HashSet<String>,
 }
 
 impl ShardState {
@@ -281,7 +300,28 @@ impl ShardState {
         if transitioned {
             self.dirty.insert(key.to_string());
         }
+        if !meta.dirty && meta.open_count == 0 {
+            // Clean and closed after this update (a close, a flush
+            // commit, a staged replica): eviction candidate. Duplicates
+            // collapse in the set; stale entries are re-validated at
+            // drain time.
+            self.evictable.insert(key.to_string());
+        }
         true
+    }
+
+    /// Queue bookkeeping for a renamed file landing in this shard: a
+    /// dirty file re-enters the dirty queue under its new name; a
+    /// clean-and-closed one re-enters the evictable queue (its old-name
+    /// candidacy was dropped with the old key). The one place the
+    /// rename re-enqueue rules live, shared by the same-shard and
+    /// cross-shard arms of [`Namespace::rename`].
+    fn enqueue_moved(&mut self, to_k: String, meta: &FileMeta) {
+        if meta.dirty {
+            self.dirty.insert(to_k);
+        } else if meta.open_count == 0 {
+            self.evictable.insert(to_k);
+        }
     }
 
     fn update<F: FnOnce(&mut FileMeta)>(&mut self, key: &str, vgen: &AtomicU64, f: F) -> bool {
@@ -325,14 +365,22 @@ fn fresh_stamp(vgen: &AtomicU64) -> u64 {
     vgen.fetch_add(1, Ordering::Relaxed).wrapping_add(1)
 }
 
-/// FNV-1a — cheap, stable, and good enough to spread paths over shards.
-fn shard_of(path: &str) -> usize {
+/// FNV-1a over a path — cheap, stable, and good enough to spread paths
+/// over shard maps. Shared by the namespace shards and the transfer
+/// fence shards (`crate::transfer`), so a future change of hash or shard
+/// geometry (e.g. the multi-node consistent-hash split) happens in one
+/// place.
+pub(crate) fn fnv1a(path: &str) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in path.as_bytes() {
         h ^= *b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
-    (h as usize) & (NS_SHARDS - 1)
+    h
+}
+
+fn shard_of(path: &str) -> usize {
+    (fnv1a(path) as usize) & (NS_SHARDS - 1)
 }
 
 impl Namespace {
@@ -422,15 +470,27 @@ impl Namespace {
 
     /// Grow the file size to `new_size` and mark dirty (a write happened,
     /// so the version is freshly stamped — under the shard lock).
-    pub fn record_write(&self, logical: &(impl PathArg + ?Sized), new_size: u64) -> bool {
+    /// `tier` is where the bytes physically landed (the fd's tier): it
+    /// becomes the master, and every other replica is invalidated. The
+    /// seed kept the *old* master instead, which silently stranded an
+    /// update written through a prefetched cache replica — the namespace
+    /// kept pointing at the stale persistent copy.
+    pub fn record_write(
+        &self,
+        logical: &(impl PathArg + ?Sized),
+        new_size: u64,
+        tier: TierIdx,
+    ) -> bool {
         let key = logical.to_clean();
         self.shard(&key).write().unwrap().update_stamped(&key, &self.vgen, |m| {
             m.size = new_size;
             m.dirty = true;
-            // a write invalidates stale replicas: only master remains
-            m.replicas.retain(|&t| t == m.master);
+            m.master = tier;
+            // a write invalidates stale replicas: only the written tier
+            // holds current bytes
+            m.replicas.retain(|&t| t == tier);
             if m.replicas.is_empty() {
-                m.replicas.push(m.master);
+                m.replicas.push(tier);
             }
         })
     }
@@ -481,7 +541,10 @@ impl Namespace {
     /// of a dirty or open file. Cleanup paths that race application I/O
     /// (the flusher's move/evict) must use
     /// [`Namespace::detach_cache_replicas`], which re-checks
-    /// clean-and-closed under the shard lock.
+    /// clean-and-closed under the shard lock — which is why production
+    /// code currently has no caller and only the invariant tests
+    /// exercise this primitive directly.
+    #[cfg_attr(not(test), allow(dead_code))]
     pub(crate) fn drop_replica(
         &self,
         logical: &(impl PathArg + ?Sized),
@@ -504,6 +567,7 @@ impl Namespace {
         if remaining == 0 {
             s.files.remove(&*key);
             s.dirty.remove(&*key);
+            s.evictable.remove(&*key);
         }
         Some(remaining)
     }
@@ -513,6 +577,7 @@ impl Namespace {
         let key = logical.to_clean();
         let mut s = self.shard(&key).write().unwrap();
         s.dirty.remove(&*key);
+        s.evictable.remove(&*key);
         s.files.remove(&*key)
     }
 
@@ -538,9 +603,8 @@ impl Namespace {
             match src.files.remove(&*from_k) {
                 Some(meta) => {
                     src.dirty.remove(&*from_k);
-                    if meta.dirty {
-                        dst.dirty.insert(to_k.clone());
-                    }
+                    src.evictable.remove(&*from_k);
+                    dst.enqueue_moved(to_k.clone(), &meta);
                     dst.files.insert(to_k, meta);
                     true
                 }
@@ -553,9 +617,8 @@ impl Namespace {
         match s.files.remove(from_k) {
             Some(meta) => {
                 s.dirty.remove(from_k);
-                if meta.dirty {
-                    s.dirty.insert(to_k.clone());
-                }
+                s.evictable.remove(from_k);
+                s.enqueue_moved(to_k.clone(), &meta);
                 s.files.insert(to_k, meta);
                 true
             }
@@ -634,6 +697,34 @@ impl Namespace {
         }
     }
 
+    /// Drain the incremental eviction-candidate queue: every path that
+    /// *became* clean-and-closed since the last drain and still is at
+    /// drain time. The clean/closed re-check happens under the shard
+    /// lock, so a concurrent reopen or re-dirty drops the entry — and
+    /// that file's eventual close/flush transition re-enqueues it, so
+    /// nothing is lost. Mirrors [`Namespace::take_dirty`]'s discipline:
+    /// a drained entry is consumed; callers that skip one by *policy*
+    /// (not evict-listed) simply drop it, and a rename onto an
+    /// evict-listed name re-enqueues.
+    pub fn take_evictable(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let mut s = shard.write().unwrap();
+            if s.evictable.is_empty() {
+                continue;
+            }
+            let drained = std::mem::take(&mut s.evictable);
+            for key in drained {
+                if let Some(m) = s.files.get(&key) {
+                    if !m.dirty && m.open_count == 0 {
+                        out.push(key);
+                    }
+                }
+            }
+        }
+        out
+    }
+
     /// Full-scan snapshot of dirty files, in no particular order.
     /// Diagnostics only — the flusher uses the O(dirty) incremental
     /// [`Namespace::take_dirty`] instead.
@@ -653,10 +744,12 @@ impl Namespace {
     }
 
     /// Paths of clean, closed files that `select` accepts, visited under
-    /// brief per-shard read locks. Unlike [`Namespace::evictable_files`],
-    /// nothing is cloned for rejected entries — the flusher's per-pass
-    /// eviction sweep over a large mounted dataset filters by disposition
-    /// before paying any allocation.
+    /// brief per-shard read locks — the full-scan fallback. The flusher's
+    /// per-pass sweep uses the O(transitions) incremental
+    /// [`Namespace::take_evictable`] instead; this remains for
+    /// diagnostics and drain-time sweeps. Unlike
+    /// [`Namespace::evictable_files`], nothing is cloned for rejected
+    /// entries.
     pub fn evictable_paths(
         &self,
         mut select: impl FnMut(&str, &FileMeta) -> bool,
@@ -689,6 +782,28 @@ impl Namespace {
             );
         }
         out
+    }
+
+    /// All logical paths starting with `prefix`, sorted. Unlike
+    /// [`Namespace::all_paths`], only the matches are cloned and sorted
+    /// — the BIDS readahead expansion scans a subject/session scope
+    /// without paying for the whole mounted dataset.
+    pub fn paths_under(&self, prefix: &str) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| {
+                s.read()
+                    .unwrap()
+                    .files
+                    .keys()
+                    .filter(|k| k.starts_with(prefix))
+                    .cloned()
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        v.sort();
+        v
     }
 
     /// All logical paths (diagnostics / mountpoint walk).
@@ -784,7 +899,7 @@ mod tests {
         ns.create("/f", 1);
         ns.add_replica("/f", 2);
         ns.update("/f", |m| m.dirty = false);
-        ns.record_write("/f", 100);
+        ns.record_write("/f", 100, 1);
         let m = ns.lookup("/f").unwrap();
         assert!(m.dirty);
         assert_eq!(m.size, 100);
@@ -808,7 +923,7 @@ mod tests {
     fn rename_moves_meta() {
         let ns = Namespace::new();
         ns.create("/a", 0);
-        ns.record_write("/a", 42);
+        ns.record_write("/a", 42, 0);
         assert!(ns.rename("/a", "/b/c"));
         assert!(!ns.exists("/a"));
         assert_eq!(ns.lookup("/b/c").unwrap().size, 42);
@@ -852,7 +967,7 @@ mod tests {
         let ns = Namespace::new();
         ns.create("/f", 0);
         let v0 = ns.with_meta("/f", |m| m.version).unwrap();
-        ns.record_write("/f", 10);
+        ns.record_write("/f", 10, 0);
         let v1 = ns.with_meta("/f", |m| m.version).unwrap();
         assert!(v1 > v0, "record_write must move the version");
         ns.update("/f", |m| m.dirty = false);
@@ -864,7 +979,7 @@ mod tests {
         // the snapshot stale (what the flusher's clean-marking guards on).
         let entry = ns.take_dirty().pop().unwrap();
         assert_eq!(entry.version, v2);
-        ns.record_write("/f", 20);
+        ns.record_write("/f", 20, 0);
         assert!(ns.with_meta("/f", |m| m.version).unwrap() > entry.version);
     }
 
@@ -875,10 +990,10 @@ mod tests {
         // snapshot's version (stamps are globally unique).
         let ns = Namespace::new();
         ns.create("/f", 0);
-        ns.record_write("/f", 10);
+        ns.record_write("/f", 10, 0);
         let entry = ns.take_dirty().pop().unwrap();
         ns.create("/f", 0); // truncate over existing
-        ns.record_write("/f", 5);
+        ns.record_write("/f", 5, 0);
         let v = ns.with_meta("/f", |m| m.version).unwrap();
         assert_ne!(v, entry.version, "truncate replayed an old version");
         assert!(v > entry.version);
@@ -886,7 +1001,7 @@ mod tests {
         let entry = ns.take_dirty().pop().unwrap();
         ns.remove("/f"); // unlink …
         ns.create("/f", 0); // … then recreate with the same write count
-        ns.record_write("/f", 7);
+        ns.record_write("/f", 7, 0);
         let v = ns.with_meta("/f", |m| m.version).unwrap();
         assert_ne!(v, entry.version, "unlink+recreate replayed an old version");
         assert!(v > entry.version);
@@ -910,7 +1025,7 @@ mod tests {
         let ns = Namespace::new();
         ns.create("/f", 0);
         for size in 1..100 {
-            ns.record_write("/f", size); // repeated writes: one queue entry
+            ns.record_write("/f", size, 0); // repeated writes: one queue entry
         }
         let drained = ns.take_dirty();
         assert_eq!(drained.len(), 1);
@@ -934,6 +1049,72 @@ mod tests {
         // transition back to dirty re-enqueues exactly once
         ns.update("/cleaned", |m| m.dirty = true);
         assert_eq!(ns.take_dirty().len(), 1);
+    }
+
+    #[test]
+    fn paths_under_filters_by_prefix() {
+        let ns = Namespace::new();
+        ns.create("/sub-01/func/a.sni", 0);
+        ns.create("/sub-01/func/b.sni", 0);
+        ns.create("/sub-010/func/c.sni", 0);
+        ns.create("/other/d.sni", 0);
+        assert_eq!(
+            ns.paths_under("/sub-01/"),
+            vec!["/sub-01/func/a.sni", "/sub-01/func/b.sni"]
+        );
+        assert_eq!(ns.paths_under("/none/").len(), 0);
+        assert_eq!(ns.paths_under("/").len(), 4);
+    }
+
+    #[test]
+    fn take_evictable_fed_by_clean_closed_transitions() {
+        let ns = Namespace::new();
+        ns.create("/a.out", 0);
+        // dirty file: not a candidate
+        assert!(ns.take_evictable().is_empty());
+        // flush commit transition enqueues
+        ns.update("/a.out", |m| {
+            m.dirty = false;
+            m.flushed = true;
+        });
+        assert_eq!(ns.take_evictable(), vec!["/a.out".to_string()]);
+        // drained means gone until another transition
+        assert!(ns.take_evictable().is_empty());
+        // open/close cycle of the clean file re-enqueues at close
+        ns.update("/a.out", |m| m.open_count += 1);
+        assert!(ns.take_evictable().is_empty(), "open file is not a candidate");
+        ns.update("/a.out", |m| m.open_count -= 1);
+        assert_eq!(ns.take_evictable().len(), 1);
+    }
+
+    #[test]
+    fn take_evictable_revalidates_under_lock() {
+        let ns = Namespace::new();
+        ns.create("/f", 0);
+        ns.update("/f", |m| m.dirty = false);
+        // re-dirtied before the drain: dropped (and the dirty queue owns it)
+        ns.record_write("/f", 8, 0);
+        assert!(ns.take_evictable().is_empty());
+        // removed before the drain: dropped
+        ns.create("/g", 0);
+        ns.update("/g", |m| m.dirty = false);
+        ns.remove("/g");
+        assert!(ns.take_evictable().is_empty());
+    }
+
+    #[test]
+    fn rename_moves_evictable_candidacy() {
+        let ns = Namespace::new();
+        ns.create("/old.tmp", 0);
+        ns.update("/old.tmp", |m| {
+            m.dirty = false;
+            m.flushed = true;
+        });
+        // simulate a sweep that dropped the (unlisted) candidate
+        assert_eq!(ns.take_evictable().len(), 1);
+        assert!(ns.rename("/old.tmp", "/new.evict"));
+        let drained = ns.take_evictable();
+        assert_eq!(drained, vec!["/new.evict".to_string()]);
     }
 
     #[test]
@@ -1013,7 +1194,7 @@ mod tests {
                         ns.create(&p, g.usize_in(0, 2));
                     }
                     1 => {
-                        ns.record_write(&p, g.u64_in(0, 1000));
+                        ns.record_write(&p, g.u64_in(0, 1000), g.usize_in(0, 2));
                     }
                     2 => {
                         ns.add_replica(&p, g.usize_in(0, 2));

@@ -167,6 +167,11 @@ fn process_image(
     pipeline: PipelineKind,
     logical: &str,
 ) -> Result<()> {
+    // Readahead hint: this worker is about to stream a subject's volume
+    // and then compute on it — tell the prefetcher so the subject's
+    // sibling volumes get staged into the cache while the compute runs
+    // (the transfer/compute overlap from arXiv:2108.10496).
+    sea.advise_readahead(logical);
     let raw = read_whole(sea, logical)?;
     let (header, voxels) = read_volume(&raw[..]).context("parsing input volume")?;
     let out = svc.preprocess(artifact, voxels)?;

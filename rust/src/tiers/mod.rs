@@ -221,6 +221,17 @@ impl TierSet {
     pub fn fastest_of(&self, candidates: impl IntoIterator<Item = TierIdx>) -> Option<TierIdx> {
         candidates.into_iter().min()
     }
+
+    /// Reserve `bytes` on the fastest *cache* with room and hand the
+    /// reservation to the caller (the transfer engine's staging path).
+    /// `None` when no cache can hold them — unlike
+    /// [`TierSet::place_write`], the persistent tier is never a staging
+    /// target, so there is no fallthrough.
+    pub fn reserve_on_cache(&self, bytes: u64) -> Option<TierIdx> {
+        self.caches()
+            .iter()
+            .position(|tier| tier.try_reserve(bytes))
+    }
 }
 
 #[cfg(test)]
@@ -298,6 +309,19 @@ mod tests {
         );
         ts.get(0).release(1);
         assert_eq!(ts.place_write(0), 0, "any free byte re-enables the cache");
+    }
+
+    #[test]
+    fn reserve_on_cache_never_targets_persist() {
+        let (_g1, fast) = tmp("roc-fast");
+        let (_g2, lus) = tmp("roc-lus");
+        let ts = TierSet::new(&[fast], &lus, |t| t).unwrap();
+        assert_eq!(ts.reserve_on_cache(MIB / 2), Some(0));
+        assert_eq!(ts.get(0).used(), MIB / 2, "reservation handed to caller");
+        assert_eq!(ts.reserve_on_cache(MIB), None, "no fallthrough to persist");
+        let (_g3, lus2) = tmp("roc-only");
+        let baseline = TierSet::new(&[], &lus2, |t| t).unwrap();
+        assert_eq!(baseline.reserve_on_cache(1), None);
     }
 
     #[test]

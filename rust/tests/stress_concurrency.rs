@@ -10,17 +10,43 @@
 //! 2. a cache-tier read completes promptly while a throttled persist-tier
 //!    write is mid-flight on another fd (the regression the old global
 //!    lock caused: every worker stalled behind one throttled write).
+//!
+//! Plus the transfer-fence regressions (both seed-inherited ROADMAP
+//! windows): a rename racing an in-flight flush copy must not strand a
+//! persist copy at the stale path, and an unlink+recreate racing one
+//! must not interleave bytes of two incarnations on the persist tier.
 
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Barrier;
 use std::time::{Duration, Instant};
 
 use sea::config::SeaConfig;
-use sea::flusher::SeaSession;
+use sea::flusher::{drain, flush_pass, SeaSession};
 use sea::intercept::{OpenMode, SeaIo};
 use sea::pathrules::{PathRules, SeaLists};
 use sea::testing::tempdir::tempdir;
 use sea::util::MIB;
+
+/// No interrupted-transfer temp file may survive under `root`.
+fn assert_no_temp_litter(root: &Path) {
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        if let Ok(entries) = std::fs::read_dir(&dir) {
+            for e in entries.flatten() {
+                let p = e.path();
+                if p.is_dir() {
+                    stack.push(p);
+                } else {
+                    assert!(
+                        !sea::transfer::is_temp_name(&e.file_name().to_string_lossy()),
+                        "transfer temp litter: {p:?}"
+                    );
+                }
+            }
+        }
+    }
+}
 
 #[test]
 fn stress_invariants_hold_under_concurrent_io_with_flusher() {
@@ -190,4 +216,169 @@ fn cache_read_completes_during_throttled_persist_write() {
     // The big file really went through the throttled persist tier.
     assert_eq!(sea.stat("/big.dat").unwrap().tier, "lustre");
     assert_eq!(sea.stat("/big.dat").unwrap().size, BIG as u64);
+}
+
+#[test]
+fn rename_racing_inflight_flush_never_strands_persist_copy() {
+    // Seed-inherited window (ROADMAP): a rename racing an in-flight
+    // flush copy could strand the flusher's persist copy at the
+    // pre-rename path while the namespace recorded a replica at the new
+    // one. The per-file fence must make the rename wait out or cancel
+    // the transfer instead.
+    const BW: f64 = 256.0 * 1024.0; // 256 KiB payload -> ~1 s in flight
+    let dir = tempdir("fence-rename");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 8 * MIB)
+        .persist("lustre", dir.subdir("lustre"), u64::MAX / 4)
+        .flusher(false, 100)
+        .build();
+    let lists = SeaLists::new(
+        PathRules::parse(r".*\.out$").unwrap(),
+        PathRules::empty(),
+        PathRules::empty(),
+    );
+    let sea = SeaIo::mount_with(cfg, lists, |t| t.with_bandwidth_limit(BW)).unwrap();
+    let sea = &sea;
+    let payload = vec![5u8; 256 * 1024];
+    let fd = sea.create("/d/a.out").unwrap();
+    sea.write(fd, &payload).unwrap();
+    sea.close(fd).unwrap();
+
+    std::thread::scope(|s| {
+        let flusher = s.spawn(move || flush_pass(sea.core(), false));
+        // let the throttled flush copy get mid-flight
+        std::thread::sleep(Duration::from_millis(100));
+        sea.rename("/d/a.out", "/d/b.out").unwrap();
+        let rep = flusher.join().unwrap();
+        assert_eq!(rep.errors, 0, "{rep:?}");
+    });
+
+    let core = sea.core();
+    let persist = core.tiers.persist();
+    // Whichever side won the fence, the old path must be fully gone:
+    // no stranded persist copy, no namespace entry, no temp litter.
+    assert!(
+        !persist.physical("/d/a.out").exists(),
+        "persist copy stranded at the pre-rename path"
+    );
+    assert!(!core.ns.exists("/d/a.out"));
+    assert!(core.ns.exists("/d/b.out"));
+    assert_no_temp_litter(persist.root());
+    assert_no_temp_litter(core.tiers.get(0).root());
+
+    // The drain persists the renamed file, byte-for-byte.
+    let rep = drain(core);
+    assert_eq!(rep.errors, 0, "{rep:?}");
+    let meta = core.ns.lookup("/d/b.out").unwrap();
+    assert!(!meta.dirty, "renamed file never reflushed");
+    assert_eq!(
+        std::fs::read(persist.physical("/d/b.out")).unwrap(),
+        payload,
+        "persist bytes corrupted by the racing rename"
+    );
+    assert_no_temp_litter(persist.root());
+}
+
+#[test]
+fn unlink_recreate_racing_inflight_flush_keeps_incarnations_separate() {
+    // Second seed-inherited window: a truncate/recreate racing an
+    // in-flight flush of the old incarnation could interleave bytes of
+    // the two incarnations on the persist tier. With fenced, atomic
+    // (temp + rename) copies, the persisted file must be exactly one
+    // incarnation's bytes — the final one's.
+    const BW: f64 = 256.0 * 1024.0;
+    let dir = tempdir("fence-recreate");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 8 * MIB)
+        .persist("lustre", dir.subdir("lustre"), u64::MAX / 4)
+        .flusher(false, 100)
+        .build();
+    let lists = SeaLists::new(
+        PathRules::parse(r".*\.out$").unwrap(),
+        PathRules::empty(),
+        PathRules::empty(),
+    );
+    let sea = SeaIo::mount_with(cfg, lists, |t| t.with_bandwidth_limit(BW)).unwrap();
+    let sea = &sea;
+    let v1 = vec![1u8; 256 * 1024];
+    let v2 = vec![2u8; 96 * 1024];
+    let fd = sea.create("/d/x.out").unwrap();
+    sea.write(fd, &v1).unwrap();
+    sea.close(fd).unwrap();
+
+    std::thread::scope(|s| {
+        let flusher = s.spawn(move || flush_pass(sea.core(), false));
+        std::thread::sleep(Duration::from_millis(100));
+        // unlink + recreate while the v1 flush copy is mid-flight
+        sea.unlink("/d/x.out").unwrap();
+        let fd = sea.create("/d/x.out").unwrap();
+        sea.write(fd, &v2).unwrap();
+        sea.close(fd).unwrap();
+        let rep = flusher.join().unwrap();
+        assert_eq!(rep.errors, 0, "{rep:?}");
+    });
+
+    let core = sea.core();
+    let rep = drain(core);
+    assert_eq!(rep.errors, 0, "{rep:?}");
+    let on_persist = std::fs::read(core.tiers.persist().physical("/d/x.out")).unwrap();
+    assert_eq!(
+        on_persist, v2,
+        "persist copy mixed bytes from two incarnations (len {})",
+        on_persist.len()
+    );
+    assert!(!core.ns.lookup("/d/x.out").unwrap().dirty);
+    assert_no_temp_litter(core.tiers.persist().root());
+    assert_no_temp_litter(core.tiers.get(0).root());
+}
+
+#[test]
+fn rename_storm_against_background_flusher_converges() {
+    // Many rename hops racing a live flusher thread: every hop must end
+    // with exactly one tracked file whose bytes are intact, and the
+    // final drain persists the final name.
+    let dir = tempdir("fence-storm");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 8 * MIB)
+        .persist("lustre", dir.subdir("lustre"), u64::MAX / 4)
+        .flusher(true, 1)
+        .build();
+    let lists = SeaLists::new(
+        PathRules::parse(r".*\.out$").unwrap(),
+        PathRules::empty(),
+        PathRules::empty(),
+    );
+    let sess = SeaSession::start(cfg, lists, |t| t.with_bandwidth_limit(2.0 * MIB as f64))
+        .unwrap();
+    let sea = sess.io();
+    let payload = vec![9u8; 64 * 1024];
+    let fd = sea.create("/hop/n0.out").unwrap();
+    sea.write(fd, &payload).unwrap();
+    sea.close(fd).unwrap();
+
+    const HOPS: usize = 30;
+    for i in 0..HOPS {
+        let from = format!("/hop/n{i}.out");
+        let to = format!("/hop/n{}.out", i + 1);
+        sea.rename(&from, &to).unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    let final_name = format!("/hop/n{HOPS}.out");
+    let core = sess.io().core().clone();
+    let (_stats, report) = sess.unmount();
+    assert_eq!(report.errors, 0, "{report:?}");
+
+    // exactly one logical file survives, at the final name, intact
+    let paths: Vec<String> = core.ns.all_paths();
+    assert_eq!(paths, vec![final_name.clone()], "stray entries: {paths:?}");
+    let persist = core.tiers.persist();
+    assert_eq!(std::fs::read(persist.physical(&final_name)).unwrap(), payload);
+    // no intermediate hop left a stranded persist copy
+    for i in 0..HOPS {
+        assert!(
+            !persist.physical(&format!("/hop/n{i}.out")).exists(),
+            "stranded persist copy at hop {i}"
+        );
+    }
+    assert_no_temp_litter(persist.root());
 }
