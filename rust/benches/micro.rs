@@ -21,6 +21,48 @@ use sea::simcore::FlowNet;
 use sea::testing::tempdir::tempdir;
 use sea::util::MIB;
 
+/// CI smoke mode (`SEA_BENCH_SMOKE=1`): run every benchmark body with
+/// tiny iteration counts so the bench code is *executed* per PR, not
+/// just compiled. Numbers from a smoke run are meaningless.
+fn smoke() -> bool {
+    std::env::var_os("SEA_BENCH_SMOKE").is_some()
+}
+
+/// Scale an iteration count down in smoke mode.
+fn scaled(iters: u64) -> u64 {
+    if smoke() {
+        (iters / 200).max(20)
+    } else {
+        iters
+    }
+}
+
+/// Per-call latency sampling: run `f` `iters` times, returning the
+/// sorted per-call latencies in µs (for p50/p99, where a mean would hide
+/// tail stalls behind e.g. a slab chunk allocation or an eviction scan).
+fn sample_us(iters: u64, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..iters.min(100) {
+        f(); // warmup
+    }
+    let mut v = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        v.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v
+}
+
+/// Percentile of an ascending-sorted sample (p in 0..=1).
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
 fn bench(label: &str, iters: u64, mut f: impl FnMut()) -> f64 {
     // warmup
     for _ in 0..iters.min(100) {
@@ -157,31 +199,61 @@ fn main() {
 
     let fd = sea.create("/bench/file.dat").unwrap();
     let buf = vec![7u8; 4096];
-    let per_write = bench("intercepted 4 KiB write (tmpfs tier)", 20_000, || {
+    let per_write = bench("intercepted 4 KiB write (tmpfs tier)", scaled(20_000), || {
         sea.write(fd, &buf).unwrap();
     });
     sea.close(fd).unwrap();
 
     let fd = sea.open("/bench/file.dat", OpenMode::Read).unwrap();
     let mut rbuf = vec![0u8; 4096];
-    bench("intercepted 4 KiB read (tmpfs tier)", 20_000, || {
+    bench("intercepted 4 KiB read (tmpfs tier)", scaled(20_000), || {
         sea.read(fd, &mut rbuf).unwrap();
         sea.lseek(fd, std::io::SeekFrom::Start(0)).unwrap();
     });
     sea.close(fd).unwrap();
 
-    bench("stat through namespace", 100_000, || {
+    bench("stat through namespace", scaled(100_000), || {
         sea.stat("/bench/file.dat").unwrap();
     });
 
     let mut i = 0u64;
-    bench("create+close+unlink cycle", 5_000, || {
+    bench("create+close+unlink cycle", scaled(5_000), || {
         let p = format!("/bench/cycle-{i}");
         i += 1;
         let fd = sea.create(&p).unwrap();
         sea.close(fd).unwrap();
         sea.unlink(&p).unwrap();
     });
+
+    // --- per-call latency histograms (the < 0.5 µs budget, tracked) ---------
+    // p50/p99 per PR in BENCH_hotpath.json instead of eyeballed means:
+    // the budget is a per-call ceiling, so the tail matters.
+    let fd = sea.open("/bench/file.dat", OpenMode::Read).unwrap();
+    let lookup = sample_us(scaled(200_000), || {
+        assert!(sea.fd_is_valid(std::hint::black_box(fd)));
+    });
+    let mut read_samples = Vec::with_capacity(scaled(20_000) as usize);
+    let mut rbuf = vec![0u8; 4096];
+    for _ in 0..scaled(20_000) {
+        sea.lseek(fd, std::io::SeekFrom::Start(0)).unwrap(); // untimed rewind
+        let t0 = Instant::now();
+        sea.read(fd, &mut rbuf).unwrap();
+        read_samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    read_samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sea.close(fd).unwrap();
+    let fd = sea.create("/bench/hist.dat").unwrap();
+    let writes = sample_us(scaled(20_000), || {
+        sea.write(fd, &buf).unwrap();
+    });
+    sea.close(fd).unwrap();
+    let (lookup_p50, lookup_p99) = (pct(&lookup, 0.50), pct(&lookup, 0.99));
+    let (read_p50, read_p99) = (pct(&read_samples, 0.50), pct(&read_samples, 0.99));
+    let (write_p50, write_p99) = (pct(&writes, 0.50), pct(&writes, 0.99));
+    println!("fd-lookup-only      p50 {lookup_p50:7.3} us   p99 {lookup_p99:7.3} us");
+    println!("full 4 KiB read     p50 {read_p50:7.3} us   p99 {read_p99:7.3} us");
+    println!("full 4 KiB write    p50 {write_p50:7.3} us   p99 {write_p99:7.3} us");
+    println!("  -> per-call overhead budget: < 0.5 us (ROADMAP perf trajectory)");
 
     // Table 2 budget check: AFNI 305k calls over 816 s compute -> per-call
     // overhead must stay below ~1 us for <0.05% overhead.
@@ -191,12 +263,12 @@ fn main() {
     );
 
     // --- namespace / rules -------------------------------------------------
-    bench("clean_path (5 components)", 200_000, || {
+    bench("clean_path (5 components)", scaled(200_000), || {
         std::hint::black_box(clean_path("/a/b/../c/./d/e"));
     });
 
     let rules = PathRules::parse(r".*sub-\d+/func/.*_bold\.nii(\.gz)?$\n.*\.tmp$").unwrap();
-    bench("regex list match (2 patterns)", 200_000, || {
+    bench("regex list match (2 patterns)", scaled(200_000), || {
         std::hint::black_box(rules.matches("/ds/sub-042/func/sub-042_task-rest_bold.nii.gz"));
     });
 
@@ -209,24 +281,28 @@ fn main() {
         let path = vec![rids[f % 75], rids[(f * 7 + 3) % 75]];
         net.add_flow(1e12, path, 1.0 + (f % 8) as f64, f);
     }
-    bench("fair-share recompute (75 res, 60 flows)", 2_000, || {
+    bench("fair-share recompute (75 res, 60 flows)", scaled(2_000), || {
         net.recompute();
     });
 
     // --- simulator event throughput -----------------------------------------
-    let cluster = ClusterConfig::dedicated();
-    let spec = WorkloadSpec::new(PipelineKind::Spm, DatasetKind::Hcp, 1)
-        .busy_writers(6)
-        .strategy(Strategy::Baseline);
-    let t0 = Instant::now();
-    let result = sea::experiments::run_cell(&cluster, &spec).unwrap();
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "simulator: {} events in {:.2}s = {:.0} kev/s (SPM/HCP/6bw baseline cell)",
-        result.events,
-        dt,
-        result.events as f64 / dt / 1e3
-    );
+    if smoke() {
+        println!("simulator: skipped (smoke mode)");
+    } else {
+        let cluster = ClusterConfig::dedicated();
+        let spec = WorkloadSpec::new(PipelineKind::Spm, DatasetKind::Hcp, 1)
+            .busy_writers(6)
+            .strategy(Strategy::Baseline);
+        let t0 = Instant::now();
+        let result = sea::experiments::run_cell(&cluster, &spec).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "simulator: {} events in {:.2}s = {:.0} kev/s (SPM/HCP/6bw baseline cell)",
+            result.events,
+            dt,
+            result.events as f64 / dt / 1e3
+        );
+    }
 
     // --- flusher copy throughput --------------------------------------------
     let dir2 = tempdir("micro-flush");
@@ -237,7 +313,8 @@ fn main() {
     let sea2 = SeaIo::mount_with(cfg2, SeaLists::flush_all(), |t| t).unwrap();
     let fd = sea2.create("/flush/big.dat").unwrap();
     let chunk = vec![1u8; 1 << 20];
-    for _ in 0..64 {
+    let flush_mib = if smoke() { 8 } else { 64 };
+    for _ in 0..flush_mib {
         sea2.write(fd, &chunk).unwrap();
     }
     sea2.close(fd).unwrap();
@@ -251,9 +328,9 @@ fn main() {
         (report.bytes_flushed >> 20) as f64 / dt
     );
 
-    // --- hot-path contention (lock-sharding payoff) -------------------------
+    // --- hot-path contention (lock-free fd table payoff) --------------------
     println!("\n# hot-path contention\n");
-    let iters = 2_000;
+    let iters = if smoke() { 50 } else { 2_000 };
     let c1 = contention_calls_per_sec(1, iters);
     println!("open/write/read/close/unlink, 1 thread   {c1:10.0} calls/s");
     let c8 = contention_calls_per_sec(8, iters);
@@ -271,6 +348,12 @@ fn main() {
             "{{\n",
             "  \"single_thread_write_us\": {:.3},\n",
             "  \"afni_overhead_pct\": {:.4},\n",
+            "  \"fd_lookup_p50_us\": {:.4},\n",
+            "  \"fd_lookup_p99_us\": {:.4},\n",
+            "  \"read_p50_us\": {:.4},\n",
+            "  \"read_p99_us\": {:.4},\n",
+            "  \"write_p50_us\": {:.4},\n",
+            "  \"write_p99_us\": {:.4},\n",
             "  \"contention_calls_per_sec_1t\": {:.0},\n",
             "  \"contention_calls_per_sec_8t\": {:.0},\n",
             "  \"aggregate_scaling_8t\": {:.2},\n",
@@ -279,6 +362,12 @@ fn main() {
         ),
         per_write * 1e6,
         overhead_pct,
+        lookup_p50,
+        lookup_p99,
+        read_p50,
+        read_p99,
+        write_p50,
+        write_p99,
         c1,
         c8,
         scaling,

@@ -26,10 +26,15 @@ use sea::util::MIB;
 
 const KIB: usize = 1024;
 
-/// Foreground cold-read makespan over `FILES` volumes with a per-volume
+/// CI smoke mode (`SEA_BENCH_SMOKE=1`): tiny workloads so the bench code
+/// is executed per PR, not just compiled. Smoke numbers are meaningless.
+fn smoke() -> bool {
+    std::env::var_os("SEA_BENCH_SMOKE").is_some()
+}
+
+/// Foreground cold-read makespan over `files` volumes with a per-volume
 /// compute step, persist throttled to `BW` bytes/s.
-fn cold_read_makespan(readahead: bool) -> f64 {
-    const FILES: usize = 8;
+fn cold_read_makespan(readahead: bool, files: usize) -> f64 {
     const SIZE: usize = 128 * KIB;
     const BW: f64 = 1024.0 * 1024.0; // 1 MiB/s -> ~125 ms per volume
     const COMPUTE: Duration = Duration::from_millis(150);
@@ -38,7 +43,7 @@ fn cold_read_makespan(readahead: bool) -> f64 {
     let lustre = dir.subdir("lustre");
     let vols = lustre.join("vol");
     std::fs::create_dir_all(&vols).unwrap();
-    for i in 0..FILES {
+    for i in 0..files {
         std::fs::write(vols.join(format!("f{i:03}.sni")), vec![i as u8; SIZE]).unwrap();
     }
     let mut b = SeaConfig::builder(dir.subdir("mount"))
@@ -59,7 +64,7 @@ fn cold_read_makespan(readahead: bool) -> f64 {
 
     let t0 = Instant::now();
     let mut buf = vec![0u8; 64 * KIB];
-    for i in 0..FILES {
+    for i in 0..files {
         let p = format!("/vol/f{i:03}.sni");
         let fd = sea.open(&p, OpenMode::Read).unwrap();
         loop {
@@ -77,10 +82,9 @@ fn cold_read_makespan(readahead: bool) -> f64 {
     dt
 }
 
-/// Drain `FILES` dirty files through the engine with `workers` copies in
+/// Drain `files` dirty files through the engine with `workers` copies in
 /// flight, against a persist tier with per-op metadata latency.
-fn flusher_drain_secs(workers: usize) -> f64 {
-    const FILES: usize = 12;
+fn flusher_drain_secs(workers: usize, files: usize) -> f64 {
     let dir = tempdir("bench-drain");
     let cfg = SeaConfig::builder(dir.subdir("mount"))
         .cache("tmpfs", dir.subdir("tmpfs"), 256 * MIB)
@@ -93,7 +97,7 @@ fn flusher_drain_secs(workers: usize) -> f64 {
         t.with_meta_latency(Duration::from_millis(25))
     })
     .unwrap();
-    for i in 0..FILES {
+    for i in 0..files {
         let fd = sea.create(&format!("/out/r{i:02}.nii")).unwrap();
         sea.write(fd, &vec![i as u8; 256 * KIB]).unwrap();
         sea.close(fd).unwrap();
@@ -101,28 +105,32 @@ fn flusher_drain_secs(workers: usize) -> f64 {
     let t0 = Instant::now();
     let rep = flush_pass(sea.core(), false);
     let dt = t0.elapsed().as_secs_f64();
-    assert_eq!(rep.flushed, FILES, "{rep:?}");
+    assert_eq!(rep.flushed, files, "{rep:?}");
     assert_eq!(rep.errors, 0, "{rep:?}");
     dt
 }
 
 fn main() {
     println!("\n# prefetch / transfer-engine benchmarks\n");
+    let drain_files = if smoke() { 4 } else { 12 };
+    let read_files = if smoke() { 3 } else { 8 };
 
-    let drain_serial = flusher_drain_secs(1);
-    println!("flusher drain, 12 files, 1 worker (serial)   {drain_serial:7.3} s");
-    let drain_pipelined = flusher_drain_secs(8);
+    let drain_serial = flusher_drain_secs(1, drain_files);
+    println!(
+        "flusher drain, {drain_files} files, 1 worker (serial)   {drain_serial:7.3} s"
+    );
+    let drain_pipelined = flusher_drain_secs(8, drain_files);
     let drain_speedup = drain_serial / drain_pipelined.max(1e-9);
     println!(
-        "flusher drain, 12 files, 8 workers (pipelined){drain_pipelined:7.3} s ({drain_speedup:.2}x)"
+        "flusher drain, {drain_files} files, 8 workers (pipelined){drain_pipelined:7.3} s ({drain_speedup:.2}x)"
     );
 
-    let off = cold_read_makespan(false);
-    println!("cold read, 8 throttled volumes, no readahead {off:7.3} s");
-    let on = cold_read_makespan(true);
+    let off = cold_read_makespan(false, read_files);
+    println!("cold read, {read_files} throttled volumes, no readahead {off:7.3} s");
+    let on = cold_read_makespan(true, read_files);
     let read_speedup = off / on.max(1e-9);
     println!(
-        "cold read, 8 throttled volumes, readahead=4   {on:7.3} s ({read_speedup:.2}x)"
+        "cold read, {read_files} throttled volumes, readahead=4   {on:7.3} s ({read_speedup:.2}x)"
     );
 
     let json = format!(

@@ -278,6 +278,10 @@ fn cmd_run(mut a: Args) -> Result<()> {
             report.stats.persist_calls,
             report.files_on_persist,
         );
+        println!(
+            "{}",
+            crate::experiments::report::fmt_admission(&report.admission)
+        );
     }
     Ok(())
 }

@@ -11,6 +11,8 @@
 //! cache   = tmpfs:/dev/shm/sea:125G      # priority 0 (fastest)
 //! cache   = ssd:/local/sea:480G          # priority 1
 //! persist = lustre:/scratch/user/out     # long-term shared storage
+//! evict_to_fit = true                    # full caches evict cold clean
+//!                                        # replicas instead of refusing
 //!
 //! [lists]
 //! flushlist    = .sea_flushlist
@@ -82,6 +84,11 @@ pub struct SeaConfig {
     /// Persistent shared storage (the paper's Lustre) — flush target and
     /// final fallthrough when every cache is full.
     pub persist: CacheDef,
+    /// When a cache tier is full, admission (new-file placement, spill,
+    /// prefetch staging) may evict cold, clean, closed, already-persisted
+    /// replicas — LRU over the namespace access stamps — instead of
+    /// falling through or skipping (`[caches] evict_to_fit`).
+    pub evict_to_fit: bool,
     pub flushlist: PathBuf,
     pub evictlist: PathBuf,
     pub prefetchlist: PathBuf,
@@ -141,6 +148,7 @@ impl SeaConfig {
             mountpoint,
             caches,
             persist,
+            evict_to_fit: ini.get_bool("caches", "evict_to_fit").unwrap_or(true),
             flushlist: list("flushlist", ".sea_flushlist"),
             evictlist: list("evictlist", ".sea_evictlist"),
             prefetchlist: list("prefetchlist", ".sea_prefetchlist"),
@@ -185,6 +193,7 @@ impl SeaConfig {
             mountpoint: mountpoint.into(),
             caches: Vec::new(),
             persist: None,
+            evict_to_fit: true,
             flusher_enabled: true,
             flusher_interval_ms: 200,
             transfer_workers: 4,
@@ -206,6 +215,7 @@ pub struct SeaConfigBuilder {
     mountpoint: PathBuf,
     caches: Vec<CacheDef>,
     persist: Option<CacheDef>,
+    evict_to_fit: bool,
     flusher_enabled: bool,
     flusher_interval_ms: u64,
     transfer_workers: usize,
@@ -239,6 +249,13 @@ impl SeaConfigBuilder {
         self
     }
 
+    /// Enable/disable the evict-to-make-room admission path (full caches
+    /// evict cold clean replicas instead of refusing work).
+    pub fn evict_to_fit(mut self, enabled: bool) -> Self {
+        self.evict_to_fit = enabled;
+        self
+    }
+
     /// Transfer-engine worker pool size (parallel tier-to-tier copies).
     pub fn transfer_workers(mut self, workers: usize) -> Self {
         self.transfer_workers = workers;
@@ -268,6 +285,7 @@ impl SeaConfigBuilder {
             mountpoint: self.mountpoint,
             persist: self.persist.expect("builder: persist tier required"),
             caches: self.caches,
+            evict_to_fit: self.evict_to_fit,
             flushlist: ".sea_flushlist".into(),
             evictlist: ".sea_evictlist".into(),
             prefetchlist: ".sea_prefetchlist".into(),
@@ -381,6 +399,22 @@ interval_ms = 50
         assert_eq!(cfg.cache_capacity(), 5 * GIB);
         assert_eq!(cfg.caches[0].name, "tmpfs");
         assert_eq!(cfg.flusher_interval_ms, 100);
+    }
+
+    #[test]
+    fn evict_to_fit_parses_and_defaults_on() {
+        let cfg = SeaConfig::parse(SAMPLE).unwrap();
+        assert!(cfg.evict_to_fit, "evict_to_fit must default on");
+        let cfg = SeaConfig::parse(
+            "mount=/m\n[caches]\npersist = l:/x:1G\nevict_to_fit = false\n",
+        )
+        .unwrap();
+        assert!(!cfg.evict_to_fit);
+        let cfg = SeaConfig::builder("/m")
+            .persist("l", "/x", GIB)
+            .evict_to_fit(false)
+            .build();
+        assert!(!cfg.evict_to_fit);
     }
 
     #[test]

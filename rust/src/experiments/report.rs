@@ -28,6 +28,16 @@ pub fn fmt_speedup(s: f64) -> String {
     format!("{s:.2}x")
 }
 
+/// One-line cache-admission attribution for a real-mode run: how often
+/// admission found room, made room by evicting cold clean replicas, or
+/// fell through to the persistent tier.
+pub fn fmt_admission(a: &crate::stats::AdmissionSnapshot) -> String {
+    format!(
+        "admission: {} hit, {} evicted-to-fit ({} replicas / {} B dropped), {} fell through to persist",
+        a.hits, a.evicted_to_fit, a.evicted_files, a.evicted_bytes, a.fell_through
+    )
+}
+
 /// `1h23m` / `45.2s` humanised seconds.
 pub fn fmt_secs(s: f64) -> String {
     if s >= 3600.0 {
@@ -59,5 +69,20 @@ mod tests {
         assert_eq!(fmt_secs(45.23), "45.2s");
         assert_eq!(fmt_secs(300.0), "5.0m");
         assert_eq!(fmt_secs(7260.0), "2h01m");
+    }
+
+    #[test]
+    fn fmt_admission_line() {
+        let a = crate::stats::AdmissionSnapshot {
+            hits: 10,
+            evicted_to_fit: 2,
+            fell_through: 1,
+            evicted_files: 3,
+            evicted_bytes: 4096,
+        };
+        let line = fmt_admission(&a);
+        assert!(line.contains("10 hit"), "{line}");
+        assert!(line.contains("2 evicted-to-fit"), "{line}");
+        assert!(line.contains("1 fell through"), "{line}");
     }
 }

@@ -189,7 +189,7 @@ pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
                     report.bytes_flushed += bytes;
                     core.counters.bump_persist();
                     if *disposition == Disposition::Move {
-                        if drop_cache_replicas(core, &entry.logical) {
+                        if core.drop_cache_replicas(&entry.logical).is_some() {
                             report.moved += 1;
                         } else {
                             // Re-dirtied or reopened before the cache copy
@@ -249,29 +249,11 @@ pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
                 core.lists.disposition(&logical),
                 Disposition::Evict | Disposition::Move
             );
-        if eligible && drop_cache_replicas(core, &logical) {
+        if eligible && core.drop_cache_replicas(&logical).is_some() {
             report.evicted += 1;
         }
     }
     report
-}
-
-/// Atomically detach every cache replica of `logical` — only while the
-/// file is still clean and closed — then delete the physical copies; the
-/// persist copy becomes the master. Returns false when the file was
-/// re-dirtied or reopened first (a re-dirtied file is back in the dirty
-/// queue, so a later pass finishes the job).
-fn drop_cache_replicas(core: &SeaCore, logical: &str) -> bool {
-    let persist = core.tiers.persist_idx();
-    match core.ns.detach_cache_replicas(logical, persist) {
-        Some((size, dropped)) => {
-            for tier in dropped {
-                core.delete_replica(logical, tier, size);
-            }
-            true
-        }
-        None => false,
-    }
 }
 
 /// Final drain at unmount: force-flush everything flush-listed, then

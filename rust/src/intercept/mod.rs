@@ -16,48 +16,85 @@
 //!
 //! # Concurrency model
 //!
-//! The paper's overhead claim (< 1 µs of interception per call against
+//! The paper's overhead claim (< 0.5 µs of interception per call against
 //! AFNI's ~300k glibc calls) only holds if `nprocs` pipeline workers never
-//! serialise on shared state, so the hot path is lock-sharded:
+//! serialise on shared state, so fd resolution is **lock-free** and the
+//! remaining shared state is lock-sharded:
 //!
-//! * the fd table is [`FD_SHARDS`] `RwLock`-protected maps from [`Fd`] to
-//!   a **per-fd handle** (`Arc<Mutex<OpenFile>>`). A call takes the shard
-//!   lock only long enough to clone the `Arc`, then does the physical
-//!   `read`/`write`/`seek` — and any [`Tier::wait_data`] throttle sleep —
-//!   under the per-fd mutex alone. A throttled persist-tier write on one
-//!   fd therefore stalls only callers of that same fd, never the table;
+//! * the fd table is a generation-tagged **slab** ([`FdTable`]): fds index
+//!   fixed slots in pre-allocated chunks, and each slot pairs an atomic
+//!   generation counter with the per-fd `Mutex<Option<OpenFile>>`.
+//!   `read`/`write`/`lseek` resolve a handle with one chunk-pointer load
+//!   plus one generation compare — **zero `RwLock` acquisitions, zero
+//!   allocation** — then do the physical I/O (and any
+//!   [`Tier::wait_data`] throttle sleep) under the per-fd mutex alone.
+//!   `open`/`close` publish/retire slots with a CAS on a Treiber
+//!   free-list; the generation (odd = live, even = retired, embedded in
+//!   the fd's high 32 bits) makes a recycled fd fail the compare instead
+//!   of ABA-resolving to another file's handle. A throttled persist-tier
+//!   write on one fd therefore stalls only callers of that same fd,
+//!   never the table;
 //! * the namespace is sharded independently (see [`crate::namespace`]);
-//!   per-call bookkeeping (`record_write`, open counts) touches exactly
-//!   one namespace shard, briefly;
-//! * call counters and tier capacity accounting are lock-free atomics.
+//!   per-call bookkeeping (`record_write`, open counts, LRU stamps)
+//!   touches exactly one namespace shard, briefly — and the shard index
+//!   and [`CleanPath`] are memoised in the per-fd state at open time, so
+//!   the write path never re-normalises or re-hashes the path;
+//! * call counters, admission counters, and tier capacity accounting are
+//!   lock-free atomics.
 //!
-//! Lock order (outer → inner): fd-shard lock → per-fd mutex → **transfer
-//! fence** ([`crate::transfer::FenceMap`]) → namespace shard lock. Tier
-//! throttles/capacity are atomics or self-contained and may be touched
-//! under any of these. The flusher/prefetcher threads never take fd
-//! locks, `SeaIo` never holds a namespace lock across physical I/O, and
-//! fence holders only ever take namespace locks (the inner direction),
-//! so no side can deadlock another. Metadata ops that would invalidate
-//! an in-flight tier-to-tier copy — `create` (truncate), `unlink`,
-//! `rename` — claim the path's fence first (rename claims both paths in
-//! ascending order), which cancels and drains the copy; see the
-//! [`crate::transfer`] docs for why that closes the seed's stranded-copy
-//! and interleaved-inode windows.
+//! What still locks: the per-fd mutex (exactly one fd's callers), one
+//! namespace shard per bookkeeping op, and the transfer fence registry's
+//! shard mutexes (brief map ops). Lock order (outer → inner): per-fd
+//! mutex → **transfer fence** ([`crate::transfer::FenceMap`]) →
+//! namespace shard lock. Tier throttles/capacity are atomics or
+//! self-contained and may be touched under any of these. The
+//! flusher/prefetcher threads never touch fd slots, `SeaIo` never holds
+//! a namespace lock across physical I/O, and fence holders only ever
+//! take namespace locks (the inner direction), so no side can deadlock
+//! another. Metadata ops that would invalidate an in-flight tier-to-tier
+//! copy — `create` (truncate), `unlink`, `rename` — claim the path's
+//! fence first (rename claims both paths in ascending order), which
+//! cancels and drains the copy; see the [`crate::transfer`] docs for why
+//! that closes the seed's stranded-copy and interleaved-inode windows.
+//!
+//! # Eviction vs. fence ordering
+//!
+//! The evict-to-make-room admission path
+//! ([`SeaCore::reserve_on_cache_evicting`]) drops cold, clean, closed,
+//! already-persisted cache replicas when a tier is full. Each victim is
+//! claimed with the **non-blocking** [`FenceMap::begin`]: a path whose
+//! fence is held (an in-flight flush/prefetch/spill copy) is simply
+//! skipped, so a copy is never evicted under itself and an admission
+//! caller that already holds a fence (`create`) or the per-fd mutex
+//! (write-path spill) never *waits* on a second fence — no cycle is
+//! possible. The namespace re-validates clean-and-closed under the shard
+//! lock ([`crate::namespace::Namespace::detach_replica_on`]) before any
+//! replica is detached — and only the drained tier's replica is dropped,
+//! never copies on other cache tiers. One visible seam remains:
+//! `SeaIo::open` resolves a replica *before* it can pin the file
+//! (`open_count` is bumped only after the physical open), so eviction
+//! may delete the resolved replica in that window; `open` handles it by
+//! re-resolving — the persist replica is never evicted, so the retry
+//! converges. Admission scans are memoised against the namespace's
+//! clean-and-closed transition counter, so a full cache of dirty
+//! in-flight files pays one failed candidate scan, not one per call.
+//!
+//! [`FenceMap::begin`]: crate::transfer::FenceMap::begin
 
 pub mod counters;
 
 pub use counters::{CallCounters, CallKind, CallStats};
 
-use std::collections::HashMap;
 use std::io::{Read, Seek, SeekFrom, Write};
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::config::SeaConfig;
 use crate::namespace::{CleanPath, Namespace};
 use crate::pathrules::SeaLists;
 use crate::prefetch::{PrefetchQueue, PrefetchRequest};
+use crate::stats::AdmissionStats;
 use crate::tiers::{Tier, TierIdx, TierSet};
 use crate::transfer::{Outcome, TransferEngine};
 
@@ -75,6 +112,16 @@ pub struct SeaCore {
     pub transfers: TransferEngine,
     /// Incremental staging-request queue feeding the prefetcher thread.
     pub prefetch: PrefetchQueue,
+    /// Cache-admission outcome counters (hit / evicted-to-fit /
+    /// fell-through) for the experiment reports.
+    pub admission: AdmissionStats,
+    /// Per-cache-tier negative-result memo for the eviction candidate
+    /// scan: the value of [`Namespace::evict_transitions`] at the last
+    /// scan that found nothing for that tier (`u64::MAX` = never
+    /// scanned). While no file transitions into clean-and-closed, a full
+    /// cache of dirty in-flight files costs one failed scan total, not
+    /// one O(files) walk per admission attempt.
+    admission_scan_memo: Vec<AtomicU64>,
     pub shutdown: AtomicBool,
 }
 
@@ -130,6 +177,122 @@ impl SeaCore {
             self.tier(tier).release(size);
         }
     }
+
+    /// Atomically detach every cache replica of `logical` — only while
+    /// the file is still clean and closed — then delete the physical
+    /// copies; the persist copy becomes the master. Returns the file
+    /// size (the bytes freed per dropped replica), or `None` when the
+    /// file was re-dirtied, reopened, or removed first. This is the
+    /// flusher's move/evict cleanup (drop *all* cache copies by policy);
+    /// the admission path's evict-to-make-room uses the tier-targeted
+    /// [`crate::namespace::Namespace::detach_replica_on`] instead.
+    pub fn drop_cache_replicas(&self, logical: &str) -> Option<u64> {
+        let persist = self.tiers.persist_idx();
+        let (size, dropped) = self.ns.detach_cache_replicas(logical, persist)?;
+        for tier in dropped {
+            self.delete_replica(logical, tier, size);
+        }
+        Some(size)
+    }
+
+    /// Evict-to-make-room: drop cold, clean, closed, already-persisted
+    /// replicas from cache `idx` (coldest LRU stamp first) until `bytes`
+    /// fit. A path whose transfer fence is held is skipped — an
+    /// in-flight copy is never evicted under itself, and because
+    /// [`crate::transfer::FenceMap::begin`] is non-blocking, a caller
+    /// already holding a fence or the per-fd mutex cannot deadlock here
+    /// (see the module docs). Returns whether the tier now has `bytes`
+    /// free; the reservation itself is left to the caller.
+    pub(crate) fn evict_cold_until(&self, idx: TierIdx, bytes: u64) -> bool {
+        let tier = self.tier(idx);
+        if tier.free() >= bytes {
+            return true;
+        }
+        if bytes > tier.capacity() {
+            return false; // could never fit, even empty
+        }
+        // Negative-result memo: if the last scan for this tier found no
+        // candidates and no file has transitioned into clean-and-closed
+        // since, skip the O(files) walk entirely. The counter is read
+        // *before* scanning, so a transition racing the scan moves it
+        // past the memoised value and the next attempt rescans.
+        let transitions = self.ns.evict_transitions();
+        if self.admission_scan_memo[idx].load(Ordering::Relaxed) == transitions {
+            return false;
+        }
+        let persist = self.tiers.persist_idx();
+        let candidates = self.ns.cold_cache_replicas(idx, persist);
+        if candidates.is_empty() {
+            self.admission_scan_memo[idx].store(transitions, Ordering::Relaxed);
+            return false;
+        }
+        for (logical, _size) in candidates {
+            if tier.free() >= bytes {
+                break;
+            }
+            let Some(_fence) = self.transfers.fences.begin(&logical) else {
+                continue; // copy in flight on this path: never evict under it
+            };
+            // Detach only this tier's replica — draining a full tmpfs
+            // must not also discard a perfectly good copy on another
+            // cache tier — re-validated clean-and-closed under the
+            // shard lock.
+            if let Some(size) = self.ns.detach_replica_on(&logical, idx, persist) {
+                self.delete_replica(&logical, idx, size);
+                self.admission.note_evicted_replica(size);
+            }
+        }
+        tier.free() >= bytes
+    }
+
+    /// [`TierSet::reserve_on_cache`] with the evict-to-make-room
+    /// admission path: when no cache can take `bytes` outright, drain
+    /// cold clean replicas (LRU over the namespace access stamps) until
+    /// the reservation fits. Every outcome is counted in
+    /// [`SeaCore::admission`]. `None` means no cache can hold the bytes
+    /// even after eviction — staging callers skip, spill falls through
+    /// to persist.
+    pub fn reserve_on_cache_evicting(&self, bytes: u64) -> Option<TierIdx> {
+        if let Some(idx) = self.tiers.reserve_on_cache(bytes) {
+            self.admission.note_hit();
+            return Some(idx);
+        }
+        if self.cfg.evict_to_fit {
+            for idx in 0..self.tiers.persist_idx() {
+                if self.evict_cold_until(idx, bytes) && self.tier(idx).try_reserve(bytes) {
+                    self.admission.note_evicted_to_fit();
+                    return Some(idx);
+                }
+            }
+        }
+        self.admission.note_fell_through();
+        None
+    }
+
+    /// New-file write placement (`create`): fastest cache with any free
+    /// byte — evicting a cold replica to reopen a full cache — else the
+    /// persistent tier. The 0-byte reservation grows with the writes
+    /// that follow, exactly as [`TierSet::place_write`] documents for
+    /// zero-byte requests.
+    pub fn place_new_file(&self) -> TierIdx {
+        let persist = self.tiers.persist_idx();
+        for idx in 0..persist {
+            if self.tier(idx).free() > 0 {
+                self.admission.note_hit();
+                return idx;
+            }
+        }
+        if self.cfg.evict_to_fit {
+            for idx in 0..persist {
+                if self.evict_cold_until(idx, 1) {
+                    self.admission.note_evicted_to_fit();
+                    return idx;
+                }
+            }
+        }
+        self.admission.note_fell_through();
+        persist
+    }
 }
 
 /// File-descriptor flags.
@@ -153,6 +316,9 @@ pub type Fd = u64;
 
 struct OpenFile {
     logical: CleanPath,
+    /// Namespace shard of `logical`, memoised at open so the write-path
+    /// `record_write` stops re-hashing the path on every call.
+    ns_shard: usize,
     tier: TierIdx,
     file: std::fs::File,
     writable: bool,
@@ -162,43 +328,243 @@ struct OpenFile {
     size: u64,
 }
 
-/// Number of fd-table shards (power of two; fds are allocated
-/// sequentially, so masking spreads adjacent fds over distinct shards).
-pub const FD_SHARDS: usize = 16;
+/// Slots per pre-allocated slab chunk.
+const SLAB_CHUNK: usize = 256;
 
-/// One fd-table shard: fd → per-fd handle.
-type FdShard = RwLock<HashMap<Fd, Arc<Mutex<OpenFile>>>>;
+/// Maximum chunks: up to `SLAB_CHUNK * SLAB_MAX_CHUNKS` concurrently
+/// open descriptors (far beyond any pipeline's RLIMIT_NOFILE).
+const SLAB_MAX_CHUNKS: usize = 4096;
 
-/// The sharded fd table: a brief shard lock hands out the per-fd handle;
-/// all physical I/O then happens under that handle's own mutex.
+/// Slot index of an fd (low 32 bits).
+fn fd_index(fd: Fd) -> usize {
+    (fd & 0xFFFF_FFFF) as usize
+}
+
+/// Generation tag of an fd (high 32 bits; odd for every issued fd).
+fn fd_generation(fd: Fd) -> u64 {
+    fd >> 32
+}
+
+/// One slab slot. The invariant maintained under `file`'s mutex: `gen`
+/// is odd ⇔ `file` holds an [`OpenFile`], and the odd value equals the
+/// generation embedded in exactly one issued, not-yet-closed fd.
+struct FdSlot {
+    /// Generation counter, wrapped to 32 bits: even = free, odd =
+    /// occupied. Bumped on publish (even→odd) and retire (odd→even), so
+    /// a stale fd's compare fails forever after its close — a recycled
+    /// slot can never ABA-resolve to another file's handle. (A false
+    /// match would need the same slot to be recycled exactly 2³¹ times
+    /// between an fd's issue and its stale use.)
+    gen: AtomicU64,
+    /// Intrusive Treiber-stack link: next free slot index + 1 (0 = end
+    /// of list). Meaningful only while the slot is free.
+    next_free: AtomicU64,
+    /// The open file, present iff `gen` is odd. All physical I/O — and
+    /// any tier throttle sleep — happens under this per-fd mutex alone.
+    file: Mutex<Option<OpenFile>>,
+}
+
+impl FdSlot {
+    fn new() -> FdSlot {
+        FdSlot {
+            gen: AtomicU64::new(0),
+            next_free: AtomicU64::new(0),
+            file: Mutex::new(None),
+        }
+    }
+}
+
+/// The lock-free, generation-tagged slab fd table (see the module docs).
+/// Resolution is one chunk-pointer load + one generation compare;
+/// publish/retire go through a CAS'd free-list; chunks are allocated
+/// on demand and never move or shrink until drop.
 struct FdTable {
-    shards: Vec<FdShard>,
+    /// Lazily allocated chunks of [`SLAB_CHUNK`] slots each. A chunk
+    /// pointer transitions null → allocated exactly once and stays valid
+    /// until `Drop` (which requires `&mut self`), so the fast path may
+    /// dereference it after a single `Acquire` load.
+    chunks: Box<[AtomicPtr<FdSlot>]>,
+    /// Treiber-stack head over free slot indices, packed as
+    /// `(aba_tag << 32) | (slot_index + 1)`; low half 0 = empty. The tag
+    /// increments on every successful CAS, defeating ABA on the list
+    /// itself.
+    free_head: AtomicU64,
+    /// Slow-path growth lock guarding the allocated-chunk count; never
+    /// touched by fd resolution.
+    grow: Mutex<usize>,
 }
 
 impl FdTable {
     fn new() -> FdTable {
         FdTable {
-            shards: (0..FD_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            chunks: (0..SLAB_MAX_CHUNKS).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
+            free_head: AtomicU64::new(0),
+            grow: Mutex::new(0),
         }
     }
 
-    fn shard(&self, fd: Fd) -> &FdShard {
-        &self.shards[(fd as usize) & (FD_SHARDS - 1)]
+    /// The slot a live `fd` resolves to — the lock-free fast path: one
+    /// chunk-pointer load plus one generation compare. `None` = stale or
+    /// never-issued fd.
+    fn slot(&self, fd: Fd) -> Option<&FdSlot> {
+        let gen = fd_generation(fd);
+        if gen & 1 == 0 {
+            return None; // even generation: never a live fd
+        }
+        let idx = fd_index(fd);
+        let chunk = self.chunks.get(idx / SLAB_CHUNK)?;
+        let base = chunk.load(Ordering::Acquire);
+        if base.is_null() {
+            return None;
+        }
+        // Safety: a non-null chunk pointer is a leaked `Box<[FdSlot]>` of
+        // SLAB_CHUNK slots that lives until this table's Drop.
+        let slot = unsafe { &*base.add(idx % SLAB_CHUNK) };
+        if slot.gen.load(Ordering::Acquire) != gen {
+            return None;
+        }
+        Some(slot)
     }
 
-    fn insert(&self, fd: Fd, of: OpenFile) {
-        self.shard(fd)
-            .write()
-            .unwrap()
-            .insert(fd, Arc::new(Mutex::new(of)));
+    /// Slot by raw index — free-list traffic only; the index always
+    /// comes from an allocated chunk.
+    fn slot_raw(&self, idx: usize) -> &FdSlot {
+        let base = self.chunks[idx / SLAB_CHUNK].load(Ordering::Acquire);
+        debug_assert!(!base.is_null(), "free-list index into unallocated chunk");
+        unsafe { &*base.add(idx % SLAB_CHUNK) }
     }
 
-    fn get(&self, fd: Fd) -> Option<Arc<Mutex<OpenFile>>> {
-        self.shard(fd).read().unwrap().get(&fd).cloned()
+    fn pop_free(&self) -> Option<usize> {
+        let mut head = self.free_head.load(Ordering::Acquire);
+        loop {
+            let low = head as u32; // (slot_index + 1), 0 = empty list
+            if low == 0 {
+                return None;
+            }
+            let idx = low as usize - 1;
+            let next = self.slot_raw(idx).next_free.load(Ordering::Acquire);
+            let tagged = (((head >> 32).wrapping_add(1)) << 32) | (next & 0xFFFF_FFFF);
+            match self.free_head.compare_exchange_weak(
+                head,
+                tagged,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some(idx),
+                Err(h) => head = h,
+            }
+        }
     }
 
-    fn remove(&self, fd: Fd) -> Option<Arc<Mutex<OpenFile>>> {
-        self.shard(fd).write().unwrap().remove(&fd)
+    fn push_free(&self, idx: usize) {
+        let slot = self.slot_raw(idx);
+        let mut head = self.free_head.load(Ordering::Acquire);
+        loop {
+            slot.next_free.store(head & 0xFFFF_FFFF, Ordering::Release);
+            let tagged = (((head >> 32).wrapping_add(1)) << 32) | (idx as u64 + 1);
+            match self.free_head.compare_exchange_weak(
+                head,
+                tagged,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return,
+                Err(h) => head = h,
+            }
+        }
+    }
+
+    /// Cold path: the free list is empty — allocate the next chunk under
+    /// the growth lock and take its first slot (the rest go on the free
+    /// list).
+    fn grow_and_pop(&self) -> usize {
+        let mut n = self.grow.lock().unwrap();
+        // another opener may have grown while we waited for the lock
+        if let Some(idx) = self.pop_free() {
+            return idx;
+        }
+        let chunk_idx = *n;
+        assert!(
+            chunk_idx < SLAB_MAX_CHUNKS,
+            "fd table exhausted ({} concurrently open descriptors)",
+            SLAB_MAX_CHUNKS * SLAB_CHUNK
+        );
+        let mut slots = Vec::with_capacity(SLAB_CHUNK);
+        slots.resize_with(SLAB_CHUNK, FdSlot::new);
+        let base = Box::into_raw(slots.into_boxed_slice()) as *mut FdSlot;
+        self.chunks[chunk_idx].store(base, Ordering::Release);
+        *n = chunk_idx + 1;
+        let first = chunk_idx * SLAB_CHUNK;
+        for idx in (first + 1..first + SLAB_CHUNK).rev() {
+            self.push_free(idx);
+        }
+        first
+    }
+
+    /// Publish `of` in a fresh slot: pop the free list (growing on
+    /// exhaustion), install the file, then flip the generation even→odd
+    /// with `Release` so the fd only validates once the file is visible.
+    fn insert(&self, of: OpenFile) -> Fd {
+        let idx = match self.pop_free() {
+            Some(idx) => idx,
+            None => self.grow_and_pop(),
+        };
+        let slot = self.slot_raw(idx);
+        // The slot is exclusively ours until the generation flips: a
+        // popped slot is unreachable from the free list, and its even
+        // generation fails every in-flight stale-fd compare.
+        let gen = (slot.gen.load(Ordering::Relaxed) + 1) & 0xFFFF_FFFF;
+        debug_assert_eq!(gen & 1, 1, "publishing a slot with an even generation");
+        *slot.file.lock().unwrap() = Some(of);
+        slot.gen.store(gen, Ordering::Release);
+        (gen << 32) | idx as u64
+    }
+
+    /// Lock `fd`'s slot for I/O. The generation is re-validated **under
+    /// the per-fd mutex**: a racing close may retire (and a racing open
+    /// republish) the slot between the lock-free lookup and the lock
+    /// acquisition, and the re-check turns that into `None` (→ `BadFd`)
+    /// instead of another file's handle.
+    fn lock(&self, fd: Fd) -> Option<MutexGuard<'_, Option<OpenFile>>> {
+        let slot = self.slot(fd)?;
+        let guard = slot.file.lock().unwrap();
+        if slot.gen.load(Ordering::Acquire) == fd_generation(fd) && guard.is_some() {
+            Some(guard)
+        } else {
+            None
+        }
+    }
+
+    /// Take `fd`'s [`OpenFile`] out and retire the slot (odd→even, then
+    /// back on the free list). `None` = stale fd. Blocks until in-flight
+    /// I/O on this fd's mutex drains — close-vs-read races resolve to
+    /// either completed I/O or `BadFd`, never torn state.
+    fn remove(&self, fd: Fd) -> Option<OpenFile> {
+        let slot = self.slot(fd)?;
+        let mut guard = slot.file.lock().unwrap();
+        if slot.gen.load(Ordering::Acquire) != fd_generation(fd) {
+            return None;
+        }
+        let of = guard.take()?;
+        slot.gen.store((fd_generation(fd) + 1) & 0xFFFF_FFFF, Ordering::Release);
+        drop(guard);
+        self.push_free(fd_index(fd));
+        Some(of)
+    }
+}
+
+impl Drop for FdTable {
+    fn drop(&mut self) {
+        for chunk in self.chunks.iter() {
+            let base = chunk.load(Ordering::Acquire);
+            if !base.is_null() {
+                // Safety: allocated in grow_and_pop as Box<[FdSlot]> of
+                // exactly SLAB_CHUNK slots.
+                unsafe {
+                    drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(base, SLAB_CHUNK)));
+                }
+            }
+        }
     }
 }
 
@@ -234,7 +600,6 @@ fn io_err(path: &str, source: std::io::Error) -> SeaError {
 pub struct SeaIo {
     core: Arc<SeaCore>,
     fds: FdTable,
-    next_fd: AtomicU64,
 }
 
 impl SeaIo {
@@ -251,6 +616,8 @@ impl SeaIo {
     ) -> Result<SeaIo, SeaError> {
         let tiers = TierSet::new(&cfg.caches, &cfg.persist, shape_persist)?;
         let transfers = TransferEngine::new(cfg.transfer_workers, cfg.copy_buf_bytes);
+        let admission_scan_memo =
+            (0..tiers.persist_idx()).map(|_| AtomicU64::new(u64::MAX)).collect();
         let core = Arc::new(SeaCore {
             tiers,
             ns: Namespace::new(),
@@ -258,13 +625,14 @@ impl SeaIo {
             counters: CallCounters::default(),
             transfers,
             prefetch: PrefetchQueue::new(),
+            admission: AdmissionStats::default(),
+            admission_scan_memo,
             shutdown: AtomicBool::new(false),
             cfg,
         });
         let sea = SeaIo {
             core,
             fds: FdTable::new(),
-            next_fd: AtomicU64::new(3), // 0..2 reserved, as in POSIX
         };
         sea.register_existing()?;
         crate::prefetch::stage_listed(&sea.core).map_err(|(path, e)| io_err(&path, e))?;
@@ -336,13 +704,12 @@ impl SeaIo {
             .push(PrefetchRequest::Readahead(CleanPath::new(path)));
     }
 
-    fn alloc_fd(&self) -> Fd {
-        self.next_fd.fetch_add(1, Ordering::Relaxed)
-    }
-
-    /// The per-fd handle for `fd` (brief shard read-lock, no I/O).
-    fn fd_handle(&self, fd: Fd) -> Result<Arc<Mutex<OpenFile>>, SeaError> {
-        self.fds.get(fd).ok_or(SeaError::BadFd(fd))
+    /// True if `fd` currently resolves to a live descriptor — the slab
+    /// fast path in isolation (one atomic chunk-pointer load + one
+    /// generation compare; no lock, no I/O). The microbenchmarks use
+    /// this to time fd resolution separately from the physical call.
+    pub fn fd_is_valid(&self, fd: Fd) -> bool {
+        self.fds.slot(fd).is_some()
     }
 
     // ------------------------------------------------------------------
@@ -359,8 +726,9 @@ impl SeaIo {
         // interleave bytes with the new one nor publish over it.
         let _fence = self.core.transfers.fences.block(&logical);
         // Policy: highest-priority cache with room (0-byte reservation
-        // grows with writes); always succeeds at the persistent tier.
-        let tier = self.core.tiers.place_write(0);
+        // grows with writes), evicting a cold clean replica to reopen a
+        // full cache; always succeeds at the persistent tier.
+        let tier = self.core.place_new_file();
         if self.core.is_persist(tier) {
             self.core.counters.bump_persist();
         }
@@ -381,19 +749,17 @@ impl SeaIo {
                 }
             }
         }
-        self.core.ns.update(&logical, |m| m.open_count += 1);
-        let fd = self.alloc_fd();
-        self.fds.insert(
-            fd,
-            OpenFile {
-                logical,
-                tier,
-                file,
-                writable: true,
-                pos: 0,
-                size: 0,
-            },
-        );
+        self.core.ns.note_open(&logical);
+        let ns_shard = crate::namespace::shard_index(&logical);
+        let fd = self.fds.insert(OpenFile {
+            logical,
+            ns_shard,
+            tier,
+            file,
+            writable: true,
+            pos: 0,
+            size: 0,
+        });
         Ok(fd)
     }
 
@@ -402,22 +768,74 @@ impl SeaIo {
     pub fn open(&self, path: &str, mode: OpenMode) -> Result<Fd, SeaError> {
         self.core.counters.bump(CallKind::open);
         let logical = CleanPath::new(path);
-        let (tier, size) = self
-            .core
-            .ns
-            .with_meta(&logical, |m| (m.fastest_replica(), m.size))
-            .ok_or_else(|| SeaError::NotFound(logical.to_string()))?;
+        // Resolve → physically open → pin (note_open) → re-validate.
+        // Between the namespace resolution and the pin, the
+        // evict-to-make-room path may legitimately detach and delete the
+        // very cache replica we resolved: its clean/closed re-check
+        // cannot see a descriptor that is not counted yet. Eviction's
+        // detach and our `note_open` serialise on the same namespace
+        // shard lock, so the has-replica re-check after the pin is
+        // authoritative — either the detach came first (we observe the
+        // missing replica and re-resolve; a descriptor on a doomed
+        // inode is never returned, which matters for ReadWrite opens)
+        // or the pin came first (the detach refuses). The persist
+        // replica is never evicted, so re-resolving converges; the
+        // bound only guards against pathological unlink/recreate
+        // storms.
+        let mut attempts = 0;
+        let (tier, size, file) = loop {
+            let (tier, size) = self
+                .core
+                .ns
+                .with_meta(&logical, |m| (m.fastest_replica(), m.size))
+                .ok_or_else(|| SeaError::NotFound(logical.to_string()))?;
+            self.core.tier(tier).wait_meta();
+            let physical = self.core.tier(tier).physical(&logical);
+            match std::fs::OpenOptions::new()
+                .read(true)
+                .write(mode == OpenMode::ReadWrite)
+                .open(&physical)
+            {
+                Ok(file) => {
+                    if !self.core.ns.note_open(&logical) {
+                        // vanished (unlink/rename) between resolve and pin
+                        return Err(SeaError::NotFound(logical.to_string()));
+                    }
+                    let replica_alive = self
+                        .core
+                        .ns
+                        .with_meta(&logical, |m| m.has_replica(tier))
+                        .unwrap_or(false);
+                    if replica_alive {
+                        break (tier, size, file);
+                    }
+                    // Evicted under us: unpin, drop the stale handle,
+                    // re-resolve (next round lands on the persist copy).
+                    self.core.ns.note_close(&logical);
+                    if attempts >= 8 {
+                        return Err(io_err(
+                            &logical,
+                            std::io::Error::new(
+                                std::io::ErrorKind::NotFound,
+                                "replica repeatedly evicted during open",
+                            ),
+                        ));
+                    }
+                    attempts += 1;
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::NotFound
+                        && !self.core.is_persist(tier)
+                        && attempts < 8 =>
+                {
+                    attempts += 1;
+                }
+                Err(e) => return Err(io_err(&logical, e)),
+            }
+        };
         if self.core.is_persist(tier) {
             self.core.counters.bump_persist();
         }
-        self.core.tier(tier).wait_meta();
-        let physical = self.core.tier(tier).physical(&logical);
-        let file = std::fs::OpenOptions::new()
-            .read(true)
-            .write(mode == OpenMode::ReadWrite)
-            .open(&physical)
-            .map_err(|e| io_err(&logical, e))?;
-        self.core.ns.update(&logical, |m| m.open_count += 1);
         // Feed the prefetcher: a read served from the persistent tier is
         // both a promotion candidate (this file) and a readahead trigger
         // (its BIDS siblings). Pushes are cheap hints; the background
@@ -437,25 +855,23 @@ impl SeaIo {
                     .push(PrefetchRequest::Readahead(logical.clone()));
             }
         }
-        let fd = self.alloc_fd();
-        self.fds.insert(
-            fd,
-            OpenFile {
-                logical,
-                tier,
-                file,
-                writable: mode == OpenMode::ReadWrite,
-                pos: 0,
-                size,
-            },
-        );
+        let ns_shard = crate::namespace::shard_index(&logical);
+        let fd = self.fds.insert(OpenFile {
+            logical,
+            ns_shard,
+            tier,
+            file,
+            writable: mode == OpenMode::ReadWrite,
+            pos: 0,
+            size,
+        });
         Ok(fd)
     }
 
     pub fn write(&self, fd: Fd, buf: &[u8]) -> Result<usize, SeaError> {
         self.core.counters.bump(CallKind::write);
-        let handle = self.fd_handle(fd)?;
-        let mut of = handle.lock().unwrap();
+        let mut guard = self.fds.lock(fd).ok_or(SeaError::BadFd(fd))?;
+        let of = guard.as_mut().expect("validated live fd slot");
         if !of.writable {
             return Err(SeaError::NotWritable(fd));
         }
@@ -463,8 +879,17 @@ impl SeaIo {
         let growth = new_end.saturating_sub(of.size);
         let persist = self.core.is_persist(of.tier);
         if growth > 0 && !persist && !self.core.tier(of.tier).try_reserve(growth) {
-            // Cache full: spill the whole file to the next tier with room.
-            Self::spill_locked(&self.core, &mut of, growth)?;
+            // Cache full: first try to make room in place by evicting
+            // cold clean replicas; otherwise spill the whole file to the
+            // next tier with room.
+            if self.core.cfg.evict_to_fit
+                && self.core.evict_cold_until(of.tier, growth)
+                && self.core.tier(of.tier).try_reserve(growth)
+            {
+                self.core.admission.note_evicted_to_fit();
+            } else {
+                Self::spill_locked(&self.core, of, growth)?;
+            }
         }
         let persist = self.core.is_persist(of.tier);
         if persist {
@@ -477,7 +902,7 @@ impl SeaIo {
             of.size = new_end;
         }
         self.core.counters.add_written(buf.len() as u64, persist);
-        self.core.ns.record_write(&of.logical, of.size, of.tier);
+        self.core.ns.record_write_in(of.ns_shard, &of.logical, of.size, of.tier);
         Ok(buf.len())
     }
 
@@ -495,11 +920,23 @@ impl SeaIo {
         let mut target = persist;
         for idx in start..persist {
             if core.tier(idx).try_reserve(needed) {
+                core.admission.note_hit();
+                target = idx;
+                break;
+            }
+            // Full lower cache: evict cold clean replicas there before
+            // giving up on it (fence-skipping, see evict_cold_until).
+            if core.cfg.evict_to_fit
+                && core.evict_cold_until(idx, needed)
+                && core.tier(idx).try_reserve(needed)
+            {
+                core.admission.note_evicted_to_fit();
                 target = idx;
                 break;
             }
         }
         if target == persist {
+            core.admission.note_fell_through();
             core.tiers.get(persist).try_reserve(needed);
         }
         of.file.sync_all().ok();
@@ -535,8 +972,8 @@ impl SeaIo {
 
     pub fn read(&self, fd: Fd, buf: &mut [u8]) -> Result<usize, SeaError> {
         self.core.counters.bump(CallKind::read);
-        let handle = self.fd_handle(fd)?;
-        let mut of = handle.lock().unwrap();
+        let mut guard = self.fds.lock(fd).ok_or(SeaError::BadFd(fd))?;
+        let of = guard.as_mut().expect("validated live fd slot");
         let persist = self.core.is_persist(of.tier);
         if persist {
             self.core.counters.bump_persist();
@@ -550,8 +987,8 @@ impl SeaIo {
 
     pub fn lseek(&self, fd: Fd, pos: SeekFrom) -> Result<u64, SeaError> {
         self.core.counters.bump(CallKind::lseek);
-        let handle = self.fd_handle(fd)?;
-        let mut of = handle.lock().unwrap();
+        let mut guard = self.fds.lock(fd).ok_or(SeaError::BadFd(fd))?;
+        let of = guard.as_mut().expect("validated live fd slot");
         let new = of.file.seek(pos).map_err(|e| io_err(&of.logical, e))?;
         of.pos = new;
         Ok(new)
@@ -559,30 +996,19 @@ impl SeaIo {
 
     pub fn fsync(&self, fd: Fd) -> Result<(), SeaError> {
         self.core.counters.bump(CallKind::fsync);
-        let handle = self.fd_handle(fd)?;
-        let of = handle.lock().unwrap();
+        let guard = self.fds.lock(fd).ok_or(SeaError::BadFd(fd))?;
+        let of = guard.as_ref().expect("validated live fd slot");
         of.file.sync_all().map_err(|e| io_err(&of.logical, e))
     }
 
     pub fn close(&self, fd: Fd) -> Result<(), SeaError> {
         self.core.counters.bump(CallKind::close);
-        let handle = self.fds.remove(fd).ok_or(SeaError::BadFd(fd))?;
-        // Common case: the table held the last reference, so take the
-        // OpenFile by value — no lock, no path clone. Fall back to a
-        // locked clone if another thread is still mid-call on this fd.
-        let (logical, tier, writable) = match Arc::try_unwrap(handle) {
-            Ok(mutex) => {
-                let of = mutex.into_inner().unwrap();
-                (of.logical, of.tier, of.writable)
-            }
-            Err(handle) => {
-                let of = handle.lock().unwrap();
-                (of.logical.clone(), of.tier, of.writable)
-            }
-        };
-        self.core
-            .ns
-            .update(&logical, |m| m.open_count = m.open_count.saturating_sub(1));
+        // Retiring the slot takes the OpenFile by value — no clone; a
+        // reader mid-call on this fd finishes first (per-fd mutex), then
+        // observes the retired generation as BadFd.
+        let of = self.fds.remove(fd).ok_or(SeaError::BadFd(fd))?;
+        let OpenFile { logical, tier, writable, .. } = of;
+        self.core.ns.note_close(&logical);
         // Closing a read-only persist-tier fd re-offers the file for
         // promotion: the prefetcher skips open files, so the open-time
         // hint may have been dropped while this descriptor pinned it.
@@ -801,6 +1227,82 @@ mod tests {
         assert_eq!(sea.core().tiers.get(0).used(), 64);
         let meta = sea.core().ns.lookup("/next").unwrap();
         assert_eq!(meta.replicas, vec![sea.core().tiers.persist_idx()]);
+    }
+
+    #[test]
+    fn write_evicts_cold_clean_replica_instead_of_spilling() {
+        // Cache 64 B, occupied by a clean, flushed, closed 60 B file:
+        // a growing write on a new fd must evict it (the persist copy
+        // survives) and land in the cache, not spill to lustre.
+        let dir = tempdir("evict-write");
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), 64)
+            .persist("lustre", dir.subdir("lustre"), 100 * MIB)
+            .build();
+        let lists = crate::pathrules::SeaLists::new(
+            crate::pathrules::PathRules::from_patterns(&[r".*\.out$"]).unwrap(),
+            Default::default(),
+            Default::default(),
+        );
+        let sea = SeaIo::mount_with(cfg, lists, |t| t).unwrap();
+        let fd = sea.create("/cold.out").unwrap();
+        sea.write(fd, &[1u8; 60]).unwrap();
+        sea.close(fd).unwrap();
+        let rep = crate::flusher::flush_pass(sea.core(), false);
+        assert_eq!(rep.flushed, 1, "{rep:?}");
+        assert_eq!(sea.core().tiers.get(0).used(), 60);
+
+        let fd = sea.create("/new.out").unwrap();
+        sea.write(fd, &[2u8; 30]).unwrap();
+        sea.close(fd).unwrap();
+        // the new file is cache-resident; the cold one fell back to its
+        // persisted copy, byte-for-byte intact
+        assert_eq!(sea.stat("/new.out").unwrap().tier, "tmpfs");
+        assert_eq!(sea.stat("/cold.out").unwrap().tier, "lustre");
+        assert_eq!(sea.core().tiers.get(0).used(), 30);
+        let fd = sea.open("/cold.out", OpenMode::Read).unwrap();
+        let mut buf = [0u8; 64];
+        let n = sea.read(fd, &mut buf).unwrap();
+        assert_eq!(&buf[..n], &[1u8; 60][..]);
+        sea.close(fd).unwrap();
+        let adm = sea.core().admission.snapshot();
+        assert!(adm.evicted_to_fit >= 1, "{adm:?}");
+        assert_eq!(adm.evicted_files, 1, "{adm:?}");
+    }
+
+    #[test]
+    fn dirty_residents_are_never_evicted_for_admission() {
+        // The resident file is dirty (never flushed): admission must not
+        // touch it — the growing write spills exactly as before.
+        let (_g, sea) = setup(64);
+        let fd = sea.create("/resident").unwrap();
+        sea.write(fd, &[1u8; 60]).unwrap();
+        sea.close(fd).unwrap();
+        let fd = sea.create("/spiller").unwrap();
+        sea.write(fd, &[2u8; 30]).unwrap();
+        sea.close(fd).unwrap();
+        assert_eq!(sea.stat("/resident").unwrap().tier, "tmpfs");
+        assert_eq!(sea.stat("/spiller").unwrap().tier, "lustre");
+        assert_eq!(sea.core().tiers.get(0).used(), 60);
+        let adm = sea.core().admission.snapshot();
+        assert_eq!(adm.evicted_files, 0, "{adm:?}");
+        assert!(adm.fell_through >= 1, "{adm:?}");
+    }
+
+    #[test]
+    fn fd_lookup_is_generation_checked() {
+        let (_g, sea) = setup(MIB);
+        let fd = sea.create("/gen.dat").unwrap();
+        assert!(sea.fd_is_valid(fd));
+        sea.close(fd).unwrap();
+        assert!(!sea.fd_is_valid(fd), "closed fd must not resolve");
+        // the slot is recycled by the next open; the stale fd stays dead
+        let fd2 = sea.create("/gen2.dat").unwrap();
+        assert!(sea.fd_is_valid(fd2));
+        assert!(!sea.fd_is_valid(fd), "recycled slot must not revive a stale fd");
+        assert!(matches!(sea.write(fd, b"x"), Err(SeaError::BadFd(_))));
+        assert!(matches!(sea.close(fd), Err(SeaError::BadFd(_))));
+        sea.close(fd2).unwrap();
     }
 
     #[test]

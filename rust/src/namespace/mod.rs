@@ -58,9 +58,27 @@
 //! drain time — the flusher no longer walks every file per pass to find
 //! eviction candidates.
 //!
+//! # LRU access stamps
+//!
+//! Every file carries [`FileMeta::last_access`], a stamp from a
+//! namespace-global logical clock bumped on open ([`Namespace::note_open`]),
+//! close ([`Namespace::note_close`]) and every recorded write — always
+//! under the shard lock the operation already holds, so recency tracking
+//! adds no extra lock traffic to the hot path. Reads through a long-lived
+//! descriptor are covered by the open/close stamps: while the descriptor
+//! is open the file is pinned (`open_count > 0` excludes it from
+//! eviction), and the close restamps it. Mount-time registration leaves
+//! the stamp at 0 ("never accessed"), so untouched inputs are the
+//! coldest candidates. The evict-to-make-room admission path
+//! (`SeaCore::reserve_on_cache_evicting`) orders its candidate scan
+//! ([`Namespace::cold_cache_replicas`]) by these stamps, coldest first.
+//!
 //! Hot paths avoid re-normalising paths via [`CleanPath`] (a proven-clean
-//! logical path) and avoid cloning whole [`FileMeta`] records (with their
-//! replica `Vec`s) via [`Namespace::with_meta`].
+//! logical path), avoid cloning whole [`FileMeta`] records (with their
+//! replica `Vec`s) via [`Namespace::with_meta`], and avoid re-hashing the
+//! path on every intercepted `write` via [`Namespace::record_write_in`]
+//! (the interceptor memoises the shard index in its per-fd state at open
+//! time).
 
 use std::borrow::Cow;
 use std::collections::{HashMap, HashSet};
@@ -223,6 +241,11 @@ pub struct FileMeta {
     /// ABA-fooled by truncate or unlink+recreate — writes landing
     /// *during* a flush copy are never silently marked clean.
     pub version: u64,
+    /// LRU access stamp from the namespace-global logical clock: bumped
+    /// on open, close, and every recorded write (see the module docs).
+    /// 0 = registered at mount and never touched since — the coldest
+    /// possible eviction candidate.
+    pub last_access: u64,
 }
 
 impl FileMeta {
@@ -235,6 +258,7 @@ impl FileMeta {
             open_count: 0,
             flushed: false,
             version: 0,
+            last_access: 0,
         }
     }
 
@@ -285,6 +309,7 @@ impl ShardState {
         &mut self,
         key: &str,
         vgen: &AtomicU64,
+        egen: &AtomicU64,
         always_stamp: bool,
         f: F,
     ) -> bool {
@@ -304,8 +329,11 @@ impl ShardState {
             // Clean and closed after this update (a close, a flush
             // commit, a staged replica): eviction candidate. Duplicates
             // collapse in the set; stale entries are re-validated at
-            // drain time.
+            // drain time. The global transition counter invalidates the
+            // admission path's "nothing evictable" memo (see
+            // [`Namespace::evict_transitions`]).
             self.evictable.insert(key.to_string());
+            egen.fetch_add(1, Ordering::Relaxed);
         }
         true
     }
@@ -316,25 +344,33 @@ impl ShardState {
     /// candidacy was dropped with the old key). The one place the
     /// rename re-enqueue rules live, shared by the same-shard and
     /// cross-shard arms of [`Namespace::rename`].
-    fn enqueue_moved(&mut self, to_k: String, meta: &FileMeta) {
+    fn enqueue_moved(&mut self, to_k: String, meta: &FileMeta, egen: &AtomicU64) {
         if meta.dirty {
             self.dirty.insert(to_k);
         } else if meta.open_count == 0 {
             self.evictable.insert(to_k);
+            egen.fetch_add(1, Ordering::Relaxed);
         }
     }
 
-    fn update<F: FnOnce(&mut FileMeta)>(&mut self, key: &str, vgen: &AtomicU64, f: F) -> bool {
-        self.update_inner(key, vgen, false, f)
+    fn update<F: FnOnce(&mut FileMeta)>(
+        &mut self,
+        key: &str,
+        vgen: &AtomicU64,
+        egen: &AtomicU64,
+        f: F,
+    ) -> bool {
+        self.update_inner(key, vgen, egen, false, f)
     }
 
     fn update_stamped<F: FnOnce(&mut FileMeta)>(
         &mut self,
         key: &str,
         vgen: &AtomicU64,
+        egen: &AtomicU64,
         f: F,
     ) -> bool {
-        self.update_inner(key, vgen, true, f)
+        self.update_inner(key, vgen, egen, true, f)
     }
 }
 
@@ -347,6 +383,13 @@ pub struct Namespace {
     /// Global write-generation source. Every issued stamp is unique
     /// across all paths and file lifetimes (see [`FileMeta::version`]).
     vgen: AtomicU64,
+    /// Global LRU access clock (see [`FileMeta::last_access`]).
+    agen: AtomicU64,
+    /// Clean-and-closed transition counter: bumped every time a file
+    /// (re-)enters the evictable state. The admission path memoises the
+    /// value of a scan that found no eviction candidates and skips
+    /// rescanning until this moves (see [`Namespace::evict_transitions`]).
+    egen: AtomicU64,
 }
 
 impl Default for Namespace {
@@ -354,6 +397,8 @@ impl Default for Namespace {
         Namespace {
             shards: (0..NS_SHARDS).map(|_| RwLock::new(ShardState::default())).collect(),
             vgen: AtomicU64::new(0),
+            agen: AtomicU64::new(0),
+            egen: AtomicU64::new(0),
         }
     }
 }
@@ -383,6 +428,30 @@ fn shard_of(path: &str) -> usize {
     (fnv1a(path) as usize) & (NS_SHARDS - 1)
 }
 
+/// Shard index of a path — for callers that memoise it (the
+/// interceptor's per-fd state) and feed it back through
+/// [`Namespace::record_write_in`] so the write hot path stops re-hashing
+/// per call.
+pub fn shard_index(path: &(impl PathArg + ?Sized)) -> usize {
+    shard_of(&path.to_clean())
+}
+
+/// The write-path meta mutation shared by [`Namespace::record_write`] and
+/// [`Namespace::record_write_in`]: grow, dirty, move the master to the
+/// written tier, invalidate stale replicas, restamp the LRU clock.
+fn apply_write(m: &mut FileMeta, new_size: u64, tier: TierIdx, stamp: u64) {
+    m.size = new_size;
+    m.dirty = true;
+    m.master = tier;
+    m.last_access = stamp;
+    // a write invalidates stale replicas: only the written tier
+    // holds current bytes
+    m.replicas.retain(|&t| t == tier);
+    if m.replicas.is_empty() {
+        m.replicas.push(tier);
+    }
+}
+
 impl Namespace {
     pub fn new() -> Self {
         Namespace::default()
@@ -400,11 +469,20 @@ impl Namespace {
     /// snapshot always sees it as stale.
     pub fn create(&self, logical: &(impl PathArg + ?Sized), tier: TierIdx) -> Option<FileMeta> {
         let key = logical.to_clean().into_owned();
+        let stamp = self.touch_stamp();
         let mut s = self.shard(&key).write().unwrap();
         let mut meta = FileMeta::new(tier);
         meta.version = fresh_stamp(&self.vgen);
+        meta.last_access = stamp;
         s.dirty.insert(key.clone());
         s.files.insert(key, meta)
+    }
+
+    /// A fresh LRU access stamp (monotone per namespace; fetched outside
+    /// the shard lock — strict ordering between racing touches of
+    /// *different* files is irrelevant to an LRU approximation).
+    fn touch_stamp(&self) -> u64 {
+        self.agen.fetch_add(1, Ordering::Relaxed) + 1
     }
 
     /// Full clone of the file's meta (cold paths and tests). Hot paths
@@ -448,7 +526,16 @@ impl Namespace {
         f: F,
     ) -> bool {
         let key = logical.to_clean();
-        self.shard(&key).write().unwrap().update(&key, &self.vgen, f)
+        self.shard(&key).write().unwrap().update(&key, &self.vgen, &self.egen, f)
+    }
+
+    /// Monotone count of clean-and-closed transitions — the version the
+    /// evict-to-make-room path compares against its "last scan found no
+    /// candidates" memo, so a full cache of dirty in-flight files does
+    /// not pay an O(files) candidate scan on every admission attempt.
+    /// Relaxed loads: a briefly stale value only delays one rescan.
+    pub fn evict_transitions(&self) -> u64 {
+        self.egen.load(Ordering::Relaxed)
     }
 
     /// Register a pre-existing, already-persisted file (the mount-time
@@ -482,16 +569,56 @@ impl Namespace {
         tier: TierIdx,
     ) -> bool {
         let key = logical.to_clean();
-        self.shard(&key).write().unwrap().update_stamped(&key, &self.vgen, |m| {
-            m.size = new_size;
-            m.dirty = true;
-            m.master = tier;
-            // a write invalidates stale replicas: only the written tier
-            // holds current bytes
-            m.replicas.retain(|&t| t == tier);
-            if m.replicas.is_empty() {
-                m.replicas.push(tier);
-            }
+        let stamp = self.touch_stamp();
+        self.shard(&key).write().unwrap().update_stamped(
+            &key,
+            &self.vgen,
+            &self.egen,
+            |m| apply_write(m, new_size, tier, stamp),
+        )
+    }
+
+    /// Hot-path variant of [`Namespace::record_write`] for callers that
+    /// memoised the shard index (via [`shard_index`]) at open time: the
+    /// path is already clean and already routed, so the per-call cost is
+    /// one shard write-lock and one map lookup — no re-hash.
+    pub fn record_write_in(
+        &self,
+        shard: usize,
+        logical: &CleanPath,
+        new_size: u64,
+        tier: TierIdx,
+    ) -> bool {
+        debug_assert_eq!(shard, shard_of(logical.as_str()));
+        let stamp = self.touch_stamp();
+        self.shards[shard].write().unwrap().update_stamped(
+            logical.as_str(),
+            &self.vgen,
+            &self.egen,
+            |m| apply_write(m, new_size, tier, stamp),
+        )
+    }
+
+    /// Open-path bookkeeping: bump the descriptor count and the LRU
+    /// access stamp in one locked op. Returns false if the path is
+    /// unknown.
+    pub fn note_open(&self, logical: &(impl PathArg + ?Sized)) -> bool {
+        let stamp = self.touch_stamp();
+        self.update(logical, |m| {
+            m.open_count += 1;
+            m.last_access = stamp;
+        })
+    }
+
+    /// Close-path bookkeeping: drop the descriptor count and restamp the
+    /// LRU clock (reads through a long-lived descriptor count as access
+    /// up to the close). The clean-and-closed transition inside `update`
+    /// feeds the evictable queue exactly as before.
+    pub fn note_close(&self, logical: &(impl PathArg + ?Sized)) -> bool {
+        let stamp = self.touch_stamp();
+        self.update(logical, |m| {
+            m.open_count = m.open_count.saturating_sub(1);
+            m.last_access = stamp;
         })
     }
 
@@ -531,6 +658,40 @@ impl Namespace {
         meta.replicas.retain(|&t| t == keep);
         meta.master = keep;
         Some((meta.size, dropped))
+    }
+
+    /// Atomically detach **only** the replica on `tier` from a file that
+    /// is still clean, closed, and holds a current `keep` (persist)
+    /// replica — the evict-to-make-room primitive. Unlike
+    /// [`Namespace::detach_cache_replicas`] it leaves replicas on other
+    /// cache tiers alone: draining a full tmpfs must not also throw away
+    /// a perfectly good SSD copy. Returns the file size (the bytes the
+    /// caller frees on `tier`), or `None` when the file was re-dirtied,
+    /// reopened, removed, or no longer holds both replicas.
+    pub fn detach_replica_on(
+        &self,
+        logical: &(impl PathArg + ?Sized),
+        tier: TierIdx,
+        keep: TierIdx,
+    ) -> Option<u64> {
+        if tier == keep {
+            return None;
+        }
+        let key = logical.to_clean();
+        let mut s = self.shard(&key).write().unwrap();
+        let meta = s.files.get_mut(&*key)?;
+        if meta.dirty
+            || meta.open_count > 0
+            || !meta.replicas.contains(&keep)
+            || !meta.replicas.contains(&tier)
+        {
+            return None;
+        }
+        meta.replicas.retain(|&t| t != tier);
+        if meta.master == tier {
+            meta.master = *meta.replicas.iter().min().expect("keep replica remains");
+        }
+        Some(meta.size)
     }
 
     /// Drop the replica on `tier`; if it was the master, the new master is
@@ -590,7 +751,7 @@ impl Namespace {
         let (si, di) = (shard_of(&from_k), shard_of(&to_k));
         if si == di {
             let mut s = self.shards[si].write().unwrap();
-            Self::rename_same_shard(&mut s, &from_k, to_k)
+            Self::rename_same_shard(&mut s, &from_k, to_k, &self.egen)
         } else {
             let (lo, hi) = (si.min(di), si.max(di));
             let mut a = self.shards[lo].write().unwrap();
@@ -604,7 +765,7 @@ impl Namespace {
                 Some(meta) => {
                     src.dirty.remove(&*from_k);
                     src.evictable.remove(&*from_k);
-                    dst.enqueue_moved(to_k.clone(), &meta);
+                    dst.enqueue_moved(to_k.clone(), &meta, &self.egen);
                     dst.files.insert(to_k, meta);
                     true
                 }
@@ -613,12 +774,17 @@ impl Namespace {
         }
     }
 
-    fn rename_same_shard(s: &mut ShardState, from_k: &str, to_k: String) -> bool {
+    fn rename_same_shard(
+        s: &mut ShardState,
+        from_k: &str,
+        to_k: String,
+        egen: &AtomicU64,
+    ) -> bool {
         match s.files.remove(from_k) {
             Some(meta) => {
                 s.dirty.remove(from_k);
                 s.evictable.remove(from_k);
-                s.enqueue_moved(to_k.clone(), &meta);
+                s.enqueue_moved(to_k.clone(), &meta, egen);
                 s.files.insert(to_k, meta);
                 true
             }
@@ -767,6 +933,46 @@ impl Namespace {
             );
         }
         out
+    }
+
+    /// Evict-to-make-room candidate scan: clean, closed files holding
+    /// both a replica on cache `tier` and a persisted copy on `persist`
+    /// (so dropping the cache copy loses no data), ordered coldest first
+    /// by [`FileMeta::last_access`]. A snapshot only — callers must
+    /// re-validate under the shard lock ([`Namespace::detach_replica_on`])
+    /// before acting, exactly as the flusher's eviction sweep does.
+    /// O(files), but only reached when a cache tier is already full, and
+    /// rate-limited by the caller's [`Namespace::evict_transitions`]
+    /// memo — the admission fast path never scans.
+    pub fn cold_cache_replicas(&self, tier: TierIdx, persist: TierIdx) -> Vec<(String, u64)> {
+        /// One admission attempt never needs more victims than this; a
+        /// cheap selection bounds the sort so a huge namespace with many
+        /// candidates does not pay an O(n log n) sort per attempt.
+        const MAX_CANDIDATES: usize = 256;
+        if tier == persist {
+            return Vec::new();
+        }
+        let mut v: Vec<(u64, String, u64)> = Vec::new();
+        for shard in &self.shards {
+            let s = shard.read().unwrap();
+            for (k, m) in &s.files {
+                if !m.dirty
+                    && m.open_count == 0
+                    && m.has_replica(tier)
+                    && m.has_replica(persist)
+                {
+                    v.push((m.last_access, k.clone(), m.size));
+                }
+            }
+        }
+        if v.len() > MAX_CANDIDATES {
+            // keep only the MAX_CANDIDATES coldest (O(n) selection),
+            // then sort just those
+            v.select_nth_unstable(MAX_CANDIDATES - 1);
+            v.truncate(MAX_CANDIDATES);
+        }
+        v.sort();
+        v.into_iter().map(|(_, k, size)| (k, size)).collect()
     }
 
     /// Snapshot of clean, closed files (eviction candidates).
@@ -1158,6 +1364,122 @@ mod tests {
         assert_eq!(ns.files_on_tier(0), 2);
         assert_eq!(ns.files_on_tier(1), 1);
         assert_eq!(ns.files_on_tier(9), 0);
+    }
+
+    #[test]
+    fn access_stamps_order_cold_cache_replicas() {
+        let ns = Namespace::new();
+        let persist = 2;
+        for p in ["/a", "/b", "/c"] {
+            ns.register_clean(p, persist, 10);
+            ns.add_replica(p, 0);
+        }
+        // untouched files are tied at stamp 0 → path order
+        assert_eq!(
+            ns.cold_cache_replicas(0, persist),
+            vec![("/a".to_string(), 10), ("/b".to_string(), 10), ("/c".to_string(), 10)]
+        );
+        // touching /a makes it the hottest
+        ns.note_open("/a");
+        ns.note_close("/a");
+        let cold: Vec<String> =
+            ns.cold_cache_replicas(0, persist).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(cold, vec!["/b", "/c", "/a"]);
+        // open files and dirty files are not candidates
+        ns.note_open("/b");
+        ns.record_write("/c", 20, 0);
+        let cold: Vec<String> =
+            ns.cold_cache_replicas(0, persist).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(cold, vec!["/a"]);
+        // files without a persist replica are never offered
+        ns.create("/cache-only", 0);
+        ns.update("/cache-only", |m| m.dirty = false);
+        assert!(!ns
+            .cold_cache_replicas(0, persist)
+            .iter()
+            .any(|(k, _)| k == "/cache-only"));
+        // tier == persist is never a valid scan
+        assert!(ns.cold_cache_replicas(persist, persist).is_empty());
+    }
+
+    #[test]
+    fn record_write_in_matches_record_write() {
+        let ns = Namespace::new();
+        ns.create("/f", 1);
+        ns.add_replica("/f", 2);
+        let path = CleanPath::new("/f");
+        let shard = shard_index(&path);
+        assert!(ns.record_write_in(shard, &path, 77, 1));
+        let m = ns.lookup("/f").unwrap();
+        assert!(m.dirty);
+        assert_eq!(m.size, 77);
+        assert_eq!(m.master, 1);
+        assert_eq!(m.replicas, vec![1]);
+        assert!(m.last_access > 0);
+        // unknown path reports false, like record_write
+        let ghost = CleanPath::new("/ghost");
+        assert!(!ns.record_write_in(shard_index(&ghost), &ghost, 1, 0));
+    }
+
+    #[test]
+    fn detach_replica_on_targets_one_tier_only() {
+        let ns = Namespace::new();
+        let persist = 2;
+        ns.register_clean("/f", persist, 50);
+        ns.add_replica("/f", 0);
+        ns.add_replica("/f", 1);
+        // detaching tier 0 leaves the tier-1 replica alone
+        assert_eq!(ns.detach_replica_on("/f", 0, persist), Some(50));
+        let m = ns.lookup("/f").unwrap();
+        assert_eq!(m.replicas, vec![persist, 1]);
+        // already gone: second detach is a no-op
+        assert_eq!(ns.detach_replica_on("/f", 0, persist), None);
+        // master on the detached tier falls back to the fastest remaining
+        ns.update("/f", |m| m.master = 1);
+        assert_eq!(ns.detach_replica_on("/f", 1, persist), Some(50));
+        assert_eq!(ns.lookup("/f").unwrap().master, persist);
+        assert_eq!(ns.lookup("/f").unwrap().replicas, vec![persist]);
+        // guards: dirty, open, tier==keep, missing keep replica
+        assert_eq!(ns.detach_replica_on("/f", persist, persist), None);
+        ns.add_replica("/f", 0);
+        ns.note_open("/f");
+        assert_eq!(ns.detach_replica_on("/f", 0, persist), None, "open file");
+        ns.note_close("/f");
+        ns.record_write("/f", 60, 0); // dirty, and drops the persist replica
+        assert_eq!(ns.detach_replica_on("/f", 0, persist), None, "dirty file");
+        assert_eq!(ns.detach_replica_on("/missing", 0, persist), None);
+    }
+
+    #[test]
+    fn evict_transitions_move_on_clean_closed_entries() {
+        let ns = Namespace::new();
+        let t0 = ns.evict_transitions();
+        ns.create("/f", 0); // dirty: no transition
+        assert_eq!(ns.evict_transitions(), t0);
+        ns.update("/f", |m| m.dirty = false); // clean-and-closed
+        let t1 = ns.evict_transitions();
+        assert!(t1 > t0);
+        // a rename of the clean file re-enters the evictable queue
+        ns.rename("/f", "/g");
+        assert!(ns.evict_transitions() > t1);
+    }
+
+    #[test]
+    fn note_open_close_track_count_and_recency() {
+        let ns = Namespace::new();
+        ns.create("/f", 0);
+        let t0 = ns.lookup("/f").unwrap().last_access;
+        assert!(ns.note_open("/f"));
+        let m = ns.lookup("/f").unwrap();
+        assert_eq!(m.open_count, 1);
+        assert!(m.last_access > t0);
+        let t1 = m.last_access;
+        assert!(ns.note_close("/f"));
+        let m = ns.lookup("/f").unwrap();
+        assert_eq!(m.open_count, 0);
+        assert!(m.last_access > t1);
+        assert!(!ns.note_open("/missing"));
+        assert!(!ns.note_close("/missing"));
     }
 
     #[test]

@@ -80,6 +80,11 @@ pub struct RealRunReport {
     pub images: usize,
     pub stats: CallStats,
     pub flush: FlushReport,
+    /// Cache-admission outcomes (hit / evicted-to-fit / fell-through):
+    /// how often writes and staging found cache room, made room by
+    /// evicting cold clean replicas, or fell through to the persistent
+    /// tier — the attribution data behind makespan differences.
+    pub admission: crate::stats::AdmissionSnapshot,
     /// Files physically present under the persistent root afterwards
     /// (the paper's §3.6 quota argument).
     pub files_on_persist: usize,
@@ -332,6 +337,7 @@ pub fn run_real(cfg: &RealRunConfig, svc: &ComputeService) -> Result<RealRunRepo
 
     let drain_sw = Stopwatch::start();
     let n_images = images.len();
+    let admission = session.io().core().admission.snapshot();
     let (stats, flush) = session.unmount();
     let drain_secs = drain_sw.elapsed_secs();
 
@@ -342,6 +348,7 @@ pub fn run_real(cfg: &RealRunConfig, svc: &ComputeService) -> Result<RealRunRepo
         images: n_images,
         stats,
         flush,
+        admission,
         files_on_persist: count_files(&cfg.data_root),
     })
 }

@@ -67,12 +67,25 @@ pub enum PrefetchRequest {
 
 #[derive(Default)]
 struct QueueState {
-    order: VecDeque<PrefetchRequest>,
+    /// Promote-on-read staging requests: a worker has *actually read*
+    /// (or is reading) these files, so they drain first.
+    stage: VecDeque<PrefetchRequest>,
+    /// BIDS readahead expansion hints: speculative, drained after every
+    /// pending promote request.
+    readahead: VecDeque<PrefetchRequest>,
     queued: HashSet<PrefetchRequest>,
 }
 
+impl QueueState {
+    fn len(&self) -> usize {
+        self.stage.len() + self.readahead.len()
+    }
+}
+
 /// Incremental staging-request queue shared by the interceptor (producer)
-/// and the prefetcher thread (consumer). Deduplicates while queued.
+/// and the prefetcher thread (consumer). Deduplicates while queued, and
+/// drains promote-on-read requests strictly before readahead hints: a
+/// file a worker demonstrably needs always beats a speculative sibling.
 #[derive(Default)]
 pub struct PrefetchQueue {
     state: Mutex<QueueState>,
@@ -90,37 +103,44 @@ impl PrefetchQueue {
         PrefetchQueue::default()
     }
 
-    /// Enqueue a request. Returns false when dropped (already queued, or
-    /// the queue is at capacity).
+    /// Enqueue a request at the tail of its priority class. Returns
+    /// false when dropped (already queued, or the queue is at capacity).
     pub fn push(&self, req: PrefetchRequest) -> bool {
         let mut s = self.state.lock().unwrap();
-        if s.order.len() >= QUEUE_CAP || s.queued.contains(&req) {
+        if s.len() >= QUEUE_CAP || s.queued.contains(&req) {
             return false;
         }
         s.queued.insert(req.clone());
-        s.order.push_back(req);
+        if matches!(req, PrefetchRequest::Stage(_)) {
+            s.stage.push_back(req);
+        } else {
+            s.readahead.push_back(req);
+        }
         drop(s);
         self.cv.notify_all();
         true
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().order.len()
+        self.state.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Drain everything queued, blocking up to `timeout` when empty.
+    /// Drain everything queued — promote-on-read requests first, then
+    /// readahead hints — blocking up to `timeout` when empty.
     pub fn take_batch(&self, timeout: Duration) -> Vec<PrefetchRequest> {
         let mut s = self.state.lock().unwrap();
-        if s.order.is_empty() {
+        if s.stage.is_empty() && s.readahead.is_empty() {
             let (guard, _) = self.cv.wait_timeout(s, timeout).unwrap();
             s = guard;
         }
         s.queued.clear();
-        s.order.drain(..).collect()
+        let mut out: Vec<PrefetchRequest> = s.stage.drain(..).collect();
+        out.extend(s.readahead.drain(..));
+        out
     }
 
     /// Ask the prefetcher thread to exit and wake it if it sleeps.
@@ -156,10 +176,16 @@ impl PrefetchReport {
 }
 
 /// Outcome of one staging attempt.
-#[derive(Debug, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StageOutcome {
     Staged(u64),
+    /// Dropped after re-validation (already cached, dirty, open, renamed
+    /// away, fence busy).
     Skipped,
+    /// No cache tier could take the bytes, even after the
+    /// evict-to-make-room path ran. The prefetcher re-queues a readahead
+    /// hint at the tail on this outcome instead of retrying it hot.
+    NoSpace,
     Error,
 }
 
@@ -251,8 +277,11 @@ pub fn stage_one(core: &SeaCore, logical: &CleanPath) -> StageOutcome {
     if !eligible {
         return StageOutcome::Skipped;
     }
-    let Some(target) = core.tiers.reserve_on_cache(size) else {
-        return StageOutcome::Skipped;
+    // Evict-to-make-room reservation: a full cache drains cold clean
+    // replicas (LRU) before this gives up — staging no longer skips work
+    // just because the tier is momentarily full.
+    let Some(target) = core.reserve_on_cache_evicting(size) else {
+        return StageOutcome::NoSpace;
     };
     let result = core.transfers.copy(core, logical.as_str(), persist, target, |_bytes| {
         // Under the fence: record the replica only if nothing moved the
@@ -322,7 +351,7 @@ pub fn stage_listed(core: &SeaCore) -> Result<PrefetchReport, (String, std::io::
         if !eligible {
             continue;
         }
-        let Some(target) = core.tiers.reserve_on_cache(size) else {
+        let Some(target) = core.reserve_on_cache_evicting(size) else {
             report.skipped += 1;
             continue;
         };
@@ -371,9 +400,27 @@ pub struct PrefetcherHandle {
     join: Option<std::thread::JoinHandle<PrefetchReport>>,
 }
 
+/// Fold one staging outcome into a cumulative report.
+fn tally(total: &mut PrefetchReport, out: StageOutcome) {
+    match out {
+        StageOutcome::Staged(bytes) => {
+            total.staged += 1;
+            total.bytes_staged += bytes;
+        }
+        StageOutcome::Skipped | StageOutcome::NoSpace => total.skipped += 1,
+        StageOutcome::Error => total.errors += 1,
+    }
+}
+
 impl PrefetcherHandle {
-    /// Spawn the prefetcher loop: drain the request queue, stage each
-    /// request (expanding readahead hints first), exit on stop/shutdown.
+    /// Spawn the prefetcher loop: drain the request queue (promote
+    /// requests strictly before readahead hints — the queue orders the
+    /// batch), stage each request, exit on stop/shutdown. A request
+    /// whose cache reservation fails even after evict-to-make-room is
+    /// re-queued at the tail of its own priority class rather than
+    /// retried hot (so a deferred promote still beats every readahead
+    /// hint), and a drain that staged nothing while deferring backs off
+    /// briefly instead of spinning on a full cache.
     pub fn spawn(core: Arc<SeaCore>) -> PrefetcherHandle {
         let loop_core = core.clone();
         let join = std::thread::Builder::new()
@@ -387,28 +434,60 @@ impl PrefetcherHandle {
                     if done(&loop_core) {
                         return total;
                     }
+                    let staged_before = total.staged;
+                    let mut deferred = false;
                     for req in loop_core.prefetch.take_batch(Duration::from_millis(25)) {
                         if done(&loop_core) {
                             return total;
                         }
-                        let targets = match req {
-                            PrefetchRequest::Stage(path) => vec![path],
-                            PrefetchRequest::Readahead(origin) => expand_readahead(
-                                &loop_core,
-                                &origin,
-                                loop_core.cfg.readahead_depth,
-                            ),
-                        };
-                        for path in targets {
-                            match stage_one(&loop_core, &path) {
-                                StageOutcome::Staged(bytes) => {
-                                    total.staged += 1;
-                                    total.bytes_staged += bytes;
+                        match req {
+                            PrefetchRequest::Stage(path) => {
+                                let out = stage_one(&loop_core, &path);
+                                tally(&mut total, out);
+                                if out == StageOutcome::NoSpace {
+                                    // Demand request with no room even
+                                    // after eviction: re-queue rather
+                                    // than drop — it re-enters the
+                                    // *stage* class, so it still beats
+                                    // every speculative readahead hint
+                                    // once space frees up. A request
+                                    // that becomes invalid meanwhile
+                                    // re-validates to Skipped and
+                                    // leaves the queue for good.
+                                    deferred |= loop_core
+                                        .prefetch
+                                        .push(PrefetchRequest::Stage(path));
                                 }
-                                StageOutcome::Skipped => total.skipped += 1,
-                                StageOutcome::Error => total.errors += 1,
+                            }
+                            PrefetchRequest::Readahead(origin) => {
+                                let targets = expand_readahead(
+                                    &loop_core,
+                                    &origin,
+                                    loop_core.cfg.readahead_depth,
+                                );
+                                for path in targets {
+                                    let out = stage_one(&loop_core, &path);
+                                    tally(&mut total, out);
+                                    if out == StageOutcome::NoSpace {
+                                        // Cache full even after eviction:
+                                        // requeue the hint at the tail and
+                                        // move on — promote requests and
+                                        // later evictions may free room
+                                        // before it comes around again.
+                                        deferred |= loop_core.prefetch.push(
+                                            PrefetchRequest::Readahead(origin.clone()),
+                                        );
+                                        break;
+                                    }
+                                }
                             }
                         }
+                    }
+                    if deferred && total.staged == staged_before {
+                        // Nothing moved this drain and at least one hint
+                        // was deferred: back off instead of hot-spinning
+                        // on a cache that cannot currently take bytes.
+                        std::thread::sleep(Duration::from_millis(25));
                     }
                 }
             })
@@ -523,16 +602,91 @@ mod tests {
         sea.write(fd, b"d").unwrap();
         sea.close(fd).unwrap();
         assert_eq!(stage_one(core, &CleanPath::new("/fresh.out")), StageOutcome::Skipped);
-        // no cache space: tiny cache, big file
+        // no cache space (file bigger than the whole tier — eviction
+        // cannot help): NoSpace, distinct from a policy skip
         let dir2 = tempdir("prefetch-nospace");
         let lustre2 = dir2.subdir("lustre");
         std::fs::write(lustre2.join("big.nii"), vec![2u8; 4096]).unwrap();
         let sea2 = mount_over(&dir2, 16);
         assert_eq!(
             stage_one(sea2.core(), &CleanPath::new("/big.nii")),
-            StageOutcome::Skipped
+            StageOutcome::NoSpace
         );
         assert_eq!(sea2.core().tiers.get(0).used(), 0);
+    }
+
+    #[test]
+    fn queue_drains_promote_before_readahead() {
+        let q = PrefetchQueue::new();
+        assert!(q.push(PrefetchRequest::Readahead(CleanPath::new("/a"))));
+        assert!(q.push(stage_req("/b")));
+        assert!(q.push(PrefetchRequest::Readahead(CleanPath::new("/c"))));
+        assert!(q.push(stage_req("/d")));
+        let batch = q.take_batch(Duration::from_millis(1));
+        assert_eq!(
+            batch,
+            vec![
+                stage_req("/b"),
+                stage_req("/d"),
+                PrefetchRequest::Readahead(CleanPath::new("/a")),
+                PrefetchRequest::Readahead(CleanPath::new("/c")),
+            ],
+            "promote-on-read requests must drain before readahead hints"
+        );
+    }
+
+    #[test]
+    fn stage_one_evicts_cold_replica_into_undersized_cache() {
+        // Cache fits one volume. Staging a second must evict the cold,
+        // clean, persisted first replica instead of giving up.
+        let dir = tempdir("prefetch-evict");
+        let lustre = dir.subdir("lustre");
+        std::fs::write(lustre.join("cold.nii"), vec![1u8; 700]).unwrap();
+        std::fs::write(lustre.join("hot.nii"), vec![2u8; 700]).unwrap();
+        let sea = mount_over(&dir, 1024);
+        let core = sea.core();
+        assert_eq!(
+            stage_one(core, &CleanPath::new("/cold.nii")),
+            StageOutcome::Staged(700)
+        );
+        assert_eq!(
+            stage_one(core, &CleanPath::new("/hot.nii")),
+            StageOutcome::Staged(700),
+            "full cache must evict the cold replica, not skip"
+        );
+        // the cold file fell back to its persist copy; the hot one is cached
+        assert_eq!(sea.stat("/cold.nii").unwrap().tier, "lustre");
+        assert_eq!(sea.stat("/hot.nii").unwrap().tier, "tmpfs");
+        assert_eq!(core.tiers.get(0).used(), 700, "old reservation released");
+        assert!(
+            !core.tiers.get(0).physical("/cold.nii").exists(),
+            "evicted physical replica must be deleted"
+        );
+        let adm = core.admission.snapshot();
+        assert_eq!(adm.evicted_to_fit, 1, "{adm:?}");
+        assert_eq!(adm.evicted_files, 1, "{adm:?}");
+        assert_eq!(adm.evicted_bytes, 700, "{adm:?}");
+        // with eviction disabled, the same pressure is a NoSpace
+        let dir2 = tempdir("prefetch-noevict");
+        let lustre2 = dir2.subdir("lustre");
+        std::fs::write(lustre2.join("a.nii"), vec![1u8; 700]).unwrap();
+        std::fs::write(lustre2.join("b.nii"), vec![2u8; 700]).unwrap();
+        let cfg = SeaConfig::builder(dir2.subdir("mount"))
+            .cache("tmpfs", dir2.subdir("tmpfs"), 1024)
+            .persist("lustre", &lustre2, 100 * MIB)
+            .evict_to_fit(false)
+            .build();
+        let sea2 = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+        assert_eq!(
+            stage_one(sea2.core(), &CleanPath::new("/a.nii")),
+            StageOutcome::Staged(700)
+        );
+        assert_eq!(
+            stage_one(sea2.core(), &CleanPath::new("/b.nii")),
+            StageOutcome::NoSpace,
+            "seed behaviour preserved when evict_to_fit is off"
+        );
+        assert_eq!(sea2.stat("/a.nii").unwrap().tier, "tmpfs");
     }
 
     #[test]

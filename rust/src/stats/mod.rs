@@ -1,10 +1,83 @@
-//! Statistics for the experiment reports: summaries and Welch's t-test.
+//! Statistics for the experiment reports: summaries, Welch's t-test, and
+//! the cache-admission outcome counters.
 //!
 //! The paper reports two-sample unpaired t-tests (p=0.7 Sea vs Baseline
 //! without busy writers, p<1e-4 with, p=0.9 Sea vs tmpfs). This module
 //! implements Welch's t-test from scratch — the p-value comes from the
 //! regularised incomplete beta function evaluated with Lentz's continued
 //! fraction, the standard numerical recipe.
+//!
+//! [`AdmissionStats`] counts how every cache-admission decision (new-file
+//! placement, spill retargeting, prefetch staging) resolved — fit as-is,
+//! fit after evicting cold clean replicas, or fell through to the
+//! persistent tier — so experiment reports can attribute makespan
+//! differences to admission behaviour instead of eyeballing tier usage.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lock-free cache-admission outcome counters (lives in `SeaCore`; every
+/// admission decision notes exactly one of hit / evicted-to-fit /
+/// fell-through).
+#[derive(Debug, Default)]
+pub struct AdmissionStats {
+    hits: AtomicU64,
+    evicted_to_fit: AtomicU64,
+    fell_through: AtomicU64,
+    evicted_files: AtomicU64,
+    evicted_bytes: AtomicU64,
+}
+
+impl AdmissionStats {
+    /// The reservation fit a cache tier without eviction.
+    pub fn note_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The reservation fit only after evicting cold clean replicas.
+    pub fn note_evicted_to_fit(&self) {
+        self.evicted_to_fit.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// No cache could take the reservation even after eviction; the
+    /// request fell through to the persistent tier (or was skipped).
+    pub fn note_fell_through(&self) {
+        self.fell_through.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One cold replica of `bytes` was dropped to make room.
+    pub fn note_evicted_replica(&self, bytes: u64) {
+        self.evicted_files.fetch_add(1, Ordering::Relaxed);
+        self.evicted_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> AdmissionSnapshot {
+        AdmissionSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            evicted_to_fit: self.evicted_to_fit.load(Ordering::Relaxed),
+            fell_through: self.fell_through.load(Ordering::Relaxed),
+            evicted_files: self.evicted_files.load(Ordering::Relaxed),
+            evicted_bytes: self.evicted_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time snapshot of [`AdmissionStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmissionSnapshot {
+    pub hits: u64,
+    pub evicted_to_fit: u64,
+    pub fell_through: u64,
+    /// Cold replicas dropped by the evict-to-make-room path.
+    pub evicted_files: u64,
+    pub evicted_bytes: u64,
+}
+
+impl AdmissionSnapshot {
+    /// Total admission decisions.
+    pub fn total(&self) -> u64 {
+        self.hits + self.evicted_to_fit + self.fell_through
+    }
+}
 
 /// Five-number-ish summary of a sample.
 #[derive(Debug, Clone, PartialEq)]
@@ -279,5 +352,23 @@ mod tests {
     fn constant_samples_p_one() {
         let t = welch_t_test(&[5.0, 5.0, 5.0], &[5.0, 5.0, 5.0]);
         assert_eq!(t.p, 1.0);
+    }
+
+    #[test]
+    fn admission_counters_accumulate() {
+        let a = AdmissionStats::default();
+        a.note_hit();
+        a.note_hit();
+        a.note_evicted_to_fit();
+        a.note_evicted_replica(4096);
+        a.note_evicted_replica(1024);
+        a.note_fell_through();
+        let s = a.snapshot();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.evicted_to_fit, 1);
+        assert_eq!(s.fell_through, 1);
+        assert_eq!(s.total(), 4);
+        assert_eq!(s.evicted_files, 2);
+        assert_eq!(s.evicted_bytes, 5120);
     }
 }

@@ -227,6 +227,13 @@ impl TierSet {
     /// `None` when no cache can hold them — unlike
     /// [`TierSet::place_write`], the persistent tier is never a staging
     /// target, so there is no fallthrough.
+    ///
+    /// This is the capacity-only primitive: it cannot make room, because
+    /// the tier set knows nothing about which replicas are cold or
+    /// clean. The evict-to-make-room admission path lives one layer up
+    /// in `SeaCore::reserve_on_cache_evicting`, which drains cold clean
+    /// replicas (LRU over the namespace access stamps, fence-skipping)
+    /// and then retries this reservation.
     pub fn reserve_on_cache(&self, bytes: u64) -> Option<TierIdx> {
         self.caches()
             .iter()

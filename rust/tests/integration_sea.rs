@@ -2,7 +2,7 @@
 //! namespace + tiers + rules + flusher threads working together.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use sea::config::SeaConfig;
 use sea::flusher::SeaSession;
@@ -189,6 +189,92 @@ fn prefetch_then_update_never_touches_persist() {
     // original content on "Lustre" untouched
     let on_lustre = std::fs::read(lustre.join("inputs/scan.nii")).unwrap();
     assert_eq!(on_lustre, vec![3u8; 4096]);
+    sess.unmount();
+}
+
+#[test]
+fn prefetch_staging_into_undersized_cache_evicts_cold_replicas() {
+    // The evict-to-make-room acceptance scenario: a cache deliberately
+    // sized for two volumes, four persist-resident volumes promoted one
+    // after another through the live prefetcher thread. The seed
+    // behaviour skipped staging once the cache filled; now each new
+    // promotion evicts the coldest clean replica (its persist copy
+    // survives) and staging completes for every volume.
+    let dir = tempdir("int-evict-staging");
+    let lustre = dir.subdir("lustre");
+    std::fs::create_dir_all(&lustre).unwrap();
+    for i in 0..4u8 {
+        std::fs::write(lustre.join(format!("v{i}.nii")), vec![i; 600]).unwrap();
+    }
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 1400) // fits 2 of 4 volumes
+        .persist("lustre", &lustre, 100_000 * MIB)
+        .flusher(false, 100)
+        .readahead(0) // promote-on-read only: deterministic order
+        .build();
+    let sess = SeaSession::start(cfg, SeaLists::default(), |t| t).unwrap();
+    let sea = sess.io();
+
+    let read_whole = |path: &str| {
+        let fd = sea.open(path, OpenMode::Read).unwrap();
+        let mut buf = [0u8; 256];
+        let mut total = 0usize;
+        loop {
+            let n = sea.read(fd, &mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            total += n;
+        }
+        sea.close(fd).unwrap();
+        assert_eq!(total, 600, "{path}");
+    };
+    let wait_cached = |path: &str| {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if sea.stat(path).unwrap().tier == "tmpfs" {
+                return;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "{path} never staged — admission skipped instead of evicting"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    };
+
+    // v0, v1 fit outright; v2 and v3 each need the prefetcher to evict
+    // the coldest cached replica first.
+    for p in ["/v0.nii", "/v1.nii", "/v2.nii", "/v3.nii"] {
+        read_whole(p);
+        wait_cached(p);
+    }
+
+    let core = sess.io().core().clone();
+    // exactly two volumes fit: the two hottest are cached, the evicted
+    // ones fell back to their persisted copies
+    assert_eq!(sea.stat("/v3.nii").unwrap().tier, "tmpfs");
+    assert_eq!(core.tiers.get(0).used(), 2 * 600);
+    let cached: Vec<String> = (0..4)
+        .map(|i| format!("/v{i}.nii"))
+        .filter(|p| sea.stat(p).unwrap().tier == "tmpfs")
+        .collect();
+    assert_eq!(cached.len(), 2, "{cached:?}");
+    let adm = core.admission.snapshot();
+    assert!(adm.evicted_to_fit >= 2, "{adm:?}");
+    assert!(adm.evicted_files >= 2, "{adm:?}");
+    // No data was lost: every volume still reads back byte-for-byte.
+    // These reads re-trigger promotions, so each open can race the
+    // prefetcher evicting the very replica it resolved — `SeaIo::open`
+    // must fall back to the surviving persist replica, never error.
+    for i in 0..4u8 {
+        let p = format!("/v{i}.nii");
+        let fd = sea.open(&p, OpenMode::Read).unwrap();
+        let mut buf = vec![0u8; 1024];
+        let n = sea.read(fd, &mut buf).unwrap();
+        assert_eq!(&buf[..n], vec![i; 600].as_slice(), "{p}");
+        sea.close(fd).unwrap();
+    }
     sess.unmount();
 }
 

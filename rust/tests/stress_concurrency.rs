@@ -17,13 +17,13 @@
 //! must not interleave bytes of two incarnations on the persist tier.
 
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Barrier;
 use std::time::{Duration, Instant};
 
 use sea::config::SeaConfig;
 use sea::flusher::{drain, flush_pass, SeaSession};
-use sea::intercept::{OpenMode, SeaIo};
+use sea::intercept::{OpenMode, SeaError, SeaIo};
 use sea::pathrules::{PathRules, SeaLists};
 use sea::testing::tempdir::tempdir;
 use sea::util::MIB;
@@ -138,6 +138,98 @@ fn stress_invariants_hold_under_concurrent_io_with_flusher() {
             "tier {tier_idx} reservation drifted from namespace contents"
         );
     }
+}
+
+#[test]
+fn fd_recycling_returns_badfd_never_another_files_bytes() {
+    // The ABA property of the generation-tagged slab fd table: one
+    // thread close/reopens the same path in a loop — churning the freed
+    // slot through a *decoy* file with different bytes so a recycled
+    // slot really does belong to another file — while 4 reader threads
+    // hammer whatever fd was last published. A stale-generation lookup
+    // must come back as BadFd; it must never resolve to the decoy's
+    // handle and return its bytes.
+    const ROUNDS: usize = 2_000;
+
+    let dir = tempdir("fd-recycle");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 16 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .build();
+    let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+    let sea = &sea;
+
+    let fd = sea.create("/target.dat").unwrap();
+    sea.write(fd, &[0xAA; 4096]).unwrap();
+    sea.close(fd).unwrap();
+    let fd = sea.create("/decoy.dat").unwrap();
+    sea.write(fd, &[0xBB; 4096]).unwrap();
+    sea.close(fd).unwrap();
+
+    let published = AtomicU64::new(0); // 0 = nothing published yet
+    let stop = AtomicBool::new(false);
+    let ok_reads = AtomicU64::new(0);
+    let stale_hits = AtomicU64::new(0);
+    let (published, stop) = (&published, &stop);
+    let (ok_reads, stale_hits) = (&ok_reads, &stale_hits);
+
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            for _ in 0..ROUNDS {
+                let fd = sea.open("/target.dat", OpenMode::Read).unwrap();
+                published.store(fd, Ordering::Release);
+                std::thread::yield_now();
+                sea.close(fd).unwrap();
+                // LIFO free list: this open recycles the slot the target
+                // fd just vacated, with a bumped generation.
+                let decoy = sea.open("/decoy.dat", OpenMode::Read).unwrap();
+                sea.close(decoy).unwrap();
+            }
+            stop.store(true, Ordering::Release);
+        });
+        for _ in 0..4 {
+            s.spawn(move || {
+                let mut buf = [0u8; 256];
+                while !stop.load(Ordering::Acquire) {
+                    let fd = published.load(Ordering::Acquire);
+                    if fd == 0 {
+                        std::hint::spin_loop();
+                        continue;
+                    }
+                    match sea.read(fd, &mut buf) {
+                        Ok(n) => {
+                            assert!(
+                                buf[..n].iter().all(|&b| b == 0xAA),
+                                "stale fd read another file's bytes"
+                            );
+                            ok_reads.fetch_add(1, Ordering::Relaxed);
+                            // rewind for the next read; the fd may go
+                            // stale between the read and the seek
+                            let _ = sea.lseek(fd, std::io::SeekFrom::Start(0));
+                        }
+                        Err(SeaError::BadFd(_)) => {
+                            stale_hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("unexpected error on recycled fd: {e}"),
+                    }
+                    // let the opener's close/reopen win the per-fd mutex
+                    std::thread::yield_now();
+                }
+            });
+        }
+    });
+
+    assert!(
+        ok_reads.load(Ordering::Relaxed) > 0,
+        "readers never overlapped a live fd — the race never happened"
+    );
+    // stale lookups are expected under this schedule but not guaranteed;
+    // correctness is the in-loop assertions (BadFd or target bytes, only)
+    println!(
+        "fd recycling: {} live reads, {} stale BadFd lookups over {ROUNDS} recycles",
+        ok_reads.load(Ordering::Relaxed),
+        stale_hits.load(Ordering::Relaxed)
+    );
 }
 
 #[test]
