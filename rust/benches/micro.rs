@@ -247,12 +247,25 @@ fn main() {
         sea.write(fd, &buf).unwrap();
     });
     sea.close(fd).unwrap();
+    // Steady-state write: the file is already dirty, so every sampled
+    // call takes the pure lock-free publish path (atomic size/version/
+    // dirty/LRU ops on the shared FileRecord — zero namespace shard
+    // locks). This is the number the atomic-record refactor targets; the
+    // plain write histogram above includes the clean→dirty transition.
+    let fd = sea.create("/bench/steady.dat").unwrap();
+    sea.write(fd, &buf).unwrap(); // dirty it once, off-sample
+    let steady = sample_us(scaled(20_000), || {
+        sea.write(fd, &buf).unwrap();
+    });
+    sea.close(fd).unwrap();
     let (lookup_p50, lookup_p99) = (pct(&lookup, 0.50), pct(&lookup, 0.99));
     let (read_p50, read_p99) = (pct(&read_samples, 0.50), pct(&read_samples, 0.99));
     let (write_p50, write_p99) = (pct(&writes, 0.50), pct(&writes, 0.99));
+    let (steady_write_p50, steady_write_p99) = (pct(&steady, 0.50), pct(&steady, 0.99));
     println!("fd-lookup-only      p50 {lookup_p50:7.3} us   p99 {lookup_p99:7.3} us");
     println!("full 4 KiB read     p50 {read_p50:7.3} us   p99 {read_p99:7.3} us");
     println!("full 4 KiB write    p50 {write_p50:7.3} us   p99 {write_p99:7.3} us");
+    println!("steady dirty write  p50 {steady_write_p50:7.3} us   p99 {steady_write_p99:7.3} us");
     println!("  -> per-call overhead budget: < 0.5 us (ROADMAP perf trajectory)");
 
     // Table 2 budget check: AFNI 305k calls over 816 s compute -> per-call
@@ -354,6 +367,8 @@ fn main() {
             "  \"read_p99_us\": {:.4},\n",
             "  \"write_p50_us\": {:.4},\n",
             "  \"write_p99_us\": {:.4},\n",
+            "  \"steady_write_p50_us\": {:.4},\n",
+            "  \"steady_write_p99_us\": {:.4},\n",
             "  \"contention_calls_per_sec_1t\": {:.0},\n",
             "  \"contention_calls_per_sec_8t\": {:.0},\n",
             "  \"aggregate_scaling_8t\": {:.2},\n",
@@ -368,6 +383,8 @@ fn main() {
         read_p99,
         write_p50,
         write_p99,
+        steady_write_p50,
+        steady_write_p99,
         c1,
         c8,
         scaling,

@@ -282,6 +282,13 @@ fn cmd_run(mut a: Args) -> Result<()> {
             "{}",
             crate::experiments::report::fmt_admission(&report.admission)
         );
+        if report.stats.write_untracked > 0 {
+            println!(
+                "note: {} write(s) landed on unlinked/truncated-over files \
+                 (bytes kept flowing to the inode; tracking deliberately ends)",
+                report.stats.write_untracked
+            );
+        }
     }
     Ok(())
 }

@@ -28,11 +28,16 @@
 //! out over the transfer engine's bounded worker pool
 //! ([`crate::transfer::TransferEngine::run_batch`]) so one slow
 //! persist-tier file no longer delays the rest of the queue; a serial
-//! tail does the accounting. Each copy's namespace bookkeeping — record
-//! the persist replica, mark clean only if the version is unchanged —
-//! runs in the engine's commit closure *under the per-file fence*, so a
+//! tail does the accounting. Each copy's namespace bookkeeping goes
+//! through [`crate::namespace::Namespace::commit_flush`] in the
+//! engine's commit closure *under the per-file fence*, so a
 //! rename/unlink/truncate racing the copy either waits for the whole
-//! commit or cancels the copy before any state is published. Eviction
+//! commit or cancels the copy before any state is published — and the
+//! commit's version-recheck protocol makes clean-marking safe against
+//! the interceptor's lock-free write path (a write that interleaves is
+//! always re-detected: the copy's replica is recorded — the bytes are
+//! on disk and must stay tracked — but the file stays dirty and the
+//! re-queued retry overwrites the possibly-torn copy). Eviction
 //! candidates come from the namespace's incremental evictable queue
 //! (clean-and-closed transitions), not a per-pass scan of every file.
 
@@ -42,6 +47,7 @@ use std::time::Duration;
 
 use crate::config::SeaConfig;
 use crate::intercept::{CallStats, SeaCore, SeaError, SeaIo};
+use crate::namespace::FlushCommit;
 use crate::pathrules::{Disposition, SeaLists};
 use crate::prefetch::PrefetcherHandle;
 use crate::tiers::Tier;
@@ -68,17 +74,6 @@ impl FlushReport {
         self.bytes_flushed += other.bytes_flushed;
         self.errors += other.errors;
     }
-}
-
-/// What the under-fence commit of one flush copy observed.
-enum CopyVerdict {
-    /// Replica recorded, version unchanged: the file is clean.
-    Clean,
-    /// Replica recorded but a write landed mid-copy: still dirty.
-    Stale,
-    /// The namespace entry vanished mid-copy: the persist copy is
-    /// untracked and must be deleted.
-    Gone,
 }
 
 /// One synchronous flusher pass over the namespace.
@@ -110,19 +105,10 @@ pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
         }
         if entry.master == persist {
             // already physically on the persistent tier: just mark clean
-            // (unless a write moved the version since the drain)
-            let mut stale = false;
-            core.ns.update(&entry.logical, |m| {
-                if m.version == entry.version {
-                    m.dirty = false;
-                    m.flushed = true;
-                } else {
-                    stale = true;
-                }
-            });
-            if stale {
-                core.ns.mark_dirty(&entry.logical);
-            }
+            // (unless a write moved the version since the drain — the
+            // commit protocol closes the race against lock-free writers
+            // and re-queues a stale entry itself, under the shard lock)
+            core.ns.commit_flush(&entry.logical, entry.version, None);
             continue;
         }
         jobs.push(BatchJob {
@@ -136,32 +122,18 @@ pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
 
     // Phase 2: pipelined fenced copies over the engine's worker pool.
     // The commit closure runs under the per-file fence, so recording the
-    // persist replica and the version check cannot interleave with a
-    // rename/unlink/truncate of the same path: the version check under
-    // the shard lock is what keeps a mid-copy write from being silently
-    // lost (the queue entry was consumed, and record_write on an
-    // already-dirty file does not re-enqueue).
+    // persist replica cannot interleave with a rename/unlink/truncate of
+    // the same path; commit_flush's version-recheck protocol is what
+    // keeps a mid-copy write — including a fully lock-free one through a
+    // memoised record — from being silently marked clean (the queue
+    // entry was consumed, and a write on an already-dirty file does not
+    // re-enqueue). A stale copy still records the replica — the physical
+    // bytes landed and must stay tracked for unlink/rename to clean up —
+    // but the file stays dirty and the re-queued retry overwrites the
+    // possibly-torn persist bytes atomically before anything reads them.
     let results = core.transfers.run_batch(core, jobs, |job: &BatchJob, _bytes: u64| {
         let entry = &entries[job.token].0;
-        let mut stale = false;
-        let updated = core.ns.update(&entry.logical, |m| {
-            m.flushed = true;
-            if !m.replicas.contains(&persist) {
-                m.replicas.push(persist);
-            }
-            if m.version == entry.version {
-                m.dirty = false;
-            } else {
-                stale = true;
-            }
-        });
-        if !updated {
-            CopyVerdict::Gone
-        } else if stale {
-            CopyVerdict::Stale
-        } else {
-            CopyVerdict::Clean
-        }
+        core.ns.commit_flush(&entry.logical, entry.version, Some(persist))
     });
 
     // Phase 3 (serial): accounting and re-queues.
@@ -169,7 +141,7 @@ pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
         let (entry, disposition) = &entries[job.token];
         match res {
             Ok(Outcome::Done { bytes, commit: verdict }) => match verdict {
-                CopyVerdict::Gone => {
+                FlushCommit::Gone => {
                     // Vanished mid-copy (e.g. dropped to zero replicas):
                     // the just-written persist copy is untracked — delete
                     // it (or the next mount's register_existing would
@@ -177,15 +149,16 @@ pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
                     // bytes were durably flushed.
                     core.delete_replica(&entry.logical, persist, entry.size);
                 }
-                CopyVerdict::Stale => {
-                    // Outdated the moment it landed: leave the file dirty
-                    // and re-queue for a fresh copy (which overwrites the
-                    // stale persist bytes atomically).
+                FlushCommit::Stale => {
+                    // Outdated (possibly torn) the moment it landed: the
+                    // replica is recorded (tracked for later cleanup)
+                    // but the file stayed dirty and commit_flush already
+                    // re-queued it — the next pass's fresh copy
+                    // overwrites the stale persist bytes atomically.
                     report.bytes_flushed += bytes;
                     core.counters.bump_persist();
-                    core.ns.mark_dirty(&entry.logical);
                 }
-                CopyVerdict::Clean => {
+                FlushCommit::Clean => {
                     report.bytes_flushed += bytes;
                     core.counters.bump_persist();
                     if *disposition == Disposition::Move {
@@ -289,7 +262,7 @@ pub fn drain(core: &SeaCore) -> FlushReport {
                 let cache_only = meta.replicas.iter().all(|&t| t != persist);
                 if cache_only {
                     for &tier in &meta.replicas {
-                        core.delete_replica(&logical, tier, meta.size);
+                        core.delete_replica(&logical, tier, meta.size());
                     }
                     core.ns.remove(&logical);
                     report.evicted += 1;
@@ -457,7 +430,7 @@ mod tests {
         assert_eq!(rep.flushed, 1);
         assert_eq!(rep.bytes_flushed, 6);
         let meta = sea.core().ns.lookup("/r/a.out").unwrap();
-        assert!(!meta.dirty);
+        assert!(!meta.dirty());
         assert!(meta.flushed);
         assert_eq!(meta.replicas.len(), 2);
         // physical file exists on persist
@@ -545,7 +518,7 @@ mod tests {
         for i in 0..12 {
             let p = format!("/out/f{i}.out");
             assert!(sea.core().tiers.persist().physical(&p).exists(), "{p}");
-            assert!(!sea.core().ns.lookup(&p).unwrap().dirty);
+            assert!(!sea.core().ns.lookup(&p).unwrap().dirty());
         }
     }
 
@@ -579,7 +552,7 @@ mod tests {
         write_file(session.io(), "/a.out", b"one");
         std::thread::sleep(Duration::from_millis(60));
         // background pass should have flushed already
-        assert!(!session.io().core().ns.lookup("/a.out").unwrap().dirty);
+        assert!(!session.io().core().ns.lookup("/a.out").unwrap().dirty());
         write_file(session.io(), "/b.out", b"two");
         let (stats, report) = session.unmount();
         assert!(report.flushed >= 2, "report={report:?}");
@@ -607,7 +580,7 @@ mod tests {
         let rep = flush_pass(sea.core(), false);
         assert_eq!(rep.errors, 1);
         assert_eq!(rep.flushed + rep.moved, 0);
-        assert!(sea.core().ns.lookup("/lost.out").unwrap().dirty);
+        assert!(sea.core().ns.lookup("/lost.out").unwrap().dirty());
         // the entry was re-queued: the next pass retries (and fails again)
         let rep = flush_pass(sea.core(), false);
         assert_eq!(rep.errors, 1);
@@ -615,7 +588,7 @@ mod tests {
         std::fs::write(&phys, b"data").unwrap();
         let rep = flush_pass(sea.core(), false);
         assert_eq!(rep.flushed, 1);
-        assert!(!sea.core().ns.lookup("/lost.out").unwrap().dirty);
+        assert!(!sea.core().ns.lookup("/lost.out").unwrap().dirty());
     }
 
     #[test]
@@ -623,12 +596,12 @@ mod tests {
         let (_g, sea) = setup(lists(".*", ""));
         write_file(&sea, "/a.out", b"v1");
         flush_pass(sea.core(), false);
-        assert!(!sea.core().ns.lookup("/a.out").unwrap().dirty);
+        assert!(!sea.core().ns.lookup("/a.out").unwrap().dirty());
         let fd = sea.open("/a.out", OpenMode::ReadWrite).unwrap();
         sea.write(fd, b"v2").unwrap();
         sea.close(fd).unwrap();
         let meta = sea.core().ns.lookup("/a.out").unwrap();
-        assert!(meta.dirty);
+        assert!(meta.dirty());
         // stale persist replica dropped by record_write
         assert_eq!(meta.replicas, vec![0]);
         let rep = flush_pass(sea.core(), false);

@@ -27,6 +27,7 @@ macro_rules! call_kinds {
         pub struct CallCounters {
             $($name: AtomicU64,)+
             persist_calls: AtomicU64,
+            write_untracked: AtomicU64,
             bytes_written_cache: AtomicU64,
             bytes_written_persist: AtomicU64,
             bytes_read_cache: AtomicU64,
@@ -39,6 +40,11 @@ macro_rules! call_kinds {
             $(pub $name: u64,)+
             /// Calls whose target tier was the persistent store.
             pub persist_calls: u64,
+            /// Writes published through a retired record (the file was
+            /// unlinked or truncate-created over while the descriptor
+            /// was open): the bytes went to the detached inode and the
+            /// namespace deliberately did not track them.
+            pub write_untracked: u64,
             pub bytes_written_cache: u64,
             pub bytes_written_persist: u64,
             pub bytes_read_cache: u64,
@@ -56,6 +62,7 @@ macro_rules! call_kinds {
                 CallStats {
                     $($name: self.$name.load(Ordering::Relaxed),)+
                     persist_calls: self.persist_calls.load(Ordering::Relaxed),
+                    write_untracked: self.write_untracked.load(Ordering::Relaxed),
                     bytes_written_cache: self.bytes_written_cache.load(Ordering::Relaxed),
                     bytes_written_persist: self.bytes_written_persist.load(Ordering::Relaxed),
                     bytes_read_cache: self.bytes_read_cache.load(Ordering::Relaxed),
@@ -82,6 +89,13 @@ impl CallCounters {
     /// Count a call that targeted the persistent tier.
     pub fn bump_persist(&self) {
         self.persist_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a write whose namespace update was dropped because the
+    /// record was retired by unlink/truncate (POSIX unlinked-file
+    /// semantics; see the intercept module docs).
+    pub fn bump_write_untracked(&self) {
+        self.write_untracked.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn add_written(&self, bytes: u64, to_persist: bool) {
@@ -122,6 +136,7 @@ mod tests {
         c.bump(CallKind::write);
         c.bump(CallKind::write);
         c.bump_persist();
+        c.bump_write_untracked();
         c.add_written(100, false);
         c.add_written(50, true);
         c.add_read(7, true);
@@ -130,6 +145,7 @@ mod tests {
         assert_eq!(s.write, 2);
         assert_eq!(s.total(), 3);
         assert_eq!(s.persist_calls, 1);
+        assert_eq!(s.write_untracked, 1);
         assert_eq!(s.bytes_written(), 150);
         assert_eq!(s.bytes_written_persist, 50);
         assert_eq!(s.bytes_read_persist, 7);

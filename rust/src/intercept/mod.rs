@@ -34,28 +34,41 @@
 //!   of ABA-resolving to another file's handle. A throttled persist-tier
 //!   write on one fd therefore stalls only callers of that same fd,
 //!   never the table;
-//! * the namespace is sharded independently (see [`crate::namespace`]);
-//!   per-call bookkeeping (`record_write`, open counts, LRU stamps)
-//!   touches exactly one namespace shard, briefly — and the shard index
-//!   and [`CleanPath`] are memoised in the per-fd state at open time, so
-//!   the write path never re-normalises or re-hashes the path;
+//! * the namespace is sharded independently (see [`crate::namespace`]),
+//!   and the **write path no longer takes any namespace lock in steady
+//!   state**: each fd caches the file's shared
+//!   [`FileRecord`](crate::namespace::FileRecord) at open time and
+//!   publishes size/dirty/version/LRU-stamp updates with a handful of
+//!   atomic ops ([`crate::namespace::Namespace::publish_write`]). The
+//!   shard lock is touched only on the clean→dirty transition (which
+//!   must feed the flusher's dirty queue and invalidate stale replicas)
+//!   and when the record was retired by a racing rename/unlink/truncate
+//!   — the retired-record protocol that also fixes the seed's
+//!   lost-tracking bug: a write through a renamed-while-open fd
+//!   re-resolves and lands under the new name, and a write through an
+//!   unlinked fd is counted (`write_untracked`) instead of silently
+//!   half-recorded;
 //! * call counters, admission counters, and tier capacity accounting are
 //!   lock-free atomics.
 //!
 //! What still locks: the per-fd mutex (exactly one fd's callers), one
-//! namespace shard per bookkeeping op, and the transfer fence registry's
-//! shard mutexes (brief map ops). Lock order (outer → inner): per-fd
-//! mutex → **transfer fence** ([`crate::transfer::FenceMap`]) →
-//! namespace shard lock. Tier throttles/capacity are atomics or
-//! self-contained and may be touched under any of these. The
-//! flusher/prefetcher threads never touch fd slots, `SeaIo` never holds
-//! a namespace lock across physical I/O, and fence holders only ever
-//! take namespace locks (the inner direction), so no side can deadlock
-//! another. Metadata ops that would invalidate an in-flight tier-to-tier
-//! copy — `create` (truncate), `unlink`, `rename` — claim the path's
-//! fence first (rename claims both paths in ascending order), which
-//! cancels and drains the copy; see the [`crate::transfer`] docs for why
-//! that closes the seed's stranded-copy and interleaved-inode windows.
+//! namespace shard per *metadata* op (open/close/create/unlink/rename,
+//! clean→dirty write transitions, flush commits), and the transfer
+//! fence registry's shard mutexes (brief map ops). Lock order (outer →
+//! inner): per-fd mutex → **transfer fence**
+//! ([`crate::transfer::FenceMap`]) → namespace shard lock. Tier
+//! throttles/capacity are atomics or self-contained and may be touched
+//! under any of these. The flusher/prefetcher threads never touch fd
+//! slots, `SeaIo` never holds a namespace lock across physical I/O, and
+//! fence holders only ever take namespace locks (the inner direction),
+//! so no side can deadlock another. Metadata ops that would invalidate
+//! an in-flight tier-to-tier copy — `create` (truncate), `unlink`,
+//! `rename` — claim the path's fence first (rename claims both paths in
+//! ascending order), which cancels and drains the copy; see the
+//! [`crate::transfer`] docs for why that closes the seed's stranded-copy
+//! and interleaved-inode windows. The flusher's clean-marking goes
+//! through [`crate::namespace::Namespace::commit_flush`], whose
+//! version-recheck protocol makes it safe against lock-free writers.
 //!
 //! # Eviction vs. fence ordering
 //!
@@ -91,7 +104,7 @@ use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::config::SeaConfig;
-use crate::namespace::{CleanPath, Namespace};
+use crate::namespace::{CleanPath, FileRecord, Namespace};
 use crate::pathrules::SeaLists;
 use crate::prefetch::{PrefetchQueue, PrefetchRequest};
 use crate::stats::AdmissionStats;
@@ -168,7 +181,11 @@ impl SeaCore {
     }
 
     /// Delete the physical replica of `logical` on `tier` and release its
-    /// capacity reservation.
+    /// capacity reservation. The persistent tier is exempt on both
+    /// sides: its capacity is never reserved (see
+    /// `TierSet::place_write`), so there is nothing to release — the
+    /// seed reserved on spill but never released here, and `used()`
+    /// drifted monotonically.
     pub fn delete_replica(&self, logical: &str, tier: TierIdx, size: u64) {
         let path = self.tier(tier).physical(logical);
         self.tier(tier).wait_meta();
@@ -316,9 +333,14 @@ pub type Fd = u64;
 
 struct OpenFile {
     logical: CleanPath,
-    /// Namespace shard of `logical`, memoised at open so the write-path
-    /// `record_write` stops re-hashing the path on every call.
+    /// Namespace shard of `logical`, memoised at open so the write path
+    /// never re-hashes the path. Re-memoised (with `logical`) when a
+    /// rename retires the record mid-descriptor.
     ns_shard: usize,
+    /// The file's shared hot-field record, memoised at open: steady-state
+    /// writes publish size/dirty/version/LRU straight onto it — no
+    /// namespace lock (see [`crate::namespace::Namespace::publish_write`]).
+    record: Arc<FileRecord>,
     tier: TierIdx,
     file: std::fs::File,
     writable: bool,
@@ -739,21 +761,29 @@ impl SeaIo {
         self.core.tier(tier).wait_meta();
         let file =
             std::fs::File::create(&physical).map_err(|e| io_err(&logical, e))?;
-        // Replace any previous entry (truncate semantics).
+        // Replace any previous entry (truncate semantics). The previous
+        // incarnation's record was retired under the shard lock, so
+        // descriptors still holding it stop tracking.
         if let Some(prev) = self.core.ns.create(&logical, tier) {
+            let prev_size = prev.size();
             for rep in prev.replicas {
                 if rep != tier {
-                    self.core.delete_replica(&logical, rep, prev.size);
+                    self.core.delete_replica(&logical, rep, prev_size);
                 } else if !self.core.is_persist(rep) {
-                    self.core.tier(rep).release(prev.size);
+                    self.core.tier(rep).release(prev_size);
                 }
             }
         }
-        self.core.ns.note_open(&logical);
+        let record = self
+            .core
+            .ns
+            .note_open(&logical)
+            .ok_or_else(|| SeaError::NotFound(logical.to_string()))?;
         let ns_shard = crate::namespace::shard_index(&logical);
         let fd = self.fds.insert(OpenFile {
             logical,
             ns_shard,
+            record,
             tier,
             file,
             writable: true,
@@ -783,11 +813,11 @@ impl SeaIo {
         // bound only guards against pathological unlink/recreate
         // storms.
         let mut attempts = 0;
-        let (tier, size, file) = loop {
+        let (tier, size, file, record) = loop {
             let (tier, size) = self
                 .core
                 .ns
-                .with_meta(&logical, |m| (m.fastest_replica(), m.size))
+                .with_meta(&logical, |m| (m.fastest_replica(), m.size()))
                 .ok_or_else(|| SeaError::NotFound(logical.to_string()))?;
             self.core.tier(tier).wait_meta();
             let physical = self.core.tier(tier).physical(&logical);
@@ -797,21 +827,24 @@ impl SeaIo {
                 .open(&physical)
             {
                 Ok(file) => {
-                    if !self.core.ns.note_open(&logical) {
+                    let Some(record) = self.core.ns.note_open(&logical) else {
                         // vanished (unlink/rename) between resolve and pin
                         return Err(SeaError::NotFound(logical.to_string()));
-                    }
+                    };
                     let replica_alive = self
                         .core
                         .ns
                         .with_meta(&logical, |m| m.has_replica(tier))
                         .unwrap_or(false);
                     if replica_alive {
-                        break (tier, size, file);
+                        break (tier, size, file, record);
                     }
                     // Evicted under us: unpin, drop the stale handle,
                     // re-resolve (next round lands on the persist copy).
-                    self.core.ns.note_close(&logical);
+                    // Unpin through the record: a rename racing this
+                    // window would make the path-based unpin miss and
+                    // leave the renamed file pinned forever.
+                    self.core.ns.note_close_record(&record, &logical);
                     if attempts >= 8 {
                         return Err(io_err(
                             &logical,
@@ -859,6 +892,7 @@ impl SeaIo {
         let fd = self.fds.insert(OpenFile {
             logical,
             ns_shard,
+            record,
             tier,
             file,
             writable: mode == OpenMode::ReadWrite,
@@ -875,7 +909,17 @@ impl SeaIo {
         if !of.writable {
             return Err(SeaError::NotWritable(fd));
         }
-        let new_end = of.pos + buf.len() as u64;
+        // A position seeked near u64::MAX must fail loudly, not wrap
+        // into a tiny new_end and bogus growth accounting.
+        let new_end = of.pos.checked_add(buf.len() as u64).ok_or_else(|| {
+            io_err(
+                &of.logical,
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidInput,
+                    "write would extend the file past u64::MAX",
+                ),
+            )
+        })?;
         let growth = new_end.saturating_sub(of.size);
         let persist = self.core.is_persist(of.tier);
         if growth > 0 && !persist && !self.core.tier(of.tier).try_reserve(growth) {
@@ -888,6 +932,19 @@ impl SeaIo {
             {
                 self.core.admission.note_evicted_to_fit();
             } else {
+                // The spill copies and re-registers the file *by path*,
+                // so a rename that retired the memoised one must be
+                // resolved first — the lock-free publish below never
+                // needs this (the record travels with the meta), but a
+                // spill against the stale path would copy from a
+                // nonexistent file or clobber an unrelated one created
+                // there since.
+                if let Some((to, shard)) =
+                    self.core.ns.current_location(&of.record, &of.logical)
+                {
+                    of.logical = to;
+                    of.ns_shard = shard;
+                }
                 Self::spill_locked(&self.core, of, growth)?;
             }
         }
@@ -902,7 +959,54 @@ impl SeaIo {
             of.size = new_end;
         }
         self.core.counters.add_written(buf.len() as u64, persist);
-        self.core.ns.record_write_in(of.ns_shard, &of.logical, of.size, of.tier);
+        // Publish on the memoised record: steady state (already-dirty
+        // file) is lock-free; a clean→dirty transition or a retired
+        // record (rename/unlink/truncate raced this descriptor) goes
+        // through the namespace — never silently dropped (the seed
+        // ignored record_write's false here and lost the update).
+        // Any replica invalidated by the transition was staged at the
+        // file's pre-write (clean) size: read it before publishing grows
+        // the record, so its reservation is released in exactly the
+        // amount it took.
+        let prior_size = of.record.size();
+        let ack =
+            self.core
+                .ns
+                .publish_write(&of.record, of.ns_shard, &of.logical, of.size, of.tier);
+        if let Some((to, shard)) = ack.moved_to {
+            // Renamed while open: bytes land under the new name from here
+            // on (and already did, physically — the inode moved).
+            of.logical = to;
+            of.ns_shard = shard;
+        }
+        if !ack.tracked {
+            // Unlinked (or truncate-created over) while open: POSIX
+            // semantics — the write succeeds into the detached inode and
+            // the path is never resurrected. Counted, not ignored — and
+            // the growth reservation taken above belongs to a name that
+            // no longer exists, so nothing else will ever release it.
+            // Release it only if this write's size never reached the
+            // record: the unlink released whatever size it observed
+            // there, so if our fetch_max landed first the growth is
+            // already accounted, and releasing again would over-free
+            // (eating other files' reservations). When in doubt this
+            // errs toward a bounded one-write leak, never corruption.
+            self.core.counters.bump_write_untracked();
+            if growth > 0 && !persist && of.record.size() < of.size {
+                self.core.tier(of.tier).release(growth);
+            }
+        }
+        for tier in ack.invalidated {
+            // The transition invalidated stale replicas; physical
+            // cleanup happens here, outside every namespace lock. The
+            // persist copy is left in place (persist capacity is not
+            // reserved, and the next flush overwrites it atomically);
+            // stale cache replicas are deleted and their reservations
+            // released — the seed leaked both.
+            if !self.core.is_persist(tier) {
+                self.core.delete_replica(&of.logical, tier, prior_size);
+            }
+        }
         Ok(buf.len())
     }
 
@@ -936,8 +1040,12 @@ impl SeaIo {
             }
         }
         if target == persist {
+            // No reservation on the persistent tier — its capacity is
+            // deliberately unaccounted (see TierSet::place_write). The
+            // seed reserved here but nothing ever released it, so
+            // Tier::used()/free() and the run report drifted
+            // monotonically upward across spills.
             core.admission.note_fell_through();
-            core.tiers.get(persist).try_reserve(needed);
         }
         of.file.sync_all().ok();
         // A failed (or fenced-out/cancelled) spill copy must hand back
@@ -963,6 +1071,13 @@ impl SeaIo {
             .map_err(|e| io_err(&of.logical, e))?;
         of.file = file;
         of.tier = target;
+        // A rename may have slipped in as the copy's fence released:
+        // re-resolve so the master/replica rewrite lands on the entry
+        // the file actually lives at.
+        if let Some((to, shard)) = core.ns.current_location(&of.record, &of.logical) {
+            of.logical = to;
+            of.ns_shard = shard;
+        }
         core.ns.update(&of.logical, |m| {
             m.master = target;
             m.replicas = vec![target];
@@ -982,6 +1097,10 @@ impl SeaIo {
         self.core.tier(of.tier).wait_data(n as u64);
         of.pos += n as u64;
         self.core.counters.add_read(n as u64, persist);
+        // Restamp the LRU clock on the memoised record — one relaxed
+        // store, so reads through a long-lived descriptor now count as
+        // recency directly instead of only at open/close.
+        self.core.ns.touch(&of.record);
         Ok(n)
     }
 
@@ -1007,8 +1126,11 @@ impl SeaIo {
         // reader mid-call on this fd finishes first (per-fd mutex), then
         // observes the retired generation as BadFd.
         let of = self.fds.remove(fd).ok_or(SeaError::BadFd(fd))?;
-        let OpenFile { logical, tier, writable, .. } = of;
-        self.core.ns.note_close(&logical);
+        let OpenFile { logical, record, tier, writable, .. } = of;
+        // Unpin through the record: a rename while this descriptor was
+        // open moved the entry, and a path-based unpin would miss it —
+        // leaving the file pinned (unflushable, unevictable) forever.
+        self.core.ns.note_close_record(&record, &logical);
         // Closing a read-only persist-tier fd re-offers the file for
         // promotion: the prefetcher skips open files, so the open-time
         // hint may have been dropped while this descriptor pinned it.
@@ -1028,7 +1150,7 @@ impl SeaIo {
         let (size, tier, dirty) = self
             .core
             .ns
-            .with_meta(&logical, |m| (m.size, m.fastest_replica(), m.dirty))
+            .with_meta(&logical, |m| (m.size(), m.fastest_replica(), m.dirty()))
             .ok_or_else(|| SeaError::NotFound(logical.to_string()))?;
         if self.core.is_persist(tier) {
             self.core.counters.bump_persist();
@@ -1053,11 +1175,12 @@ impl SeaIo {
             .ns
             .remove(&logical)
             .ok_or_else(|| SeaError::NotFound(logical.to_string()))?;
+        let size = meta.size();
         for tier in meta.replicas {
             if self.core.is_persist(tier) {
                 self.core.counters.bump_persist();
             }
-            self.core.delete_replica(&logical, tier, meta.size);
+            self.core.delete_replica(&logical, tier, size);
         }
         Ok(())
     }
@@ -1108,13 +1231,14 @@ impl SeaIo {
         // copies are deleted exactly like an unlink.
         if to_l != from_l {
             if let Some(old) = self.core.ns.remove(&to_l) {
+                let old_size = old.size();
                 for tier in old.replicas {
                     if replicas.contains(&tier) {
                         if !self.core.is_persist(tier) {
-                            self.core.tier(tier).release(old.size);
+                            self.core.tier(tier).release(old_size);
                         }
                     } else {
-                        self.core.delete_replica(&to_l, tier, old.size);
+                        self.core.delete_replica(&to_l, tier, old_size);
                     }
                 }
             }
@@ -1136,12 +1260,21 @@ impl SeaIo {
     }
 
     /// Total bytes and file count currently resident per tier (diagnostics
-    /// + the paper's §3.6 quota argument).
+    /// + the paper's §3.6 quota argument). Cache tiers report their
+    /// reservation counter; the persistent tier — whose capacity is
+    /// never reserved (see `TierSet::place_write`) — reports the
+    /// namespace-recorded bytes, so the run report no longer shows the
+    /// seed's monotonically drifting persist usage.
     pub fn tier_usage(&self) -> Vec<(String, u64, usize)> {
         (0..self.core.tiers.len())
             .map(|idx| {
                 let t = self.core.tier(idx);
-                (t.name.clone(), t.used(), self.core.ns.files_on_tier(idx))
+                let bytes = if self.core.is_persist(idx) {
+                    self.core.ns.bytes_on_tier(idx)
+                } else {
+                    t.used()
+                };
+                (t.name.clone(), bytes, self.core.ns.files_on_tier(idx))
             })
             .collect()
     }
@@ -1537,6 +1670,78 @@ mod tests {
         assert!(matches!(sea.close(99), Err(SeaError::BadFd(99))));
         assert!(matches!(sea.read(99, &mut [0u8; 1]), Err(SeaError::BadFd(99))));
         assert!(matches!(sea.write(99, &[1]), Err(SeaError::BadFd(99))));
+    }
+
+    #[test]
+    fn write_at_extreme_offset_fails_loudly_with_tracking_intact() {
+        // Regression for the unchecked `of.pos + buf.len()` at the top
+        // of write(): the sum is now checked_add (a wrap would have
+        // produced a tiny new_end and bogus growth accounting). The OS
+        // caps seek offsets at i64::MAX, so the largest reachable
+        // position exercises the same path end-to-end: a growth no tier
+        // can hold and a physical write beyond every filesystem's limit
+        // must surface as a proper SeaError — with size tracking and
+        // capacity accounting intact, not wrapped.
+        let (_g, sea) = setup(MIB);
+        let fd = sea.create("/o.dat").unwrap();
+        sea.write(fd, b"abc").unwrap();
+        sea.lseek(fd, SeekFrom::Start(i64::MAX as u64)).unwrap();
+        assert!(matches!(
+            sea.write(fd, &[0u8; 16]),
+            Err(SeaError::Io { .. })
+        ));
+        // no tracking corruption: the recorded size never wrapped, and
+        // the fd keeps working at a sane offset
+        assert_eq!(sea.core().ns.lookup("/o.dat").unwrap().size(), 3);
+        sea.lseek(fd, SeekFrom::Start(3)).unwrap();
+        sea.write(fd, b"def").unwrap();
+        sea.close(fd).unwrap();
+        assert_eq!(sea.core().ns.lookup("/o.dat").unwrap().size(), 6);
+        let fd = sea.open("/o.dat", OpenMode::Read).unwrap();
+        let mut buf = [0u8; 8];
+        let n = sea.read(fd, &mut buf).unwrap();
+        assert_eq!(&buf[..n], b"abcdef");
+        sea.close(fd).unwrap();
+    }
+
+    #[test]
+    fn persist_usage_stays_baseline_after_spill_failure_and_unlink() {
+        // The seed reserved persist capacity on spill but nothing ever
+        // released it (delete_replica skips persist), so used()/free()
+        // and the run report drifted monotonically. Persist is now never
+        // reserved; the report reads namespace-recorded bytes instead.
+        let (_g, sea) = setup(64);
+        let persist_idx = sea.core().tiers.persist_idx();
+        assert_eq!(sea.core().tiers.get(persist_idx).used(), 0);
+
+        // failed spill: the cached master vanishes behind Sea's back
+        let fd = sea.create("/s.dat").unwrap();
+        sea.write(fd, &[1u8; 32]).unwrap();
+        std::fs::remove_file(sea.core().tiers.get(0).physical("/s.dat")).unwrap();
+        assert!(
+            sea.write(fd, &[2u8; 64]).is_err(),
+            "spill copy from a deleted master must fail"
+        );
+        assert_eq!(
+            sea.core().tiers.get(persist_idx).used(),
+            0,
+            "failed spill leaked a persist reservation"
+        );
+        sea.close(fd).unwrap();
+        sea.unlink("/s.dat").unwrap();
+        assert_eq!(sea.core().tiers.get(persist_idx).used(), 0);
+        assert_eq!(sea.core().tiers.get(0).used(), 0, "cache must return to baseline");
+
+        // successful spill: persist stays unaccounted; the usage report
+        // shows the namespace-recorded bytes and returns to zero on unlink
+        let fd = sea.create("/t.dat").unwrap();
+        sea.write(fd, &[3u8; 100]).unwrap(); // > 64 B cache -> spills
+        sea.close(fd).unwrap();
+        assert_eq!(sea.stat("/t.dat").unwrap().tier, "lustre");
+        assert_eq!(sea.core().tiers.get(persist_idx).used(), 0);
+        assert_eq!(sea.tier_usage()[persist_idx].1, 100);
+        sea.unlink("/t.dat").unwrap();
+        assert_eq!(sea.tier_usage()[persist_idx].1, 0);
     }
 
     #[test]

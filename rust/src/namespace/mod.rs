@@ -16,7 +16,8 @@
 //! clean logical path. Each shard is an independent `RwLock` over its
 //! file map plus that shard's slice of the **dirty queue**, so pipeline
 //! workers touching different files contend only when their paths hash to
-//! the same shard. Lock discipline:
+//! the same shard — and the write hot path does not touch the shard lock
+//! at all in steady state (see below). Lock discipline:
 //!
 //! * shard locks are leaf locks — no I/O, no tier waits, and no other
 //!   shard lock is ever acquired while one is held, with the single
@@ -27,6 +28,55 @@
 //!   therefore *not* atomic snapshots — callers (diagnostics, drain) must
 //!   tolerate concurrent mutation, exactly as with the previous single-map
 //!   implementation under a briefly released lock.
+//!
+//! # The lock-free write path: [`FileRecord`]
+//!
+//! A file's metadata is split in two. The **cold half** stays in
+//! [`FileMeta`] under the shard lock: the replica set, the master tier,
+//! the open count, the flushed flag. The **hot half** — size, dirty
+//! flag, write version, LRU stamp — lives in a shared, atomically
+//! updated [`FileRecord`] behind an `Arc`, which the interceptor caches
+//! in its per-fd state at open time ([`Namespace::note_open`] hands it
+//! out). A steady-state `write` on an already-dirty file then publishes
+//! through [`Namespace::publish_write`] with four atomic ops and **zero
+//! shard-lock acquisitions**; the shard lock is taken only on the
+//! clean→dirty *transition*, which must feed the dirty queue, move the
+//! master to the written tier, and invalidate stale replicas.
+//!
+//! The clean-marking race this creates is closed by write order + unique
+//! stamps: a writer stores a fresh, never-reused version *before*
+//! swapping the dirty flag, and [`Namespace::commit_flush`] (the
+//! flusher's only clean-marking primitive) re-reads the version *after*
+//! its own dirty swap — so a write that interleaves with clean-marking
+//! is always re-detected and the file stays dirty and queued. Writers
+//! always hold an open descriptor, so `open_count == 0` observed under a
+//! shard lock also proves no lock-free publish can be in flight — the
+//! guard every eviction/detach/stage re-check relies on.
+//!
+//! # The retired-record protocol (rename/unlink/truncate vs. open fds)
+//!
+//! A cached record can go stale: the file may be renamed, unlinked, or
+//! truncate-created while a descriptor holds the `Arc`. Every such
+//! metadata op retires the record **under the shard lock** it already
+//! holds:
+//!
+//! * `rename` marks it *moved* and stores the destination path — the
+//!   record itself travels with the meta to the new key, so in-flight
+//!   size/dirty/version publishes keep landing on the live record; the
+//!   writer re-resolves the new path (and re-memoises it) only when a
+//!   dirty transition needs the key for queueing. This is what fixes the
+//!   seed's lost-write bug: bytes written through a renamed-while-open
+//!   fd are tracked — and flushed — under the post-rename name instead
+//!   of silently vanishing.
+//! * `unlink` and truncate-`create` mark it *removed*: publishes through
+//!   the dead record are deliberately dropped (POSIX unlinked-file
+//!   semantics — bytes keep flowing to the inode, the name is gone), and
+//!   the caller is told so ([`WriteAck::tracked`]) instead of the seed's
+//!   silently ignored `false`.
+//!
+//! [`Namespace::publish_write`] re-validates the record pointer under
+//! the shard lock before any transition bookkeeping, so a stale record
+//! can never mutate another incarnation's queue state.
 //!
 //! # The incremental dirty queue
 //!
@@ -60,30 +110,29 @@
 //!
 //! # LRU access stamps
 //!
-//! Every file carries [`FileMeta::last_access`], a stamp from a
-//! namespace-global logical clock bumped on open ([`Namespace::note_open`]),
-//! close ([`Namespace::note_close`]) and every recorded write — always
-//! under the shard lock the operation already holds, so recency tracking
-//! adds no extra lock traffic to the hot path. Reads through a long-lived
-//! descriptor are covered by the open/close stamps: while the descriptor
-//! is open the file is pinned (`open_count > 0` excludes it from
-//! eviction), and the close restamps it. Mount-time registration leaves
-//! the stamp at 0 ("never accessed"), so untouched inputs are the
-//! coldest candidates. The evict-to-make-room admission path
+//! Every file carries an access stamp ([`FileRecord::last_access`]) from
+//! a namespace-global logical clock, bumped on open
+//! ([`Namespace::note_open`]), close ([`Namespace::note_close`]), every
+//! recorded write, and — now that the stamp is a plain atomic — every
+//! intercepted read ([`Namespace::touch`]), all without extra lock
+//! traffic. Mount-time registration leaves the stamp at 0 ("never
+//! accessed"), so untouched inputs are the coldest candidates. The
+//! evict-to-make-room admission path
 //! (`SeaCore::reserve_on_cache_evicting`) orders its candidate scan
-//! ([`Namespace::cold_cache_replicas`]) by these stamps, coldest first.
+//! ([`Namespace::cold_cache_replicas`]) by relaxed loads of these
+//! stamps, coldest first.
 //!
 //! Hot paths avoid re-normalising paths via [`CleanPath`] (a proven-clean
 //! logical path), avoid cloning whole [`FileMeta`] records (with their
 //! replica `Vec`s) via [`Namespace::with_meta`], and avoid re-hashing the
-//! path on every intercepted `write` via [`Namespace::record_write_in`]
-//! (the interceptor memoises the shard index in its per-fd state at open
-//! time).
+//! path on every intercepted `write` — the interceptor memoises the
+//! shard index *and* the [`FileRecord`] in its per-fd state at open time
+//! and publishes through [`Namespace::publish_write`].
 
 use std::borrow::Cow;
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::tiers::TierIdx;
 
@@ -220,46 +269,173 @@ impl PathArg for CleanPath {
     }
 }
 
-/// Per-file record.
+/// Retirement state of a [`FileRecord`] (see the module docs).
+const REC_LIVE: u8 = 0;
+/// Renamed: the record travelled with the meta; `relocated` holds the
+/// current path.
+const REC_MOVED: u8 = 1;
+/// Unlinked or truncate-created over: the record is permanently dead.
+const REC_REMOVED: u8 = 2;
+
+/// The hot half of a file's metadata: the fields every intercepted
+/// `write` (and the flusher/eviction scans reading them) touches,
+/// shared behind an `Arc` between the namespace map and the per-fd
+/// state, and updated with plain atomics — no shard lock in steady
+/// state (see the module docs for the full protocol).
+#[derive(Debug)]
+pub struct FileRecord {
+    /// Current file size. Writers grow it with `fetch_max` (a write
+    /// never shrinks a file; truncate replaces the whole record), so
+    /// racing appenders through separate descriptors can never regress
+    /// the recorded size.
+    size: AtomicU64,
+    /// True when the master copy postdates the persistent copy. Writers
+    /// `swap` it to true — the swap result is what detects the
+    /// clean→dirty transition that must take the shard lock.
+    dirty: AtomicBool,
+    /// Write generation, stamped from the **namespace-global** counter
+    /// on every recorded write, clean→dirty transition, and
+    /// (re-)creation. Global stamps are never reused across paths or
+    /// file lifetimes, so a flusher comparing its [`DirtyEntry`]
+    /// snapshot cannot be ABA-fooled by truncate or unlink+recreate —
+    /// writes landing *during* a flush copy are never silently marked
+    /// clean. Writers publish the stamp **before** flipping `dirty`;
+    /// [`Namespace::commit_flush`] re-reads it after its own swap.
+    version: AtomicU64,
+    /// LRU access stamp from the namespace-global logical clock: bumped
+    /// on open, close, read, and every recorded write (see the module
+    /// docs). 0 = registered at mount and never touched since — the
+    /// coldest possible eviction candidate.
+    last_access: AtomicU64,
+    /// [`REC_LIVE`] / [`REC_MOVED`] / [`REC_REMOVED`]; transitions only
+    /// under the shard lock of the key the meta currently lives at.
+    state: AtomicU8,
+    /// Current logical path once the file has been renamed (`state ==
+    /// REC_MOVED`); always the *latest* destination. Its own mutex is
+    /// only ever held briefly for a clone/store, never across another
+    /// lock acquisition, so it cannot participate in a cycle.
+    relocated: Mutex<Option<CleanPath>>,
+}
+
+impl FileRecord {
+    fn new(dirty: bool) -> FileRecord {
+        FileRecord {
+            size: AtomicU64::new(0),
+            dirty: AtomicBool::new(dirty),
+            version: AtomicU64::new(0),
+            last_access: AtomicU64::new(0),
+            state: AtomicU8::new(REC_LIVE),
+            relocated: Mutex::new(None),
+        }
+    }
+
+    pub fn size(&self) -> u64 {
+        self.size.load(Ordering::Acquire)
+    }
+
+    pub fn dirty(&self) -> bool {
+        self.dirty.load(Ordering::Acquire)
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    pub fn last_access(&self) -> u64 {
+        self.last_access.load(Ordering::Relaxed)
+    }
+
+    /// True once unlink or truncate-create retired this record: updates
+    /// published through it go nowhere, deliberately.
+    pub fn is_removed(&self) -> bool {
+        self.state.load(Ordering::Acquire) == REC_REMOVED
+    }
+
+    /// The file's current path if a rename moved it since this record
+    /// was handed out (`None` while live-in-place or removed).
+    fn moved_to(&self) -> Option<CleanPath> {
+        if self.state.load(Ordering::Acquire) == REC_MOVED {
+            self.relocated.lock().unwrap().clone()
+        } else {
+            None
+        }
+    }
+
+    /// Retire on unlink/truncate — only under the owning shard lock.
+    fn retire_removed(&self) {
+        self.state.store(REC_REMOVED, Ordering::Release);
+    }
+
+    /// Flag a rename destination — only under the owning shard lock(s).
+    /// The path is stored before the state flips, and readers re-lock
+    /// the mutex after observing `REC_MOVED`, so they never see `None`.
+    fn retire_moved(&self, to: &CleanPath) {
+        *self.relocated.lock().unwrap() = Some(to.clone());
+        self.state.store(REC_MOVED, Ordering::Release);
+    }
+}
+
+/// Per-file record: the shard-locked cold half. Hot fields (size, dirty,
+/// version, LRU stamp) live in the shared [`FileRecord`]; cloning a
+/// `FileMeta` clones the `Arc`, not the record — a clone is a *handle*,
+/// not a snapshot.
 #[derive(Debug, Clone)]
 pub struct FileMeta {
-    pub size: u64,
     /// Tier holding the authoritative copy.
     pub master: TierIdx,
     /// All tiers holding a (current) copy, including `master`.
     pub replicas: Vec<TierIdx>,
-    /// True when the master copy postdates the persistent copy.
-    pub dirty: bool,
     /// Number of open file descriptors (flusher must not evict while > 0).
     pub open_count: u32,
     /// File has been persisted at least once.
     pub flushed: bool,
-    /// Write generation, stamped from a **namespace-global** counter on
-    /// every recorded write, clean→dirty transition, and (re-)creation.
-    /// Global stamps are never reused across paths or file lifetimes, so
-    /// a flusher comparing its [`DirtyEntry`] snapshot cannot be
-    /// ABA-fooled by truncate or unlink+recreate — writes landing
-    /// *during* a flush copy are never silently marked clean.
-    pub version: u64,
-    /// LRU access stamp from the namespace-global logical clock: bumped
-    /// on open, close, and every recorded write (see the module docs).
-    /// 0 = registered at mount and never touched since — the coldest
-    /// possible eviction candidate.
-    pub last_access: u64,
+    /// The shared hot-field record (see [`FileRecord`]).
+    pub rec: Arc<FileRecord>,
 }
 
 impl FileMeta {
     fn new(master: TierIdx) -> FileMeta {
         FileMeta {
-            size: 0,
             master,
             replicas: vec![master],
-            dirty: true,
             open_count: 0,
             flushed: false,
-            version: 0,
-            last_access: 0,
+            rec: Arc::new(FileRecord::new(true)),
         }
+    }
+
+    pub fn size(&self) -> u64 {
+        self.rec.size()
+    }
+
+    pub fn dirty(&self) -> bool {
+        self.rec.dirty()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.rec.version()
+    }
+
+    pub fn last_access(&self) -> u64 {
+        self.rec.last_access()
+    }
+
+    /// Set the size outright (truncate/registration/locked updates; the
+    /// lock-free write path grows it monotonically instead).
+    pub fn set_size(&self, size: u64) {
+        self.rec.size.store(size, Ordering::Release);
+    }
+
+    /// Flip the dirty flag under the shard lock. Production clean-marking
+    /// must go through [`Namespace::commit_flush`] instead, which closes
+    /// the race against lock-free writers; this setter is for locked
+    /// updates that cannot race one (creation, tests, simulators).
+    pub fn set_dirty(&self, dirty: bool) {
+        self.rec.dirty.store(dirty, Ordering::Release);
+    }
+
+    pub fn set_last_access(&self, stamp: u64) {
+        self.rec.last_access.store(stamp, Ordering::Relaxed);
     }
 
     pub fn has_replica(&self, tier: TierIdx) -> bool {
@@ -281,6 +457,41 @@ pub struct DirtyEntry {
     pub open: bool,
     /// [`FileMeta::version`] at drain time; compare before marking clean.
     pub version: u64,
+}
+
+/// What [`Namespace::publish_write`] did with a write (see the module
+/// docs on the lock-free write protocol).
+#[derive(Debug)]
+pub struct WriteAck {
+    /// The file's current path and shard index when a rename moved it
+    /// since the caller memoised them — re-memoise and keep writing
+    /// under the new name.
+    pub moved_to: Option<(CleanPath, usize)>,
+    /// Replica tiers invalidated by the clean→dirty transition (only the
+    /// written tier holds current bytes). Shard locks are leaf locks, so
+    /// physical deletion and reservation release are the caller's job,
+    /// after the lock is gone.
+    pub invalidated: Vec<TierIdx>,
+    /// False when the record was retired by unlink or truncate-create:
+    /// the update was deliberately dropped (POSIX unlinked-file
+    /// semantics — the bytes flow to the inode, the name is gone), and
+    /// the caller should count it instead of ignoring it.
+    pub tracked: bool,
+}
+
+/// Outcome of [`Namespace::commit_flush`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushCommit {
+    /// The entry vanished mid-copy (unlink/truncate): the persist copy
+    /// is untracked and the caller must delete it.
+    Gone,
+    /// A write moved the version past the drain snapshot: the replica
+    /// (if any) is still recorded — the physical copy exists and must
+    /// stay tracked — but the file stays dirty and is re-queued under
+    /// the shard lock; the caller need not re-queue it.
+    Stale,
+    /// Marked clean; `flushed` set; the replica (if any) recorded.
+    Clean,
 }
 
 /// One shard: its slice of the file map plus its slices of the dirty and
@@ -316,16 +527,16 @@ impl ShardState {
         let Some(meta) = self.files.get_mut(key) else {
             return false;
         };
-        let was_dirty = meta.dirty;
+        let was_dirty = meta.dirty();
         f(meta);
-        let transitioned = meta.dirty && !was_dirty;
+        let transitioned = meta.dirty() && !was_dirty;
         if always_stamp || transitioned {
-            meta.version = fresh_stamp(vgen);
+            meta.rec.version.store(fresh_stamp(vgen), Ordering::Release);
         }
         if transitioned {
             self.dirty.insert(key.to_string());
         }
-        if !meta.dirty && meta.open_count == 0 {
+        if !meta.dirty() && meta.open_count == 0 {
             // Clean and closed after this update (a close, a flush
             // commit, a staged replica): eviction candidate. Duplicates
             // collapse in the set; stale entries are re-validated at
@@ -345,7 +556,7 @@ impl ShardState {
     /// rename re-enqueue rules live, shared by the same-shard and
     /// cross-shard arms of [`Namespace::rename`].
     fn enqueue_moved(&mut self, to_k: String, meta: &FileMeta, egen: &AtomicU64) {
-        if meta.dirty {
+        if meta.dirty() {
             self.dirty.insert(to_k);
         } else if meta.open_count == 0 {
             self.evictable.insert(to_k);
@@ -383,7 +594,7 @@ pub struct Namespace {
     /// Global write-generation source. Every issued stamp is unique
     /// across all paths and file lifetimes (see [`FileMeta::version`]).
     vgen: AtomicU64,
-    /// Global LRU access clock (see [`FileMeta::last_access`]).
+    /// Global LRU access clock (see [`FileRecord::last_access`]).
     agen: AtomicU64,
     /// Clean-and-closed transition counter: bumped every time a file
     /// (re-)enters the evictable state. The admission path memoises the
@@ -430,20 +641,22 @@ fn shard_of(path: &str) -> usize {
 
 /// Shard index of a path — for callers that memoise it (the
 /// interceptor's per-fd state) and feed it back through
-/// [`Namespace::record_write_in`] so the write hot path stops re-hashing
+/// [`Namespace::publish_write`] so the write hot path stops re-hashing
 /// per call.
 pub fn shard_index(path: &(impl PathArg + ?Sized)) -> usize {
     shard_of(&path.to_clean())
 }
 
-/// The write-path meta mutation shared by [`Namespace::record_write`] and
-/// [`Namespace::record_write_in`]: grow, dirty, move the master to the
-/// written tier, invalidate stale replicas, restamp the LRU clock.
+/// The shard-locked write-path meta mutation behind
+/// [`Namespace::record_write`] (cold paths, tests, simulators — the
+/// interceptor publishes lock-free via [`Namespace::publish_write`]):
+/// grow, dirty, move the master to the written tier, invalidate stale
+/// replicas, restamp the LRU clock.
 fn apply_write(m: &mut FileMeta, new_size: u64, tier: TierIdx, stamp: u64) {
-    m.size = new_size;
-    m.dirty = true;
+    m.set_size(new_size);
+    m.set_dirty(true);
     m.master = tier;
-    m.last_access = stamp;
+    m.set_last_access(stamp);
     // a write invalidates stale replicas: only the written tier
     // holds current bytes
     m.replicas.retain(|&t| t == tier);
@@ -462,20 +675,26 @@ impl Namespace {
     }
 
     /// Register a new file with its master on `tier` (create/truncate).
-    /// Returns the previous meta if the path existed. New files start
-    /// dirty, so the path is enqueued for the flusher; the fresh meta gets
-    /// a brand-new global version (stamped under the shard lock), so a
-    /// flusher holding a pre-truncate (or pre-unlink) [`DirtyEntry`]
-    /// snapshot always sees it as stale.
+    /// Returns the previous meta if the path existed — whose record is
+    /// **retired** under the shard lock, so descriptors still holding it
+    /// stop tracking instead of polluting the new incarnation. New files
+    /// start dirty, so the path is enqueued for the flusher; the fresh
+    /// meta gets a brand-new global version (stamped under the shard
+    /// lock), so a flusher holding a pre-truncate (or pre-unlink)
+    /// [`DirtyEntry`] snapshot always sees it as stale.
     pub fn create(&self, logical: &(impl PathArg + ?Sized), tier: TierIdx) -> Option<FileMeta> {
         let key = logical.to_clean().into_owned();
         let stamp = self.touch_stamp();
         let mut s = self.shard(&key).write().unwrap();
-        let mut meta = FileMeta::new(tier);
-        meta.version = fresh_stamp(&self.vgen);
-        meta.last_access = stamp;
+        let meta = FileMeta::new(tier);
+        meta.rec.version.store(fresh_stamp(&self.vgen), Ordering::Release);
+        meta.set_last_access(stamp);
         s.dirty.insert(key.clone());
-        s.files.insert(key, meta)
+        let prev = s.files.insert(key, meta);
+        if let Some(prev) = &prev {
+            prev.rec.retire_removed();
+        }
+        prev
     }
 
     /// A fresh LRU access stamp (monotone per namespace; fetched outside
@@ -545,14 +764,14 @@ impl Namespace {
     pub fn register_clean(&self, logical: &(impl PathArg + ?Sized), tier: TierIdx, size: u64) {
         let key = logical.to_clean().into_owned();
         let mut s = self.shard(&key).write().unwrap();
-        let meta = FileMeta {
-            size,
-            dirty: false,
-            flushed: true,
-            version: fresh_stamp(&self.vgen),
-            ..FileMeta::new(tier)
-        };
-        s.files.insert(key, meta);
+        let mut meta = FileMeta::new(tier);
+        meta.flushed = true;
+        meta.set_size(size);
+        meta.set_dirty(false);
+        meta.rec.version.store(fresh_stamp(&self.vgen), Ordering::Release);
+        if let Some(prev) = s.files.insert(key, meta) {
+            prev.rec.retire_removed();
+        }
     }
 
     /// Grow the file size to `new_size` and mark dirty (a write happened,
@@ -578,36 +797,225 @@ impl Namespace {
         )
     }
 
-    /// Hot-path variant of [`Namespace::record_write`] for callers that
-    /// memoised the shard index (via [`shard_index`]) at open time: the
-    /// path is already clean and already routed, so the per-call cost is
-    /// one shard write-lock and one map lookup — no re-hash.
-    pub fn record_write_in(
+    /// Hot-path write publication through a memoised [`FileRecord`] —
+    /// the lock-free replacement for the per-call shard write-lock the
+    /// seed took in `record_write_in`. Steady state (the file is already
+    /// dirty) is four atomic ops and **zero shard locks**; the shard
+    /// lock is taken only on the clean→dirty transition or when the
+    /// record was retired by a racing rename (re-resolve, re-memoise).
+    ///
+    /// Publish order is load-bearing: size, LRU stamp, then the fresh
+    /// (globally unique) version with `Release`, then the dirty swap —
+    /// [`Namespace::commit_flush`] re-reads the version after its own
+    /// swap, so a write interleaving with clean-marking is always
+    /// re-detected (see the module docs).
+    pub fn publish_write(
         &self,
+        rec: &Arc<FileRecord>,
         shard: usize,
         logical: &CleanPath,
         new_size: u64,
         tier: TierIdx,
-    ) -> bool {
+    ) -> WriteAck {
         debug_assert_eq!(shard, shard_of(logical.as_str()));
-        let stamp = self.touch_stamp();
-        self.shards[shard].write().unwrap().update_stamped(
-            logical.as_str(),
-            &self.vgen,
-            &self.egen,
-            |m| apply_write(m, new_size, tier, stamp),
-        )
+        if rec.is_removed() {
+            return WriteAck {
+                moved_to: None,
+                invalidated: Vec::new(),
+                tracked: false,
+            };
+        }
+        rec.size.fetch_max(new_size, Ordering::AcqRel);
+        rec.last_access.store(self.touch_stamp(), Ordering::Relaxed);
+        rec.version.store(fresh_stamp(&self.vgen), Ordering::Release);
+        if rec.dirty.swap(true, Ordering::AcqRel) {
+            // Already dirty: published without any lock. If the file was
+            // renamed meanwhile, the record moved with it — the flusher
+            // reads size/version from this same record under the new
+            // name, so nothing is lost by not re-resolving here. An
+            // unlink that slipped in since the check above is re-detected
+            // so the caller can settle its accounting (the record is
+            // dead either way; the publishes land nowhere visible).
+            let tracked = !rec.is_removed();
+            return WriteAck {
+                moved_to: None,
+                invalidated: Vec::new(),
+                tracked,
+            };
+        }
+        self.dirty_transition(rec, logical, tier)
+    }
+
+    /// One resolution step of the retired-record protocol, shared by
+    /// every record-following loop: false when the record was removed;
+    /// otherwise `key` is advanced to the record's current path (the
+    /// latest rename destination) and `moved` notes whether it changed.
+    /// Callers lock the key's shard, re-validate with `Arc::ptr_eq`,
+    /// and retry from here on a miss — a miss means a metadata op won
+    /// the race between this resolution and the lock, and re-reading
+    /// the state converges because renames are finite.
+    fn resolve_record_key(rec: &FileRecord, key: &mut CleanPath, moved: &mut bool) -> bool {
+        if rec.is_removed() {
+            return false;
+        }
+        if let Some(to) = rec.moved_to() {
+            if to.as_str() != key.as_str() {
+                *key = to;
+                *moved = true;
+            }
+        }
+        true
+    }
+
+    /// Slow path of [`Namespace::publish_write`]: this write made a
+    /// clean file dirty, which must atomically (under the shard lock)
+    /// feed the dirty queue, move the master to the written tier, and
+    /// invalidate stale replicas.
+    fn dirty_transition(
+        &self,
+        rec: &Arc<FileRecord>,
+        logical: &CleanPath,
+        tier: TierIdx,
+    ) -> WriteAck {
+        let mut key = logical.clone();
+        let mut moved = false;
+        loop {
+            if !Self::resolve_record_key(rec, &mut key, &mut moved) {
+                // Unlinked (or truncated over) while we raced: the dirty
+                // flag we set lives on a dead record; drop the update.
+                return WriteAck {
+                    moved_to: None,
+                    invalidated: Vec::new(),
+                    tracked: false,
+                };
+            }
+            let shard_idx = shard_of(key.as_str());
+            let mut s = self.shards[shard_idx].write().unwrap();
+            let invalidated = match s.files.get_mut(key.as_str()) {
+                Some(m) if Arc::ptr_eq(&m.rec, rec) => {
+                    m.master = tier;
+                    let dropped: Vec<TierIdx> =
+                        m.replicas.iter().copied().filter(|&t| t != tier).collect();
+                    m.replicas.retain(|&t| t == tier);
+                    if m.replicas.is_empty() {
+                        m.replicas.push(tier);
+                    }
+                    Some(dropped)
+                }
+                _ => None,
+            };
+            if let Some(invalidated) = invalidated {
+                s.dirty.insert(key.as_str().to_string());
+                return WriteAck {
+                    moved_to: moved.then(|| (key.clone(), shard_idx)),
+                    invalidated,
+                    tracked: true,
+                };
+            }
+            drop(s);
+        }
+    }
+
+    /// The file's current path and shard when a rename has retired the
+    /// caller's memoised one — `None` when unchanged or removed. For
+    /// callers that act *by path* outside the publish protocol (the
+    /// write path's spill re-registers the file at its path); the
+    /// lock-free publish itself never needs this, because the record
+    /// travels with the meta.
+    pub fn current_location(
+        &self,
+        rec: &FileRecord,
+        known: &CleanPath,
+    ) -> Option<(CleanPath, usize)> {
+        let to = rec.moved_to()?;
+        if to.as_str() == known.as_str() {
+            return None;
+        }
+        let shard = shard_of(to.as_str());
+        Some((to, shard))
+    }
+
+    /// The flusher's only clean-marking primitive, safe against the
+    /// lock-free write path. Under the shard lock: the `replica` (if
+    /// any) is recorded **unconditionally** — the physical copy landed
+    /// whether or not it is current, and tracking it is what lets a
+    /// later unlink/rename delete or move those bytes instead of
+    /// stranding them for the next mount's `register_existing` to
+    /// resurrect (a dirty file's persist replica is never read —
+    /// `fastest_replica` prefers the cache master — nor evicted, and
+    /// the re-queued retry overwrites it atomically). Then, if the
+    /// version still equals the drain-time snapshot, swap the dirty
+    /// flag off and **re-read the version** — a lock-free writer
+    /// publishes a fresh unique version before its own dirty swap, so a
+    /// changed re-read proves a write interleaved and the file is
+    /// re-dirtied and re-queued instead of being silently marked clean.
+    /// On `Clean`, a clean-and-closed file enters the evictable queue.
+    pub fn commit_flush(
+        &self,
+        logical: &(impl PathArg + ?Sized),
+        snapshot_version: u64,
+        replica: Option<TierIdx>,
+    ) -> FlushCommit {
+        let key = logical.to_clean();
+        let mut s = self.shard(&key).write().unwrap();
+        let (verdict, evictable) = {
+            let Some(m) = s.files.get_mut(&*key) else {
+                return FlushCommit::Gone;
+            };
+            if let Some(t) = replica {
+                m.flushed = true;
+                if !m.replicas.contains(&t) {
+                    m.replicas.push(t);
+                }
+            }
+            if m.version() != snapshot_version {
+                (FlushCommit::Stale, false)
+            } else {
+                m.rec.dirty.swap(false, Ordering::AcqRel);
+                if m.version() != snapshot_version {
+                    // A write raced the swap: undo. Both the writer's
+                    // transition and our re-queue may enqueue — the set
+                    // collapses duplicates.
+                    m.rec.dirty.store(true, Ordering::Release);
+                    (FlushCommit::Stale, false)
+                } else {
+                    m.flushed = true;
+                    (FlushCommit::Clean, m.open_count == 0)
+                }
+            }
+        };
+        match verdict {
+            FlushCommit::Stale => {
+                s.dirty.insert((*key).to_string());
+            }
+            FlushCommit::Clean if evictable => {
+                s.evictable.insert((*key).to_string());
+                self.egen.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+        verdict
+    }
+
+    /// Restamp a record's LRU clock (the read path: one relaxed store,
+    /// no lock — reads now count as recency directly instead of being
+    /// approximated by the surrounding open/close stamps).
+    pub fn touch(&self, rec: &FileRecord) {
+        rec.last_access.store(self.touch_stamp(), Ordering::Relaxed);
     }
 
     /// Open-path bookkeeping: bump the descriptor count and the LRU
-    /// access stamp in one locked op. Returns false if the path is
-    /// unknown.
-    pub fn note_open(&self, logical: &(impl PathArg + ?Sized)) -> bool {
+    /// access stamp in one locked op, and hand out the file's shared
+    /// [`FileRecord`] for the caller to memoise (the lock-free write
+    /// path). `None` if the path is unknown.
+    pub fn note_open(&self, logical: &(impl PathArg + ?Sized)) -> Option<Arc<FileRecord>> {
         let stamp = self.touch_stamp();
-        self.update(logical, |m| {
-            m.open_count += 1;
-            m.last_access = stamp;
-        })
+        let key = logical.to_clean();
+        let mut s = self.shard(&key).write().unwrap();
+        let meta = s.files.get_mut(&*key)?;
+        meta.open_count += 1;
+        meta.set_last_access(stamp);
+        Some(meta.rec.clone())
     }
 
     /// Close-path bookkeeping: drop the descriptor count and restamp the
@@ -618,8 +1026,46 @@ impl Namespace {
         let stamp = self.touch_stamp();
         self.update(logical, |m| {
             m.open_count = m.open_count.saturating_sub(1);
-            m.last_access = stamp;
+            m.set_last_access(stamp);
         })
+    }
+
+    /// [`Namespace::note_close`] through the memoised record: follows a
+    /// rename that retired the caller's memoised path (the record
+    /// travels with the meta), so a renamed-while-open descriptor unpins
+    /// the file it actually holds instead of leaving it pinned — and
+    /// therefore unflushable and unevictable — forever. Returns false
+    /// (a no-op) when the record was removed by unlink/truncate.
+    pub fn note_close_record(&self, rec: &Arc<FileRecord>, logical: &CleanPath) -> bool {
+        let stamp = self.touch_stamp();
+        let mut key = logical.clone();
+        let mut moved = false;
+        loop {
+            if !Self::resolve_record_key(rec, &mut key, &mut moved) {
+                return false;
+            }
+            let mut s = self.shards[shard_of(key.as_str())].write().unwrap();
+            let evictable = match s.files.get_mut(key.as_str()) {
+                Some(m) if Arc::ptr_eq(&m.rec, rec) => {
+                    m.open_count = m.open_count.saturating_sub(1);
+                    m.set_last_access(stamp);
+                    Some(!m.dirty() && m.open_count == 0)
+                }
+                _ => None,
+            };
+            match evictable {
+                Some(true) => {
+                    // clean-and-closed transition: eviction candidate,
+                    // exactly as the `update`-based unpin fed it
+                    s.evictable.insert(key.as_str().to_string());
+                    self.egen.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
+                Some(false) => return true,
+                // Raced a metadata op between resolution and lock: retry.
+                None => drop(s),
+            }
+        }
     }
 
     /// Record a replica on `tier` (flush/prefetch copied the file).
@@ -647,7 +1093,7 @@ impl Namespace {
         let key = logical.to_clean();
         let mut s = self.shard(&key).write().unwrap();
         let meta = s.files.get_mut(&*key)?;
-        if meta.dirty || meta.open_count > 0 || !meta.replicas.contains(&keep) {
+        if meta.dirty() || meta.open_count > 0 || !meta.replicas.contains(&keep) {
             return None;
         }
         let dropped: Vec<TierIdx> =
@@ -657,7 +1103,7 @@ impl Namespace {
         }
         meta.replicas.retain(|&t| t == keep);
         meta.master = keep;
-        Some((meta.size, dropped))
+        Some((meta.size(), dropped))
     }
 
     /// Atomically detach **only** the replica on `tier` from a file that
@@ -680,7 +1126,7 @@ impl Namespace {
         let key = logical.to_clean();
         let mut s = self.shard(&key).write().unwrap();
         let meta = s.files.get_mut(&*key)?;
-        if meta.dirty
+        if meta.dirty()
             || meta.open_count > 0
             || !meta.replicas.contains(&keep)
             || !meta.replicas.contains(&tier)
@@ -691,7 +1137,7 @@ impl Namespace {
         if meta.master == tier {
             meta.master = *meta.replicas.iter().min().expect("keep replica remains");
         }
-        Some(meta.size)
+        Some(meta.size())
     }
 
     /// Drop the replica on `tier`; if it was the master, the new master is
@@ -726,25 +1172,36 @@ impl Namespace {
             }
         };
         if remaining == 0 {
-            s.files.remove(&*key);
+            if let Some(prev) = s.files.remove(&*key) {
+                prev.rec.retire_removed();
+            }
             s.dirty.remove(&*key);
             s.evictable.remove(&*key);
         }
         Some(remaining)
     }
 
-    /// Remove the file entirely (unlink). Returns its last meta.
+    /// Remove the file entirely (unlink). Returns its last meta; the
+    /// record is retired under the shard lock, so open descriptors stop
+    /// tracking (and can never resurrect the path).
     pub fn remove(&self, logical: &(impl PathArg + ?Sized)) -> Option<FileMeta> {
         let key = logical.to_clean();
         let mut s = self.shard(&key).write().unwrap();
         s.dirty.remove(&*key);
         s.evictable.remove(&*key);
-        s.files.remove(&*key)
+        let prev = s.files.remove(&*key);
+        if let Some(prev) = &prev {
+            prev.rec.retire_removed();
+        }
+        prev
     }
 
     /// Rename; fails (returns false) if the source is unknown. Cross-shard
     /// renames lock both shards in ascending index order. A dirty file is
-    /// re-enqueued under its new name.
+    /// re-enqueued under its new name, and the record is flagged *moved*
+    /// (with the destination path) under the shard locks, so descriptors
+    /// that memoised the old path re-resolve instead of losing writes. An
+    /// overwritten destination's record is retired like an unlink's.
     pub fn rename(&self, from: &(impl PathArg + ?Sized), to: &(impl PathArg + ?Sized)) -> bool {
         let from_k = from.to_clean();
         let to_k = to.to_clean().into_owned();
@@ -765,8 +1222,11 @@ impl Namespace {
                 Some(meta) => {
                     src.dirty.remove(&*from_k);
                     src.evictable.remove(&*from_k);
+                    meta.rec.retire_moved(&CleanPath::from_clean(to_k.clone()));
                     dst.enqueue_moved(to_k.clone(), &meta, &self.egen);
-                    dst.files.insert(to_k, meta);
+                    if let Some(prev) = dst.files.insert(to_k, meta) {
+                        prev.rec.retire_removed();
+                    }
                     true
                 }
                 None => false,
@@ -784,8 +1244,11 @@ impl Namespace {
             Some(meta) => {
                 s.dirty.remove(from_k);
                 s.evictable.remove(from_k);
+                meta.rec.retire_moved(&CleanPath::from_clean(to_k.clone()));
                 s.enqueue_moved(to_k.clone(), &meta, egen);
-                s.files.insert(to_k, meta);
+                if let Some(prev) = s.files.insert(to_k, meta) {
+                    prev.rec.retire_removed();
+                }
                 true
             }
             None => false,
@@ -834,12 +1297,12 @@ impl Namespace {
             let drained = std::mem::take(&mut s.dirty);
             for key in drained {
                 if let Some(m) = s.files.get(&key) {
-                    if m.dirty {
+                    if m.dirty() {
                         out.push(DirtyEntry {
-                            size: m.size,
+                            size: m.size(),
                             master: m.master,
                             open: m.open_count > 0,
-                            version: m.version,
+                            version: m.version(),
                             logical: CleanPath(key),
                         });
                     }
@@ -882,7 +1345,7 @@ impl Namespace {
             let drained = std::mem::take(&mut s.evictable);
             for key in drained {
                 if let Some(m) = s.files.get(&key) {
-                    if !m.dirty && m.open_count == 0 {
+                    if !m.dirty() && m.open_count == 0 {
                         out.push(key);
                     }
                 }
@@ -898,12 +1361,12 @@ impl Namespace {
         let mut out = Vec::new();
         for shard in &self.shards {
             let s = shard.read().unwrap();
-            out.extend(s.files.iter().filter(|(_, m)| m.dirty).map(|(k, m)| DirtyEntry {
+            out.extend(s.files.iter().filter(|(_, m)| m.dirty()).map(|(k, m)| DirtyEntry {
                 logical: CleanPath(k.clone()),
-                size: m.size,
+                size: m.size(),
                 master: m.master,
                 open: m.open_count > 0,
-                version: m.version,
+                version: m.version(),
             }));
         }
         out
@@ -927,7 +1390,7 @@ impl Namespace {
                 s.files
                     .iter()
                     .filter(|(k, m)| {
-                        !m.dirty && m.open_count == 0 && select(k.as_str(), m)
+                        !m.dirty() && m.open_count == 0 && select(k.as_str(), m)
                     })
                     .map(|(k, _)| k.clone()),
             );
@@ -956,12 +1419,12 @@ impl Namespace {
         for shard in &self.shards {
             let s = shard.read().unwrap();
             for (k, m) in &s.files {
-                if !m.dirty
+                if !m.dirty()
                     && m.open_count == 0
                     && m.has_replica(tier)
                     && m.has_replica(persist)
                 {
-                    v.push((m.last_access, k.clone(), m.size));
+                    v.push((m.last_access(), k.clone(), m.size()));
                 }
             }
         }
@@ -983,7 +1446,7 @@ impl Namespace {
             out.extend(
                 s.files
                     .iter()
-                    .filter(|(_, m)| !m.dirty && m.open_count == 0)
+                    .filter(|(_, m)| !m.dirty() && m.open_count == 0)
                     .map(|(k, m)| (k.clone(), m.clone())),
             );
         }
@@ -1021,6 +1484,25 @@ impl Namespace {
             .collect();
         v.sort();
         v
+    }
+
+    /// Total recorded bytes of files holding a replica on `tier`
+    /// (diagnostics / the run report's persist-tier usage — persist
+    /// capacity is never reserved, so `Tier::used()` cannot answer this
+    /// there; see `crate::tiers::TierSet::place_write`).
+    pub fn bytes_on_tier(&self, tier: TierIdx) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.read()
+                    .unwrap()
+                    .files
+                    .values()
+                    .filter(|m| m.has_replica(tier))
+                    .map(|m| m.size())
+                    .sum::<u64>()
+            })
+            .sum()
     }
 
     /// Count of files whose master or any replica is on `tier`.
@@ -1085,7 +1567,7 @@ mod tests {
         assert!(ns.create("/d/f.nii", 0).is_none());
         let meta = ns.lookup("/d/f.nii").unwrap();
         assert_eq!(meta.master, 0);
-        assert!(meta.dirty);
+        assert!(meta.dirty());
         assert_eq!(meta.replicas, vec![0]);
         assert!(ns.remove("/d/f.nii").is_some());
         assert!(!ns.exists("/d/f.nii"));
@@ -1104,11 +1586,11 @@ mod tests {
         let ns = Namespace::new();
         ns.create("/f", 1);
         ns.add_replica("/f", 2);
-        ns.update("/f", |m| m.dirty = false);
+        ns.update("/f", |m| m.set_dirty(false));
         ns.record_write("/f", 100, 1);
         let m = ns.lookup("/f").unwrap();
-        assert!(m.dirty);
-        assert_eq!(m.size, 100);
+        assert!(m.dirty());
+        assert_eq!(m.size(), 100);
         assert_eq!(m.replicas, vec![1]); // stale replica dropped
     }
 
@@ -1132,7 +1614,7 @@ mod tests {
         ns.record_write("/a", 42, 0);
         assert!(ns.rename("/a", "/b/c"));
         assert!(!ns.exists("/a"));
-        assert_eq!(ns.lookup("/b/c").unwrap().size, 42);
+        assert_eq!(ns.lookup("/b/c").unwrap().size(), 42);
         assert!(!ns.rename("/missing", "/x"));
     }
 
@@ -1154,10 +1636,10 @@ mod tests {
         let ns = Namespace::new();
         ns.create("/dirty", 0);
         ns.create("/clean", 0);
-        ns.update("/clean", |m| m.dirty = false);
+        ns.update("/clean", |m| m.set_dirty(false));
         ns.create("/open", 0);
         ns.update("/open", |m| {
-            m.dirty = false;
+            m.set_dirty(false);
             m.open_count = 1;
         });
         let dirty: Vec<String> =
@@ -1172,21 +1654,21 @@ mod tests {
     fn version_bumps_on_writes_and_dirty_transitions() {
         let ns = Namespace::new();
         ns.create("/f", 0);
-        let v0 = ns.with_meta("/f", |m| m.version).unwrap();
+        let v0 = ns.with_meta("/f", |m| m.version()).unwrap();
         ns.record_write("/f", 10, 0);
-        let v1 = ns.with_meta("/f", |m| m.version).unwrap();
+        let v1 = ns.with_meta("/f", |m| m.version()).unwrap();
         assert!(v1 > v0, "record_write must move the version");
-        ns.update("/f", |m| m.dirty = false);
-        assert_eq!(ns.with_meta("/f", |m| m.version).unwrap(), v1);
-        ns.update("/f", |m| m.dirty = true); // clean→dirty transition
-        let v2 = ns.with_meta("/f", |m| m.version).unwrap();
+        ns.update("/f", |m| m.set_dirty(false));
+        assert_eq!(ns.with_meta("/f", |m| m.version()).unwrap(), v1);
+        ns.update("/f", |m| m.set_dirty(true)); // clean→dirty transition
+        let v2 = ns.with_meta("/f", |m| m.version()).unwrap();
         assert!(v2 > v1);
         // The drained entry snapshots the version: a later write makes
         // the snapshot stale (what the flusher's clean-marking guards on).
         let entry = ns.take_dirty().pop().unwrap();
         assert_eq!(entry.version, v2);
         ns.record_write("/f", 20, 0);
-        assert!(ns.with_meta("/f", |m| m.version).unwrap() > entry.version);
+        assert!(ns.with_meta("/f", |m| m.version()).unwrap() > entry.version);
     }
 
     #[test]
@@ -1200,7 +1682,7 @@ mod tests {
         let entry = ns.take_dirty().pop().unwrap();
         ns.create("/f", 0); // truncate over existing
         ns.record_write("/f", 5, 0);
-        let v = ns.with_meta("/f", |m| m.version).unwrap();
+        let v = ns.with_meta("/f", |m| m.version()).unwrap();
         assert_ne!(v, entry.version, "truncate replayed an old version");
         assert!(v > entry.version);
 
@@ -1208,7 +1690,7 @@ mod tests {
         ns.remove("/f"); // unlink …
         ns.create("/f", 0); // … then recreate with the same write count
         ns.record_write("/f", 7, 0);
-        let v = ns.with_meta("/f", |m| m.version).unwrap();
+        let v = ns.with_meta("/f", |m| m.version()).unwrap();
         assert_ne!(v, entry.version, "unlink+recreate replayed an old version");
         assert!(v > entry.version);
     }
@@ -1218,9 +1700,9 @@ mod tests {
         let ns = Namespace::new();
         ns.register_clean("/input/scan.nii", 1, 4096);
         let m = ns.lookup("/input/scan.nii").unwrap();
-        assert!(!m.dirty);
+        assert!(!m.dirty());
         assert!(m.flushed);
-        assert_eq!(m.size, 4096);
+        assert_eq!(m.size(), 4096);
         assert_eq!(m.master, 1);
         assert_eq!(m.replicas, vec![1]);
         assert!(ns.take_dirty().is_empty(), "mount-time registration must not enqueue");
@@ -1249,11 +1731,11 @@ mod tests {
         let ns = Namespace::new();
         ns.create("/cleaned", 0);
         ns.create("/removed", 0);
-        ns.update("/cleaned", |m| m.dirty = false);
+        ns.update("/cleaned", |m| m.set_dirty(false));
         ns.remove("/removed");
         assert!(ns.take_dirty().is_empty());
         // transition back to dirty re-enqueues exactly once
-        ns.update("/cleaned", |m| m.dirty = true);
+        ns.update("/cleaned", |m| m.set_dirty(true));
         assert_eq!(ns.take_dirty().len(), 1);
     }
 
@@ -1280,7 +1762,7 @@ mod tests {
         assert!(ns.take_evictable().is_empty());
         // flush commit transition enqueues
         ns.update("/a.out", |m| {
-            m.dirty = false;
+            m.set_dirty(false);
             m.flushed = true;
         });
         assert_eq!(ns.take_evictable(), vec!["/a.out".to_string()]);
@@ -1297,13 +1779,13 @@ mod tests {
     fn take_evictable_revalidates_under_lock() {
         let ns = Namespace::new();
         ns.create("/f", 0);
-        ns.update("/f", |m| m.dirty = false);
+        ns.update("/f", |m| m.set_dirty(false));
         // re-dirtied before the drain: dropped (and the dirty queue owns it)
         ns.record_write("/f", 8, 0);
         assert!(ns.take_evictable().is_empty());
         // removed before the drain: dropped
         ns.create("/g", 0);
-        ns.update("/g", |m| m.dirty = false);
+        ns.update("/g", |m| m.set_dirty(false));
         ns.remove("/g");
         assert!(ns.take_evictable().is_empty());
     }
@@ -1313,7 +1795,7 @@ mod tests {
         let ns = Namespace::new();
         ns.create("/old.tmp", 0);
         ns.update("/old.tmp", |m| {
-            m.dirty = false;
+            m.set_dirty(false);
             m.flushed = true;
         });
         // simulate a sweep that dropped the (unlisted) candidate
@@ -1380,20 +1862,20 @@ mod tests {
             vec![("/a".to_string(), 10), ("/b".to_string(), 10), ("/c".to_string(), 10)]
         );
         // touching /a makes it the hottest
-        ns.note_open("/a");
+        ns.note_open("/a").unwrap();
         ns.note_close("/a");
         let cold: Vec<String> =
             ns.cold_cache_replicas(0, persist).into_iter().map(|(k, _)| k).collect();
         assert_eq!(cold, vec!["/b", "/c", "/a"]);
         // open files and dirty files are not candidates
-        ns.note_open("/b");
+        ns.note_open("/b").unwrap();
         ns.record_write("/c", 20, 0);
         let cold: Vec<String> =
             ns.cold_cache_replicas(0, persist).into_iter().map(|(k, _)| k).collect();
         assert_eq!(cold, vec!["/a"]);
         // files without a persist replica are never offered
         ns.create("/cache-only", 0);
-        ns.update("/cache-only", |m| m.dirty = false);
+        ns.update("/cache-only", |m| m.set_dirty(false));
         assert!(!ns
             .cold_cache_replicas(0, persist)
             .iter()
@@ -1403,22 +1885,160 @@ mod tests {
     }
 
     #[test]
-    fn record_write_in_matches_record_write() {
+    fn publish_write_matches_record_write() {
         let ns = Namespace::new();
         ns.create("/f", 1);
         ns.add_replica("/f", 2);
         let path = CleanPath::new("/f");
         let shard = shard_index(&path);
-        assert!(ns.record_write_in(shard, &path, 77, 1));
+        let rec = ns.note_open(&path).unwrap();
+        // the file starts dirty, so this is the pure lock-free fast path
+        let ack = ns.publish_write(&rec, shard, &path, 77, 1);
+        assert!(ack.tracked);
+        assert!(ack.moved_to.is_none());
+        assert!(ack.invalidated.is_empty(), "no transition on a dirty file");
         let m = ns.lookup("/f").unwrap();
-        assert!(m.dirty);
-        assert_eq!(m.size, 77);
+        assert!(m.dirty());
+        assert_eq!(m.size(), 77);
+        assert!(m.last_access() > 0);
+        // the fast path must not shrink a size another fd already grew
+        let ack = ns.publish_write(&rec, shard, &path, 10, 1);
+        assert!(ack.tracked);
+        assert_eq!(ns.lookup("/f").unwrap().size(), 77);
+    }
+
+    #[test]
+    fn publish_write_transition_moves_master_and_feeds_queue() {
+        let ns = Namespace::new();
+        ns.create("/f", 1);
+        ns.add_replica("/f", 2);
+        let path = CleanPath::new("/f");
+        let shard = shard_index(&path);
+        let rec = ns.note_open(&path).unwrap();
+        ns.take_dirty(); // consume the creation entry
+        ns.update(&path, |m| m.set_dirty(false));
+        let v0 = ns.with_meta(&path, |m| m.version()).unwrap();
+        let ack = ns.publish_write(&rec, shard, &path, 50, 1);
+        assert!(ack.tracked);
+        assert_eq!(ack.invalidated, vec![2], "stale replica invalidated");
+        let m = ns.lookup("/f").unwrap();
+        assert!(m.dirty());
         assert_eq!(m.master, 1);
         assert_eq!(m.replicas, vec![1]);
-        assert!(m.last_access > 0);
-        // unknown path reports false, like record_write
-        let ghost = CleanPath::new("/ghost");
-        assert!(!ns.record_write_in(shard_index(&ghost), &ghost, 1, 0));
+        assert!(m.version() > v0, "transition publishes a fresh version");
+        let drained = ns.take_dirty();
+        assert_eq!(drained.len(), 1, "clean→dirty transition must enqueue");
+        assert_eq!(drained[0].logical.as_str(), "/f");
+        assert_eq!(drained[0].size, 50);
+    }
+
+    #[test]
+    fn publish_write_follows_renamed_record() {
+        let ns = Namespace::new();
+        ns.create("/old", 0);
+        let old = CleanPath::new("/old");
+        let rec = ns.note_open(&old).unwrap();
+        ns.take_dirty();
+        ns.update(&old, |m| m.set_dirty(false));
+        assert!(ns.rename("/old", "/new"));
+        // clean→dirty transition through the stale path re-resolves
+        let ack = ns.publish_write(&rec, shard_index(&old), &old, 9, 0);
+        assert!(ack.tracked);
+        let (to, to_shard) = ack.moved_to.expect("must report the rename");
+        assert_eq!(to.as_str(), "/new");
+        assert_eq!(to_shard, shard_index(&to));
+        assert_eq!(ns.lookup("/new").unwrap().size(), 9);
+        let drained = ns.take_dirty();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].logical.as_str(), "/new", "queued under the new name");
+        // steady-state writes through the re-memoised path stay tracked
+        let ack = ns.publish_write(&rec, to_shard, &to, 12, 0);
+        assert!(ack.tracked && ack.moved_to.is_none());
+        assert_eq!(ns.lookup("/new").unwrap().size(), 12);
+    }
+
+    #[test]
+    fn publish_write_after_unlink_or_truncate_is_dropped() {
+        let ns = Namespace::new();
+        ns.create("/gone", 0);
+        let path = CleanPath::new("/gone");
+        let shard = shard_index(&path);
+        let rec = ns.note_open(&path).unwrap();
+        ns.remove(&path);
+        let ack = ns.publish_write(&rec, shard, &path, 33, 0);
+        assert!(!ack.tracked, "unlinked record must drop the update");
+        assert!(!ns.exists("/gone"), "write must not resurrect the path");
+
+        // truncate-create retires the old incarnation's record
+        ns.create("/t", 0);
+        let t = CleanPath::new("/t");
+        let rec = ns.note_open(&t).unwrap();
+        ns.record_write(&t, 100, 0);
+        ns.create("/t", 0); // truncate over existing
+        let ack = ns.publish_write(&rec, shard_index(&t), &t, 500, 0);
+        assert!(!ack.tracked, "old incarnation must not grow the new one");
+        assert_eq!(ns.lookup("/t").unwrap().size(), 0);
+    }
+
+    #[test]
+    fn note_close_record_follows_rename_and_feeds_eviction() {
+        let ns = Namespace::new();
+        ns.create("/a", 0);
+        let a = CleanPath::new("/a");
+        let rec = ns.note_open(&a).unwrap();
+        ns.update(&a, |m| {
+            m.set_dirty(false);
+            m.flushed = true;
+        });
+        assert!(ns.rename("/a", "/b"));
+        // path-based unpin would miss; the record-based one follows
+        assert!(ns.note_close_record(&rec, &a));
+        let m = ns.lookup("/b").unwrap();
+        assert_eq!(m.open_count, 0, "renamed file left pinned");
+        assert_eq!(
+            ns.take_evictable(),
+            vec!["/b".to_string()],
+            "clean-and-closed transition must enqueue under the new name"
+        );
+        // removed record: no-op
+        ns.remove("/b");
+        assert!(!ns.note_close_record(&rec, &a));
+    }
+
+    #[test]
+    fn commit_flush_marks_clean_and_detects_races() {
+        let ns = Namespace::new();
+        ns.create("/f", 0);
+        ns.record_write(&CleanPath::new("/f"), 10, 0);
+        let entry = ns.take_dirty().pop().unwrap();
+        // a write after the drain makes the snapshot stale up front
+        ns.record_write(&CleanPath::new("/f"), 20, 0);
+        assert_eq!(ns.commit_flush("/f", entry.version, Some(2)), FlushCommit::Stale);
+        let m = ns.lookup("/f").unwrap();
+        assert!(m.dirty(), "stale commit must leave the file dirty");
+        // the physical copy landed even though it is stale: it must be
+        // tracked (so unlink/rename delete or move it), just not clean
+        assert_eq!(m.replicas, vec![0, 2]);
+        assert!(m.flushed);
+        assert_eq!(m.master, 0, "master must stay on the dirty cache copy");
+
+        // a stale commit re-queues under the shard lock itself — the
+        // next drain sees the entry without any caller-side mark_dirty
+        let entry = ns.take_dirty().pop().unwrap();
+        ns.note_close("/f"); // file was never opened; count saturates at 0
+        assert_eq!(
+            ns.commit_flush("/f", entry.version, Some(2)),
+            FlushCommit::Clean
+        );
+        let m = ns.lookup("/f").unwrap();
+        assert!(!m.dirty());
+        assert!(m.flushed);
+        assert!(m.replicas.contains(&2));
+        assert_eq!(ns.take_evictable(), vec!["/f".to_string()]);
+
+        // vanished entry
+        ns.remove("/f");
+        assert_eq!(ns.commit_flush("/f", entry.version, Some(2)), FlushCommit::Gone);
     }
 
     #[test]
@@ -1442,7 +2062,7 @@ mod tests {
         // guards: dirty, open, tier==keep, missing keep replica
         assert_eq!(ns.detach_replica_on("/f", persist, persist), None);
         ns.add_replica("/f", 0);
-        ns.note_open("/f");
+        ns.note_open("/f").unwrap();
         assert_eq!(ns.detach_replica_on("/f", 0, persist), None, "open file");
         ns.note_close("/f");
         ns.record_write("/f", 60, 0); // dirty, and drops the persist replica
@@ -1456,7 +2076,7 @@ mod tests {
         let t0 = ns.evict_transitions();
         ns.create("/f", 0); // dirty: no transition
         assert_eq!(ns.evict_transitions(), t0);
-        ns.update("/f", |m| m.dirty = false); // clean-and-closed
+        ns.update("/f", |m| m.set_dirty(false)); // clean-and-closed
         let t1 = ns.evict_transitions();
         assert!(t1 > t0);
         // a rename of the clean file re-enters the evictable queue
@@ -1468,17 +2088,17 @@ mod tests {
     fn note_open_close_track_count_and_recency() {
         let ns = Namespace::new();
         ns.create("/f", 0);
-        let t0 = ns.lookup("/f").unwrap().last_access;
-        assert!(ns.note_open("/f"));
+        let t0 = ns.lookup("/f").unwrap().last_access();
+        assert!(ns.note_open("/f").is_some());
         let m = ns.lookup("/f").unwrap();
         assert_eq!(m.open_count, 1);
-        assert!(m.last_access > t0);
-        let t1 = m.last_access;
+        assert!(m.last_access() > t0);
+        let t1 = m.last_access();
         assert!(ns.note_close("/f"));
         let m = ns.lookup("/f").unwrap();
         assert_eq!(m.open_count, 0);
-        assert!(m.last_access > t1);
-        assert!(!ns.note_open("/missing"));
+        assert!(m.last_access() > t1);
+        assert!(ns.note_open("/missing").is_none());
         assert!(!ns.note_close("/missing"));
     }
 
@@ -1546,7 +2166,7 @@ mod tests {
             // refers to a live, dirty file
             for e in ns.take_dirty() {
                 let m = ns.lookup(&e.logical).unwrap();
-                crate::prop_assert!(m.dirty, "{} drained but clean", e.logical);
+                crate::prop_assert!(m.dirty(), "{} drained but clean", e.logical);
             }
             Ok(())
         });

@@ -141,7 +141,7 @@ fn read_whole(sea: &SeaIo, logical: &str) -> Result<Vec<u8>> {
     let fd = sea.open(logical, OpenMode::Read)?;
     // Size is known to the namespace: preallocate instead of growing the
     // buffer through repeated doubling (volumes are tens of MiB).
-    let size = sea.core().ns.with_meta(logical, |m| m.size).unwrap_or(0);
+    let size = sea.core().ns.with_meta(logical, |m| m.size()).unwrap_or(0);
     let mut data = Vec::with_capacity(size as usize);
     let mut buf = vec![0u8; 1 << 20];
     loop {

@@ -249,7 +249,7 @@ pub fn expand_readahead(core: &SeaCore, origin: &CleanPath, depth: usize) -> Vec
             }
         }
         let wants = core.ns.with_meta(&cand, |m| {
-            !m.dirty && m.open_count == 0 && m.fastest_replica() == persist
+            !m.dirty() && m.open_count == 0 && m.fastest_replica() == persist
         });
         if wants == Some(true) {
             out.push(CleanPath::from_clean(cand));
@@ -267,9 +267,9 @@ pub fn stage_one(core: &SeaCore, logical: &CleanPath) -> StageOutcome {
     let persist = core.tiers.persist_idx();
     let Some((size, version, eligible)) = core.ns.with_meta(logical, |m| {
         (
-            m.size,
-            m.version,
-            !m.dirty && m.open_count == 0 && m.fastest_replica() == persist,
+            m.size(),
+            m.version(),
+            !m.dirty() && m.open_count == 0 && m.fastest_replica() == persist,
         )
     }) else {
         return StageOutcome::Skipped;
@@ -294,8 +294,8 @@ pub fn stage_one(core: &SeaCore, logical: &CleanPath) -> StageOutcome {
         // and the physical copy stayed behind.
         let mut ok = false;
         let known = core.ns.update(logical, |m| {
-            if m.version == version
-                && !m.dirty
+            if m.version() == version
+                && !m.dirty()
                 && m.open_count == 0
                 && m.master == persist
                 && !m.replicas.contains(&target)
@@ -344,7 +344,7 @@ pub fn stage_listed(core: &SeaCore) -> Result<PrefetchReport, (String, std::io::
         }
         let Some((size, eligible)) = core
             .ns
-            .with_meta(&logical, |m| (m.size, !m.dirty && m.fastest_replica() == persist))
+            .with_meta(&logical, |m| (m.size(), !m.dirty() && m.fastest_replica() == persist))
         else {
             continue;
         };

@@ -201,6 +201,13 @@ impl TierSet {
     /// skips caches with no free bytes: `try_reserve(0)` would "succeed"
     /// even on a completely full cache, and the first real write would
     /// then be forced into a guaranteed whole-file spill.
+    ///
+    /// The persistent tier's capacity is **never reserved** (shared FS
+    /// quota is not Sea's concern; the paper's quota argument is about
+    /// file *counts*): nothing releases persist bytes on unlink or
+    /// failed spill, so a reservation here would only drift `used()`
+    /// monotonically upward. Persist-resident bytes for reporting come
+    /// from the namespace (`Namespace::bytes_on_tier`) instead.
     pub fn place_write(&self, bytes: u64) -> TierIdx {
         for (idx, tier) in self.tiers[..self.persist].iter().enumerate() {
             if bytes == 0 {
@@ -211,9 +218,6 @@ impl TierSet {
                 return idx;
             }
         }
-        // persistent tier: reserve without bound (shared FS quota is not
-        // Sea's concern; the paper's quota argument is about file *counts*)
-        self.tiers[self.persist].try_reserve(bytes);
         self.persist
     }
 

@@ -128,7 +128,7 @@ fn stress_invariants_hold_under_concurrent_io_with_flusher() {
         for path in core.ns.all_paths() {
             core.ns.with_meta(&path, |m| {
                 if m.has_replica(tier_idx) {
-                    expected += m.size;
+                    expected += m.size();
                 }
             });
         }
@@ -362,7 +362,7 @@ fn rename_racing_inflight_flush_never_strands_persist_copy() {
     let rep = drain(core);
     assert_eq!(rep.errors, 0, "{rep:?}");
     let meta = core.ns.lookup("/d/b.out").unwrap();
-    assert!(!meta.dirty, "renamed file never reflushed");
+    assert!(!meta.dirty(), "renamed file never reflushed");
     assert_eq!(
         std::fs::read(persist.physical("/d/b.out")).unwrap(),
         payload,
@@ -419,9 +419,171 @@ fn unlink_recreate_racing_inflight_flush_keeps_incarnations_separate() {
         "persist copy mixed bytes from two incarnations (len {})",
         on_persist.len()
     );
-    assert!(!core.ns.lookup("/d/x.out").unwrap().dirty);
+    assert!(!core.ns.lookup("/d/x.out").unwrap().dirty());
     assert_no_temp_litter(core.tiers.persist().root());
     assert_no_temp_litter(core.tiers.get(0).root());
+}
+
+#[test]
+fn rename_while_open_keeps_write_tracking_under_new_name() {
+    // The seed bug this PR pins: write() ignored record_write's false
+    // return, so bytes written through an fd whose file was concurrently
+    // renamed silently dropped their size/dirty update and were never
+    // flushed under the new name. With the retired-record protocol the
+    // update follows the rename — in both the already-dirty (fast-path)
+    // and clean→dirty (transition) cases.
+    let dir = tempdir("rename-open-write");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 8 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .build();
+    let lists = SeaLists::new(
+        PathRules::parse(r".*\.out$").unwrap(),
+        PathRules::empty(),
+        PathRules::empty(),
+    );
+    let sea = SeaIo::mount_with(cfg, lists, |t| t).unwrap();
+
+    // Case 1: dirty file — the record travels with the rename; the
+    // lock-free publish keeps landing on it.
+    let fd = sea.create("/d/a.out").unwrap();
+    sea.write(fd, &[1u8; 100]).unwrap();
+    sea.rename("/d/a.out", "/d/b.out").unwrap();
+    sea.write(fd, &[2u8; 100]).unwrap();
+    sea.close(fd).unwrap();
+    let meta = sea.core().ns.lookup("/d/b.out").unwrap();
+    assert_eq!(meta.size(), 200, "post-rename write lost from tracking");
+    assert_eq!(meta.open_count, 0, "renamed-then-closed fd left the file pinned");
+    let rep = flush_pass(sea.core(), false);
+    assert_eq!(rep.flushed, 1, "{rep:?}");
+    let persist = sea.core().tiers.persist();
+    let bytes = std::fs::read(persist.physical("/d/b.out")).unwrap();
+    assert_eq!(bytes.len(), 200, "flush missed post-rename bytes");
+    assert_eq!(&bytes[..100], &[1u8; 100][..]);
+    assert_eq!(&bytes[100..], &[2u8; 100][..]);
+    assert!(!persist.physical("/d/a.out").exists());
+
+    // Case 2: clean file — the first write after the rename is a
+    // clean→dirty transition through the retired record: it must
+    // re-resolve, re-dirty, and re-queue under the new name (exactly
+    // the update the seed dropped).
+    let fd = sea.open("/d/b.out", OpenMode::ReadWrite).unwrap();
+    sea.rename("/d/b.out", "/d/c.out").unwrap();
+    sea.lseek(fd, std::io::SeekFrom::Start(200)).unwrap();
+    sea.write(fd, &[3u8; 50]).unwrap();
+    sea.close(fd).unwrap();
+    let meta = sea.core().ns.lookup("/d/c.out").unwrap();
+    assert!(meta.dirty(), "post-rename write must re-dirty the file");
+    assert_eq!(meta.size(), 250);
+    let rep = flush_pass(sea.core(), false);
+    assert_eq!(rep.flushed, 1, "post-rename write never re-flushed: {rep:?}");
+    let bytes = std::fs::read(persist.physical("/d/c.out")).unwrap();
+    assert_eq!(bytes.len(), 250);
+    assert_eq!(&bytes[200..], &[3u8; 50][..]);
+}
+
+#[test]
+fn writes_across_concurrent_renames_all_flush_under_final_name() {
+    // Stress form of the lost-write pin: one thread appends through a
+    // long-lived fd while the main thread renames the file through a
+    // chain of hops. Every written byte must be tracked and flushed
+    // under the final post-rename path.
+    const CHUNKS: usize = 200;
+    const HOPS: usize = 20;
+
+    let dir = tempdir("rename-write-race");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 8 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .build();
+    let lists = SeaLists::new(
+        PathRules::parse(r".*\.out$").unwrap(),
+        PathRules::empty(),
+        PathRules::empty(),
+    );
+    let sea = SeaIo::mount_with(cfg, lists, |t| t).unwrap();
+    let sea = &sea;
+
+    let fd = sea.create("/r/h0.out").unwrap();
+    std::thread::scope(|s| {
+        let writer = s.spawn(move || {
+            for i in 0..CHUNKS {
+                sea.write(fd, &[7u8; 1024]).unwrap();
+                if i % 8 == 0 {
+                    std::thread::yield_now();
+                }
+            }
+        });
+        for h in 0..HOPS {
+            let from = format!("/r/h{h}.out");
+            let to = format!("/r/h{}.out", h + 1);
+            sea.rename(&from, &to).unwrap();
+            std::thread::yield_now();
+        }
+        writer.join().unwrap();
+    });
+    sea.close(fd).unwrap();
+
+    let final_name = format!("/r/h{HOPS}.out");
+    let meta = sea.core().ns.lookup(&final_name).unwrap();
+    assert_eq!(
+        meta.size(),
+        (CHUNKS * 1024) as u64,
+        "writes across concurrent renames lost from tracking"
+    );
+    assert_eq!(meta.open_count, 0);
+    let rep = drain(sea.core());
+    assert_eq!(rep.errors, 0, "{rep:?}");
+    let bytes =
+        std::fs::read(sea.core().tiers.persist().physical(&final_name)).unwrap();
+    assert_eq!(
+        bytes.len(),
+        CHUNKS * 1024,
+        "persisted bytes incomplete under the post-rename path"
+    );
+    assert!(bytes.iter().all(|&b| b == 7), "persisted bytes corrupted");
+    assert!(!sea.core().ns.lookup(&final_name).unwrap().dirty());
+    assert_no_temp_litter(sea.core().tiers.persist().root());
+}
+
+#[test]
+fn unlink_while_open_write_never_resurrects_the_path() {
+    // The other half of the retired-record fix: a write through an fd
+    // whose file was unlinked succeeds into the detached inode (POSIX)
+    // but must not resurrect the namespace entry, must not leak its
+    // reservation, and must be counted instead of silently dropped.
+    let dir = tempdir("unlink-open-write");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 8 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .build();
+    let lists = SeaLists::new(
+        PathRules::parse(r".*").unwrap(),
+        PathRules::empty(),
+        PathRules::empty(),
+    );
+    let sea = SeaIo::mount_with(cfg, lists, |t| t).unwrap();
+
+    let fd = sea.create("/u/gone.out").unwrap();
+    sea.write(fd, &[1u8; 64]).unwrap();
+    sea.unlink("/u/gone.out").unwrap();
+    sea.write(fd, &[2u8; 64]).unwrap(); // into the detached inode: Ok
+    sea.close(fd).unwrap();
+
+    assert!(!sea.core().ns.exists("/u/gone.out"), "write resurrected the path");
+    assert!(
+        sea.stats().write_untracked >= 1,
+        "untracked write must be counted, not ignored"
+    );
+    assert_eq!(
+        sea.core().tiers.get(0).used(),
+        0,
+        "post-unlink write leaked its growth reservation"
+    );
+    let rep = drain(sea.core());
+    assert_eq!(rep.flushed + rep.moved, 0, "unlinked file must not flush: {rep:?}");
+    assert!(!sea.core().ns.exists("/u/gone.out"), "drain resurrected the path");
+    assert!(!sea.core().tiers.persist().physical("/u/gone.out").exists());
 }
 
 #[test]
