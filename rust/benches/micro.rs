@@ -28,6 +28,16 @@ fn smoke() -> bool {
     std::env::var_os("SEA_BENCH_SMOKE").is_some()
 }
 
+/// Hot-path-only mode (`SEA_BENCH_HOTPATH_ONLY=1`): run the interceptor
+/// and namespace sections at full iteration counts but skip the
+/// simulator, flusher-throughput, and contention sections (their JSON
+/// fields emit as zero). The crash-recovery CI job uses this to assert
+/// the steady-write latency budget with journaling enabled without
+/// paying for the full suite.
+fn hotpath_only() -> bool {
+    std::env::var_os("SEA_BENCH_HOTPATH_ONLY").is_some()
+}
+
 /// Scale an iteration count down in smoke mode.
 fn scaled(iters: u64) -> u64 {
     if smoke() {
@@ -299,8 +309,8 @@ fn main() {
     });
 
     // --- simulator event throughput -----------------------------------------
-    if smoke() {
-        println!("simulator: skipped (smoke mode)");
+    if smoke() || hotpath_only() {
+        println!("simulator: skipped (smoke/hotpath-only mode)");
     } else {
         let cluster = ClusterConfig::dedicated();
         let spec = WorkloadSpec::new(PipelineKind::Spm, DatasetKind::Hcp, 1)
@@ -318,43 +328,53 @@ fn main() {
     }
 
     // --- flusher copy throughput --------------------------------------------
-    let dir2 = tempdir("micro-flush");
-    let cfg2 = SeaConfig::builder(dir2.subdir("mount"))
-        .cache("tmpfs", dir2.subdir("tmpfs"), 4096 * MIB)
-        .persist("lustre", dir2.subdir("lustre"), 100_000 * MIB)
-        .build();
-    let sea2 = SeaIo::mount_with(cfg2, SeaLists::flush_all(), |t| t).unwrap();
-    let fd = sea2.create("/flush/big.dat").unwrap();
-    let chunk = vec![1u8; 1 << 20];
-    let flush_mib = if smoke() { 8 } else { 64 };
-    for _ in 0..flush_mib {
-        sea2.write(fd, &chunk).unwrap();
+    if hotpath_only() {
+        println!("flusher: skipped (hotpath-only mode)");
+    } else {
+        let dir2 = tempdir("micro-flush");
+        let cfg2 = SeaConfig::builder(dir2.subdir("mount"))
+            .cache("tmpfs", dir2.subdir("tmpfs"), 4096 * MIB)
+            .persist("lustre", dir2.subdir("lustre"), 100_000 * MIB)
+            .build();
+        let sea2 = SeaIo::mount_with(cfg2, SeaLists::flush_all(), |t| t).unwrap();
+        let fd = sea2.create("/flush/big.dat").unwrap();
+        let chunk = vec![1u8; 1 << 20];
+        let flush_mib = if smoke() { 8 } else { 64 };
+        for _ in 0..flush_mib {
+            sea2.write(fd, &chunk).unwrap();
+        }
+        sea2.close(fd).unwrap();
+        let t0 = Instant::now();
+        let report = flush_pass(sea2.core(), false);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "flusher: {} MiB copied in {:.3}s = {:.0} MiB/s",
+            report.bytes_flushed >> 20,
+            dt,
+            (report.bytes_flushed >> 20) as f64 / dt
+        );
     }
-    sea2.close(fd).unwrap();
-    let t0 = Instant::now();
-    let report = flush_pass(sea2.core(), false);
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "flusher: {} MiB copied in {:.3}s = {:.0} MiB/s",
-        report.bytes_flushed >> 20,
-        dt,
-        (report.bytes_flushed >> 20) as f64 / dt
-    );
 
     // --- hot-path contention (lock-free fd table payoff) --------------------
-    println!("\n# hot-path contention\n");
-    let iters = if smoke() { 50 } else { 2_000 };
-    let c1 = contention_calls_per_sec(1, iters);
-    println!("open/write/read/close/unlink, 1 thread   {c1:10.0} calls/s");
-    let c8 = contention_calls_per_sec(8, iters);
-    let scaling = c8 / c1;
-    println!(
-        "open/write/read/close/unlink, 8 threads  {c8:10.0} calls/s ({scaling:.2}x aggregate)"
-    );
-    let fg = throttled_foreground_calls_per_sec(7);
-    println!(
-        "7 cache workers vs throttled persist write {fg:8.0} calls/s (foreground unblocked)"
-    );
+    let (c1, c8, scaling, fg) = if hotpath_only() {
+        println!("contention: skipped (hotpath-only mode)");
+        (0.0, 0.0, 0.0, 0.0)
+    } else {
+        println!("\n# hot-path contention\n");
+        let iters = if smoke() { 50 } else { 2_000 };
+        let c1 = contention_calls_per_sec(1, iters);
+        println!("open/write/read/close/unlink, 1 thread   {c1:10.0} calls/s");
+        let c8 = contention_calls_per_sec(8, iters);
+        let scaling = c8 / c1;
+        println!(
+            "open/write/read/close/unlink, 8 threads  {c8:10.0} calls/s ({scaling:.2}x aggregate)"
+        );
+        let fg = throttled_foreground_calls_per_sec(7);
+        println!(
+            "7 cache workers vs throttled persist write {fg:8.0} calls/s (foreground unblocked)"
+        );
+        (c1, c8, scaling, fg)
+    };
 
     let json = format!(
         concat!(

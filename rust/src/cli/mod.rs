@@ -282,6 +282,10 @@ fn cmd_run(mut a: Args) -> Result<()> {
             "{}",
             crate::experiments::report::fmt_admission(&report.admission)
         );
+        println!(
+            "{}",
+            crate::experiments::report::fmt_transfers(&report.transfers)
+        );
         if report.stats.write_untracked > 0 {
             println!(
                 "note: {} write(s) landed on unlinked/truncated-over files \

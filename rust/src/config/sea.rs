@@ -31,6 +31,13 @@
 //! enabled         = true                 # background prefetcher thread
 //! promote_on_read = true                 # persist-resident reads migrate up
 //! readahead       = 2                    # BIDS sibling volumes staged ahead
+//!
+//! [journal]
+//! enabled = true                         # crash-recovery dirty journal
+//!
+//! [faults]
+//! spec =                                 # fault injection (tests only),
+//!                                        # e.g. copy.write=eio:3
 //! ```
 //!
 //! ## `.sea_prefetchlist` semantics
@@ -109,6 +116,15 @@ pub struct SeaConfig {
     /// How many same-scope BIDS sibling volumes to stage ahead when one
     /// is opened; 0 disables readahead (`[prefetch] readahead`).
     pub readahead_depth: usize,
+    /// Keep per-cache-tier dirty journals and replay them at mount, so a
+    /// crashed run's un-flushed bytes are re-discovered and flushed
+    /// (`[journal] enabled`). Off reproduces the journal-less behaviour:
+    /// a kill mid-run strands dirty cache bytes forever.
+    pub journal_enabled: bool,
+    /// Fault-injection spec (`[faults] spec`), same grammar as the
+    /// `SEA_FAULTS` environment variable — see `crate::faults`. Empty
+    /// (the default) injects nothing.
+    pub faults_spec: String,
 }
 
 fn parse_cache_spec(spec: &str) -> Result<CacheDef, SeaConfigError> {
@@ -179,6 +195,8 @@ impl SeaConfig {
                 .transpose()
                 .map_err(|e| SeaConfigError::BadValue(format!("prefetch.readahead: {e}")))?
                 .unwrap_or(2),
+            journal_enabled: ini.get_bool("journal", "enabled").unwrap_or(true),
+            faults_spec: ini.get("faults", "spec").unwrap_or("").to_string(),
         })
     }
 
@@ -200,6 +218,8 @@ impl SeaConfig {
             prefetcher_enabled: true,
             promote_on_read: true,
             readahead_depth: 2,
+            journal_enabled: true,
+            faults_spec: String::new(),
         }
     }
 
@@ -222,6 +242,8 @@ pub struct SeaConfigBuilder {
     prefetcher_enabled: bool,
     promote_on_read: bool,
     readahead_depth: usize,
+    journal_enabled: bool,
+    faults_spec: String,
 }
 
 impl SeaConfigBuilder {
@@ -280,6 +302,18 @@ impl SeaConfigBuilder {
         self
     }
 
+    /// Enable/disable the crash-recovery dirty journal.
+    pub fn journal(mut self, enabled: bool) -> Self {
+        self.journal_enabled = enabled;
+        self
+    }
+
+    /// Arm a fault-injection plan (see `crate::faults` for the grammar).
+    pub fn faults(mut self, spec: &str) -> Self {
+        self.faults_spec = spec.to_string();
+        self
+    }
+
     pub fn build(self) -> SeaConfig {
         SeaConfig {
             mountpoint: self.mountpoint,
@@ -296,6 +330,8 @@ impl SeaConfigBuilder {
             prefetcher_enabled: self.prefetcher_enabled,
             promote_on_read: self.promote_on_read,
             readahead_depth: self.readahead_depth,
+            journal_enabled: self.journal_enabled,
+            faults_spec: self.faults_spec,
         }
     }
 }
@@ -377,6 +413,30 @@ interval_ms = 50
         assert!(!cfg.prefetcher_enabled);
         assert!(!cfg.promote_on_read);
         assert_eq!(cfg.readahead_depth, 5);
+    }
+
+    #[test]
+    fn journal_and_faults_sections_parse_with_defaults() {
+        let cfg = SeaConfig::parse(SAMPLE).unwrap();
+        assert!(cfg.journal_enabled, "journal must default on");
+        assert!(cfg.faults_spec.is_empty(), "no faults by default");
+
+        let cfg = SeaConfig::parse(
+            "mount=/m\n[caches]\npersist = l:/x:1G\n\
+             [journal]\nenabled = false\n\
+             [faults]\nspec = copy.write=eio:3\n",
+        )
+        .unwrap();
+        assert!(!cfg.journal_enabled);
+        assert_eq!(cfg.faults_spec, "copy.write=eio:3");
+
+        let cfg = SeaConfig::builder("/m")
+            .persist("l", "/x", GIB)
+            .journal(false)
+            .faults("tier.l=down")
+            .build();
+        assert!(!cfg.journal_enabled);
+        assert_eq!(cfg.faults_spec, "tier.l=down");
     }
 
     #[test]

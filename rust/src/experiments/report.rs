@@ -38,6 +38,15 @@ pub fn fmt_admission(a: &crate::stats::AdmissionSnapshot) -> String {
     )
 }
 
+/// One-line flush-transfer summary for a real-mode run: how many flush
+/// copies completed, were cancelled by a newer write, or failed.
+pub fn fmt_transfers(t: &crate::transfer::TransferSnapshot) -> String {
+    format!(
+        "transfers: {} completed ({} B moved), {} cancelled, {} errors",
+        t.completed, t.bytes_moved, t.cancelled, t.errors
+    )
+}
+
 /// `1h23m` / `45.2s` humanised seconds.
 pub fn fmt_secs(s: f64) -> String {
     if s >= 3600.0 {
@@ -84,5 +93,20 @@ mod tests {
         assert!(line.contains("10 hit"), "{line}");
         assert!(line.contains("2 evicted-to-fit"), "{line}");
         assert!(line.contains("1 fell through"), "{line}");
+    }
+
+    #[test]
+    fn fmt_transfers_line() {
+        let t = crate::transfer::TransferSnapshot {
+            completed: 5,
+            cancelled: 1,
+            errors: 2,
+            bytes_moved: 8192,
+        };
+        let line = fmt_transfers(&t);
+        assert!(line.contains("5 completed"), "{line}");
+        assert!(line.contains("8192 B moved"), "{line}");
+        assert!(line.contains("1 cancelled"), "{line}");
+        assert!(line.contains("2 errors"), "{line}");
     }
 }

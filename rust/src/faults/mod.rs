@@ -1,0 +1,286 @@
+//! Fault injection for crash-recovery testing: named failure points
+//! threaded through the transfer engine, flusher, journal, and tiers.
+//!
+//! A [`FaultPlan`] is a set of rules, each arming one *point* (a stable
+//! string name compiled into the code path, e.g. `copy.write`) with one
+//! [`FaultKind`]:
+//!
+//! * `eio` / `enospc` — the next N operations at the point fail with an
+//!   injected I/O error (N defaults to 1, `point=eio:N` sets it);
+//! * `torn` — a copy stops writing after `point=torn:BYTES` bytes and
+//!   fails, leaving a truncated temp file (the mid-transfer power-cut);
+//! * `crash` — the process calls [`std::process::abort`] when execution
+//!   reaches the point: no destructors, no drain, no journal compaction —
+//!   the honest `kill -9`;
+//! * `down` — a whole tier stops accepting transfers (`tier.<name>=down`),
+//!   checked non-destructively for the life of the mount.
+//!
+//! Plans come from the `[faults] spec = ...` config key or, overriding
+//! it, the `SEA_FAULTS` environment variable — which is what lets the
+//! crash harness (`tests/crash_recovery.rs`) re-exec itself with a crash
+//! point armed, watch the child die mid-flush, and then remount in the
+//! parent to assert recovery.
+//!
+//! The empty plan is free on the paths that matter: every check begins
+//! with an `is_empty()` test, and no fault point sits on the intercepted
+//! read/write hot path — injection lives in the transfer/flush/journal
+//! machinery only.
+//!
+//! ## Named points
+//!
+//! | point | where |
+//! |---|---|
+//! | `copy.read` | transfer source read loop |
+//! | `copy.write` | transfer destination write loop (also `torn` target) |
+//! | `copy.mid_write` | crash point after the first written slice |
+//! | `copy.before_rename` | crash point: temp fully written, not renamed |
+//! | `copy.after_rename` | crash point: renamed into place, commit not run |
+//! | `journal.append` | dirty-journal append |
+//! | `tier.<name>` | any transfer touching the named tier (`down`) |
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Environment variable overriding the configured fault spec (used by
+/// the re-exec crash harness; see the module docs).
+pub const ENV_FAULTS: &str = "SEA_FAULTS";
+
+/// What an armed rule does at its point (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Crash,
+    Eio,
+    Enospc,
+    Torn,
+    Down,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Option<FaultKind> {
+        Some(match s {
+            "crash" => FaultKind::Crash,
+            "eio" => FaultKind::Eio,
+            "enospc" => FaultKind::Enospc,
+            "torn" => FaultKind::Torn,
+            "down" => FaultKind::Down,
+            _ => return None,
+        })
+    }
+}
+
+#[derive(Debug)]
+struct Rule {
+    point: String,
+    kind: FaultKind,
+    /// Remaining firings (consumed per hit; `down` rules ignore it).
+    remaining: AtomicU64,
+    /// Kind-specific argument: byte limit for `torn`, unused otherwise.
+    arg: u64,
+}
+
+impl Rule {
+    /// Consume one firing; false once exhausted.
+    fn take(&self) -> bool {
+        let mut cur = self.remaining.load(Ordering::Relaxed);
+        loop {
+            if cur == 0 {
+                return false;
+            }
+            match self.remaining.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+/// An armed set of fault rules (empty in production mounts).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+}
+
+impl FaultPlan {
+    /// The empty plan: every check is a single `Vec::is_empty` test.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Parse a comma-separated spec: `point=kind[:arg]` per rule, e.g.
+    /// `copy.write=eio:3,tier.tmpfs=down,copy.before_rename=crash`.
+    /// The arg is a firing count for `eio`/`enospc`/`crash` (default 1)
+    /// and a byte limit for `torn` (default 4096).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let (point, rhs) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("fault rule {tok:?}: expected point=kind[:arg]"))?;
+            let (kind_s, arg_s) = match rhs.split_once(':') {
+                Some((k, a)) => (k, Some(a)),
+                None => (rhs, None),
+            };
+            let kind = FaultKind::parse(kind_s)
+                .ok_or_else(|| format!("fault rule {tok:?}: unknown kind {kind_s:?}"))?;
+            let arg: u64 = match arg_s {
+                Some(a) => a
+                    .parse()
+                    .map_err(|_| format!("fault rule {tok:?}: bad arg {a:?}"))?,
+                None => match kind {
+                    FaultKind::Torn => 4096,
+                    _ => 1,
+                },
+            };
+            let remaining = match kind {
+                FaultKind::Down => u64::MAX,
+                FaultKind::Torn => 1,
+                _ => arg.max(1),
+            };
+            rules.push(Rule {
+                point: point.trim().to_string(),
+                kind,
+                remaining: AtomicU64::new(remaining),
+                arg,
+            });
+        }
+        Ok(FaultPlan { rules })
+    }
+
+    /// Build from the configured spec, letting [`ENV_FAULTS`] override it
+    /// (the harness's channel into a re-exec'd child). A malformed spec is
+    /// an error: silently running *without* the faults a test armed would
+    /// turn every injection test into a false pass.
+    pub fn from_env_or(spec: &str) -> Result<FaultPlan, String> {
+        match std::env::var(ENV_FAULTS) {
+            Ok(env_spec) => FaultPlan::parse(&env_spec),
+            Err(_) => FaultPlan::parse(spec),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Consume one firing of a rule at `point` with kind in `kinds`.
+    fn fire(&self, point: &str, kinds: &[FaultKind]) -> Option<(FaultKind, u64)> {
+        if self.rules.is_empty() {
+            return None;
+        }
+        self.rules
+            .iter()
+            .find(|r| r.point == point && kinds.contains(&r.kind) && r.take())
+            .map(|r| (r.kind, r.arg))
+    }
+
+    /// Abort the process if a `crash` rule is armed at `point`. The
+    /// marker line on stderr lets the harness distinguish a deliberate
+    /// crash from an accidental panic.
+    pub fn crash_point(&self, point: &str) {
+        if self.fire(point, &[FaultKind::Crash]).is_some() {
+            eprintln!("sea: crash point {point:?} hit, aborting");
+            std::process::abort();
+        }
+    }
+
+    /// Fail with an injected error if an `eio`/`enospc` rule is armed at
+    /// `point`.
+    pub fn check_io(&self, point: &str) -> std::io::Result<()> {
+        match self.fire(point, &[FaultKind::Eio, FaultKind::Enospc]) {
+            Some((FaultKind::Enospc, _)) => {
+                Err(std::io::Error::other(format!("injected ENOSPC at {point}")))
+            }
+            Some(_) => Err(std::io::Error::other(format!("injected EIO at {point}"))),
+            None => Ok(()),
+        }
+    }
+
+    /// Byte limit of an armed `torn` rule at `point` (consumed), if any.
+    pub fn torn_limit(&self, point: &str) -> Option<u64> {
+        self.fire(point, &[FaultKind::Torn]).map(|(_, arg)| arg)
+    }
+
+    /// Whether the named tier is dropped out (`tier.<name>=down`).
+    /// Non-consuming: a dead tier stays dead for the mount's lifetime.
+    pub fn tier_down(&self, name: &str) -> bool {
+        if self.rules.is_empty() {
+            return false;
+        }
+        let point = format!("tier.{name}");
+        self.rules
+            .iter()
+            .any(|r| r.kind == FaultKind::Down && r.point == point)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        assert!(p.check_io("copy.write").is_ok());
+        assert_eq!(p.torn_limit("copy.write"), None);
+        assert!(!p.tier_down("tmpfs"));
+        p.crash_point("copy.before_rename"); // must not abort
+    }
+
+    #[test]
+    fn eio_fires_counted_times() {
+        let p = FaultPlan::parse("copy.write=eio:2").unwrap();
+        assert!(p.check_io("copy.write").is_err());
+        assert!(p.check_io("copy.read").is_ok(), "other points unaffected");
+        assert!(p.check_io("copy.write").is_err());
+        assert!(p.check_io("copy.write").is_ok(), "exhausted after 2");
+    }
+
+    #[test]
+    fn enospc_message_names_the_point() {
+        let p = FaultPlan::parse("journal.append=enospc").unwrap();
+        let err = p.check_io("journal.append").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("ENOSPC"), "{msg}");
+        assert!(msg.contains("journal.append"), "{msg}");
+    }
+
+    #[test]
+    fn torn_yields_limit_once() {
+        let p = FaultPlan::parse("copy.write=torn:2048").unwrap();
+        assert_eq!(p.torn_limit("copy.write"), Some(2048));
+        assert_eq!(p.torn_limit("copy.write"), None);
+    }
+
+    #[test]
+    fn tier_down_is_persistent() {
+        let p = FaultPlan::parse("tier.tmpfs=down").unwrap();
+        assert!(p.tier_down("tmpfs"));
+        assert!(p.tier_down("tmpfs"), "not consumed");
+        assert!(!p.tier_down("lustre"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(FaultPlan::parse("nonsense").is_err());
+        assert!(FaultPlan::parse("p=unknownkind").is_err());
+        assert!(FaultPlan::parse("p=eio:notanumber").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn multiple_rules_compose() {
+        let p = FaultPlan::parse("a=eio,b=torn:10,tier.x=down").unwrap();
+        assert!(p.check_io("a").is_err());
+        assert_eq!(p.torn_limit("b"), Some(10));
+        assert!(p.tier_down("x"));
+    }
+}

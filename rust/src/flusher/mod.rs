@@ -40,10 +40,40 @@
 //! re-queued retry overwrites the possibly-torn copy). Eviction
 //! candidates come from the namespace's incremental evictable queue
 //! (clean-and-closed transitions), not a per-pass scan of every file.
+//!
+//! # Error backoff
+//!
+//! A failed copy (`FlushReport::errors`) is re-queued, but not retried
+//! every pass: each failing file gets a bounded exponential backoff
+//! ([`Backoff`], base [`BACKOFF_BASE`], doubling per consecutive
+//! failure, capped at [`BACKOFF_MAX_EXP`] doublings). Until the
+//! deadline passes the entry is skipped and counted in
+//! [`FlushReport::backed_off`] — so a persistently unreachable tier
+//! costs one error per deadline, not one per pass. A successful copy
+//! clears the state; `force` passes (drain) ignore deadlines, because
+//! unmount has no later pass to wait for.
+//!
+//! # Crash consistency (the dirty journal)
+//!
+//! With `[journal] enabled` (the default), every dirty-state transition
+//! is appended to a per-cache-tier journal at its source in the
+//! namespace — the clean→dirty edges of create/write, the dirty→clean
+//! edge of [`crate::namespace::Namespace::commit_flush`] (which runs in
+//! this module's commit closure, under the transfer fence), and
+//! rename/unlink retirement. Appends are single unbuffered writes; the
+//! batched durability `fsync` happens **once per flush pass** (and per
+//! drain), here, so the interceptor's sub-microsecond write path never
+//! waits on journal I/O. At the next mount, `SeaIo::recover_from_journal`
+//! replays the journal (tolerating a torn tail), re-registers every
+//! surviving dirty replica into the namespace and this module's dirty
+//! queue, reconciles against on-disk reality, and the next pass (or
+//! drain) flushes them — the recovery invariant `tests/crash_recovery.rs`
+//! drives at every crash point. See `crate::journal` for the format and
+//! protocol.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::SeaConfig;
 use crate::intercept::{CallStats, SeaCore, SeaError, SeaIo};
@@ -52,6 +82,22 @@ use crate::pathrules::{Disposition, SeaLists};
 use crate::prefetch::PrefetcherHandle;
 use crate::tiers::Tier;
 use crate::transfer::{BatchJob, Outcome};
+
+/// Base delay after a file's first failed copy; doubles per consecutive
+/// failure.
+pub const BACKOFF_BASE: Duration = Duration::from_millis(10);
+
+/// Cap on the doublings: 10 ms × 2⁸ = 2.56 s worst-case retry interval.
+pub const BACKOFF_MAX_EXP: u32 = 8;
+
+/// Per-file flush retry state (lives in `SeaCore::flush_backoff`).
+#[derive(Debug, Clone, Copy)]
+pub struct Backoff {
+    /// Consecutive failed copies of this file.
+    pub attempts: u32,
+    /// Skip the file (and count it `backed_off`) until this instant.
+    pub retry_at: Instant,
+}
 
 /// What one flusher pass (or a drain) accomplished.
 #[derive(Debug, Default, Clone, PartialEq, Eq)]
@@ -64,6 +110,9 @@ pub struct FlushReport {
     pub evicted: usize,
     pub bytes_flushed: u64,
     pub errors: usize,
+    /// Dirty entries skipped (and re-queued) because a recent copy
+    /// failure put them under a backoff deadline (see the module docs).
+    pub backed_off: usize,
 }
 
 impl FlushReport {
@@ -73,6 +122,7 @@ impl FlushReport {
         self.evicted += other.evicted;
         self.bytes_flushed += other.bytes_flushed;
         self.errors += other.errors;
+        self.backed_off += other.backed_off;
     }
 }
 
@@ -102,6 +152,22 @@ pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
             // pass (or the drain) sees it again.
             core.ns.mark_dirty(&entry.logical);
             continue;
+        }
+        if !force {
+            // Backoff: a file whose copy failed recently waits out its
+            // deadline instead of burning an error per pass. Drain
+            // (`force`) ignores deadlines — there is no later pass.
+            let under_deadline = core
+                .flush_backoff
+                .lock()
+                .unwrap()
+                .get(entry.logical.as_str())
+                .is_some_and(|b| Instant::now() < b.retry_at);
+            if under_deadline {
+                core.ns.mark_dirty(&entry.logical);
+                report.backed_off += 1;
+                continue;
+            }
         }
         if entry.master == persist {
             // already physically on the persistent tier: just mark clean
@@ -140,42 +206,49 @@ pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
     for (job, res) in results {
         let (entry, disposition) = &entries[job.token];
         match res {
-            Ok(Outcome::Done { bytes, commit: verdict }) => match verdict {
-                FlushCommit::Gone => {
-                    // Vanished mid-copy (e.g. dropped to zero replicas):
-                    // the just-written persist copy is untracked — delete
-                    // it (or the next mount's register_existing would
-                    // resurrect a deleted file) and count nothing: no
-                    // bytes were durably flushed.
-                    core.delete_replica(&entry.logical, persist, entry.size);
-                }
-                FlushCommit::Stale => {
-                    // Outdated (possibly torn) the moment it landed: the
-                    // replica is recorded (tracked for later cleanup)
-                    // but the file stayed dirty and commit_flush already
-                    // re-queued it — the next pass's fresh copy
-                    // overwrites the stale persist bytes atomically.
-                    report.bytes_flushed += bytes;
-                    core.counters.bump_persist();
-                }
-                FlushCommit::Clean => {
-                    report.bytes_flushed += bytes;
-                    core.counters.bump_persist();
-                    if *disposition == Disposition::Move {
-                        if core.drop_cache_replicas(&entry.logical).is_some() {
-                            report.moved += 1;
+            Ok(Outcome::Done { bytes, commit: verdict }) => {
+                // The copy itself succeeded: whatever the commit verdict,
+                // the file is reachable again — clear its backoff state.
+                core.flush_backoff.lock().unwrap().remove(entry.logical.as_str());
+                match verdict {
+                    FlushCommit::Gone => {
+                        // Vanished mid-copy (e.g. dropped to zero
+                        // replicas): the just-written persist copy is
+                        // untracked — delete it (or the next mount's
+                        // register_existing would resurrect a deleted
+                        // file) and count nothing: no bytes were durably
+                        // flushed.
+                        core.delete_replica(&entry.logical, persist, entry.size);
+                    }
+                    FlushCommit::Stale => {
+                        // Outdated (possibly torn) the moment it landed:
+                        // the replica is recorded (tracked for later
+                        // cleanup) but the file stayed dirty and
+                        // commit_flush already re-queued it — the next
+                        // pass's fresh copy overwrites the stale persist
+                        // bytes atomically.
+                        report.bytes_flushed += bytes;
+                        core.counters.bump_persist();
+                    }
+                    FlushCommit::Clean => {
+                        report.bytes_flushed += bytes;
+                        core.counters.bump_persist();
+                        if *disposition == Disposition::Move {
+                            if core.drop_cache_replicas(&entry.logical).is_some() {
+                                report.moved += 1;
+                            } else {
+                                // Re-dirtied or reopened before the cache
+                                // copy could be detached: the flush
+                                // itself succeeded; the move completes on
+                                // a later pass.
+                                report.flushed += 1;
+                            }
                         } else {
-                            // Re-dirtied or reopened before the cache copy
-                            // could be detached: the flush itself
-                            // succeeded; the move completes on a later
-                            // pass.
                             report.flushed += 1;
                         }
-                    } else {
-                        report.flushed += 1;
                     }
                 }
-            },
+            }
             Ok(Outcome::Cancelled) | Ok(Outcome::Busy) => {
                 // Fenced out by a racing metadata op (or an overlapping
                 // transfer of the same path): whatever survives under
@@ -201,7 +274,21 @@ pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
                     }
                     Some(_) => {
                         report.errors += 1;
-                        // still dirty on disk: retry on a later pass
+                        // Still dirty on disk: re-queue, under a bounded
+                        // exponential backoff so a persistently failing
+                        // file (dead tier, ENOSPC) is retried at the
+                        // deadline, not every pass.
+                        let mut backoff = core.flush_backoff.lock().unwrap();
+                        let state = backoff
+                            .entry(entry.logical.to_string())
+                            .or_insert_with(|| Backoff {
+                                attempts: 0,
+                                retry_at: Instant::now(),
+                            });
+                        state.attempts = state.attempts.saturating_add(1);
+                        let exp = (state.attempts - 1).min(BACKOFF_MAX_EXP);
+                        state.retry_at = Instant::now() + BACKOFF_BASE * 2u32.pow(exp);
+                        drop(backoff);
                         core.ns.mark_dirty(&entry.logical);
                     }
                 }
@@ -225,6 +312,12 @@ pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
         if eligible && core.drop_cache_replicas(&logical).is_some() {
             report.evicted += 1;
         }
+    }
+    // One batched journal durability sync per pass: the dirty/clean
+    // records appended during the pass (and by the interceptor since the
+    // last pass) reach stable storage here, off the write hot path.
+    if let Some(j) = &core.journal {
+        j.sync();
     }
     report
 }
@@ -269,6 +362,11 @@ pub fn drain(core: &SeaCore) -> FlushReport {
                 }
             }
         }
+    }
+    // The drain's retirement records (evict-only scratch removal) and
+    // any final clean-markings must be durable before unmount returns.
+    if let Some(j) = &core.journal {
+        j.sync();
     }
     report
 }
@@ -581,14 +679,41 @@ mod tests {
         assert_eq!(rep.errors, 1);
         assert_eq!(rep.flushed + rep.moved, 0);
         assert!(sea.core().ns.lookup("/lost.out").unwrap().dirty());
-        // the entry was re-queued: the next pass retries (and fails again)
+        // the entry was re-queued but is under backoff: an immediate pass
+        // skips it without burning another error
+        let rep = flush_pass(sea.core(), false);
+        assert_eq!(rep.errors, 0, "{rep:?}");
+        assert_eq!(rep.backed_off, 1);
+        // past the deadline the retry runs (and fails again, doubling it)
+        std::thread::sleep(BACKOFF_BASE + Duration::from_millis(5));
         let rep = flush_pass(sea.core(), false);
         assert_eq!(rep.errors, 1);
-        // restore the file: the retry then succeeds
+        // restore the file and wait out the doubled deadline: the retry
+        // succeeds and clears the backoff state
         std::fs::write(&phys, b"data").unwrap();
+        std::thread::sleep(2 * BACKOFF_BASE + Duration::from_millis(5));
         let rep = flush_pass(sea.core(), false);
-        assert_eq!(rep.flushed, 1);
+        assert_eq!(rep.flushed, 1, "{rep:?}");
         assert!(!sea.core().ns.lookup("/lost.out").unwrap().dirty());
+        assert!(sea.core().flush_backoff.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn drain_force_ignores_backoff_deadline() {
+        let (_g, sea) = setup(lists(".*", ""));
+        write_file(&sea, "/late.out", b"data");
+        let phys = sea.core().tiers.get(0).physical("/late.out");
+        std::fs::remove_file(&phys).unwrap();
+        let rep = flush_pass(sea.core(), false);
+        assert_eq!(rep.errors, 1);
+        // Restore immediately: a normal pass would still be backed off,
+        // but drain must flush everything now — unmount has no later
+        // pass to wait for the deadline.
+        std::fs::write(&phys, b"data").unwrap();
+        let rep = drain(sea.core());
+        assert_eq!(rep.backed_off, 0);
+        assert_eq!(rep.flushed, 1, "{rep:?}");
+        assert!(sea.core().tiers.persist().physical("/late.out").exists());
     }
 
     #[test]

@@ -28,6 +28,7 @@ macro_rules! call_kinds {
             $($name: AtomicU64,)+
             persist_calls: AtomicU64,
             write_untracked: AtomicU64,
+            sync_failures: AtomicU64,
             bytes_written_cache: AtomicU64,
             bytes_written_persist: AtomicU64,
             bytes_read_cache: AtomicU64,
@@ -45,6 +46,11 @@ macro_rules! call_kinds {
             /// was open): the bytes went to the detached inode and the
             /// namespace deliberately did not track them.
             pub write_untracked: u64,
+            /// Failed `fsync`s of Sea-managed descriptors (close-time
+            /// durability sync or spill). The affected file is kept (or
+            /// re-marked) dirty so the flusher re-copies it instead of
+            /// trusting bytes the kernel never confirmed.
+            pub sync_failures: u64,
             pub bytes_written_cache: u64,
             pub bytes_written_persist: u64,
             pub bytes_read_cache: u64,
@@ -63,6 +69,7 @@ macro_rules! call_kinds {
                     $($name: self.$name.load(Ordering::Relaxed),)+
                     persist_calls: self.persist_calls.load(Ordering::Relaxed),
                     write_untracked: self.write_untracked.load(Ordering::Relaxed),
+                    sync_failures: self.sync_failures.load(Ordering::Relaxed),
                     bytes_written_cache: self.bytes_written_cache.load(Ordering::Relaxed),
                     bytes_written_persist: self.bytes_written_persist.load(Ordering::Relaxed),
                     bytes_read_cache: self.bytes_read_cache.load(Ordering::Relaxed),
@@ -96,6 +103,12 @@ impl CallCounters {
     /// semantics; see the intercept module docs).
     pub fn bump_write_untracked(&self) {
         self.write_untracked.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a failed durability sync (close or spill); the caller keeps
+    /// the file dirty so the bytes are re-copied rather than trusted.
+    pub fn bump_sync_failure(&self) {
+        self.sync_failures.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn add_written(&self, bytes: u64, to_persist: bool) {

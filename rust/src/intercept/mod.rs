@@ -98,12 +98,14 @@ pub mod counters;
 
 pub use counters::{CallCounters, CallKind, CallStats};
 
+use std::collections::HashMap;
 use std::io::{Read, Seek, SeekFrom, Write};
 
 use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::config::SeaConfig;
+use crate::faults::FaultPlan;
 use crate::namespace::{CleanPath, FileRecord, Namespace};
 use crate::pathrules::SeaLists;
 use crate::prefetch::{PrefetchQueue, PrefetchRequest};
@@ -135,6 +137,17 @@ pub struct SeaCore {
     /// cache of dirty in-flight files costs one failed scan total, not
     /// one O(files) walk per admission attempt.
     admission_scan_memo: Vec<AtomicU64>,
+    /// Crash-recovery dirty journal, shared with the namespace (which
+    /// appends transition records) and the flusher (which batches the
+    /// durability syncs). `None` when `[journal] enabled = false` or the
+    /// mount has no cache tiers.
+    pub journal: Option<Arc<crate::journal::Journal>>,
+    /// Armed fault-injection rules (empty — and free — in production).
+    pub faults: Arc<FaultPlan>,
+    /// Per-file flush retry backoff state (see `crate::flusher`): paths
+    /// whose copy failed recently are skipped until their deadline
+    /// passes instead of being retried every pass.
+    pub flush_backoff: Mutex<HashMap<String, crate::flusher::Backoff>>,
     pub shutdown: AtomicBool,
 }
 
@@ -637,18 +650,44 @@ impl SeaIo {
         shape_persist: impl FnOnce(Tier) -> Tier,
     ) -> Result<SeaIo, SeaError> {
         let tiers = TierSet::new(&cfg.caches, &cfg.persist, shape_persist)?;
+        let faults = Arc::new(
+            FaultPlan::from_env_or(&cfg.faults_spec)
+                .map_err(|e| SeaError::PlainIo(std::io::Error::other(e)))?,
+        );
+        if !faults.is_empty() {
+            for idx in 0..tiers.len() {
+                let t = tiers.get(idx);
+                if faults.tier_down(&t.name) {
+                    t.set_down(true);
+                }
+            }
+        }
+        let journal = if cfg.journal_enabled && !cfg.caches.is_empty() {
+            let roots: Vec<std::path::PathBuf> =
+                cfg.caches.iter().map(|c| c.root.clone()).collect();
+            Some(Arc::new(crate::journal::Journal::open(&roots, faults.clone())?))
+        } else {
+            None
+        };
+        let ns = match &journal {
+            Some(j) => Namespace::with_journal(j.clone()),
+            None => Namespace::new(),
+        };
         let transfers = TransferEngine::new(cfg.transfer_workers, cfg.copy_buf_bytes);
         let admission_scan_memo =
             (0..tiers.persist_idx()).map(|_| AtomicU64::new(u64::MAX)).collect();
         let core = Arc::new(SeaCore {
             tiers,
-            ns: Namespace::new(),
+            ns,
             lists,
             counters: CallCounters::default(),
             transfers,
             prefetch: PrefetchQueue::new(),
             admission: AdmissionStats::default(),
             admission_scan_memo,
+            journal,
+            faults,
+            flush_backoff: Mutex::new(HashMap::new()),
             shutdown: AtomicBool::new(false),
             cfg,
         });
@@ -657,6 +696,7 @@ impl SeaIo {
             fds: FdTable::new(),
         };
         sea.register_existing()?;
+        sea.recover_from_journal()?;
         crate::prefetch::stage_listed(&sea.core).map_err(|(path, e)| io_err(&path, e))?;
         Ok(sea)
     }
@@ -707,6 +747,99 @@ impl SeaIo {
                 }
             }
         }
+        Ok(())
+    }
+
+    /// Crash recovery: replay the dirty journal, re-register every
+    /// surviving dirty replica, reconcile against on-disk reality, and
+    /// compact. Runs at mount, after [`SeaIo::register_existing`] (so
+    /// persisted files are already known clean) and before prefetch
+    /// staging. The invariant it restores: every byte that was written
+    /// before the crash is either on the persist tier already or
+    /// re-discovered as dirty here and flushed on the next drain. See
+    /// `crate::journal` for the full protocol. A no-op (today's lossy
+    /// behaviour) when journaling is disabled.
+    fn recover_from_journal(&self) -> Result<(), SeaError> {
+        let Some(j) = &self.core.journal else {
+            return Ok(());
+        };
+        let records = j.replay();
+        let dirty = crate::journal::fold_dirty(&records);
+        let caches = self.core.tiers.caches().len();
+        let mut recovered: Vec<(String, TierIdx, u64, u64)> = Vec::new();
+        for (path, tier, _journal_size) in dirty {
+            // Probe the recorded tier first, then every cache
+            // fastest-first: a spill moves dirty bytes between caches
+            // without a journal record, so the disk — not the journal —
+            // is the truth about where (and how big) the replica is. A
+            // dirty entry whose replica vanished entirely is dropped:
+            // there is nothing left to recover (the bytes never reached
+            // stable storage before the crash).
+            let mut found: Option<(TierIdx, u64)> = None;
+            let probe = std::iter::once(tier)
+                .chain((0..caches).filter(|&t| t != tier))
+                .filter(|&t| t < caches);
+            for t in probe {
+                let phys = self.core.tier(t).physical(&path);
+                if let Ok(md) = std::fs::metadata(&phys) {
+                    if md.is_file() {
+                        found = Some((t, md.len()));
+                        break;
+                    }
+                }
+            }
+            if let Some((t, disk_size)) = found {
+                // Best-effort capacity accounting: the bytes are
+                // physically on the tier whether or not the reservation
+                // fits (a crashed session may have over-admitted), so a
+                // failed reserve is tolerated rather than evicting data
+                // we are about to flush.
+                let _ = self.core.tier(t).try_reserve(disk_size);
+                let version = self.core.ns.register_dirty(&path, t, disk_size);
+                recovered.push((path, t, disk_size, version));
+            }
+        }
+        // Hygiene sweep: transfer temps (torn copies) and cache files the
+        // journal does not account for (clean replicas from the previous
+        // session, or post-compaction strays) are deleted — their
+        // canonical bytes live on the persist tier, and leaving them
+        // would desynchronise capacity accounting. Journal files are
+        // skipped, of course.
+        let keep: std::collections::HashSet<(TierIdx, String)> =
+            recovered.iter().map(|(p, t, _, _)| (*t, p.clone())).collect();
+        for (t, tier) in self.core.tiers.caches().iter().enumerate() {
+            let root = tier.root().to_path_buf();
+            let mut stack = vec![root.clone()];
+            while let Some(dir) = stack.pop() {
+                let Ok(entries) = std::fs::read_dir(&dir) else {
+                    continue;
+                };
+                for e in entries.flatten() {
+                    let p = e.path();
+                    let name = e.file_name().to_string_lossy().into_owned();
+                    if p.is_dir() {
+                        stack.push(p);
+                        continue;
+                    }
+                    if crate::journal::is_journal_name(&name) {
+                        continue;
+                    }
+                    let logical = match p.strip_prefix(&root) {
+                        Ok(rel) => format!("/{}", rel.to_string_lossy()),
+                        Err(_) => continue,
+                    };
+                    if crate::transfer::is_temp_name(&name)
+                        || !keep.contains(&(t, logical))
+                    {
+                        let _ = std::fs::remove_file(&p);
+                    }
+                }
+            }
+        }
+        // Compact last: until here the old journal is intact, so a crash
+        // anywhere above simply replays it again (re-registration is
+        // idempotent — `register_dirty` does not journal).
+        j.reset(&recovered)?;
         Ok(())
     }
 
@@ -1047,7 +1180,13 @@ impl SeaIo {
             // monotonically upward across spills.
             core.admission.note_fell_through();
         }
-        of.file.sync_all().ok();
+        // Pre-copy durability sync of the source. A failure is counted —
+        // not fatal: the copy below re-reads the same bytes through the
+        // page cache, and the file stays dirty until a flush commits, so
+        // nothing is silently trusted to a sync that never happened.
+        if of.file.sync_all().is_err() {
+            core.counters.bump_sync_failure();
+        }
         // A failed (or fenced-out/cancelled) spill copy must hand back
         // the reservation it just took on the target tier, or the
         // capacity leaks for the session; the write then fails and the
@@ -1126,7 +1265,18 @@ impl SeaIo {
         // reader mid-call on this fd finishes first (per-fd mutex), then
         // observes the retired generation as BadFd.
         let of = self.fds.remove(fd).ok_or(SeaError::BadFd(fd))?;
-        let OpenFile { logical, record, tier, writable, .. } = of;
+        let OpenFile { logical, record, tier, writable, file, .. } = of;
+        if writable {
+            // Close-time durability sync. Swallowing this error (the
+            // seed's `.ok()` pattern) silently trusted bytes the kernel
+            // never confirmed: on failure, count it and re-queue the
+            // file so the flusher re-copies from the still-dirty replica
+            // instead of marking the write durable.
+            if file.sync_all().is_err() {
+                self.core.counters.bump_sync_failure();
+                self.core.ns.mark_dirty(&logical);
+            }
+        }
         // Unpin through the record: a rename while this descriptor was
         // open moved the entry, and a path-based unpin would miss it —
         // leaving the file pinned (unflushable, unevictable) forever.

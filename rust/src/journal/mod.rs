@@ -1,0 +1,635 @@
+//! Crash-consistent dirty journal: per-cache-tier append-only logs of
+//! dirty-state transitions, replayed at mount so a `kill -9` mid-run no
+//! longer strands un-flushed bytes on the cache tiers (ROADMAP item 4;
+//! the durability contract of arXiv:2207.01737 §"eventual flush").
+//!
+//! ## What gets journaled, and why it is off the hot path
+//!
+//! The namespace's steady-state write path is lock-free: a write to an
+//! already-dirty file is four atomic ops and never takes a shard lock
+//! (see `Namespace::publish_write`). Dirty *transitions* — clean→dirty,
+//! dirty→clean, create, unlink, rename — all go through the shard-locked
+//! slow path already. The journal records **only transitions**, appended
+//! at those slow-path sites, so the `steady_write_p50_us < 0.5` budget
+//! holds by construction: a file that is written a million times while
+//! dirty produces exactly one `Dirty` record. Appends are a single
+//! unbuffered `write(2)` (durable across a process kill without any
+//! fsync); `fsync` is batched — the flusher syncs the journal once per
+//! flush pass, bounding loss on a *kernel* crash to one flush interval.
+//!
+//! ## Journal format
+//!
+//! One append-only file (`.sea_journal`) at the root of **each cache
+//! tier**. Every record is length-and-checksum framed:
+//!
+//! ```text
+//! [len: u32 LE] [fnv1a(payload): u64 LE] [payload: len bytes]
+//! payload := [op: u8] [version: u64 LE] [op-specific fields]
+//!   op 1 Dirty  { tier: u32, size: u64, path: str }
+//!   op 2 Clean  { path: str }
+//!   op 3 Retire { path: str }   (unlink / truncate-over)
+//!   op 4 Rename { from: str, to: str }
+//!   str := [len: u32 LE] [utf-8 bytes]
+//! ```
+//!
+//! `version` is the namespace's global write-generation stamp: unique
+//! and monotone across all paths, fetched at the transition site. Replay
+//! therefore does not depend on append order *between* journal files (a
+//! file can spill between tiers mid-life): all records are merged and
+//! sorted by `(version, op-rank)`, which reconstructs a true serialization
+//! of the transitions. A torn tail — the process died mid-append — fails
+//! the length or checksum test and cleanly ends that file's replay; every
+//! fully-framed record before it is kept.
+//!
+//! `Dirty` records are routed to the journal of the tier holding the
+//! dirty bytes (nothing is journaled for dirty bytes already sitting on
+//! the persist tier — they are exactly where a flush would put them);
+//! `Clean`/`Retire`/`Rename` are metadata transitions and are broadcast
+//! to every cache journal, so losing one tier (dropout) loses only that
+//! tier's — already physically gone — dirty set.
+//!
+//! ## Recovery protocol (mount)
+//!
+//! `SeaIo::mount_with` (and therefore `SeaSession::start`) runs, after
+//! the persist-tier walk:
+//!
+//! 1. **Replay**: merge-decode all cache journals (torn-tail tolerant),
+//!    fold the sorted records into the set of paths that were dirty at
+//!    crash time ([`fold_dirty`]).
+//! 2. **Reconcile against disk**: for each recovered entry, probe the
+//!    cache tiers fastest-first for the physical file (the recorded tier
+//!    first — but a crash after a spill means the bytes may sit on a
+//!    different tier, and the journal is a hint where disk is truth).
+//!    The on-disk size wins over the recorded size (writes after the
+//!    transition grow the file without new records). A replica that
+//!    vanished is dropped — the journal cannot resurrect bytes.
+//! 3. **Re-register**: surviving entries enter the namespace dirty and
+//!    enqueued (`Namespace::register_dirty`), with their bytes reserved
+//!    on the holding tier, so the flusher's next pass resumes the flush.
+//! 4. **Hygiene**: stale `*.sea_tmp.*` temps and cache files that are
+//!    neither recovered-dirty nor journal files are deleted — they are
+//!    clean replicas whose authoritative copy is on the persist tier.
+//! 5. **Compact**: the journal is atomically rewritten (temp + rename)
+//!    to exactly the recovered dirty set. A crash at *any* point before
+//!    the rename leaves the old journal intact, so recovery is
+//!    idempotent — the double-crash case replays again and converges.
+//!
+//! The invariant the crash harness (`tests/crash_recovery.rs`) asserts:
+//! every byte written before a crash is either on the persist tier or
+//! re-discovered as dirty and flushed by the next drain.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::faults::FaultPlan;
+use crate::tiers::TierIdx;
+
+/// Reserved file name of the per-tier journal (skipped by every walk).
+pub const JOURNAL_FILE: &str = ".sea_journal";
+/// Staging name of a compaction rewrite before its atomic rename.
+const JOURNAL_TMP: &str = ".sea_journal.new";
+
+/// Framing sanity cap: no legal record is anywhere near this large, so a
+/// longer length prefix means a torn or corrupt tail.
+const MAX_RECORD: u32 = 1 << 20;
+
+/// Whether a directory entry is a journal artifact (mount walks and the
+/// recovery hygiene sweep must never treat these as data files).
+pub fn is_journal_name(name: &str) -> bool {
+    name == JOURNAL_FILE || name == JOURNAL_TMP
+}
+
+/// One journaled dirty-state transition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JournalOp {
+    /// `path` became dirty with its master replica on cache `tier`.
+    Dirty { path: String, tier: TierIdx, size: u64 },
+    /// A flush committed `path` clean.
+    Clean { path: String },
+    /// `path` was unlinked (or truncated over — the create that follows
+    /// logs a fresh `Dirty` for the new incarnation).
+    Retire { path: String },
+    /// `from`'s dirty state (if any) now lives at `to`; `to`'s previous
+    /// incarnation is gone.
+    Rename { from: String, to: String },
+}
+
+/// A framed record: the op plus the global version stamp that orders it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JournalRecord {
+    pub version: u64,
+    pub op: JournalOp,
+}
+
+impl JournalRecord {
+    /// Sort rank for records sharing a version: a `Clean` carries the
+    /// version of the write it flushed, which was stamped at (or after)
+    /// the `Dirty` transition — so on a tie the `Dirty` applies first.
+    fn rank(&self) -> u8 {
+        match self.op {
+            JournalOp::Dirty { .. } => 0,
+            JournalOp::Rename { .. } => 1,
+            JournalOp::Retire { .. } => 2,
+            JournalOp::Clean { .. } => 3,
+        }
+    }
+}
+
+/// FNV-1a over raw payload bytes (the framing checksum).
+fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn push_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn encode_payload(rec: &JournalRecord) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64);
+    match &rec.op {
+        JournalOp::Dirty { path, tier, size } => {
+            buf.push(1);
+            buf.extend_from_slice(&rec.version.to_le_bytes());
+            buf.extend_from_slice(&(*tier as u32).to_le_bytes());
+            buf.extend_from_slice(&size.to_le_bytes());
+            push_str(&mut buf, path);
+        }
+        JournalOp::Clean { path } => {
+            buf.push(2);
+            buf.extend_from_slice(&rec.version.to_le_bytes());
+            push_str(&mut buf, path);
+        }
+        JournalOp::Retire { path } => {
+            buf.push(3);
+            buf.extend_from_slice(&rec.version.to_le_bytes());
+            push_str(&mut buf, path);
+        }
+        JournalOp::Rename { from, to } => {
+            buf.push(4);
+            buf.extend_from_slice(&rec.version.to_le_bytes());
+            push_str(&mut buf, from);
+            push_str(&mut buf, to);
+        }
+    }
+    buf
+}
+
+fn encode_frame(rec: &JournalRecord) -> Vec<u8> {
+    let payload = encode_payload(rec);
+    let mut frame = Vec::with_capacity(12 + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&fnv1a_bytes(&payload).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+/// A little-endian cursor over one journal file's bytes. Every reader
+/// returns `None` at (or past) the torn tail instead of erroring.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.bytes.len() {
+            return None;
+        }
+        let out = &self.bytes[self.pos..end];
+        self.pos = end;
+        Some(out)
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Option<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).ok()
+    }
+}
+
+fn decode_payload(payload: &[u8]) -> Option<JournalRecord> {
+    let mut c = Cursor { bytes: payload, pos: 0 };
+    let op = c.take(1)?[0];
+    let version = c.u64()?;
+    let op = match op {
+        1 => JournalOp::Dirty {
+            tier: c.u32()? as TierIdx,
+            size: c.u64()?,
+            path: c.str()?,
+        },
+        2 => JournalOp::Clean { path: c.str()? },
+        3 => JournalOp::Retire { path: c.str()? },
+        4 => JournalOp::Rename { from: c.str()?, to: c.str()? },
+        _ => return None,
+    };
+    Some(JournalRecord { version, op })
+}
+
+/// Decode one journal file's bytes, stopping cleanly at the first torn
+/// or corrupt frame (short length, bad checksum, malformed payload).
+fn decode_all(bytes: &[u8]) -> Vec<JournalRecord> {
+    let mut out = Vec::new();
+    let mut c = Cursor { bytes, pos: 0 };
+    loop {
+        let Some(len) = c.u32() else { break };
+        if len > MAX_RECORD {
+            break;
+        }
+        let Some(sum) = c.u64() else { break };
+        let Some(payload) = c.take(len as usize) else { break };
+        if fnv1a_bytes(payload) != sum {
+            break;
+        }
+        match decode_payload(payload) {
+            Some(rec) => out.push(rec),
+            None => break,
+        }
+    }
+    out
+}
+
+/// Fold version-sorted records into the paths that were dirty at the end
+/// of the log: `path -> (tier, size-at-transition)`, sorted by path for
+/// deterministic recovery order.
+pub fn fold_dirty(records: &[JournalRecord]) -> Vec<(String, TierIdx, u64)> {
+    let mut live: HashMap<String, (TierIdx, u64)> = HashMap::new();
+    for rec in records {
+        match &rec.op {
+            JournalOp::Dirty { path, tier, size } => {
+                live.insert(path.clone(), (*tier, *size));
+            }
+            JournalOp::Clean { path } | JournalOp::Retire { path } => {
+                live.remove(path);
+            }
+            JournalOp::Rename { from, to } => {
+                let moved = live.remove(from);
+                live.remove(to);
+                if let Some(v) = moved {
+                    live.insert(to.clone(), v);
+                }
+            }
+        }
+    }
+    let mut out: Vec<(String, TierIdx, u64)> =
+        live.into_iter().map(|(p, (t, s))| (p, t, s)).collect();
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+#[derive(Debug)]
+struct TierJournal {
+    path: PathBuf,
+    file: Mutex<Option<File>>,
+}
+
+/// The per-mount journal: one append-only file per cache tier. See the
+/// module docs for format and recovery protocol.
+#[derive(Debug)]
+pub struct Journal {
+    tiers: Vec<TierJournal>,
+    faults: Arc<FaultPlan>,
+    appends: AtomicU64,
+    append_errors: AtomicU64,
+    syncs: AtomicU64,
+}
+
+impl Journal {
+    /// Open (or create) the journal file on each cache-tier root, in
+    /// tier-index order. Leftover compaction temps from a crashed mount
+    /// are discarded — the rename never happened, so the old journal is
+    /// the authoritative one.
+    pub fn open(cache_roots: &[PathBuf], faults: Arc<FaultPlan>) -> std::io::Result<Journal> {
+        let mut tiers = Vec::with_capacity(cache_roots.len());
+        for root in cache_roots {
+            std::fs::create_dir_all(root)?;
+            let _ = std::fs::remove_file(root.join(JOURNAL_TMP));
+            let path = root.join(JOURNAL_FILE);
+            let file = OpenOptions::new().create(true).append(true).open(&path)?;
+            tiers.push(TierJournal {
+                path,
+                file: Mutex::new(Some(file)),
+            });
+        }
+        Ok(Journal {
+            tiers,
+            faults,
+            appends: AtomicU64::new(0),
+            append_errors: AtomicU64::new(0),
+            syncs: AtomicU64::new(0),
+        })
+    }
+
+    /// Total record appends attempted (all tiers).
+    pub fn appends(&self) -> u64 {
+        self.appends.load(Ordering::Relaxed)
+    }
+
+    /// Appends that failed (injected or real I/O error). The in-memory
+    /// dirty state is unaffected — only a subsequent crash would lose
+    /// that record, which is the journal's best-effort contract.
+    pub fn append_errors(&self) -> u64 {
+        self.append_errors.load(Ordering::Relaxed)
+    }
+
+    /// Batched `fsync` rounds completed (one per flush pass).
+    pub fn syncs(&self) -> u64 {
+        self.syncs.load(Ordering::Relaxed)
+    }
+
+    fn append_to(&self, idx: usize, frame: &[u8]) {
+        self.appends.fetch_add(1, Ordering::Relaxed);
+        let res = (|| -> std::io::Result<()> {
+            self.faults.check_io("journal.append")?;
+            let mut guard = self.tiers[idx].file.lock().unwrap();
+            match guard.as_mut() {
+                Some(f) => f.write_all(frame),
+                None => Err(std::io::Error::other("journal file unavailable")),
+            }
+        })();
+        if res.is_err() {
+            self.append_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn broadcast(&self, rec: &JournalRecord) {
+        let frame = encode_frame(rec);
+        for idx in 0..self.tiers.len() {
+            self.append_to(idx, &frame);
+        }
+    }
+
+    /// `path` transitioned clean→dirty with its bytes on cache `tier`.
+    /// Dirty-on-persist transitions are not journaled: those bytes are
+    /// already where a flush would put them, and the next mount's
+    /// persist walk re-registers the path.
+    pub fn log_dirty(&self, path: &str, tier: TierIdx, size: u64, version: u64) {
+        if tier >= self.tiers.len() {
+            return;
+        }
+        let rec = JournalRecord {
+            version,
+            op: JournalOp::Dirty { path: path.to_string(), tier, size },
+        };
+        self.append_to(tier, &encode_frame(&rec));
+    }
+
+    /// A flush committed `path` clean at `version`.
+    pub fn log_clean(&self, path: &str, version: u64) {
+        self.broadcast(&JournalRecord {
+            version,
+            op: JournalOp::Clean { path: path.to_string() },
+        });
+    }
+
+    /// `path` was unlinked or truncated over.
+    pub fn log_retire(&self, path: &str, version: u64) {
+        self.broadcast(&JournalRecord {
+            version,
+            op: JournalOp::Retire { path: path.to_string() },
+        });
+    }
+
+    /// `from` was renamed to `to`.
+    pub fn log_rename(&self, from: &str, to: &str, version: u64) {
+        self.broadcast(&JournalRecord {
+            version,
+            op: JournalOp::Rename { from: from.to_string(), to: to.to_string() },
+        });
+    }
+
+    /// Batched durability point: fsync every journal file. Called once
+    /// per flush pass rather than per append — a process kill never
+    /// loses buffered appends (they are real `write(2)`s), only a kernel
+    /// crash can, and this bounds that window to one flush interval.
+    pub fn sync(&self) {
+        for tj in &self.tiers {
+            if let Some(f) = tj.file.lock().unwrap().as_mut() {
+                let _ = f.sync_all();
+            }
+        }
+        self.syncs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Merge-decode every tier's journal, sorted into transition order
+    /// by `(version, rank)` (see the module docs on why cross-file order
+    /// is reconstructed from version stamps).
+    pub fn replay(&self) -> Vec<JournalRecord> {
+        let mut records = Vec::new();
+        for tj in &self.tiers {
+            if let Ok(bytes) = std::fs::read(&tj.path) {
+                records.extend(decode_all(&bytes));
+            }
+        }
+        records.sort_by(|a, b| (a.version, a.rank()).cmp(&(b.version, b.rank())));
+        records
+    }
+
+    /// Atomic compaction: rewrite each tier's journal to exactly the
+    /// given `(path, tier, size, version)` dirty set (routed like live
+    /// `Dirty` appends). Temp-file + rename, so a crash at any earlier
+    /// point leaves the previous journal authoritative and recovery
+    /// idempotent.
+    pub fn reset(&self, entries: &[(String, TierIdx, u64, u64)]) -> std::io::Result<()> {
+        for (idx, tj) in self.tiers.iter().enumerate() {
+            let mut bytes = Vec::new();
+            for (path, tier, size, version) in entries {
+                if *tier == idx {
+                    bytes.extend_from_slice(&encode_frame(&JournalRecord {
+                        version: *version,
+                        op: JournalOp::Dirty {
+                            path: path.clone(),
+                            tier: *tier,
+                            size: *size,
+                        },
+                    }));
+                }
+            }
+            let tmp = tj.path.with_file_name(JOURNAL_TMP);
+            let mut guard = tj.file.lock().unwrap();
+            let mut f = File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+            std::fs::rename(&tmp, &tj.path)?;
+            *guard = Some(OpenOptions::new().append(true).open(&tj.path)?);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::tempdir::tempdir;
+
+    fn journal_for(roots: &[PathBuf]) -> Journal {
+        Journal::open(roots, Arc::new(FaultPlan::none())).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_all_ops() {
+        let dir = tempdir("journal-rt");
+        let roots = vec![dir.subdir("t0")];
+        let j = journal_for(&roots);
+        j.log_dirty("/a.dat", 0, 100, 5);
+        j.log_clean("/a.dat", 5);
+        j.log_dirty("/b.dat", 0, 7, 9);
+        j.log_retire("/c.dat", 11);
+        j.log_rename("/b.dat", "/d.dat", 12);
+        let recs = j.replay();
+        assert_eq!(recs.len(), 5);
+        assert_eq!(
+            recs[0],
+            JournalRecord {
+                version: 5,
+                op: JournalOp::Dirty { path: "/a.dat".into(), tier: 0, size: 100 }
+            }
+        );
+        let dirty = fold_dirty(&recs);
+        assert_eq!(dirty, vec![("/d.dat".to_string(), 0, 7)]);
+    }
+
+    #[test]
+    fn clean_at_same_version_applies_after_dirty() {
+        let recs = vec![
+            JournalRecord {
+                version: 5,
+                op: JournalOp::Clean { path: "/x".into() },
+            },
+            JournalRecord {
+                version: 5,
+                op: JournalOp::Dirty { path: "/x".into(), tier: 0, size: 1 },
+            },
+        ];
+        let mut sorted = recs;
+        sorted.sort_by(|a, b| (a.version, a.rank()).cmp(&(b.version, b.rank())));
+        assert!(fold_dirty(&sorted).is_empty(), "clean wins the tie");
+    }
+
+    #[test]
+    fn torn_tail_keeps_complete_prefix() {
+        let dir = tempdir("journal-torn");
+        let roots = vec![dir.subdir("t0")];
+        let j = journal_for(&roots);
+        j.log_dirty("/keep.dat", 0, 64, 1);
+        j.log_dirty("/also.dat", 0, 64, 2);
+        drop(j);
+        // Simulate a crash mid-append: a partial frame at the tail.
+        let path = roots[0].join(JOURNAL_FILE);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let full = encode_frame(&JournalRecord {
+            version: 3,
+            op: JournalOp::Dirty { path: "/torn.dat".into(), tier: 0, size: 64 },
+        });
+        bytes.extend_from_slice(&full[..full.len() / 2]);
+        std::fs::write(&path, &bytes).unwrap();
+        let j = journal_for(&roots);
+        let recs = j.replay();
+        assert_eq!(recs.len(), 2, "torn tail dropped, prefix kept");
+        assert_eq!(fold_dirty(&recs).len(), 2);
+    }
+
+    #[test]
+    fn corrupt_checksum_ends_replay() {
+        let dir = tempdir("journal-sum");
+        let roots = vec![dir.subdir("t0")];
+        let j = journal_for(&roots);
+        j.log_dirty("/ok.dat", 0, 1, 1);
+        j.log_dirty("/flipped.dat", 0, 1, 2);
+        drop(j);
+        let path = roots[0].join(JOURNAL_FILE);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let recs = journal_for(&roots).replay();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(fold_dirty(&recs)[0].0, "/ok.dat");
+    }
+
+    #[test]
+    fn dirty_on_persist_is_not_journaled() {
+        let dir = tempdir("journal-persist");
+        let roots = vec![dir.subdir("t0")];
+        let j = journal_for(&roots);
+        j.log_dirty("/cache.dat", 0, 1, 1);
+        j.log_dirty("/persist.dat", 1, 1, 2); // tier 1 == persist here
+        assert_eq!(j.replay().len(), 1);
+    }
+
+    #[test]
+    fn multi_tier_merge_sorts_by_version() {
+        let dir = tempdir("journal-merge");
+        let roots = vec![dir.subdir("t0"), dir.subdir("t1")];
+        let j = journal_for(&roots);
+        j.log_dirty("/a", 1, 1, 10); // lands in t1's journal
+        j.log_dirty("/a", 0, 2, 20); // spill back: t0's journal
+        j.log_clean("/a", 20); // broadcast
+        let recs = j.replay();
+        let versions: Vec<u64> = recs.iter().map(|r| r.version).collect();
+        let mut sorted = versions.clone();
+        sorted.sort_unstable();
+        assert_eq!(versions, sorted);
+        assert!(fold_dirty(&recs).is_empty());
+    }
+
+    #[test]
+    fn reset_compacts_to_given_set() {
+        let dir = tempdir("journal-reset");
+        let roots = vec![dir.subdir("t0")];
+        let j = journal_for(&roots);
+        for i in 0..50u64 {
+            j.log_dirty("/churn.dat", 0, i, i + 1);
+            j.log_clean("/churn.dat", i + 1);
+        }
+        j.log_dirty("/live.dat", 0, 9, 100);
+        j.reset(&[("/live.dat".to_string(), 0, 9, 100)]).unwrap();
+        let recs = j.replay();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(fold_dirty(&recs), vec![("/live.dat".to_string(), 0, 9)]);
+        // appends after a reset land in the new file
+        j.log_dirty("/after.dat", 0, 1, 101);
+        assert_eq!(j.replay().len(), 2);
+    }
+
+    #[test]
+    fn append_fault_counts_error_and_replay_survives() {
+        let dir = tempdir("journal-fault");
+        let roots = vec![dir.subdir("t0")];
+        let plan = FaultPlan::parse("journal.append=eio:1").unwrap();
+        let j = Journal::open(&roots, Arc::new(plan)).unwrap();
+        j.log_dirty("/lost.dat", 0, 1, 1);
+        j.log_dirty("/kept.dat", 0, 1, 2);
+        assert_eq!(j.append_errors(), 1);
+        assert_eq!(j.appends(), 2);
+        let recs = j.replay();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(fold_dirty(&recs)[0].0, "/kept.dat");
+    }
+
+    #[test]
+    fn journal_names_are_reserved() {
+        assert!(is_journal_name(JOURNAL_FILE));
+        assert!(is_journal_name(".sea_journal.new"));
+        assert!(!is_journal_name("data.sea_journal"));
+        assert!(!is_journal_name("file.dat"));
+    }
+}

@@ -25,8 +25,10 @@ pub mod config;
 pub mod coordinator;
 pub mod dataset;
 pub mod experiments;
+pub mod faults;
 pub mod flusher;
 pub mod intercept;
+pub mod journal;
 pub mod lustre;
 pub mod namespace;
 pub mod pagecache;

@@ -521,6 +521,7 @@ impl ShardState {
         key: &str,
         vgen: &AtomicU64,
         egen: &AtomicU64,
+        journal: Option<&crate::journal::Journal>,
         always_stamp: bool,
         f: F,
     ) -> bool {
@@ -535,6 +536,12 @@ impl ShardState {
         }
         if transitioned {
             self.dirty.insert(key.to_string());
+            // Journal the clean→dirty edge under the shard lock it
+            // already holds (this is the slow path; steady-state dirty
+            // writes never reach here — see `crate::journal`).
+            if let Some(j) = journal {
+                j.log_dirty(key, meta.master, meta.size(), meta.version());
+            }
         }
         if !meta.dirty() && meta.open_count == 0 {
             // Clean and closed after this update (a close, a flush
@@ -569,9 +576,10 @@ impl ShardState {
         key: &str,
         vgen: &AtomicU64,
         egen: &AtomicU64,
+        journal: Option<&crate::journal::Journal>,
         f: F,
     ) -> bool {
-        self.update_inner(key, vgen, egen, false, f)
+        self.update_inner(key, vgen, egen, journal, false, f)
     }
 
     fn update_stamped<F: FnOnce(&mut FileMeta)>(
@@ -579,9 +587,10 @@ impl ShardState {
         key: &str,
         vgen: &AtomicU64,
         egen: &AtomicU64,
+        journal: Option<&crate::journal::Journal>,
         f: F,
     ) -> bool {
-        self.update_inner(key, vgen, egen, true, f)
+        self.update_inner(key, vgen, egen, journal, true, f)
     }
 }
 
@@ -601,6 +610,10 @@ pub struct Namespace {
     /// value of a scan that found no eviction candidates and skips
     /// rescanning until this moves (see [`Namespace::evict_transitions`]).
     egen: AtomicU64,
+    /// Crash-recovery journal sink: dirty-state transitions are appended
+    /// at their shard-locked source (see `crate::journal`). `None` (the
+    /// default, and every journal-disabled mount) journals nothing.
+    journal: Option<Arc<crate::journal::Journal>>,
 }
 
 impl Default for Namespace {
@@ -610,6 +623,7 @@ impl Default for Namespace {
             vgen: AtomicU64::new(0),
             agen: AtomicU64::new(0),
             egen: AtomicU64::new(0),
+            journal: None,
         }
     }
 }
@@ -670,6 +684,12 @@ impl Namespace {
         Namespace::default()
     }
 
+    /// A namespace that appends every dirty-state transition to `journal`
+    /// (see `crate::journal` for the record set and recovery protocol).
+    pub fn with_journal(journal: Arc<crate::journal::Journal>) -> Self {
+        Namespace { journal: Some(journal), ..Namespace::default() }
+    }
+
     fn shard(&self, key: &str) -> &RwLock<ShardState> {
         &self.shards[shard_of(key)]
     }
@@ -687,9 +707,13 @@ impl Namespace {
         let stamp = self.touch_stamp();
         let mut s = self.shard(&key).write().unwrap();
         let meta = FileMeta::new(tier);
-        meta.rec.version.store(fresh_stamp(&self.vgen), Ordering::Release);
+        let version = fresh_stamp(&self.vgen);
+        meta.rec.version.store(version, Ordering::Release);
         meta.set_last_access(stamp);
         s.dirty.insert(key.clone());
+        if let Some(j) = &self.journal {
+            j.log_dirty(&key, tier, 0, version);
+        }
         let prev = s.files.insert(key, meta);
         if let Some(prev) = &prev {
             prev.rec.retire_removed();
@@ -745,7 +769,13 @@ impl Namespace {
         f: F,
     ) -> bool {
         let key = logical.to_clean();
-        self.shard(&key).write().unwrap().update(&key, &self.vgen, &self.egen, f)
+        self.shard(&key).write().unwrap().update(
+            &key,
+            &self.vgen,
+            &self.egen,
+            self.journal.as_deref(),
+            f,
+        )
     }
 
     /// Monotone count of clean-and-closed transitions — the version the
@@ -774,6 +804,36 @@ impl Namespace {
         }
     }
 
+    /// Register a dirty file rediscovered by crash recovery: dirty,
+    /// enqueued for the flusher, sized from the on-disk replica, with its
+    /// master on the cache tier where the replica was found. Deliberately
+    /// **not** journaled — recovery compacts the journal to exactly the
+    /// recovered set right after re-registration, so appending here would
+    /// only duplicate records between replay and compaction (and a crash
+    /// in that window must replay the *old* journal, not a half-new one).
+    /// Returns the fresh version stamp for the compacted journal entry.
+    pub fn register_dirty(
+        &self,
+        logical: &(impl PathArg + ?Sized),
+        tier: TierIdx,
+        size: u64,
+    ) -> u64 {
+        let key = logical.to_clean().into_owned();
+        let stamp = self.touch_stamp();
+        let mut s = self.shard(&key).write().unwrap();
+        let mut meta = FileMeta::new(tier);
+        meta.flushed = s.files.get(&key).map(|p| p.flushed).unwrap_or(false);
+        meta.set_size(size);
+        let version = fresh_stamp(&self.vgen);
+        meta.rec.version.store(version, Ordering::Release);
+        meta.set_last_access(stamp);
+        s.dirty.insert(key.clone());
+        if let Some(prev) = s.files.insert(key, meta) {
+            prev.rec.retire_removed();
+        }
+        version
+    }
+
     /// Grow the file size to `new_size` and mark dirty (a write happened,
     /// so the version is freshly stamped — under the shard lock).
     /// `tier` is where the bytes physically landed (the fd's tier): it
@@ -793,6 +853,7 @@ impl Namespace {
             &key,
             &self.vgen,
             &self.egen,
+            self.journal.as_deref(),
             |m| apply_write(m, new_size, tier, stamp),
         )
     }
@@ -906,6 +967,12 @@ impl Namespace {
             };
             if let Some(invalidated) = invalidated {
                 s.dirty.insert(key.as_str().to_string());
+                // The clean→dirty edge of the lock-free write path: the
+                // only transition slow path a steady-state writer ever
+                // takes, and so the journal hook for intercepted writes.
+                if let Some(j) = &self.journal {
+                    j.log_dirty(key.as_str(), tier, rec.size(), rec.version());
+                }
                 return WriteAck {
                     moved_to: moved.then(|| (key.clone(), shard_idx)),
                     invalidated,
@@ -993,6 +1060,15 @@ impl Namespace {
                 self.egen.fetch_add(1, Ordering::Relaxed);
             }
             _ => {}
+        }
+        if verdict == FlushCommit::Clean {
+            // Journal the dirty→clean edge at the version the flush
+            // copied. A racing write logs a Dirty record with a strictly
+            // newer stamp, so replay keeps the file dirty (see
+            // `crate::journal` for the tie-break).
+            if let Some(j) = &self.journal {
+                j.log_clean(&key, snapshot_version);
+            }
         }
         verdict
     }
@@ -1192,6 +1268,9 @@ impl Namespace {
         let prev = s.files.remove(&*key);
         if let Some(prev) = &prev {
             prev.rec.retire_removed();
+            if let Some(j) = &self.journal {
+                j.log_retire(&key, fresh_stamp(&self.vgen));
+            }
         }
         prev
     }
@@ -1208,7 +1287,13 @@ impl Namespace {
         let (si, di) = (shard_of(&from_k), shard_of(&to_k));
         if si == di {
             let mut s = self.shards[si].write().unwrap();
-            Self::rename_same_shard(&mut s, &from_k, to_k, &self.egen)
+            let ok = Self::rename_same_shard(&mut s, &from_k, to_k.clone(), &self.egen);
+            if ok {
+                if let Some(j) = &self.journal {
+                    j.log_rename(&from_k, &to_k, fresh_stamp(&self.vgen));
+                }
+            }
+            ok
         } else {
             let (lo, hi) = (si.min(di), si.max(di));
             let mut a = self.shards[lo].write().unwrap();
@@ -1224,6 +1309,9 @@ impl Namespace {
                     src.evictable.remove(&*from_k);
                     meta.rec.retire_moved(&CleanPath::from_clean(to_k.clone()));
                     dst.enqueue_moved(to_k.clone(), &meta, &self.egen);
+                    if let Some(j) = &self.journal {
+                        j.log_rename(&from_k, &to_k, fresh_stamp(&self.vgen));
+                    }
                     if let Some(prev) = dst.files.insert(to_k, meta) {
                         prev.rec.retire_removed();
                     }

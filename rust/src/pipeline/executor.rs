@@ -85,6 +85,10 @@ pub struct RealRunReport {
     /// evicting cold clean replicas, or fell through to the persistent
     /// tier — the attribution data behind makespan differences.
     pub admission: crate::stats::AdmissionSnapshot,
+    /// Transfer-engine outcomes (completed / cancelled / errored copies
+    /// and bytes moved) across flush, prefetch, and spill — the
+    /// data-movement companion to the admission counters.
+    pub transfers: crate::transfer::TransferSnapshot,
     /// Files physically present under the persistent root afterwards
     /// (the paper's §3.6 quota argument).
     pub files_on_persist: usize,
@@ -337,9 +341,13 @@ pub fn run_real(cfg: &RealRunConfig, svc: &ComputeService) -> Result<RealRunRepo
 
     let drain_sw = Stopwatch::start();
     let n_images = images.len();
-    let admission = session.io().core().admission.snapshot();
+    // Keep the core alive across unmount so the admission and transfer
+    // counters include the drain (where most flush copies happen).
+    let core = session.io().core().clone();
     let (stats, flush) = session.unmount();
     let drain_secs = drain_sw.elapsed_secs();
+    let admission = core.admission.snapshot();
+    let transfers = core.transfers.stats.snapshot();
 
     Ok(RealRunReport {
         makespan_secs,
@@ -349,6 +357,7 @@ pub fn run_real(cfg: &RealRunConfig, svc: &ComputeService) -> Result<RealRunRepo
         stats,
         flush,
         admission,
+        transfers,
         files_on_persist: count_files(&cfg.data_root),
     })
 }

@@ -18,7 +18,7 @@ pub mod throttle;
 pub use throttle::Throttle;
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
 
 use crate::config::CacheDef;
@@ -36,6 +36,9 @@ pub struct Tier {
     used: AtomicU64,
     data_throttle: Option<Throttle>,
     meta_latency: Option<Duration>,
+    /// Dropout flag (fault injection): a down tier refuses transfers at
+    /// [`Tier::check_up`] call sites. Never set in production mounts.
+    down: AtomicBool,
 }
 
 impl Tier {
@@ -48,6 +51,7 @@ impl Tier {
             used: AtomicU64::new(0),
             data_throttle: None,
             meta_latency: None,
+            down: AtomicBool::new(false),
         })
     }
 
@@ -139,6 +143,27 @@ impl Tier {
 
     pub fn is_throttled(&self) -> bool {
         self.data_throttle.is_some() || self.meta_latency.is_some()
+    }
+
+    /// Mark the tier dropped out (or back up) — fault injection only;
+    /// set once at mount from the armed `FaultPlan`.
+    pub fn set_down(&self, down: bool) {
+        self.down.store(down, Ordering::Relaxed);
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.down.load(Ordering::Relaxed)
+    }
+
+    /// Refuse the operation if the tier is dropped out. Transfer
+    /// endpoints check both sides before moving bytes, so a dead tier
+    /// fails copies loudly instead of half-writing into it.
+    pub fn check_up(&self) -> std::io::Result<()> {
+        if self.is_down() {
+            Err(std::io::Error::other(format!("tier {} is down", self.name)))
+        } else {
+            Ok(())
+        }
     }
 }
 

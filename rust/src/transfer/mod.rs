@@ -71,6 +71,12 @@ pub fn is_temp_name(file_name: &str) -> bool {
 /// throttled bandwidth for the cancel to be honoured.
 const CANCEL_SLICE: usize = 64 * 1024;
 
+/// Marker in the error of an injected torn copy. A torn copy simulates a
+/// mid-transfer power cut, so — unlike every other copy error — its
+/// truncated temp file is deliberately **left behind** for mount-time
+/// hygiene to find (see `crate::faults` and `SeaIo::register_existing`).
+const TORN_MSG: &str = "injected torn copy";
+
 /// Number of fence shards (power of two, FNV-hashed like the namespace).
 const FENCE_SHARDS: usize = 16;
 
@@ -231,6 +237,25 @@ impl TransferStats {
     pub fn bytes_moved(&self) -> u64 {
         self.bytes_moved.load(Ordering::Relaxed)
     }
+
+    /// Point-in-time copy for reports (`RealRunReport.transfers`).
+    pub fn snapshot(&self) -> TransferSnapshot {
+        TransferSnapshot {
+            completed: self.completed(),
+            cancelled: self.cancelled(),
+            errors: self.errors(),
+            bytes_moved: self.bytes_moved(),
+        }
+    }
+}
+
+/// Plain-data snapshot of [`TransferStats`] at one instant.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferSnapshot {
+    pub completed: u64,
+    pub cancelled: u64,
+    pub errors: u64,
+    pub bytes_moved: u64,
 }
 
 /// One copy in a [`TransferEngine::run_batch`] submission. `token` is an
@@ -340,16 +365,27 @@ impl TransferEngine {
                 return Ok(Outcome::Cancelled);
             }
             Err(e) => {
-                let _ = std::fs::remove_file(&tmp_path);
+                // A torn copy is the simulated power cut: its truncated
+                // temp stays behind on purpose (mount hygiene's problem).
+                if !e.to_string().contains(TORN_MSG) {
+                    let _ = std::fs::remove_file(&tmp_path);
+                }
                 self.stats.errors.fetch_add(1, Ordering::Relaxed);
                 return Err(e);
             }
         };
+        // Temp fully written + synced, rename not yet done: a crash here
+        // must lose nothing (the journal still holds the file dirty).
+        core.faults.crash_point("copy.before_rename");
         if let Err(e) = std::fs::rename(&tmp_path, &dst_path) {
             let _ = std::fs::remove_file(&tmp_path);
             self.stats.errors.fetch_add(1, Ordering::Relaxed);
             return Err(e);
         }
+        // Bytes in place, commit (namespace clean-marking, journal Clean
+        // record) not yet run: the worst-case crash window — recovery
+        // must re-discover the file dirty and re-flush idempotently.
+        core.faults.crash_point("copy.after_rename");
         let v = commit(total);
         self.stats.completed.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes_moved.fetch_add(total, Ordering::Relaxed);
@@ -368,12 +404,17 @@ impl TransferEngine {
         to: TierIdx,
         tmp_path: &std::path::Path,
     ) -> std::io::Result<Option<u64>> {
+        core.tiers.get(from).check_up()?;
+        core.tiers.get(to).check_up()?;
+        let torn_at = core.faults.torn_limit("copy.write");
         let src_path = core.tiers.get(from).physical(logical);
         let mut src = std::fs::File::open(&src_path)?;
         let mut dst = std::fs::File::create(tmp_path)?;
         let mut buf = vec![0u8; self.copy_buf];
         let mut total = 0u64;
+        let mut first_slice = true;
         loop {
+            core.faults.check_io("copy.read")?;
             let n = src.read(&mut buf)?;
             if n == 0 {
                 break;
@@ -384,9 +425,25 @@ impl TransferEngine {
                 }
                 core.tiers.get(from).wait_data(slice.len() as u64);
                 core.tiers.get(to).wait_data(slice.len() as u64);
+                core.faults.check_io("copy.write")?;
+                if let Some(limit) = torn_at {
+                    let room = limit.saturating_sub(total);
+                    if (slice.len() as u64) > room {
+                        dst.write_all(&slice[..room as usize])?;
+                        let _ = dst.sync_all();
+                        return Err(std::io::Error::other(format!(
+                            "{TORN_MSG} after {limit} bytes"
+                        )));
+                    }
+                }
                 dst.write_all(slice)?;
+                total += slice.len() as u64;
+                if first_slice {
+                    first_slice = false;
+                    // Crash with a half-written temp on disk.
+                    core.faults.crash_point("copy.mid_write");
+                }
             }
-            total += n as u64;
         }
         dst.sync_all()?;
         if guard.cancelled() {
@@ -610,6 +667,78 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn injected_eio_fails_copy_and_counts_error() {
+        let dir = tempdir("transfer-eio");
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), 16 * MIB)
+            .persist("lustre", dir.subdir("lustre"), 100 * MIB)
+            .faults("copy.write=eio")
+            .build();
+        let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+        write_file(&sea, "/d/e.out", b"payload");
+        let core = sea.core();
+        let persist = core.tiers.persist_idx();
+        let err = core
+            .transfers
+            .copy(core, "/d/e.out", 0, persist, |_| ())
+            .unwrap_err();
+        assert!(err.to_string().contains("injected EIO"), "{err}");
+        assert_eq!(core.transfers.stats.errors(), 1);
+        assert!(!core.tiers.persist().physical("/d/e.out").exists());
+        // The fault is one-shot: the retry succeeds.
+        let out = core.transfers.copy(core, "/d/e.out", 0, persist, |_| ()).unwrap();
+        assert!(out.is_done());
+    }
+
+    #[test]
+    fn torn_copy_leaves_truncated_temp_behind() {
+        let dir = tempdir("transfer-torn");
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), 16 * MIB)
+            .persist("lustre", dir.subdir("lustre"), 100 * MIB)
+            .faults("copy.write=torn:3")
+            .build();
+        let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+        write_file(&sea, "/d/t.out", b"payload");
+        let core = sea.core();
+        let persist = core.tiers.persist_idx();
+        let err = core
+            .transfers
+            .copy(core, "/d/t.out", 0, persist, |_| ())
+            .unwrap_err();
+        assert!(err.to_string().contains("torn"), "{err}");
+        assert!(!core.tiers.persist().physical("/d/t.out").exists());
+        let dir_of = core.tiers.persist().physical("/d/t.out");
+        let temps: Vec<_> = std::fs::read_dir(dir_of.parent().unwrap())
+            .unwrap()
+            .flatten()
+            .filter(|e| is_temp_name(&e.file_name().to_string_lossy()))
+            .collect();
+        assert_eq!(temps.len(), 1, "torn copy must leave its temp");
+        assert_eq!(temps[0].metadata().unwrap().len(), 3, "truncated at limit");
+    }
+
+    #[test]
+    fn down_tier_refuses_transfers() {
+        let dir = tempdir("transfer-down");
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), 16 * MIB)
+            .persist("lustre", dir.subdir("lustre"), 100 * MIB)
+            .faults("tier.lustre=down")
+            .build();
+        let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+        write_file(&sea, "/d/dn.out", b"payload");
+        let core = sea.core();
+        let persist = core.tiers.persist_idx();
+        let err = core
+            .transfers
+            .copy(core, "/d/dn.out", 0, persist, |_| ())
+            .unwrap_err();
+        assert!(err.to_string().contains("down"), "{err}");
+        assert!(!core.tiers.persist().physical("/d/dn.out").exists());
     }
 
     #[test]

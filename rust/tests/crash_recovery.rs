@@ -1,0 +1,226 @@
+//! Crash-consistency scenario harness: kill a Sea mount at every named
+//! crash point mid-flush, remount, and assert the journal invariant —
+//! every byte written before the crash is either on the persist tier
+//! already or re-discovered as dirty and flushed on the next drain.
+//!
+//! Two crash mechanisms:
+//!
+//! - **Re-exec** (`crash_child`): the parent spawns this same test binary
+//!   with `SEA_CRASH_DIR` + `SEA_FAULTS=<point>=crash` in the
+//!   environment; the child mounts over the shared directory, writes a
+//!   deterministic file set, flushes, and aborts at the armed crash
+//!   point (SIGABRT, whole process — threads, fds and all). This is the
+//!   closest a test can get to `kill -9` mid-copy.
+//! - **In-process forget**: `std::mem::forget(session)` skips every
+//!   destructor (no drain, no journal compaction, fds leak) — a cheap
+//!   stand-in for a crash when the scenario needs to keep running in the
+//!   same process (tampering with the journal, double crashes).
+
+use std::path::{Path, PathBuf};
+
+use sea::config::SeaConfig;
+use sea::flusher::SeaSession;
+use sea::pathrules::{PathRules, SeaLists};
+use sea::testing::tempdir::tempdir;
+use sea::util::MIB;
+
+const CRASH_DIR_ENV: &str = "SEA_CRASH_DIR";
+
+/// Mount over `dir` with flusher/prefetcher threads off: flushing only
+/// happens when a test asks for it, so crash points fire deterministically.
+fn mount_at(dir: &Path, journal: bool, faults: &str) -> SeaSession {
+    let cfg = SeaConfig::builder(dir.join("mount"))
+        .cache("tmpfs", dir.join("tmpfs"), 64 * MIB)
+        .persist("lustre", dir.join("lustre"), 100_000 * MIB)
+        .flusher(false, 3_600_000)
+        .prefetcher(false)
+        .journal(journal)
+        .faults(faults)
+        .build();
+    let lists = SeaLists::new(
+        PathRules::parse(".*").unwrap(),
+        PathRules::empty(),
+        PathRules::empty(),
+    );
+    SeaSession::start(cfg, lists, |t| t).unwrap()
+}
+
+/// The deterministic file set both the crash child and the verifying
+/// parent derive independently (no manifest file to get torn).
+fn crash_files() -> Vec<(String, Vec<u8>)> {
+    vec![
+        ("/sub-01/anat/T1w.nii".to_string(), pattern(3, 192 * 1024)),
+        ("/sub-01/func/bold.nii".to_string(), pattern(7, 5 * 1024)),
+        ("/derivatives/mask.nii".to_string(), pattern(11, 300)),
+    ]
+}
+
+fn pattern(seed: u8, len: usize) -> Vec<u8> {
+    (0..len).map(|i| (i as u8).wrapping_mul(seed)).collect()
+}
+
+fn write_all(sea: &sea::intercept::SeaIo, files: &[(String, Vec<u8>)]) {
+    for (path, bytes) in files {
+        let fd = sea.create(path).unwrap();
+        sea.write(fd, bytes).unwrap();
+        sea.close(fd).unwrap();
+    }
+}
+
+fn persist_bytes(dir: &Path, logical: &str) -> Option<Vec<u8>> {
+    std::fs::read(dir.join("lustre").join(logical.trim_start_matches('/'))).ok()
+}
+
+/// Re-exec helper: only does real work when the parent armed the
+/// environment; in a normal test run it is an instant no-op pass.
+#[test]
+fn crash_child() {
+    let Ok(dir) = std::env::var(CRASH_DIR_ENV) else {
+        return;
+    };
+    let dir = PathBuf::from(dir);
+    let sess = mount_at(&dir, true, "");
+    write_all(sess.io(), &crash_files());
+    // The armed crash point aborts the process somewhere in here.
+    let report = sess.flush_now();
+    panic!("crash point never fired (flush report: {report:?})");
+}
+
+/// The tentpole invariant, at every copy-path crash point.
+#[test]
+fn crash_at_every_copy_point_loses_no_bytes() {
+    let exe = std::env::current_exe().unwrap();
+    for point in ["copy.mid_write", "copy.before_rename", "copy.after_rename"] {
+        let dir = tempdir(&format!("crash-{}", point.replace('.', "-")));
+        let out = std::process::Command::new(&exe)
+            .args(["crash_child", "--exact", "--nocapture"])
+            .env(CRASH_DIR_ENV, dir.path())
+            .env(sea::faults::ENV_FAULTS, format!("{point}=crash"))
+            .output()
+            .unwrap();
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            !out.status.success(),
+            "{point}: child survived its crash point\n{stderr}"
+        );
+        assert!(
+            stderr.contains("crash point"),
+            "{point}: child died without hitting the crash point\n{stderr}"
+        );
+        // Remount over the wreckage; unmount drains whatever the journal
+        // re-discovered as dirty.
+        let sess = mount_at(dir.path(), true, "");
+        let (_stats, report) = sess.unmount();
+        for (logical, expected) in crash_files() {
+            let got = persist_bytes(dir.path(), &logical);
+            assert_eq!(
+                got.as_deref(),
+                Some(expected.as_slice()),
+                "{point}: {logical} lost or corrupted after recovery \
+                 (drain report: {report:?})"
+            );
+        }
+    }
+}
+
+/// A dirty journal entry whose cache replica vanished has nothing left
+/// to recover: it must be dropped, not resurrected as an empty file.
+#[test]
+fn vanished_replica_is_dropped_not_resurrected() {
+    let dir = tempdir("crash-vanish");
+    let sess = mount_at(dir.path(), true, "");
+    write_all(sess.io(), &[("/gone.nii".to_string(), pattern(5, 2048))]);
+    std::mem::forget(sess); // crash: journal keeps the dirty record
+    std::fs::remove_file(dir.path().join("tmpfs/gone.nii")).unwrap();
+
+    let sess = mount_at(dir.path(), true, "");
+    assert!(sess.io().stat("/gone.nii").is_err(), "must not resurrect");
+    let (_stats, report) = sess.unmount();
+    assert_eq!(report.flushed + report.moved, 0, "{report:?}");
+    assert_eq!(persist_bytes(dir.path(), "/gone.nii"), None);
+}
+
+/// A file renamed after its dirty record was journaled must recover
+/// under the new name only (the rename record retargets the old one).
+#[test]
+fn renamed_then_crashed_path_recovers_under_new_name() {
+    let dir = tempdir("crash-rename");
+    let sess = mount_at(dir.path(), true, "");
+    let payload = pattern(9, 40 * 1024);
+    write_all(sess.io(), &[("/old.nii".to_string(), payload.clone())]);
+    sess.io().rename("/old.nii", "/new.nii").unwrap();
+    std::mem::forget(sess);
+
+    let sess = mount_at(dir.path(), true, "");
+    let (_stats, report) = sess.unmount();
+    assert!(report.flushed + report.moved >= 1, "{report:?}");
+    assert_eq!(persist_bytes(dir.path(), "/new.nii"), Some(payload));
+    assert_eq!(persist_bytes(dir.path(), "/old.nii"), None);
+}
+
+/// Crash again *during* the recovery flush: the compacted journal must
+/// still carry the entry, so a third mount finishes the job.
+#[test]
+fn double_crash_during_recovery_is_idempotent() {
+    let dir = tempdir("crash-double");
+    let payload = pattern(13, 64 * 1024);
+    let sess = mount_at(dir.path(), true, "");
+    write_all(sess.io(), &[("/twice.nii".to_string(), payload.clone())]);
+    std::mem::forget(sess); // first crash
+
+    // Second mount recovers the entry, then its flush dies on injected
+    // EIO and the whole session "crashes" before any retry.
+    let sess = mount_at(dir.path(), true, "copy.write=eio:1");
+    let report = sess.flush_now();
+    assert_eq!(report.errors, 1, "{report:?}");
+    std::mem::forget(sess); // second crash
+
+    let sess = mount_at(dir.path(), true, "");
+    let (_stats, report) = sess.unmount();
+    assert!(report.flushed + report.moved >= 1, "{report:?}");
+    assert_eq!(persist_bytes(dir.path(), "/twice.nii"), Some(payload));
+}
+
+/// Garbage appended past the last good record (a torn tail from a crash
+/// mid-append) must not poison replay of the records before it.
+#[test]
+fn torn_journal_tail_is_tolerated() {
+    use std::io::Write;
+
+    let dir = tempdir("crash-torn-tail");
+    let sess = mount_at(dir.path(), true, "");
+    let payload = pattern(17, 8 * 1024);
+    write_all(sess.io(), &[("/tail.nii".to_string(), payload.clone())]);
+    std::mem::forget(sess);
+
+    // A frame header promising 100 payload bytes, then only 4 of them.
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .open(dir.path().join("tmpfs").join(sea::journal::JOURNAL_FILE))
+        .unwrap();
+    f.write_all(&100u32.to_le_bytes()).unwrap();
+    f.write_all(&[0xde, 0xad, 0xbe, 0xef]).unwrap();
+    drop(f);
+
+    let sess = mount_at(dir.path(), true, "");
+    let (_stats, report) = sess.unmount();
+    assert!(report.flushed + report.moved >= 1, "{report:?}");
+    assert_eq!(persist_bytes(dir.path(), "/tail.nii"), Some(payload));
+}
+
+/// `[journal] enabled = false` reproduces the pre-journal lossy
+/// behaviour: a crash strands dirty cache bytes forever. This pins the
+/// opt-out so the journal's value stays measurable.
+#[test]
+fn journal_disabled_reproduces_lossy_behaviour() {
+    let dir = tempdir("crash-lossy");
+    let sess = mount_at(dir.path(), false, "");
+    write_all(sess.io(), &[("/lost.nii".to_string(), pattern(19, 4096))]);
+    std::mem::forget(sess);
+
+    let sess = mount_at(dir.path(), false, "");
+    assert!(sess.io().stat("/lost.nii").is_err(), "nothing remembers it");
+    let (_stats, report) = sess.unmount();
+    assert_eq!(report.flushed + report.moved, 0, "{report:?}");
+    assert_eq!(persist_bytes(dir.path(), "/lost.nii"), None);
+}
