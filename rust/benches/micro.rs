@@ -38,6 +38,15 @@ fn hotpath_only() -> bool {
     std::env::var_os("SEA_BENCH_HOTPATH_ONLY").is_some()
 }
 
+/// Trace-artifact mode (`SEA_OBS_TRACE=1`): route the interceptor
+/// mount's event-trace file to `BENCH_trace.bin` in the cwd so CI can
+/// export and archive it next to `BENCH_hotpath.json`. Tracing itself
+/// is on by default either way — every latency number this bench prints
+/// already includes the instrumented path.
+fn obs_trace_out() -> Option<std::path::PathBuf> {
+    std::env::var_os("SEA_OBS_TRACE").map(|_| std::path::PathBuf::from("BENCH_trace.bin"))
+}
+
 /// Scale an iteration count down in smoke mode.
 fn scaled(iters: u64) -> u64 {
     if smoke() {
@@ -201,10 +210,14 @@ fn main() {
 
     // --- interceptor ------------------------------------------------------
     let dir = tempdir("micro");
-    let cfg = SeaConfig::builder(dir.subdir("mount"))
+    let mut builder = SeaConfig::builder(dir.subdir("mount"))
         .cache("tmpfs", dir.subdir("tmpfs"), 4096 * MIB)
-        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
-        .build();
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB);
+    if let Some(trace) = obs_trace_out() {
+        println!("tracing to {} (SEA_OBS_TRACE set)\n", trace.display());
+        builder = builder.obs_trace_path(trace);
+    }
+    let cfg = builder.build();
     let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
 
     let fd = sea.create("/bench/file.dat").unwrap();

@@ -5,6 +5,8 @@
 //! sea grid         regenerate a figure/table grid (fig2..fig5, table1/2)
 //! sea gen-dataset  write a synthetic BIDS tree with SNI1 volumes
 //! sea run          real mode: preprocess a dataset through Sea + XLA
+//! sea trace        export a binary .sea_trace as JSONL / Chrome JSON
+//! sea metrics      render a --metrics-out snapshot as Prometheus text
 //! sea check        verify AOT artifacts load and execute
 //! sea help
 //! ```
@@ -30,7 +32,10 @@ USAGE:
   sea gen-dataset --out DIR [--dataset D] [--images N] [--seed N]
   sea run   --data DIR --pipeline P [--dataset D] [--procs N]
             [--throttle-mibps F] [--meta-ms N] [--strategy S] [--flush]
-            [--work DIR] [--compare]
+            [--work DIR] [--compare] [--metrics-out FILE]
+  sea trace export TRACE [--out FILE] [--format jsonl|chrome]
+            [--tiers name0,name1,...]
+  sea metrics SNAPSHOT.json [--serve ADDR]
   sea check [--artifacts DIR]
 
 P in {afni, fsl, spm}; D in {ds001545, prevent_ad, hcp}.
@@ -226,6 +231,7 @@ fn cmd_run(mut a: Args) -> Result<()> {
     let strategy = parse_strategy(&a.opt("strategy").unwrap_or("sea".into()))?;
     let flush = a.flag("flush");
     let compare = a.flag("compare");
+    let metrics_out = a.opt("metrics-out");
     let work = a
         .opt("work")
         .unwrap_or_else(|| format!("{data}-seawork"));
@@ -280,12 +286,16 @@ fn cmd_run(mut a: Args) -> Result<()> {
         );
         println!(
             "{}",
-            crate::experiments::report::fmt_admission(&report.admission)
+            crate::experiments::report::fmt_admission(&report.metrics)
         );
         println!(
             "{}",
-            crate::experiments::report::fmt_transfers(&report.transfers)
+            crate::experiments::report::fmt_transfers(&report.metrics)
         );
+        let latency = crate::experiments::report::fmt_latency(&report.metrics);
+        if !latency.is_empty() {
+            println!("\n{latency}");
+        }
         if report.stats.write_untracked > 0 {
             println!(
                 "note: {} write(s) landed on unlinked/truncated-over files \
@@ -293,7 +303,81 @@ fn cmd_run(mut a: Args) -> Result<()> {
                 report.stats.write_untracked
             );
         }
+        if let Some(path) = metrics_out {
+            std::fs::write(&path, report.metrics.to_json())?;
+            println!("metrics snapshot written to {path}");
+        }
     }
+    Ok(())
+}
+
+/// `sea trace export <trace> [--out FILE] [--format jsonl|chrome]`:
+/// convert the drainer's binary trace file into JSONL (one object per
+/// record) or Chrome `trace_event` JSON for about:tracing / Perfetto.
+fn cmd_trace(mut a: Args) -> Result<()> {
+    let usage = "usage: sea trace export TRACE [--out FILE] [--format jsonl|chrome] [--tiers name0,name1,...]";
+    let action = a.positional.first().cloned().unwrap_or_default();
+    if action != "export" {
+        bail!("unknown trace action {action:?}\n{usage}");
+    }
+    let input = a
+        .positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow!("missing trace file\n{usage}"))?;
+    let format = a.opt("format").unwrap_or_else(|| "chrome".into());
+    let out = a.opt("out").unwrap_or_else(|| {
+        if format == "jsonl" {
+            format!("{input}.jsonl")
+        } else {
+            format!("{input}.json")
+        }
+    });
+    // Tier bytes in the records are indices; names live in the mount
+    // config, so exports take them on the command line (optional).
+    let tiers: Vec<String> = a
+        .opt("tiers")
+        .map(|t| t.split(',').map(str::to_string).collect())
+        .unwrap_or_default();
+    a.finish()?;
+    let events = crate::obs::trace::read_trace(std::path::Path::new(&input))?;
+    let mut w = std::io::BufWriter::new(std::fs::File::create(&out)?);
+    match format.as_str() {
+        "jsonl" => crate::obs::trace::export_jsonl(&events, &tiers, &mut w)?,
+        "chrome" => crate::obs::trace::export_chrome(&events, &tiers, &mut w)?,
+        other => bail!("unknown format {other:?} (use jsonl or chrome)"),
+    }
+    std::io::Write::flush(&mut w)?;
+    println!("wrote {} events to {out} ({format})", events.len());
+    Ok(())
+}
+
+/// `sea metrics <snapshot.json> [--serve ADDR]`: render a snapshot
+/// written by `sea run --metrics-out` as Prometheus text, either to
+/// stdout or served over HTTP (scrape target for ad-hoc dashboards).
+fn cmd_metrics(mut a: Args) -> Result<()> {
+    let input = a
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("usage: sea metrics SNAPSHOT.json [--serve ADDR]"))?;
+    let serve = a.opt("serve");
+    a.finish()?;
+    let text = std::fs::read_to_string(&input)?;
+    let snap = crate::obs::MetricsSnapshot::from_json(&text)
+        .map_err(|e| anyhow!("{input}: {e}"))?;
+    if let Some(addr) = serve {
+        let samples = snap.counters.len() + 4 * snap.latency.len();
+        let server = crate::coordinator::serve_metrics(&addr, move || snap.to_prometheus())?;
+        println!(
+            "serving {samples} samples at http://{}/metrics (ctrl-c to stop)",
+            server.addr()
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    print!("{}", snap.to_prometheus());
     Ok(())
 }
 
@@ -334,6 +418,8 @@ pub fn main(argv: Vec<String>) -> Result<i32> {
         "grid" => cmd_grid(sub)?,
         "gen-dataset" => cmd_gen_dataset(sub)?,
         "run" => cmd_run(sub)?,
+        "trace" => cmd_trace(sub)?,
+        "metrics" => cmd_metrics(sub)?,
         "check" => cmd_check(sub)?,
         "help" | "--help" | "-h" => print!("{HELP}"),
         other => {
@@ -379,6 +465,73 @@ mod tests {
     fn grid_tables_print() {
         assert_eq!(run("grid --figure table1").unwrap(), 0);
         assert_eq!(run("grid --figure table2").unwrap(), 0);
+    }
+
+    #[test]
+    fn trace_export_jsonl_and_chrome() {
+        use crate::obs::trace::{write_header, Event, EventKind};
+        use std::io::Write as _;
+        let dir = crate::testing::tempdir::tempdir("cli-trace");
+        let path = dir.path().join("t.trace");
+        let mut f = std::fs::File::create(&path).unwrap();
+        write_header(&mut f).unwrap();
+        for i in 0..4u64 {
+            let ev = Event {
+                t_ns: i * 100,
+                latency_ns: 50,
+                key: i,
+                bytes: 10,
+                thread: 0,
+                op: EventKind::Write as u8,
+                tier: 0,
+                outcome: 0,
+            };
+            f.write_all(&ev.encode()).unwrap();
+        }
+        drop(f);
+        let out = dir.path().join("t.jsonl");
+        assert_eq!(
+            run(&format!(
+                "trace export {} --format jsonl --out {} --tiers tmpfs,lustre",
+                path.display(),
+                out.display()
+            ))
+            .unwrap(),
+            0
+        );
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert_eq!(text.lines().count(), 4);
+        assert!(text.contains("\"op\":\"write\""), "{text}");
+        assert!(text.contains("\"tier\":\"tmpfs\""), "{text}");
+        // default: chrome format, output name derived from the input
+        assert_eq!(
+            run(&format!("trace export {}", path.display())).unwrap(),
+            0
+        );
+        let chrome =
+            std::fs::read_to_string(format!("{}.json", path.display())).unwrap();
+        assert!(chrome.starts_with("{\"displayTimeUnit\""), "{chrome}");
+        assert_eq!(chrome.matches("\"ph\":\"X\"").count(), 4);
+        // unknown action is rejected
+        assert!(run("trace frobnicate x").is_err());
+    }
+
+    #[test]
+    fn metrics_renders_snapshot_file() {
+        let dir = crate::testing::tempdir::tempdir("cli-metrics");
+        let snap = crate::obs::MetricsSnapshot {
+            counters: vec![crate::obs::Counter::with_label(
+                "sea_calls_total",
+                "op",
+                "read",
+                3,
+            )],
+            latency: vec![],
+        };
+        let path = dir.path().join("m.json");
+        std::fs::write(&path, snap.to_json()).unwrap();
+        assert_eq!(run(&format!("metrics {}", path.display())).unwrap(), 0);
+        assert!(run("metrics /nonexistent-snapshot.json").is_err());
     }
 
     #[test]

@@ -38,6 +38,12 @@
 //! [faults]
 //! spec =                                 # fault injection (tests only),
 //!                                        # e.g. copy.write=eio:3
+//!
+//! [obs]
+//! trace_enabled = true                   # always-on binary event trace
+//! histograms    = true                   # per-op × per-tier latency hists
+//! ring_capacity = 8192                   # per-shard trace ring (events)
+//! trace_path    =                        # default: <cache0>/.sea_trace
 //! ```
 //!
 //! ## `.sea_prefetchlist` semantics
@@ -125,6 +131,22 @@ pub struct SeaConfig {
     /// `SEA_FAULTS` environment variable — see `crate::faults`. Empty
     /// (the default) injects nothing.
     pub faults_spec: String,
+    /// Record every intercepted call and background span into the
+    /// lock-free trace rings and drain them to the on-disk trace file
+    /// (`[obs] trace_enabled`). Designed to stay on in production: the
+    /// hot-path cost is one ring push (~tens of ns).
+    pub obs_trace: bool,
+    /// Maintain log-bucketed per-op × per-tier latency histograms
+    /// (`[obs] histograms`) surfaced in reports and `/metrics`.
+    pub obs_histograms: bool,
+    /// Per-shard event-ring capacity in events (`[obs] ring_capacity`);
+    /// rounded up to a power of two. Overflow drops events (and counts
+    /// the drops) rather than ever blocking a caller.
+    pub obs_ring_capacity: usize,
+    /// Where the drainer writes the binary trace (`[obs] trace_path`).
+    /// `None` (default) places `.sea_trace` under the fastest cache
+    /// root, next to that tier's `.sea_journal`.
+    pub obs_trace_path: Option<PathBuf>,
 }
 
 fn parse_cache_spec(spec: &str) -> Result<CacheDef, SeaConfigError> {
@@ -197,6 +219,17 @@ impl SeaConfig {
                 .unwrap_or(2),
             journal_enabled: ini.get_bool("journal", "enabled").unwrap_or(true),
             faults_spec: ini.get("faults", "spec").unwrap_or("").to_string(),
+            obs_trace: ini.get_bool("obs", "trace_enabled").unwrap_or(true),
+            obs_histograms: ini.get_bool("obs", "histograms").unwrap_or(true),
+            obs_ring_capacity: ini
+                .get_parsed("obs", "ring_capacity")
+                .transpose()
+                .map_err(|e| SeaConfigError::BadValue(format!("obs.ring_capacity: {e}")))?
+                .unwrap_or(crate::obs::DEFAULT_RING_CAPACITY),
+            obs_trace_path: ini
+                .get("obs", "trace_path")
+                .filter(|v| !v.is_empty())
+                .map(PathBuf::from),
         })
     }
 
@@ -220,6 +253,10 @@ impl SeaConfig {
             readahead_depth: 2,
             journal_enabled: true,
             faults_spec: String::new(),
+            obs_trace: true,
+            obs_histograms: true,
+            obs_ring_capacity: crate::obs::DEFAULT_RING_CAPACITY,
+            obs_trace_path: None,
         }
     }
 
@@ -244,6 +281,10 @@ pub struct SeaConfigBuilder {
     readahead_depth: usize,
     journal_enabled: bool,
     faults_spec: String,
+    obs_trace: bool,
+    obs_histograms: bool,
+    obs_ring_capacity: usize,
+    obs_trace_path: Option<PathBuf>,
 }
 
 impl SeaConfigBuilder {
@@ -314,6 +355,30 @@ impl SeaConfigBuilder {
         self
     }
 
+    /// Enable/disable the always-on binary event trace.
+    pub fn obs_trace(mut self, enabled: bool) -> Self {
+        self.obs_trace = enabled;
+        self
+    }
+
+    /// Enable/disable per-op × per-tier latency histograms.
+    pub fn obs_histograms(mut self, enabled: bool) -> Self {
+        self.obs_histograms = enabled;
+        self
+    }
+
+    /// Per-shard trace-ring capacity in events (rounded to a power of 2).
+    pub fn obs_ring_capacity(mut self, capacity: usize) -> Self {
+        self.obs_ring_capacity = capacity;
+        self
+    }
+
+    /// Explicit trace-file destination (default: `<cache0>/.sea_trace`).
+    pub fn obs_trace_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.obs_trace_path = Some(path.into());
+        self
+    }
+
     pub fn build(self) -> SeaConfig {
         SeaConfig {
             mountpoint: self.mountpoint,
@@ -332,6 +397,10 @@ impl SeaConfigBuilder {
             readahead_depth: self.readahead_depth,
             journal_enabled: self.journal_enabled,
             faults_spec: self.faults_spec,
+            obs_trace: self.obs_trace,
+            obs_histograms: self.obs_histograms,
+            obs_ring_capacity: self.obs_ring_capacity,
+            obs_trace_path: self.obs_trace_path,
         }
     }
 }
@@ -437,6 +506,38 @@ interval_ms = 50
             .build();
         assert!(!cfg.journal_enabled);
         assert_eq!(cfg.faults_spec, "tier.l=down");
+    }
+
+    #[test]
+    fn obs_section_parses_with_defaults() {
+        let cfg = SeaConfig::parse(SAMPLE).unwrap();
+        assert!(cfg.obs_trace, "tracing must default on (always-on obs)");
+        assert!(cfg.obs_histograms);
+        assert_eq!(cfg.obs_ring_capacity, crate::obs::DEFAULT_RING_CAPACITY);
+        assert!(cfg.obs_trace_path.is_none());
+
+        let cfg = SeaConfig::parse(
+            "mount=/m\n[caches]\npersist = l:/x:1G\n\
+             [obs]\ntrace_enabled = false\nhistograms = false\n\
+             ring_capacity = 256\ntrace_path = /tmp/t.bin\n",
+        )
+        .unwrap();
+        assert!(!cfg.obs_trace);
+        assert!(!cfg.obs_histograms);
+        assert_eq!(cfg.obs_ring_capacity, 256);
+        assert_eq!(cfg.obs_trace_path, Some(PathBuf::from("/tmp/t.bin")));
+
+        let cfg = SeaConfig::builder("/m")
+            .persist("l", "/x", GIB)
+            .obs_trace(false)
+            .obs_histograms(false)
+            .obs_ring_capacity(64)
+            .obs_trace_path("/tmp/u.bin")
+            .build();
+        assert!(!cfg.obs_trace);
+        assert!(!cfg.obs_histograms);
+        assert_eq!(cfg.obs_ring_capacity, 64);
+        assert_eq!(cfg.obs_trace_path, Some(PathBuf::from("/tmp/u.bin")));
     }
 
     #[test]

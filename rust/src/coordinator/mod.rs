@@ -1,14 +1,104 @@
 //! Experiment coordination (the leader): runs strategy comparisons on
 //! identical fresh copies of a dataset, both in real mode and across
-//! simulated grids, and assembles comparison reports.
+//! simulated grids, and assembles comparison reports — plus the
+//! `/metrics` endpoint ([`serve_metrics`]) that exposes the unified
+//! metrics registry (`SeaCore::metrics_snapshot`) in Prometheus text
+//! format while a run is in flight.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::config::Strategy;
 use crate::pipeline::executor::{run_real, RealRunConfig, RealRunReport};
 use crate::runtime::ComputeService;
+
+/// A minimal HTTP responder for Prometheus scrapes: every request gets a
+/// `200 text/plain` with whatever `render` returns at that instant. One
+/// dependency-free thread, nonblocking accept loop; dropping the handle
+/// stops and joins it.
+pub struct MetricsServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Serve `render()` at `bind` (e.g. `127.0.0.1:9090`, or port 0 for an
+/// ephemeral port — read it back from [`MetricsServer::addr`]). The
+/// render closure runs per scrape on the server thread, so it must be
+/// cheap and lock-light — `SeaCore::metrics_snapshot().to_prometheus()`
+/// qualifies (atomic loads only).
+pub fn serve_metrics(
+    bind: &str,
+    render: impl Fn() -> String + Send + 'static,
+) -> std::io::Result<MetricsServer> {
+    let listener = std::net::TcpListener::bind(bind)?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let thread_stop = stop.clone();
+    let join = std::thread::Builder::new()
+        .name("sea-metrics".into())
+        .spawn(move || {
+            while !thread_stop.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((mut conn, _peer)) => {
+                        let _ = conn.set_nonblocking(false);
+                        let _ = conn.set_read_timeout(Some(Duration::from_millis(500)));
+                        // Drain the request head (path/headers are
+                        // irrelevant: every scrape gets the registry).
+                        let mut head = [0u8; 4096];
+                        let _ = std::io::Read::read(&mut conn, &mut head);
+                        let body = render();
+                        let resp = format!(
+                            "HTTP/1.1 200 OK\r\n\
+                             Content-Type: text/plain; version=0.0.4\r\n\
+                             Content-Length: {}\r\n\
+                             Connection: close\r\n\r\n{body}",
+                            body.len(),
+                        );
+                        let _ = std::io::Write::write_all(&mut conn, resp.as_bytes());
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(25)),
+                }
+            }
+        })?;
+    Ok(MetricsServer {
+        addr,
+        stop,
+        join: Some(join),
+    })
+}
 
 /// Sea vs reference comparison on the same workload.
 #[derive(Debug, Clone)]
@@ -104,6 +194,66 @@ mod tests {
         crate::runtime::default_artifacts_dir()
             .join("manifest.tsv")
             .exists()
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_prometheus_text() {
+        use std::io::{Read, Write};
+        let server = serve_metrics("127.0.0.1:0", || {
+            "# TYPE sea_calls_total counter\nsea_calls_total{op=\"read\"} 7\n".to_string()
+        })
+        .unwrap();
+        let addr = server.addr();
+        for _ in 0..2 {
+            // two scrapes: the loop keeps serving after the first
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: sea\r\n\r\n").unwrap();
+            let _ = conn.shutdown(std::net::Shutdown::Write);
+            let mut resp = String::new();
+            conn.read_to_string(&mut resp).unwrap();
+            assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+            assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+            assert!(resp.contains("sea_calls_total{op=\"read\"} 7"), "{resp}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn live_core_metrics_render_over_http() {
+        use crate::config::SeaConfig;
+        use crate::intercept::{OpenMode, SeaIo};
+        use crate::pathrules::SeaLists;
+        use crate::util::MIB;
+        use std::io::{Read, Write};
+        let dir = tempdir("coord-metrics");
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), MIB)
+            .persist("lustre", dir.subdir("lustre"), 100 * MIB)
+            .obs_trace(false)
+            .build();
+        let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+        let fd = sea.create("/m.dat").unwrap();
+        sea.write(fd, b"bytes").unwrap();
+        sea.close(fd).unwrap();
+        let fd = sea.open("/m.dat", OpenMode::Read).unwrap();
+        let mut buf = [0u8; 8];
+        sea.read(fd, &mut buf).unwrap();
+        sea.close(fd).unwrap();
+        let core = sea.core().clone();
+        let server = serve_metrics("127.0.0.1:0", move || {
+            core.metrics_snapshot().to_prometheus()
+        })
+        .unwrap();
+        let mut conn = std::net::TcpStream::connect(server.addr()).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: sea\r\n\r\n").unwrap();
+        let _ = conn.shutdown(std::net::Shutdown::Write);
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.contains("sea_calls_total{op=\"write\"} 1"), "{resp}");
+        assert!(resp.contains("sea_calls_total{op=\"read\"} 1"), "{resp}");
+        assert!(resp.contains("sea_tier_used_bytes{tier=\"tmpfs\"} 5"), "{resp}");
+        assert!(resp.contains("sea_latency_ns"), "histograms missing: {resp}");
+        server.shutdown();
     }
 
     #[test]

@@ -28,22 +28,70 @@ pub fn fmt_speedup(s: f64) -> String {
     format!("{s:.2}x")
 }
 
-/// One-line cache-admission attribution for a real-mode run: how often
-/// admission found room, made room by evicting cold clean replicas, or
-/// fell through to the persistent tier.
-pub fn fmt_admission(a: &crate::stats::AdmissionSnapshot) -> String {
+/// Value of the `name` counter whose (single) label value is `label`,
+/// or 0 when the registry has no such sample.
+fn labeled(m: &crate::obs::MetricsSnapshot, name: &str, label: &str) -> u64 {
+    m.counters
+        .iter()
+        .filter(|c| c.name == name)
+        .find(|c| c.labels.iter().any(|(_, v)| v == label))
+        .map(|c| c.value)
+        .unwrap_or(0)
+}
+
+/// One-line cache-admission attribution for a real-mode run, read from
+/// the unified registry snapshot: how often admission found room, made
+/// room by evicting cold clean replicas, or fell through to the
+/// persistent tier.
+pub fn fmt_admission(m: &crate::obs::MetricsSnapshot) -> String {
     format!(
         "admission: {} hit, {} evicted-to-fit ({} replicas / {} B dropped), {} fell through to persist",
-        a.hits, a.evicted_to_fit, a.evicted_files, a.evicted_bytes, a.fell_through
+        labeled(m, "sea_admission_total", "hit"),
+        labeled(m, "sea_admission_total", "evicted_to_fit"),
+        m.value("sea_admission_evicted_files_total").unwrap_or(0),
+        m.value("sea_admission_evicted_bytes_total").unwrap_or(0),
+        labeled(m, "sea_admission_total", "fell_through"),
     )
 }
 
-/// One-line flush-transfer summary for a real-mode run: how many flush
-/// copies completed, were cancelled by a newer write, or failed.
-pub fn fmt_transfers(t: &crate::transfer::TransferSnapshot) -> String {
+/// One-line flush-transfer summary for a real-mode run, read from the
+/// unified registry snapshot: how many flush copies completed, were
+/// cancelled by a newer write, or failed.
+pub fn fmt_transfers(m: &crate::obs::MetricsSnapshot) -> String {
     format!(
         "transfers: {} completed ({} B moved), {} cancelled, {} errors",
-        t.completed, t.bytes_moved, t.cancelled, t.errors
+        labeled(m, "sea_transfers_total", "completed"),
+        m.value("sea_transfer_bytes_total").unwrap_or(0),
+        labeled(m, "sea_transfers_total", "cancelled"),
+        labeled(m, "sea_transfers_total", "errors"),
+    )
+}
+
+/// Per-op × per-tier latency quantiles as a markdown table (µs). Empty
+/// string when histograms were disabled for the run.
+pub fn fmt_latency(m: &crate::obs::MetricsSnapshot) -> String {
+    if m.latency.is_empty() {
+        return String::new();
+    }
+    let us = |ns: f64| format!("{:.2}", ns / 1000.0);
+    let rows: Vec<Vec<String>> = m
+        .latency
+        .iter()
+        .map(|r| {
+            vec![
+                r.op.clone(),
+                r.tier.clone(),
+                r.count.to_string(),
+                us(r.p50_ns),
+                us(r.p90_ns),
+                us(r.p99_ns),
+                us(r.p999_ns),
+            ]
+        })
+        .collect();
+    markdown_table(
+        &["op", "tier", "count", "p50 µs", "p90 µs", "p99 µs", "p999 µs"],
+        &rows,
     )
 }
 
@@ -80,33 +128,57 @@ mod tests {
         assert_eq!(fmt_secs(7260.0), "2h01m");
     }
 
+    fn registry() -> crate::obs::MetricsSnapshot {
+        use crate::obs::{Counter, LatencyRow, MetricsSnapshot};
+        MetricsSnapshot {
+            counters: vec![
+                Counter::with_label("sea_admission_total", "outcome", "hit", 10),
+                Counter::with_label("sea_admission_total", "outcome", "evicted_to_fit", 2),
+                Counter::with_label("sea_admission_total", "outcome", "fell_through", 1),
+                Counter::new("sea_admission_evicted_files_total", 3),
+                Counter::new("sea_admission_evicted_bytes_total", 4096),
+                Counter::with_label("sea_transfers_total", "outcome", "completed", 5),
+                Counter::with_label("sea_transfers_total", "outcome", "cancelled", 1),
+                Counter::with_label("sea_transfers_total", "outcome", "errors", 2),
+                Counter::new("sea_transfer_bytes_total", 8192),
+            ],
+            latency: vec![LatencyRow {
+                op: "write".into(),
+                tier: "tmpfs".into(),
+                count: 100,
+                p50_ns: 310.0,
+                p90_ns: 500.0,
+                p99_ns: 910.0,
+                p999_ns: 2048.0,
+            }],
+        }
+    }
+
     #[test]
     fn fmt_admission_line() {
-        let a = crate::stats::AdmissionSnapshot {
-            hits: 10,
-            evicted_to_fit: 2,
-            fell_through: 1,
-            evicted_files: 3,
-            evicted_bytes: 4096,
-        };
-        let line = fmt_admission(&a);
+        let line = fmt_admission(&registry());
         assert!(line.contains("10 hit"), "{line}");
         assert!(line.contains("2 evicted-to-fit"), "{line}");
+        assert!(line.contains("3 replicas / 4096 B dropped"), "{line}");
         assert!(line.contains("1 fell through"), "{line}");
     }
 
     #[test]
     fn fmt_transfers_line() {
-        let t = crate::transfer::TransferSnapshot {
-            completed: 5,
-            cancelled: 1,
-            errors: 2,
-            bytes_moved: 8192,
-        };
-        let line = fmt_transfers(&t);
+        let line = fmt_transfers(&registry());
         assert!(line.contains("5 completed"), "{line}");
         assert!(line.contains("8192 B moved"), "{line}");
         assert!(line.contains("1 cancelled"), "{line}");
         assert!(line.contains("2 errors"), "{line}");
+    }
+
+    #[test]
+    fn fmt_latency_table() {
+        let table = fmt_latency(&registry());
+        assert!(table.contains("| op |"), "{table}");
+        assert!(table.contains("| write | tmpfs | 100 | 0.31 |"), "{table}");
+        // disabled histograms render as nothing, not an empty table
+        let empty = crate::obs::MetricsSnapshot::default();
+        assert_eq!(fmt_latency(&empty), "");
     }
 }

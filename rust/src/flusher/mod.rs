@@ -131,6 +131,24 @@ impl FlushReport {
 /// `force` flushes even files that are still open (used by drain, when the
 /// application has finished but descriptors may remain accounted).
 pub fn flush_pass(core: &SeaCore, force: bool) -> FlushReport {
+    let t0 = core.obs.start();
+    let report = flush_pass_inner(core, force);
+    core.obs.record(
+        crate::obs::EventKind::FlushPass,
+        None,
+        0,
+        report.bytes_flushed,
+        t0,
+        if report.errors > 0 {
+            crate::obs::EventOutcome::Err
+        } else {
+            crate::obs::EventOutcome::Ok
+        },
+    );
+    report
+}
+
+fn flush_pass_inner(core: &SeaCore, force: bool) -> FlushReport {
     let mut report = FlushReport::default();
     let persist = core.tiers.persist_idx();
 

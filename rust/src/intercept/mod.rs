@@ -107,6 +107,7 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use crate::config::SeaConfig;
 use crate::faults::FaultPlan;
 use crate::namespace::{CleanPath, FileRecord, Namespace};
+use crate::obs::{Counter, EventKind, EventOutcome, MetricsSnapshot, Obs};
 use crate::pathrules::SeaLists;
 use crate::prefetch::{PrefetchQueue, PrefetchRequest};
 use crate::stats::AdmissionStats;
@@ -144,6 +145,11 @@ pub struct SeaCore {
     pub journal: Option<Arc<crate::journal::Journal>>,
     /// Armed fault-injection rules (empty — and free — in production).
     pub faults: Arc<FaultPlan>,
+    /// The always-on observability hub: per-thread trace rings, per-op ×
+    /// per-tier latency histograms, and the counters behind
+    /// [`SeaCore::metrics_snapshot`]. Shared with the journal and every
+    /// background thread; never `None` (a disabled hub records nothing).
+    pub obs: Arc<crate::obs::Obs>,
     /// Per-file flush retry backoff state (see `crate::flusher`): paths
     /// whose copy failed recently are skipped until their deadline
     /// passes instead of being retried every pass.
@@ -322,6 +328,122 @@ impl SeaCore {
         }
         self.admission.note_fell_through();
         persist
+    }
+
+    /// Total bytes and file count currently resident per tier (diagnostics
+    /// + the paper's §3.6 quota argument). Cache tiers report their
+    /// reservation counter; the persistent tier — whose capacity is
+    /// never reserved (see `TierSet::place_write`) — reports the
+    /// namespace-recorded bytes, so the run report no longer shows the
+    /// seed's monotonically drifting persist usage.
+    pub fn tier_usage(&self) -> Vec<(String, u64, usize)> {
+        (0..self.tiers.len())
+            .map(|idx| {
+                let t = self.tier(idx);
+                let bytes = if self.is_persist(idx) {
+                    self.ns.bytes_on_tier(idx)
+                } else {
+                    t.used()
+                };
+                (t.name.clone(), bytes, self.ns.files_on_tier(idx))
+            })
+            .collect()
+    }
+
+    /// The unified metrics registry: every counter Sea keeps — call
+    /// counts, byte totals, admission/transfer/journal/flusher state,
+    /// tier usage, trace accounting — plus the per-op × per-tier latency
+    /// quantiles, folded into one [`MetricsSnapshot`]. This is the single
+    /// source behind `sea metrics`, the coordinator's `/metrics`
+    /// endpoint, `--metrics-out`, and the run report.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let calls = self.counters.snapshot();
+        let mut counters = Vec::new();
+        for kind in CallKind::ALL {
+            let v = match kind {
+                CallKind::open => calls.open,
+                CallKind::create => calls.create,
+                CallKind::close => calls.close,
+                CallKind::read => calls.read,
+                CallKind::write => calls.write,
+                CallKind::lseek => calls.lseek,
+                CallKind::stat => calls.stat,
+                CallKind::unlink => calls.unlink,
+                CallKind::rename => calls.rename,
+                CallKind::mkdir => calls.mkdir,
+                CallKind::readdir => calls.readdir,
+                CallKind::fsync => calls.fsync,
+            };
+            counters.push(Counter::with_label("sea_calls_total", "op", kind.as_str(), v));
+        }
+        counters.push(Counter::new("sea_persist_calls_total", calls.persist_calls));
+        counters.push(Counter::new("sea_write_untracked_total", calls.write_untracked));
+        counters.push(Counter::new("sea_sync_failures_total", calls.sync_failures));
+        counters.push(Counter::with_label(
+            "sea_bytes_written_total",
+            "tier",
+            "cache",
+            calls.bytes_written_cache,
+        ));
+        counters.push(Counter::with_label(
+            "sea_bytes_written_total",
+            "tier",
+            "persist",
+            calls.bytes_written_persist,
+        ));
+        counters.push(Counter::with_label(
+            "sea_bytes_read_total",
+            "tier",
+            "cache",
+            calls.bytes_read_cache,
+        ));
+        counters.push(Counter::with_label(
+            "sea_bytes_read_total",
+            "tier",
+            "persist",
+            calls.bytes_read_persist,
+        ));
+        let adm = self.admission.snapshot();
+        for (outcome, v) in [
+            ("hit", adm.hits),
+            ("evicted_to_fit", adm.evicted_to_fit),
+            ("fell_through", adm.fell_through),
+        ] {
+            counters.push(Counter::with_label("sea_admission_total", "outcome", outcome, v));
+        }
+        counters.push(Counter::new("sea_admission_evicted_files_total", adm.evicted_files));
+        counters.push(Counter::new("sea_admission_evicted_bytes_total", adm.evicted_bytes));
+        let tr = self.transfers.stats.snapshot();
+        for (outcome, v) in [
+            ("completed", tr.completed),
+            ("cancelled", tr.cancelled),
+            ("errors", tr.errors),
+        ] {
+            counters.push(Counter::with_label("sea_transfers_total", "outcome", outcome, v));
+        }
+        counters.push(Counter::new("sea_transfer_bytes_total", tr.bytes_moved));
+        let (appends, append_errors, syncs) = match &self.journal {
+            Some(j) => (j.appends(), j.append_errors(), j.syncs()),
+            None => (0, 0, 0),
+        };
+        counters.push(Counter::new("sea_journal_appends_total", appends));
+        counters.push(Counter::new("sea_journal_append_errors_total", append_errors));
+        counters.push(Counter::new("sea_journal_syncs_total", syncs));
+        counters.push(Counter::new(
+            "sea_flush_backoff_entries",
+            self.flush_backoff.lock().unwrap().len() as u64,
+        ));
+        for (name, bytes, files) in self.tier_usage() {
+            counters.push(Counter::with_label("sea_tier_used_bytes", "tier", &name, bytes));
+            counters.push(Counter::with_label("sea_tier_files", "tier", &name, files as u64));
+        }
+        counters.extend(self.obs.own_counters());
+        let tier_names: Vec<String> =
+            (0..self.tiers.len()).map(|i| self.tier(i).name.clone()).collect();
+        MetricsSnapshot {
+            counters,
+            latency: self.obs.latency_rows(&tier_names),
+        }
     }
 }
 
@@ -631,10 +753,21 @@ fn io_err(path: &str, source: std::io::Error) -> SeaError {
     }
 }
 
+/// Trace-record key for path-addressed calls (fd-addressed calls use the
+/// fd itself) — the same FNV-1a the namespace shards by, so a trace key
+/// can be matched against journal/namespace hashing offline.
+fn path_key(path: &str) -> u64 {
+    crate::journal::fnv1a_bytes(path.as_bytes())
+}
+
 /// The user-facing Sea handle: mount, do I/O through it, unmount.
 pub struct SeaIo {
     core: Arc<SeaCore>,
     fds: FdTable,
+    /// Trace drainer thread (folds the obs rings into the on-disk trace
+    /// file). Dropping `SeaIo` stops and joins it, leaving a complete
+    /// trace behind. `None` when tracing is off.
+    _drainer: Option<crate::obs::DrainerHandle>,
 }
 
 impl SeaIo {
@@ -662,10 +795,32 @@ impl SeaIo {
                 }
             }
         }
+        // Observability comes up before everything it instruments: the
+        // journal and recovery below already emit spans through it. The
+        // default trace destination sits next to the fastest cache's
+        // journal (persist root for cache-less baselines).
+        let trace_path = cfg.obs_trace_path.clone().or_else(|| {
+            let root = cfg
+                .caches
+                .first()
+                .map(|c| c.root.as_path())
+                .unwrap_or(cfg.persist.root.as_path());
+            Some(root.join(crate::obs::TRACE_NAME))
+        });
+        let obs = Arc::new(crate::obs::Obs::new(crate::obs::ObsConfig {
+            trace_enabled: cfg.obs_trace,
+            hist_enabled: cfg.obs_histograms,
+            ring_capacity: cfg.obs_ring_capacity,
+            trace_path,
+        }));
         let journal = if cfg.journal_enabled && !cfg.caches.is_empty() {
             let roots: Vec<std::path::PathBuf> =
                 cfg.caches.iter().map(|c| c.root.clone()).collect();
-            Some(Arc::new(crate::journal::Journal::open(&roots, faults.clone())?))
+            Some(Arc::new(crate::journal::Journal::open(
+                &roots,
+                faults.clone(),
+                obs.clone(),
+            )?))
         } else {
             None
         };
@@ -687,16 +842,21 @@ impl SeaIo {
             admission_scan_memo,
             journal,
             faults,
+            obs,
             flush_backoff: Mutex::new(HashMap::new()),
             shutdown: AtomicBool::new(false),
             cfg,
         });
-        let sea = SeaIo {
+        let mut sea = SeaIo {
             core,
             fds: FdTable::new(),
+            _drainer: None,
         };
         sea.register_existing()?;
         sea.recover_from_journal()?;
+        // Drainer last: recovery's events are still in the rings and
+        // become the first records of the fresh trace file.
+        sea._drainer = sea.core.obs.spawn_drainer()?;
         crate::prefetch::stage_listed(&sea.core).map_err(|(path, e)| io_err(&path, e))?;
         Ok(sea)
     }
@@ -735,6 +895,9 @@ impl SeaIo {
                 let p = entry.path();
                 if p.is_dir() {
                     stack.push(p);
+                } else if entry.file_name().to_string_lossy() == crate::obs::TRACE_NAME {
+                    // a cache-less mount keeps its trace here: Sea
+                    // metadata, never a logical file
                 } else if crate::transfer::is_temp_name(&entry.file_name().to_string_lossy()) {
                     let _ = std::fs::remove_file(&p);
                 } else if let Ok(rel) = p.strip_prefix(&root) {
@@ -763,11 +926,12 @@ impl SeaIo {
         let Some(j) = &self.core.journal else {
             return Ok(());
         };
+        let t_rec = self.core.obs.start();
         let records = j.replay();
         let dirty = crate::journal::fold_dirty(&records);
         let caches = self.core.tiers.caches().len();
-        let mut recovered: Vec<(String, TierIdx, u64, u64)> = Vec::new();
-        for (path, tier, _journal_size) in dirty {
+        let mut recovered: Vec<(String, TierIdx, u64, u64, u64)> = Vec::new();
+        for (path, tier, journal_size, hash) in dirty {
             // Probe the recorded tier first, then every cache
             // fastest-first: a spill moves dirty bytes between caches
             // without a journal record, so the disk — not the journal —
@@ -775,20 +939,44 @@ impl SeaIo {
             // dirty entry whose replica vanished entirely is dropped:
             // there is nothing left to recover (the bytes never reached
             // stable storage before the crash).
-            let mut found: Option<(TierIdx, u64)> = None;
+            let mut found: Option<(TierIdx, u64, u64)> = None;
             let probe = std::iter::once(tier)
                 .chain((0..caches).filter(|&t| t != tier))
                 .filter(|&t| t < caches);
             for t in probe {
                 let phys = self.core.tier(t).physical(&path);
-                if let Ok(md) = std::fs::metadata(&phys) {
-                    if md.is_file() {
-                        found = Some((t, md.len()));
-                        break;
+                let Ok(md) = std::fs::metadata(&phys) else { continue };
+                if !md.is_file() {
+                    continue;
+                }
+                let disk_size = md.len();
+                // Content verification: a non-zero journaled hash covers
+                // exactly (tier, size, version) at last dirty close. A
+                // same-size replica whose bytes disagree was corrupted by
+                // the crash (torn page-cache writeback) — resizing is
+                // already caught by the size reconciliation, so only the
+                // size-match case needs the hash. Mismatch: delete, count,
+                // keep probing (another tier may hold an intact copy).
+                if hash != 0 && disk_size == journal_size {
+                    match crate::journal::content_hash_file(&phys) {
+                        Ok(h) if h != hash => {
+                            self.core.obs.note_corrupt_replica(
+                                crate::journal::fnv1a_bytes(path.as_bytes()),
+                            );
+                            let _ = std::fs::remove_file(&phys);
+                            continue;
+                        }
+                        Ok(_) => {
+                            found = Some((t, disk_size, hash)); // verified
+                            break;
+                        }
+                        Err(_) => {}
                     }
                 }
+                found = Some((t, disk_size, 0)); // unverifiable, recover as-is
+                break;
             }
-            if let Some((t, disk_size)) = found {
+            if let Some((t, disk_size, verified_hash)) = found {
                 // Best-effort capacity accounting: the bytes are
                 // physically on the tier whether or not the reservation
                 // fits (a crashed session may have over-admitted), so a
@@ -796,7 +984,7 @@ impl SeaIo {
                 // we are about to flush.
                 let _ = self.core.tier(t).try_reserve(disk_size);
                 let version = self.core.ns.register_dirty(&path, t, disk_size);
-                recovered.push((path, t, disk_size, version));
+                recovered.push((path, t, disk_size, version, verified_hash));
             }
         }
         // Hygiene sweep: transfer temps (torn copies) and cache files the
@@ -806,7 +994,7 @@ impl SeaIo {
         // would desynchronise capacity accounting. Journal files are
         // skipped, of course.
         let keep: std::collections::HashSet<(TierIdx, String)> =
-            recovered.iter().map(|(p, t, _, _)| (*t, p.clone())).collect();
+            recovered.iter().map(|(p, t, _, _, _)| (*t, p.clone())).collect();
         for (t, tier) in self.core.tiers.caches().iter().enumerate() {
             let root = tier.root().to_path_buf();
             let mut stack = vec![root.clone()];
@@ -821,7 +1009,9 @@ impl SeaIo {
                         stack.push(p);
                         continue;
                     }
-                    if crate::journal::is_journal_name(&name) {
+                    if crate::journal::is_journal_name(&name)
+                        || name == crate::obs::TRACE_NAME
+                    {
                         continue;
                     }
                     let logical = match p.strip_prefix(&root) {
@@ -838,8 +1028,18 @@ impl SeaIo {
         }
         // Compact last: until here the old journal is intact, so a crash
         // anywhere above simply replays it again (re-registration is
-        // idempotent — `register_dirty` does not journal).
+        // idempotent — `register_dirty` does not journal). Verified
+        // hashes travel into the compacted journal, so a double crash
+        // re-verifies the same content.
         j.reset(&recovered)?;
+        self.core.obs.record(
+            crate::obs::EventKind::Recovery,
+            None,
+            0,
+            recovered.len() as u64,
+            t_rec,
+            crate::obs::EventOutcome::Ok,
+        );
         Ok(())
     }
 
@@ -874,6 +1074,20 @@ impl SeaIo {
     /// `creat`/`open(O_CREAT|O_TRUNC)`: place a new file by write policy.
     pub fn create(&self, path: &str) -> Result<Fd, SeaError> {
         self.core.counters.bump(CallKind::create);
+        let t0 = self.core.obs.start();
+        let res = self.create_impl(path);
+        self.core.obs.record(
+            EventKind::Create,
+            res.as_ref().ok().map(|&(_, t)| t),
+            path_key(path),
+            0,
+            t0,
+            Obs::outcome_of(&res),
+        );
+        res.map(|(fd, _)| fd)
+    }
+
+    fn create_impl(&self, path: &str) -> Result<(Fd, TierIdx), SeaError> {
         let logical = CleanPath::new(path);
         // Fence first: a truncate-create racing an in-flight transfer of
         // the same path cancels and drains it before touching the
@@ -923,13 +1137,27 @@ impl SeaIo {
             pos: 0,
             size: 0,
         });
-        Ok(fd)
+        Ok((fd, tier))
     }
 
     /// `open` for read or read-write on an existing file: redirected to the
     /// fastest tier holding a current replica.
     pub fn open(&self, path: &str, mode: OpenMode) -> Result<Fd, SeaError> {
         self.core.counters.bump(CallKind::open);
+        let t0 = self.core.obs.start();
+        let res = self.open_impl(path, mode);
+        self.core.obs.record(
+            EventKind::Open,
+            res.as_ref().ok().map(|&(_, t)| t),
+            path_key(path),
+            0,
+            t0,
+            Obs::outcome_of(&res),
+        );
+        res.map(|(fd, _)| fd)
+    }
+
+    fn open_impl(&self, path: &str, mode: OpenMode) -> Result<(Fd, TierIdx), SeaError> {
         let logical = CleanPath::new(path);
         // Resolve → physically open → pin (note_open) → re-validate.
         // Between the namespace resolution and the pin, the
@@ -1021,6 +1249,14 @@ impl SeaIo {
                     .push(PrefetchRequest::Readahead(logical.clone()));
             }
         }
+        if mode == OpenMode::ReadWrite {
+            // The journaled content hash (if any) covered the bytes as of
+            // the last close; writes through this descriptor make it
+            // stale. Invalidate *before* the first write can land, so a
+            // crash mid-update never verifies the old hash against
+            // half-new same-size bytes.
+            self.core.ns.invalidate_hash(&logical);
+        }
         let ns_shard = crate::namespace::shard_index(&logical);
         let fd = self.fds.insert(OpenFile {
             logical,
@@ -1032,11 +1268,25 @@ impl SeaIo {
             pos: 0,
             size,
         });
-        Ok(fd)
+        Ok((fd, tier))
     }
 
     pub fn write(&self, fd: Fd, buf: &[u8]) -> Result<usize, SeaError> {
         self.core.counters.bump(CallKind::write);
+        let t0 = self.core.obs.start();
+        let res = self.write_impl(fd, buf);
+        self.core.obs.record(
+            EventKind::Write,
+            res.as_ref().ok().map(|&(_, t)| t),
+            fd,
+            res.as_ref().map(|&(n, _)| n as u64).unwrap_or(0),
+            t0,
+            Obs::outcome_of(&res),
+        );
+        res.map(|(n, _)| n)
+    }
+
+    fn write_impl(&self, fd: Fd, buf: &[u8]) -> Result<(usize, TierIdx), SeaError> {
         let mut guard = self.fds.lock(fd).ok_or(SeaError::BadFd(fd))?;
         let of = guard.as_mut().expect("validated live fd slot");
         if !of.writable {
@@ -1140,7 +1390,7 @@ impl SeaIo {
                 self.core.delete_replica(&of.logical, tier, prior_size);
             }
         }
-        Ok(buf.len())
+        Ok((buf.len(), of.tier))
     }
 
     /// Move the open file to the next tier that can hold `size + growth`
@@ -1226,6 +1476,20 @@ impl SeaIo {
 
     pub fn read(&self, fd: Fd, buf: &mut [u8]) -> Result<usize, SeaError> {
         self.core.counters.bump(CallKind::read);
+        let t0 = self.core.obs.start();
+        let res = self.read_impl(fd, buf);
+        self.core.obs.record(
+            EventKind::Read,
+            res.as_ref().ok().map(|&(_, t)| t),
+            fd,
+            res.as_ref().map(|&(n, _)| n as u64).unwrap_or(0),
+            t0,
+            Obs::outcome_of(&res),
+        );
+        res.map(|(n, _)| n)
+    }
+
+    fn read_impl(&self, fd: Fd, buf: &mut [u8]) -> Result<(usize, TierIdx), SeaError> {
         let mut guard = self.fds.lock(fd).ok_or(SeaError::BadFd(fd))?;
         let of = guard.as_mut().expect("validated live fd slot");
         let persist = self.core.is_persist(of.tier);
@@ -1240,32 +1504,76 @@ impl SeaIo {
         // store, so reads through a long-lived descriptor now count as
         // recency directly instead of only at open/close.
         self.core.ns.touch(&of.record);
-        Ok(n)
+        Ok((n, of.tier))
     }
 
     pub fn lseek(&self, fd: Fd, pos: SeekFrom) -> Result<u64, SeaError> {
         self.core.counters.bump(CallKind::lseek);
+        let t0 = self.core.obs.start();
+        let res = self.lseek_impl(fd, pos);
+        self.core.obs.record(
+            EventKind::Lseek,
+            res.as_ref().ok().map(|&(_, t)| t),
+            fd,
+            0,
+            t0,
+            Obs::outcome_of(&res),
+        );
+        res.map(|(new, _)| new)
+    }
+
+    fn lseek_impl(&self, fd: Fd, pos: SeekFrom) -> Result<(u64, TierIdx), SeaError> {
         let mut guard = self.fds.lock(fd).ok_or(SeaError::BadFd(fd))?;
         let of = guard.as_mut().expect("validated live fd slot");
         let new = of.file.seek(pos).map_err(|e| io_err(&of.logical, e))?;
         of.pos = new;
-        Ok(new)
+        Ok((new, of.tier))
     }
 
     pub fn fsync(&self, fd: Fd) -> Result<(), SeaError> {
         self.core.counters.bump(CallKind::fsync);
+        let t0 = self.core.obs.start();
+        let res = self.fsync_impl(fd);
+        self.core.obs.record(
+            EventKind::Fsync,
+            res.as_ref().ok().copied(),
+            fd,
+            0,
+            t0,
+            Obs::outcome_of(&res),
+        );
+        res.map(|_| ())
+    }
+
+    fn fsync_impl(&self, fd: Fd) -> Result<TierIdx, SeaError> {
         let guard = self.fds.lock(fd).ok_or(SeaError::BadFd(fd))?;
         let of = guard.as_ref().expect("validated live fd slot");
-        of.file.sync_all().map_err(|e| io_err(&of.logical, e))
+        of.file.sync_all().map_err(|e| io_err(&of.logical, e))?;
+        Ok(of.tier)
     }
 
     pub fn close(&self, fd: Fd) -> Result<(), SeaError> {
         self.core.counters.bump(CallKind::close);
+        let t0 = self.core.obs.start();
+        let res = self.close_impl(fd);
+        self.core.obs.record(
+            EventKind::Close,
+            res.as_ref().ok().copied(),
+            fd,
+            0,
+            t0,
+            Obs::outcome_of(&res),
+        );
+        res.map(|_| ())
+    }
+
+    fn close_impl(&self, fd: Fd) -> Result<TierIdx, SeaError> {
         // Retiring the slot takes the OpenFile by value — no clone; a
         // reader mid-call on this fd finishes first (per-fd mutex), then
         // observes the retired generation as BadFd.
         let of = self.fds.remove(fd).ok_or(SeaError::BadFd(fd))?;
         let OpenFile { logical, record, tier, writable, file, .. } = of;
+        let mut synced = false;
         if writable {
             // Close-time durability sync. Swallowing this error (the
             // seed's `.ok()` pattern) silently trusted bytes the kernel
@@ -1275,12 +1583,28 @@ impl SeaIo {
             if file.sync_all().is_err() {
                 self.core.counters.bump_sync_failure();
                 self.core.ns.mark_dirty(&logical);
+            } else {
+                synced = true;
             }
         }
         // Unpin through the record: a rename while this descriptor was
         // open moved the entry, and a path-based unpin would miss it —
         // leaving the file pinned (unflushable, unevictable) forever.
         self.core.ns.note_close_record(&record, &logical);
+        if synced {
+            // Last writer gone and the replica durably synced: journal
+            // its content hash so crash recovery can tell a corrupted
+            // same-size replica from an intact one. The hash is computed
+            // outside every lock; `log_dirty_hash` re-validates that
+            // nothing (reopen, write, flush) moved under us — if it did,
+            // skipping is safe (hash 0 = unverifiable, never corrupt).
+            if let Some((master, size, version)) = self.core.ns.hash_checkpoint(&logical) {
+                let phys = self.core.tier(master).physical(&logical);
+                if let Ok(hash) = crate::journal::content_hash_file(&phys) {
+                    self.core.ns.log_dirty_hash(&logical, master, size, version, hash);
+                }
+            }
+        }
         // Closing a read-only persist-tier fd re-offers the file for
         // promotion: the prefetcher skips open files, so the open-time
         // hint may have been dropped while this descriptor pinned it.
@@ -1291,11 +1615,25 @@ impl SeaIo {
         {
             self.core.prefetch.push(PrefetchRequest::Stage(logical));
         }
-        Ok(())
+        Ok(tier)
     }
 
     pub fn stat(&self, path: &str) -> Result<SeaStat, SeaError> {
         self.core.counters.bump(CallKind::stat);
+        let t0 = self.core.obs.start();
+        let res = self.stat_impl(path);
+        self.core.obs.record(
+            EventKind::Stat,
+            res.as_ref().ok().map(|&(_, t)| t),
+            path_key(path),
+            0,
+            t0,
+            Obs::outcome_of(&res),
+        );
+        res.map(|(st, _)| st)
+    }
+
+    fn stat_impl(&self, path: &str) -> Result<(SeaStat, TierIdx), SeaError> {
         let logical = CleanPath::new(path);
         let (size, tier, dirty) = self
             .core
@@ -1306,15 +1644,32 @@ impl SeaIo {
             self.core.counters.bump_persist();
             self.core.tier(tier).wait_meta();
         }
-        Ok(SeaStat {
-            size,
-            tier: self.core.tier(tier).name.clone(),
-            dirty,
-        })
+        Ok((
+            SeaStat {
+                size,
+                tier: self.core.tier(tier).name.clone(),
+                dirty,
+            },
+            tier,
+        ))
     }
 
     pub fn unlink(&self, path: &str) -> Result<(), SeaError> {
         self.core.counters.bump(CallKind::unlink);
+        let t0 = self.core.obs.start();
+        let res = self.unlink_impl(path);
+        self.core.obs.record(
+            EventKind::Unlink,
+            None,
+            path_key(path),
+            0,
+            t0,
+            Obs::outcome_of(&res),
+        );
+        res
+    }
+
+    fn unlink_impl(&self, path: &str) -> Result<(), SeaError> {
         let logical = CleanPath::new(path);
         // Cancel and drain any in-flight transfer of this path: either
         // it committed (its replica is in `meta.replicas` below and gets
@@ -1337,6 +1692,20 @@ impl SeaIo {
 
     pub fn rename(&self, from: &str, to: &str) -> Result<(), SeaError> {
         self.core.counters.bump(CallKind::rename);
+        let t0 = self.core.obs.start();
+        let res = self.rename_impl(from, to);
+        self.core.obs.record(
+            EventKind::Rename,
+            None,
+            path_key(from),
+            0,
+            t0,
+            Obs::outcome_of(&res),
+        );
+        res
+    }
+
+    fn rename_impl(&self, from: &str, to: &str) -> Result<(), SeaError> {
         let from_l = CleanPath::new(from);
         let to_l = CleanPath::new(to);
         // Fence both ends before reading the replica list (ascending
@@ -1399,34 +1768,38 @@ impl SeaIo {
 
     pub fn mkdir(&self, path: &str) -> Result<(), SeaError> {
         self.core.counters.bump(CallKind::mkdir);
+        let t0 = self.core.obs.start();
         // Directories are mirrored lazily; nothing physical required here.
         let _ = CleanPath::new(path);
+        self.core.obs.record(
+            EventKind::Mkdir,
+            None,
+            path_key(path),
+            0,
+            t0,
+            EventOutcome::Ok,
+        );
         Ok(())
     }
 
     pub fn readdir(&self, path: &str) -> Result<Vec<String>, SeaError> {
         self.core.counters.bump(CallKind::readdir);
-        Ok(self.core.ns.list_dir(path))
+        let t0 = self.core.obs.start();
+        let entries = self.core.ns.list_dir(path);
+        self.core.obs.record(
+            EventKind::Readdir,
+            None,
+            path_key(path),
+            entries.len() as u64,
+            t0,
+            EventOutcome::Ok,
+        );
+        Ok(entries)
     }
 
-    /// Total bytes and file count currently resident per tier (diagnostics
-    /// + the paper's §3.6 quota argument). Cache tiers report their
-    /// reservation counter; the persistent tier — whose capacity is
-    /// never reserved (see `TierSet::place_write`) — reports the
-    /// namespace-recorded bytes, so the run report no longer shows the
-    /// seed's monotonically drifting persist usage.
+    /// Per-tier (name, bytes, files) usage — see [`SeaCore::tier_usage`].
     pub fn tier_usage(&self) -> Vec<(String, u64, usize)> {
-        (0..self.core.tiers.len())
-            .map(|idx| {
-                let t = self.core.tier(idx);
-                let bytes = if self.core.is_persist(idx) {
-                    self.core.ns.bytes_on_tier(idx)
-                } else {
-                    t.used()
-                };
-                (t.name.clone(), bytes, self.core.ns.files_on_tier(idx))
-            })
-            .collect()
+        self.core.tier_usage()
     }
 }
 

@@ -25,12 +25,30 @@
 //! ```text
 //! [len: u32 LE] [fnv1a(payload): u64 LE] [payload: len bytes]
 //! payload := [op: u8] [version: u64 LE] [op-specific fields]
-//!   op 1 Dirty  { tier: u32, size: u64, path: str }
+//!   op 1 Dirty  { tier: u32, size: u64, path: str, hash: u64 }
 //!   op 2 Clean  { path: str }
 //!   op 3 Retire { path: str }   (unlink / truncate-over)
 //!   op 4 Rename { from: str, to: str }
 //!   str := [len: u32 LE] [utf-8 bytes]
 //! ```
+//!
+//! `hash` is the FNV-1a of the replica's **content** when that content
+//! was stable, or `0` ("unknown / in flux"). Live clean→dirty
+//! transitions always log `hash = 0` — the bytes are still changing and
+//! hashing them would be meaningless. The content hash is recorded by a
+//! *refreshed* `Dirty` record appended when the last writer closes the
+//! file (content synced and stable; see `SeaIo::close`), and invalidated
+//! (a fresh `hash = 0` record) when a dirty file is reopened for
+//! writing. Decoding treats the hash as an optional trailing field, so
+//! journals written before this field existed replay as `hash = 0` —
+//! i.e. unverifiable, exactly their old semantics. Recovery verifies the
+//! hash only when it is non-zero **and** the on-disk size still equals
+//! the recorded size (a size change means post-close writes the hash
+//! cannot cover); a mismatch is a crash-corrupted replica
+//! (`recovery.corrupt_replica`), which is deleted rather than flushed.
+//! Files actively being written at crash time are honestly outside this
+//! protection — their disk size is truth and a torn flush re-copies
+//! them anyway.
 //!
 //! `version` is the namespace's global write-generation stamp: unique
 //! and monotone across all paths, fetched at the transition site. Replay
@@ -107,7 +125,14 @@ pub fn is_journal_name(name: &str) -> bool {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum JournalOp {
     /// `path` became dirty with its master replica on cache `tier`.
-    Dirty { path: String, tier: TierIdx, size: u64 },
+    /// `hash` is the stable-content FNV-1a, or 0 when unknown/in-flux
+    /// (see the module docs).
+    Dirty {
+        path: String,
+        tier: TierIdx,
+        size: u64,
+        hash: u64,
+    },
     /// A flush committed `path` clean.
     Clean { path: String },
     /// `path` was unlinked (or truncated over — the create that follows
@@ -139,14 +164,37 @@ impl JournalRecord {
     }
 }
 
-/// FNV-1a over raw payload bytes (the framing checksum).
-fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+/// FNV-1a over raw payload bytes (the framing checksum and the replica
+/// content hash share the same function).
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in bytes {
         h ^= *b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h
+}
+
+/// Streaming FNV-1a over a file's content (the `Dirty.hash` field).
+/// Never returns 0 — the zero hash is reserved for "unknown", so a file
+/// that genuinely hashes to 0 is nudged to 1 (it merely loses hash
+/// protection, it is never falsely flagged corrupt).
+pub fn content_hash_file(path: &Path) -> std::io::Result<u64> {
+    use std::io::Read;
+    let mut f = File::open(path)?;
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    loop {
+        let n = f.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        for b in &buf[..n] {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    Ok(if h == 0 { 1 } else { h })
 }
 
 fn push_str(buf: &mut Vec<u8>, s: &str) {
@@ -157,12 +205,13 @@ fn push_str(buf: &mut Vec<u8>, s: &str) {
 fn encode_payload(rec: &JournalRecord) -> Vec<u8> {
     let mut buf = Vec::with_capacity(64);
     match &rec.op {
-        JournalOp::Dirty { path, tier, size } => {
+        JournalOp::Dirty { path, tier, size, hash } => {
             buf.push(1);
             buf.extend_from_slice(&rec.version.to_le_bytes());
             buf.extend_from_slice(&(*tier as u32).to_le_bytes());
             buf.extend_from_slice(&size.to_le_bytes());
             push_str(&mut buf, path);
+            buf.extend_from_slice(&hash.to_le_bytes());
         }
         JournalOp::Clean { path } => {
             buf.push(2);
@@ -235,6 +284,8 @@ fn decode_payload(payload: &[u8]) -> Option<JournalRecord> {
             tier: c.u32()? as TierIdx,
             size: c.u64()?,
             path: c.str()?,
+            // optional trailing field: pre-hash journals replay as 0
+            hash: c.u64().unwrap_or(0),
         },
         2 => JournalOp::Clean { path: c.str()? },
         3 => JournalOp::Retire { path: c.str()? },
@@ -268,14 +319,18 @@ fn decode_all(bytes: &[u8]) -> Vec<JournalRecord> {
 }
 
 /// Fold version-sorted records into the paths that were dirty at the end
-/// of the log: `path -> (tier, size-at-transition)`, sorted by path for
-/// deterministic recovery order.
-pub fn fold_dirty(records: &[JournalRecord]) -> Vec<(String, TierIdx, u64)> {
-    let mut live: HashMap<String, (TierIdx, u64)> = HashMap::new();
+/// of the log: `path -> (tier, size-at-transition, content-hash)`,
+/// sorted by path for deterministic recovery order. The sort feeding
+/// this is stable, so for records sharing a version the later append
+/// wins — which is what makes the close-time hash refresh (same version
+/// as the transition it annotates) and the reopen invalidation land
+/// correctly.
+pub fn fold_dirty(records: &[JournalRecord]) -> Vec<(String, TierIdx, u64, u64)> {
+    let mut live: HashMap<String, (TierIdx, u64, u64)> = HashMap::new();
     for rec in records {
         match &rec.op {
-            JournalOp::Dirty { path, tier, size } => {
-                live.insert(path.clone(), (*tier, *size));
+            JournalOp::Dirty { path, tier, size, hash } => {
+                live.insert(path.clone(), (*tier, *size, *hash));
             }
             JournalOp::Clean { path } | JournalOp::Retire { path } => {
                 live.remove(path);
@@ -289,8 +344,8 @@ pub fn fold_dirty(records: &[JournalRecord]) -> Vec<(String, TierIdx, u64)> {
             }
         }
     }
-    let mut out: Vec<(String, TierIdx, u64)> =
-        live.into_iter().map(|(p, (t, s))| (p, t, s)).collect();
+    let mut out: Vec<(String, TierIdx, u64, u64)> =
+        live.into_iter().map(|(p, (t, s, h))| (p, t, s, h)).collect();
     out.sort_by(|a, b| a.0.cmp(&b.0));
     out
 }
@@ -303,13 +358,22 @@ struct TierJournal {
 
 /// The per-mount journal: one append-only file per cache tier. See the
 /// module docs for format and recovery protocol.
-#[derive(Debug)]
 pub struct Journal {
     tiers: Vec<TierJournal>,
     faults: Arc<FaultPlan>,
+    obs: Arc<crate::obs::Obs>,
     appends: AtomicU64,
     append_errors: AtomicU64,
     syncs: AtomicU64,
+}
+
+impl std::fmt::Debug for Journal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Journal")
+            .field("tiers", &self.tiers)
+            .field("appends", &self.appends)
+            .finish_non_exhaustive()
+    }
 }
 
 impl Journal {
@@ -317,7 +381,11 @@ impl Journal {
     /// tier-index order. Leftover compaction temps from a crashed mount
     /// are discarded — the rename never happened, so the old journal is
     /// the authoritative one.
-    pub fn open(cache_roots: &[PathBuf], faults: Arc<FaultPlan>) -> std::io::Result<Journal> {
+    pub fn open(
+        cache_roots: &[PathBuf],
+        faults: Arc<FaultPlan>,
+        obs: Arc<crate::obs::Obs>,
+    ) -> std::io::Result<Journal> {
         let mut tiers = Vec::with_capacity(cache_roots.len());
         for root in cache_roots {
             std::fs::create_dir_all(root)?;
@@ -332,6 +400,7 @@ impl Journal {
         Ok(Journal {
             tiers,
             faults,
+            obs,
             appends: AtomicU64::new(0),
             append_errors: AtomicU64::new(0),
             syncs: AtomicU64::new(0),
@@ -357,6 +426,7 @@ impl Journal {
 
     fn append_to(&self, idx: usize, frame: &[u8]) {
         self.appends.fetch_add(1, Ordering::Relaxed);
+        let t0 = self.obs.start();
         let res = (|| -> std::io::Result<()> {
             self.faults.check_io("journal.append")?;
             let mut guard = self.tiers[idx].file.lock().unwrap();
@@ -365,6 +435,14 @@ impl Journal {
                 None => Err(std::io::Error::other("journal file unavailable")),
             }
         })();
+        self.obs.record(
+            crate::obs::EventKind::JournalAppend,
+            Some(idx),
+            0,
+            frame.len() as u64,
+            t0,
+            crate::obs::Obs::outcome_of(&res),
+        );
         if res.is_err() {
             self.append_errors.fetch_add(1, Ordering::Relaxed);
         }
@@ -380,14 +458,16 @@ impl Journal {
     /// `path` transitioned clean→dirty with its bytes on cache `tier`.
     /// Dirty-on-persist transitions are not journaled: those bytes are
     /// already where a flush would put them, and the next mount's
-    /// persist walk re-registers the path.
-    pub fn log_dirty(&self, path: &str, tier: TierIdx, size: u64, version: u64) {
+    /// persist walk re-registers the path. `hash` is 0 for live
+    /// transitions (content in flux); the close path re-logs with the
+    /// stable content hash (see module docs).
+    pub fn log_dirty(&self, path: &str, tier: TierIdx, size: u64, version: u64, hash: u64) {
         if tier >= self.tiers.len() {
             return;
         }
         let rec = JournalRecord {
             version,
-            op: JournalOp::Dirty { path: path.to_string(), tier, size },
+            op: JournalOp::Dirty { path: path.to_string(), tier, size, hash },
         };
         self.append_to(tier, &encode_frame(&rec));
     }
@@ -444,14 +524,15 @@ impl Journal {
     }
 
     /// Atomic compaction: rewrite each tier's journal to exactly the
-    /// given `(path, tier, size, version)` dirty set (routed like live
-    /// `Dirty` appends). Temp-file + rename, so a crash at any earlier
-    /// point leaves the previous journal authoritative and recovery
-    /// idempotent.
-    pub fn reset(&self, entries: &[(String, TierIdx, u64, u64)]) -> std::io::Result<()> {
+    /// given `(path, tier, size, version, hash)` dirty set (routed like
+    /// live `Dirty` appends; the hash carries recovery's verification
+    /// result forward so a double-crash re-verifies). Temp-file +
+    /// rename, so a crash at any earlier point leaves the previous
+    /// journal authoritative and recovery idempotent.
+    pub fn reset(&self, entries: &[(String, TierIdx, u64, u64, u64)]) -> std::io::Result<()> {
         for (idx, tj) in self.tiers.iter().enumerate() {
             let mut bytes = Vec::new();
-            for (path, tier, size, version) in entries {
+            for (path, tier, size, version, hash) in entries {
                 if *tier == idx {
                     bytes.extend_from_slice(&encode_frame(&JournalRecord {
                         version: *version,
@@ -459,6 +540,7 @@ impl Journal {
                             path: path.clone(),
                             tier: *tier,
                             size: *size,
+                            hash: *hash,
                         },
                     }));
                 }
@@ -481,7 +563,12 @@ mod tests {
     use crate::testing::tempdir::tempdir;
 
     fn journal_for(roots: &[PathBuf]) -> Journal {
-        Journal::open(roots, Arc::new(FaultPlan::none())).unwrap()
+        Journal::open(
+            roots,
+            Arc::new(FaultPlan::none()),
+            Arc::new(crate::obs::Obs::disabled()),
+        )
+        .unwrap()
     }
 
     #[test]
@@ -489,9 +576,9 @@ mod tests {
         let dir = tempdir("journal-rt");
         let roots = vec![dir.subdir("t0")];
         let j = journal_for(&roots);
-        j.log_dirty("/a.dat", 0, 100, 5);
+        j.log_dirty("/a.dat", 0, 100, 5, 0);
         j.log_clean("/a.dat", 5);
-        j.log_dirty("/b.dat", 0, 7, 9);
+        j.log_dirty("/b.dat", 0, 7, 9, 0xfeed);
         j.log_retire("/c.dat", 11);
         j.log_rename("/b.dat", "/d.dat", 12);
         let recs = j.replay();
@@ -500,11 +587,11 @@ mod tests {
             recs[0],
             JournalRecord {
                 version: 5,
-                op: JournalOp::Dirty { path: "/a.dat".into(), tier: 0, size: 100 }
+                op: JournalOp::Dirty { path: "/a.dat".into(), tier: 0, size: 100, hash: 0 }
             }
         );
         let dirty = fold_dirty(&recs);
-        assert_eq!(dirty, vec![("/d.dat".to_string(), 0, 7)]);
+        assert_eq!(dirty, vec![("/d.dat".to_string(), 0, 7, 0xfeed)]);
     }
 
     #[test]
@@ -516,7 +603,7 @@ mod tests {
             },
             JournalRecord {
                 version: 5,
-                op: JournalOp::Dirty { path: "/x".into(), tier: 0, size: 1 },
+                op: JournalOp::Dirty { path: "/x".into(), tier: 0, size: 1, hash: 0 },
             },
         ];
         let mut sorted = recs;
@@ -525,19 +612,64 @@ mod tests {
     }
 
     #[test]
+    fn hash_refresh_at_same_version_wins_and_reopen_invalidates() {
+        let dir = tempdir("journal-hash");
+        let roots = vec![dir.subdir("t0")];
+        let j = journal_for(&roots);
+        // transition (in flux), then the close-time refresh at the SAME
+        // version: stable sort keeps append order, refresh wins
+        j.log_dirty("/f.dat", 0, 64, 7, 0);
+        j.log_dirty("/f.dat", 0, 64, 7, 0xabcd);
+        assert_eq!(fold_dirty(&j.replay()), vec![("/f.dat".to_string(), 0, 64, 0xabcd)]);
+        // reopen-for-write invalidation: back to hash = 0
+        j.log_dirty("/f.dat", 0, 64, 7, 0);
+        assert_eq!(fold_dirty(&j.replay()), vec![("/f.dat".to_string(), 0, 64, 0)]);
+    }
+
+    #[test]
+    fn pre_hash_dirty_frames_decode_with_zero_hash() {
+        // A Dirty payload WITHOUT the trailing hash (the old format)
+        // must still decode, as hash = 0 (unverifiable).
+        let mut payload = Vec::new();
+        payload.push(1u8);
+        payload.extend_from_slice(&42u64.to_le_bytes()); // version
+        payload.extend_from_slice(&0u32.to_le_bytes()); // tier
+        payload.extend_from_slice(&99u64.to_le_bytes()); // size
+        push_str(&mut payload, "/old.dat");
+        let rec = decode_payload(&payload).expect("old frame decodes");
+        assert_eq!(
+            rec.op,
+            JournalOp::Dirty { path: "/old.dat".into(), tier: 0, size: 99, hash: 0 }
+        );
+    }
+
+    #[test]
+    fn content_hash_streams_and_never_returns_zero() {
+        let dir = tempdir("journal-chash");
+        let p = dir.path().join("x.bin");
+        std::fs::write(&p, b"neuroimaging bytes").unwrap();
+        let h = content_hash_file(&p).unwrap();
+        assert_eq!(h, fnv1a_bytes(b"neuroimaging bytes"));
+        assert_ne!(h, 0);
+        std::fs::write(&p, b"").unwrap();
+        // empty file: FNV offset basis, still non-zero
+        assert_eq!(content_hash_file(&p).unwrap(), 0xcbf2_9ce4_8422_2325);
+    }
+
+    #[test]
     fn torn_tail_keeps_complete_prefix() {
         let dir = tempdir("journal-torn");
         let roots = vec![dir.subdir("t0")];
         let j = journal_for(&roots);
-        j.log_dirty("/keep.dat", 0, 64, 1);
-        j.log_dirty("/also.dat", 0, 64, 2);
+        j.log_dirty("/keep.dat", 0, 64, 1, 0);
+        j.log_dirty("/also.dat", 0, 64, 2, 0);
         drop(j);
         // Simulate a crash mid-append: a partial frame at the tail.
         let path = roots[0].join(JOURNAL_FILE);
         let mut bytes = std::fs::read(&path).unwrap();
         let full = encode_frame(&JournalRecord {
             version: 3,
-            op: JournalOp::Dirty { path: "/torn.dat".into(), tier: 0, size: 64 },
+            op: JournalOp::Dirty { path: "/torn.dat".into(), tier: 0, size: 64, hash: 0 },
         });
         bytes.extend_from_slice(&full[..full.len() / 2]);
         std::fs::write(&path, &bytes).unwrap();
@@ -552,8 +684,8 @@ mod tests {
         let dir = tempdir("journal-sum");
         let roots = vec![dir.subdir("t0")];
         let j = journal_for(&roots);
-        j.log_dirty("/ok.dat", 0, 1, 1);
-        j.log_dirty("/flipped.dat", 0, 1, 2);
+        j.log_dirty("/ok.dat", 0, 1, 1, 0);
+        j.log_dirty("/flipped.dat", 0, 1, 2, 0);
         drop(j);
         let path = roots[0].join(JOURNAL_FILE);
         let mut bytes = std::fs::read(&path).unwrap();
@@ -570,8 +702,8 @@ mod tests {
         let dir = tempdir("journal-persist");
         let roots = vec![dir.subdir("t0")];
         let j = journal_for(&roots);
-        j.log_dirty("/cache.dat", 0, 1, 1);
-        j.log_dirty("/persist.dat", 1, 1, 2); // tier 1 == persist here
+        j.log_dirty("/cache.dat", 0, 1, 1, 0);
+        j.log_dirty("/persist.dat", 1, 1, 2, 0); // tier 1 == persist here
         assert_eq!(j.replay().len(), 1);
     }
 
@@ -580,8 +712,8 @@ mod tests {
         let dir = tempdir("journal-merge");
         let roots = vec![dir.subdir("t0"), dir.subdir("t1")];
         let j = journal_for(&roots);
-        j.log_dirty("/a", 1, 1, 10); // lands in t1's journal
-        j.log_dirty("/a", 0, 2, 20); // spill back: t0's journal
+        j.log_dirty("/a", 1, 1, 10, 0); // lands in t1's journal
+        j.log_dirty("/a", 0, 2, 20, 0); // spill back: t0's journal
         j.log_clean("/a", 20); // broadcast
         let recs = j.replay();
         let versions: Vec<u64> = recs.iter().map(|r| r.version).collect();
@@ -597,16 +729,16 @@ mod tests {
         let roots = vec![dir.subdir("t0")];
         let j = journal_for(&roots);
         for i in 0..50u64 {
-            j.log_dirty("/churn.dat", 0, i, i + 1);
+            j.log_dirty("/churn.dat", 0, i, i + 1, 0);
             j.log_clean("/churn.dat", i + 1);
         }
-        j.log_dirty("/live.dat", 0, 9, 100);
-        j.reset(&[("/live.dat".to_string(), 0, 9, 100)]).unwrap();
+        j.log_dirty("/live.dat", 0, 9, 100, 0xbeef);
+        j.reset(&[("/live.dat".to_string(), 0, 9, 100, 0xbeef)]).unwrap();
         let recs = j.replay();
         assert_eq!(recs.len(), 1);
-        assert_eq!(fold_dirty(&recs), vec![("/live.dat".to_string(), 0, 9)]);
+        assert_eq!(fold_dirty(&recs), vec![("/live.dat".to_string(), 0, 9, 0xbeef)]);
         // appends after a reset land in the new file
-        j.log_dirty("/after.dat", 0, 1, 101);
+        j.log_dirty("/after.dat", 0, 1, 101, 0);
         assert_eq!(j.replay().len(), 2);
     }
 
@@ -615,9 +747,10 @@ mod tests {
         let dir = tempdir("journal-fault");
         let roots = vec![dir.subdir("t0")];
         let plan = FaultPlan::parse("journal.append=eio:1").unwrap();
-        let j = Journal::open(&roots, Arc::new(plan)).unwrap();
-        j.log_dirty("/lost.dat", 0, 1, 1);
-        j.log_dirty("/kept.dat", 0, 1, 2);
+        let j =
+            Journal::open(&roots, Arc::new(plan), Arc::new(crate::obs::Obs::disabled())).unwrap();
+        j.log_dirty("/lost.dat", 0, 1, 1, 0);
+        j.log_dirty("/kept.dat", 0, 1, 2, 0);
         assert_eq!(j.append_errors(), 1);
         assert_eq!(j.appends(), 2);
         let recs = j.replay();

@@ -31,6 +31,7 @@ pub mod intercept;
 pub mod journal;
 pub mod lustre;
 pub mod namespace;
+pub mod obs;
 pub mod pagecache;
 pub mod pathrules;
 pub mod pipeline;

@@ -540,7 +540,9 @@ impl ShardState {
             // already holds (this is the slow path; steady-state dirty
             // writes never reach here — see `crate::journal`).
             if let Some(j) = journal {
-                j.log_dirty(key, meta.master, meta.size(), meta.version());
+                // hash 0: content is in flux at a live transition; the
+                // close path logs the stable-content hash refresh
+                j.log_dirty(key, meta.master, meta.size(), meta.version(), 0);
             }
         }
         if !meta.dirty() && meta.open_count == 0 {
@@ -712,7 +714,7 @@ impl Namespace {
         meta.set_last_access(stamp);
         s.dirty.insert(key.clone());
         if let Some(j) = &self.journal {
-            j.log_dirty(&key, tier, 0, version);
+            j.log_dirty(&key, tier, 0, version, 0);
         }
         let prev = s.files.insert(key, meta);
         if let Some(prev) = &prev {
@@ -971,7 +973,7 @@ impl Namespace {
                 // only transition slow path a steady-state writer ever
                 // takes, and so the journal hook for intercepted writes.
                 if let Some(j) = &self.journal {
-                    j.log_dirty(key.as_str(), tier, rec.size(), rec.version());
+                    j.log_dirty(key.as_str(), tier, rec.size(), rec.version(), 0);
                 }
                 return WriteAck {
                     moved_to: moved.then(|| (key.clone(), shard_idx)),
@@ -1078,6 +1080,77 @@ impl Namespace {
     /// approximated by the surrounding open/close stamps).
     pub fn touch(&self, rec: &FileRecord) {
         rec.last_access.store(self.touch_stamp(), Ordering::Relaxed);
+    }
+
+    /// Snapshot `(master, size, version)` of a dirty, fully-closed file —
+    /// the precondition for hashing its (now stable) replica content.
+    /// `None` when the path is unknown, clean, or still open. The caller
+    /// hashes outside any lock and then re-validates via
+    /// [`Namespace::log_dirty_hash`].
+    pub fn hash_checkpoint(
+        &self,
+        logical: &(impl PathArg + ?Sized),
+    ) -> Option<(TierIdx, u64, u64)> {
+        self.with_meta(logical, |m| {
+            if m.dirty() && m.open_count == 0 {
+                Some((m.master, m.size(), m.version()))
+            } else {
+                None
+            }
+        })
+        .flatten()
+    }
+
+    /// Journal the stable-content hash for a dirty closed file, but only
+    /// if the checkpoint taken before hashing still holds (same version,
+    /// same master, still dirty, still closed) — a concurrent reopen or
+    /// write between checkpoint and here makes the hash stale, and
+    /// skipping it is always safe (hash 0 means "unverifiable", never
+    /// "corrupt"). Appended at the *same* version as the transition it
+    /// annotates; replay's stable sort makes the later append win.
+    pub fn log_dirty_hash(
+        &self,
+        logical: &(impl PathArg + ?Sized),
+        tier: TierIdx,
+        size: u64,
+        version: u64,
+        hash: u64,
+    ) -> bool {
+        let Some(j) = &self.journal else { return false };
+        let key = logical.to_clean();
+        let s = self.shard(&key).read().unwrap();
+        let still_valid = s
+            .files
+            .get(&*key)
+            .map(|m| {
+                m.dirty()
+                    && m.open_count == 0
+                    && m.master == tier
+                    && m.version() == version
+                    && m.size() == size
+            })
+            .unwrap_or(false);
+        if still_valid {
+            j.log_dirty(&key, tier, size, version, hash);
+        }
+        still_valid
+    }
+
+    /// A dirty file is being reopened for writing: its journaled content
+    /// hash (if any) is about to go stale. Append an invalidating
+    /// `hash = 0` record so a crash during the coming writes never
+    /// verifies the old hash against new same-size bytes. No-op for
+    /// clean or unknown paths (their dirty transition logs hash 0
+    /// anyway).
+    pub fn invalidate_hash(&self, logical: &(impl PathArg + ?Sized)) {
+        let Some(j) = &self.journal else { return };
+        let key = logical.to_clean();
+        let s = self.shard(&key).read().unwrap();
+        if let Some(m) = s.files.get(&*key) {
+            if m.dirty() {
+                j.log_dirty(&key, m.master, m.size(), m.version(), 0);
+            }
+        }
     }
 
     /// Open-path bookkeeping: bump the descriptor count and the LRU

@@ -1,0 +1,195 @@
+//! Lock-free log-bucketed latency histograms.
+//!
+//! Each histogram is 64 `AtomicU64` buckets; bucket `b` counts samples in
+//! `[2^(b-1), 2^b)` nanoseconds (bucket 0 is `{0}`). Recording is one
+//! `leading_zeros` + one relaxed `fetch_add` — cheap enough for the
+//! steady-state write path's sub-µs budget. Histograms merge by bucket
+//! addition, so per-thread or per-run instances can be folded into one,
+//! and quantiles are estimated by geometric interpolation inside the
+//! bucket holding the target rank (exact to within one power of two,
+//! which is plenty for p50/p99 reporting on log-normal-ish latencies).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub const BUCKETS: usize = 64;
+
+/// One mergeable atomic histogram of nanosecond latencies.
+#[derive(Debug)]
+pub struct LatencyHist {
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Bucket index for a nanosecond sample: 0 for 0 ns, else
+/// `64 - leading_zeros(ns)` (capped at the last bucket).
+pub fn bucket_of(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        ((u64::BITS - ns.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive-exclusive nanosecond range `[lo, hi)` covered by a bucket.
+pub fn bucket_range(b: usize) -> (u64, u64) {
+    if b == 0 {
+        (0, 1)
+    } else {
+        (1u64 << (b - 1), 1u64.checked_shl(b as u32).unwrap_or(u64::MAX))
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist::default()
+    }
+
+    pub fn record(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Plain-array copy of the bucket counts.
+    pub fn snapshot(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Fold another histogram (or snapshot) into this one.
+    pub fn merge(&self, other: &LatencyHist) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Estimated `q`-quantile (0 < q <= 1) in nanoseconds, or `None` when
+    /// empty. Geometric interpolation inside the target bucket.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        quantile_of(&self.snapshot(), q)
+    }
+}
+
+/// Quantile over a bucket snapshot (shared by live hists and decoded
+/// report snapshots).
+pub fn quantile_of(buckets: &[u64; BUCKETS], q: f64) -> Option<f64> {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    let q = q.clamp(0.0, 1.0);
+    // rank of the target sample, 1-based, at least 1
+    let target = ((q * total as f64).ceil() as u64).max(1);
+    let mut seen = 0u64;
+    for (b, &n) in buckets.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        if seen + n >= target {
+            let (lo, hi) = bucket_range(b);
+            if b == 0 {
+                return Some(0.0);
+            }
+            // position of the target inside this bucket, (0, 1]
+            let frac = (target - seen) as f64 / n as f64;
+            let (lo, hi) = (lo as f64, hi as f64);
+            // geometric interpolation: latencies are log-distributed
+            return Some(lo * (hi / lo).powf(frac));
+        }
+        seen += n;
+    }
+    let (_, hi) = bucket_range(BUCKETS - 1);
+    Some(hi as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_math_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        for ns in [0u64, 1, 2, 3, 7, 8, 1023, 1024, 1 << 40] {
+            let (lo, hi) = bucket_range(bucket_of(ns));
+            assert!(lo <= ns && (ns < hi || hi == u64::MAX), "{ns}");
+        }
+    }
+
+    #[test]
+    fn count_and_quantiles_track_samples() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.quantile(0.5).is_none());
+        // 1000 samples around ~1 µs, 10 outliers at ~1 ms
+        for _ in 0..1000 {
+            h.record(1000);
+        }
+        for _ in 0..10 {
+            h.record(1_000_000);
+        }
+        assert_eq!(h.count(), 1010);
+        let p50 = h.quantile(0.5).unwrap();
+        let (lo, hi) = bucket_range(bucket_of(1000));
+        assert!(p50 >= lo as f64 && p50 <= hi as f64, "p50={p50}");
+        let p999 = h.quantile(0.999).unwrap();
+        assert!(p999 >= 524_288.0, "p999={p999} should reach the outlier bucket");
+    }
+
+    #[test]
+    fn merge_adds_buckets() {
+        let a = LatencyHist::new();
+        let b = LatencyHist::new();
+        for i in 0..100u64 {
+            a.record(i * 17);
+            b.record(i * 1000 + 1);
+        }
+        let before = a.count();
+        a.merge(&b);
+        assert_eq!(a.count(), before + b.count());
+        let sa = a.snapshot();
+        let sb = b.snapshot();
+        for (i, &n) in sb.iter().enumerate() {
+            assert!(sa[i] >= n, "bucket {i}");
+        }
+    }
+
+    #[test]
+    fn zero_latency_lands_in_bucket_zero() {
+        let h = LatencyHist::new();
+        h.record(0);
+        assert_eq!(h.snapshot()[0], 1);
+        assert_eq!(h.quantile(1.0).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn quantile_monotone_in_q() {
+        let h = LatencyHist::new();
+        for i in 1..=10_000u64 {
+            h.record(i);
+        }
+        let mut last = 0.0f64;
+        for q in [0.1, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let v = h.quantile(q).unwrap();
+            assert!(v >= last, "q={q}: {v} < {last}");
+            last = v;
+        }
+    }
+}

@@ -1,0 +1,534 @@
+//! The unified metrics model: one snapshot type every subsystem reports
+//! through, with Prometheus-text and JSON renderers and a JSON loader.
+//!
+//! The crate deliberately has no serde; the JSON here is a small
+//! hand-rolled writer plus a minimal but correct parser for the subset
+//! JSON itself is (objects/arrays/strings/numbers/bools/null), so
+//! `sea metrics <snapshot.json>` can re-serve a snapshot written by
+//! `sea run --metrics-out` without any new dependency.
+//!
+//! Gathering lives in `SeaCore::metrics_snapshot` (the core owns every
+//! subsystem's counters); this module only defines the data model and
+//! its encodings, so it stays dependency-free and testable in isolation.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One counter/gauge sample: a Prometheus-style name, label pairs, and a
+/// monotonic (or point-in-time for gauges) value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Counter {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: u64,
+}
+
+impl Counter {
+    pub fn new(name: &str, value: u64) -> Counter {
+        Counter {
+            name: name.to_string(),
+            labels: Vec::new(),
+            value,
+        }
+    }
+
+    pub fn with_label(name: &str, key: &str, label: &str, value: u64) -> Counter {
+        Counter {
+            name: name.to_string(),
+            labels: vec![(key.to_string(), label.to_string())],
+            value,
+        }
+    }
+}
+
+/// Latency quantiles for one (op, tier) histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyRow {
+    pub op: String,
+    pub tier: String,
+    pub count: u64,
+    pub p50_ns: f64,
+    pub p90_ns: f64,
+    pub p99_ns: f64,
+    pub p999_ns: f64,
+}
+
+/// Point-in-time state of every Sea counter + latency histogram.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<Counter>,
+    pub latency: Vec<LatencyRow>,
+}
+
+impl MetricsSnapshot {
+    /// Value of the first counter matching `name` (any labels), if any.
+    pub fn value(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|c| c.name == name).map(|c| c.value)
+    }
+
+    /// Sum of every counter matching `name` across label sets.
+    pub fn sum(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .filter(|c| c.name == name)
+            .map(|c| c.value)
+            .sum()
+    }
+
+    /// Prometheus text exposition format, one `# TYPE` line per family.
+    pub fn to_prometheus(&self) -> String {
+        let mut families: BTreeMap<&str, Vec<&Counter>> = BTreeMap::new();
+        for c in &self.counters {
+            families.entry(c.name.as_str()).or_default().push(c);
+        }
+        let mut out = String::new();
+        for (name, counters) in families {
+            let kind = if name.ends_with("_total") { "counter" } else { "gauge" };
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            for c in counters {
+                let _ = writeln!(out, "{name}{} {}", fmt_labels(&c.labels), c.value);
+            }
+        }
+        if !self.latency.is_empty() {
+            let _ = writeln!(out, "# TYPE sea_latency_ns gauge");
+            for row in &self.latency {
+                for (q, v) in [
+                    ("0.5", row.p50_ns),
+                    ("0.9", row.p90_ns),
+                    ("0.99", row.p99_ns),
+                    ("0.999", row.p999_ns),
+                ] {
+                    let _ = writeln!(
+                        out,
+                        "sea_latency_ns{{op=\"{}\",tier=\"{}\",quantile=\"{q}\"}} {}",
+                        esc(&row.op),
+                        esc(&row.tier),
+                        fmt_f64(v)
+                    );
+                }
+            }
+            let _ = writeln!(out, "# TYPE sea_latency_count gauge");
+            for row in &self.latency {
+                let _ = writeln!(
+                    out,
+                    "sea_latency_count{{op=\"{}\",tier=\"{}\"}} {}",
+                    esc(&row.op),
+                    esc(&row.tier),
+                    row.count
+                );
+            }
+        }
+        out
+    }
+
+    /// JSON rendering (the `--metrics-out` file format).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"counters\": [\n");
+        for (i, c) in self.counters.iter().enumerate() {
+            let sep = if i + 1 < self.counters.len() { "," } else { "" };
+            let mut labels = String::new();
+            for (j, (k, v)) in c.labels.iter().enumerate() {
+                if j > 0 {
+                    labels.push(',');
+                }
+                let _ = write!(labels, "\"{}\": \"{}\"", esc(k), esc(v));
+            }
+            let _ = writeln!(
+                out,
+                "    {{\"name\": \"{}\", \"labels\": {{{labels}}}, \"value\": {}}}{sep}",
+                esc(&c.name),
+                c.value,
+            );
+        }
+        out.push_str("  ],\n  \"latency\": [\n");
+        for (i, r) in self.latency.iter().enumerate() {
+            let sep = if i + 1 < self.latency.len() { "," } else { "" };
+            let _ = writeln!(
+                out,
+                "    {{\"op\": \"{}\", \"tier\": \"{}\", \"count\": {}, \"p50_ns\": {}, \"p90_ns\": {}, \"p99_ns\": {}, \"p999_ns\": {}}}{sep}",
+                esc(&r.op),
+                esc(&r.tier),
+                r.count,
+                fmt_f64(r.p50_ns),
+                fmt_f64(r.p90_ns),
+                fmt_f64(r.p99_ns),
+                fmt_f64(r.p999_ns),
+            );
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Load a snapshot previously written by [`MetricsSnapshot::to_json`].
+    pub fn from_json(text: &str) -> Result<MetricsSnapshot, String> {
+        let root = Json::parse(text)?;
+        let mut snap = MetricsSnapshot::default();
+        for item in root.get("counters").and_then(Json::as_array).unwrap_or(&[]) {
+            let name = item
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("counter missing name")?;
+            let value = item
+                .get("value")
+                .and_then(Json::as_f64)
+                .ok_or("counter missing value")? as u64;
+            let mut labels = Vec::new();
+            if let Some(Json::Object(pairs)) = item.get("labels") {
+                for (k, v) in pairs {
+                    labels.push((
+                        k.clone(),
+                        v.as_str().ok_or("label value not a string")?.to_string(),
+                    ));
+                }
+            }
+            snap.counters.push(Counter {
+                name: name.to_string(),
+                labels,
+                value,
+            });
+        }
+        for item in root.get("latency").and_then(Json::as_array).unwrap_or(&[]) {
+            let f = |k: &str| item.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            snap.latency.push(LatencyRow {
+                op: item
+                    .get("op")
+                    .and_then(Json::as_str)
+                    .ok_or("latency row missing op")?
+                    .to_string(),
+                tier: item
+                    .get("tier")
+                    .and_then(Json::as_str)
+                    .unwrap_or("-")
+                    .to_string(),
+                count: f("count") as u64,
+                p50_ns: f("p50_ns"),
+                p90_ns: f("p90_ns"),
+                p99_ns: f("p99_ns"),
+                p999_ns: f("p999_ns"),
+            });
+        }
+        Ok(snap)
+    }
+}
+
+fn fmt_labels(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{k}=\"{}\"", esc(v));
+    }
+    out.push('}');
+    out
+}
+
+/// Finite float rendering that stays valid JSON (no NaN/inf tokens).
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        "0.0".to_string()
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Minimal JSON value tree — just enough to read our own snapshots (and
+/// any spec-conforming document that uses the same subset).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Array(Vec<Json>),
+    Object(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing garbage at byte {pos}"));
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Object(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, ch: u8) -> Result<(), String> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == ch {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected '{}' at byte {}", ch as char, *pos))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".to_string()),
+        Some(b'{') => {
+            *pos += 1;
+            let mut pairs = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Object(pairs));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                expect(b, pos, b':')?;
+                let val = parse_value(b, pos)?;
+                pairs.push((key, val));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Object(pairs));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {}", *pos)),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Array(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Array(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {}", *pos)),
+                }
+            }
+        }
+        Some(b'"') => Ok(Json::Str(parse_string(b, pos)?)),
+        Some(b't') if b[*pos..].starts_with(b"true") => {
+            *pos += 4;
+            Ok(Json::Bool(true))
+        }
+        Some(b'f') if b[*pos..].starts_with(b"false") => {
+            *pos += 5;
+            Ok(Json::Bool(false))
+        }
+        Some(b'n') if b[*pos..].starts_with(b"null") => {
+            *pos += 4;
+            Ok(Json::Null)
+        }
+        Some(_) => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            let s = std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?;
+            s.parse::<f64>()
+                .map(Json::Num)
+                .map_err(|_| format!("bad number '{s}' at byte {start}"))
+        }
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(format!("expected string at byte {}", *pos));
+    }
+    *pos += 1;
+    let mut out = Vec::new();
+    while let Some(&c) = b.get(*pos) {
+        *pos += 1;
+        match c {
+            b'"' => {
+                return String::from_utf8(out).map_err(|e| e.to_string());
+            }
+            b'\\' => {
+                let esc = b.get(*pos).copied().ok_or("unterminated escape")?;
+                *pos += 1;
+                match esc {
+                    b'"' => out.push(b'"'),
+                    b'\\' => out.push(b'\\'),
+                    b'/' => out.push(b'/'),
+                    b'n' => out.push(b'\n'),
+                    b't' => out.push(b'\t'),
+                    b'r' => out.push(b'\r'),
+                    b'b' => out.push(0x08),
+                    b'f' => out.push(0x0C),
+                    b'u' => {
+                        let hex = b
+                            .get(*pos..*pos + 4)
+                            .ok_or("short \\u escape")
+                            .and_then(|h| std::str::from_utf8(h).map_err(|_| "bad \\u"))?;
+                        let cp =
+                            u32::from_str_radix(hex, 16).map_err(|_| "bad \\u hex".to_string())?;
+                        *pos += 4;
+                        let ch = char::from_u32(cp).unwrap_or('\u{FFFD}');
+                        let mut buf = [0u8; 4];
+                        out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                    }
+                    other => return Err(format!("bad escape '\\{}'", other as char)),
+                }
+            }
+            c => out.push(c),
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: vec![
+                Counter::with_label("sea_calls_total", "op", "write", 128),
+                Counter::with_label("sea_calls_total", "op", "read", 64),
+                Counter::new("sea_journal_appends_total", 7),
+                Counter::with_label("sea_tier_used_bytes", "tier", "tmpfs", 4096),
+            ],
+            latency: vec![LatencyRow {
+                op: "write".to_string(),
+                tier: "tmpfs".to_string(),
+                count: 128,
+                p50_ns: 310.0,
+                p90_ns: 500.0,
+                p99_ns: 910.5,
+                p999_ns: 2048.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn prometheus_text_has_type_lines_and_labels() {
+        let text = sample().to_prometheus();
+        assert!(text.contains("# TYPE sea_calls_total counter"), "{text}");
+        assert!(text.contains("sea_calls_total{op=\"write\"} 128"), "{text}");
+        assert!(text.contains("sea_tier_used_bytes{tier=\"tmpfs\"} 4096"));
+        assert!(text.contains("# TYPE sea_tier_used_bytes gauge"));
+        assert!(text
+            .contains("sea_latency_ns{op=\"write\",tier=\"tmpfs\",quantile=\"0.99\"} 910.5"));
+        assert!(text.contains("sea_latency_count{op=\"write\",tier=\"tmpfs\"} 128"));
+        // exactly one TYPE line per family
+        assert_eq!(text.matches("# TYPE sea_calls_total ").count(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_snapshot() {
+        let snap = sample();
+        let back = MetricsSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn value_and_sum_helpers() {
+        let snap = sample();
+        assert_eq!(snap.sum("sea_calls_total"), 192);
+        assert_eq!(snap.value("sea_journal_appends_total"), Some(7));
+        assert_eq!(snap.value("nope"), None);
+    }
+
+    #[test]
+    fn json_parser_handles_core_forms() {
+        let v = Json::parse(r#"{"a": [1, 2.5, "x\ny", true, null], "b": {"c": -3e2}}"#).unwrap();
+        let arr = v.get("a").unwrap().as_array().unwrap();
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[1].as_f64(), Some(2.5));
+        assert_eq!(arr[2].as_str(), Some("x\ny"));
+        assert_eq!(arr[3], Json::Bool(true));
+        assert_eq!(arr[4], Json::Null);
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_f64(), Some(-300.0));
+    }
+
+    #[test]
+    fn json_parser_rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\": 1} extra").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn escaped_strings_roundtrip() {
+        let snap = MetricsSnapshot {
+            counters: vec![Counter::with_label(
+                "sea_test",
+                "path",
+                "/a/\"b\"\\c\nnewline",
+                1,
+            )],
+            latency: vec![],
+        };
+        let back = MetricsSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+    }
+}

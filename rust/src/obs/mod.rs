@@ -1,0 +1,487 @@
+//! Always-on observability: event tracing, latency histograms, and the
+//! unified metrics model.
+//!
+//! Three pieces, all designed so the steady-state write path keeps its
+//! sub-µs p50 budget with everything enabled:
+//!
+//! * **Event tracing** ([`trace`], [`ring`]) — every intercepted call
+//!   (`open/create/read/write/lseek/close/stat/unlink/rename/…`) and
+//!   every background span (flusher passes, transfer copies, prefetch
+//!   stages, journal appends, recovery) becomes one fixed 40-byte record
+//!   `{t_ns, latency_ns, key, bytes, thread, op, tier, outcome}` pushed
+//!   onto one of [`NSHARDS`] bounded lock-free rings (Vyukov MPMC,
+//!   producers hashed by a dense per-thread id). A full ring **drops and
+//!   counts** instead of blocking — tracing can stall, the application
+//!   cannot. A drainer thread ([`Obs::spawn_drainer`]) folds the rings
+//!   into an on-disk binary trace every few milliseconds; `sea trace
+//!   export` converts that file to JSONL or Chrome `trace_event` JSON.
+//! * **Latency histograms** ([`hist`]) — per-op × per-tier log2-bucket
+//!   atomic histograms recorded on the same call, never dropped (an
+//!   atomic add cannot overflow a ring), surfaced as p50/p90/p99/p999.
+//! * **Metrics model** ([`metrics`]) — one [`MetricsSnapshot`] that
+//!   `SeaCore::metrics_snapshot` fills from every subsystem's existing
+//!   counters plus these histograms, rendered as Prometheus text
+//!   (`sea metrics`, coordinator `/metrics`) or JSON
+//!   (`sea run --metrics-out`).
+//!
+//! # Overhead budget
+//!
+//! The instrumented fast path adds, per call: one branch on
+//! [`Obs::start`] (disabled: that is the whole cost), two
+//! `Instant::now` reads (~20–25 ns each on the Linux vDSO), one relaxed
+//! histogram `fetch_add`, one thread-local id load, and one ring CAS +
+//! 40-byte store — ≈0.1 µs worst case against the 0.5 µs steady-write
+//! p50 budget, which CI re-asserts with tracing force-enabled
+//! (`SEA_OBS_TRACE=1` in the bench-smoke job).
+//!
+//! # Ring/drainer protocol
+//!
+//! Producers never wait: a push either lands in the ring shard for the
+//! calling thread (`tid % NSHARDS`) or increments that ring's drop
+//! counter. The drainer is the only consumer; it drains every shard,
+//! appends the encoded records to the trace file, and flushes once more
+//! on shutdown (its handle joins on drop, so `SeaIo` teardown leaves a
+//! complete, readable file). Rings are sized by `[obs] ring_capacity`
+//! (records per shard); drops are visible as `sea_trace_dropped_total`.
+
+pub mod hist;
+pub mod metrics;
+pub mod ring;
+pub mod trace;
+
+pub use metrics::{Counter, LatencyRow, MetricsSnapshot};
+pub use trace::{Event, EventKind, EventOutcome, TIER_NONE};
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::tiers::TierIdx;
+use hist::LatencyHist;
+use ring::EventRing;
+
+/// Ring shards; producers hash on their dense thread id.
+pub const NSHARDS: usize = 16;
+/// Histogram tier slots: tiers 0..MAX_TIER_SLOTS-1 plus one "no tier".
+const MAX_TIER_SLOTS: usize = 8;
+const TIER_SLOTS: usize = MAX_TIER_SLOTS + 1;
+/// Default per-shard ring capacity (records).
+pub const DEFAULT_RING_CAPACITY: usize = 8192;
+/// Default trace file name, kept next to the first cache tier's journal
+/// (and, like the journal, exempt from mount-time hygiene).
+pub const TRACE_NAME: &str = ".sea_trace";
+
+static NEXT_THREAD_ID: AtomicU32 = AtomicU32::new(0);
+
+thread_local! {
+    static THREAD_ID: u32 = NEXT_THREAD_ID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Small dense id of the calling thread (first-use assigned).
+pub fn thread_id() -> u32 {
+    THREAD_ID.with(|id| *id)
+}
+
+/// Construction-time settings (mirrors the `[obs]` config section).
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    pub trace_enabled: bool,
+    pub hist_enabled: bool,
+    pub ring_capacity: usize,
+    pub trace_path: Option<PathBuf>,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            trace_enabled: true,
+            hist_enabled: true,
+            ring_capacity: DEFAULT_RING_CAPACITY,
+            trace_path: None,
+        }
+    }
+}
+
+/// The per-mount observability hub: rings + histograms + own counters.
+/// Lives in `SeaCore` as an `Arc` so the drainer thread can hold it
+/// without referencing the core (no Arc cycle).
+pub struct Obs {
+    trace_on: bool,
+    hist_on: bool,
+    epoch: Instant,
+    rings: Vec<EventRing>,
+    hists: Vec<LatencyHist>,
+    recorded: AtomicU64,
+    corrupt_replicas: AtomicU64,
+    trace_path: Option<PathBuf>,
+}
+
+impl Obs {
+    pub fn new(cfg: ObsConfig) -> Obs {
+        let ring_cap = if cfg.trace_enabled { cfg.ring_capacity.max(64) } else { 2 };
+        Obs {
+            trace_on: cfg.trace_enabled,
+            hist_on: cfg.hist_enabled,
+            epoch: Instant::now(),
+            rings: (0..NSHARDS).map(|_| EventRing::new(ring_cap)).collect(),
+            hists: (0..EventKind::ALL.len() * TIER_SLOTS)
+                .map(|_| LatencyHist::new())
+                .collect(),
+            recorded: AtomicU64::new(0),
+            corrupt_replicas: AtomicU64::new(0),
+            trace_path: cfg.trace_path,
+        }
+    }
+
+    /// Fully-off instance (tests, tools that never record).
+    pub fn disabled() -> Obs {
+        Obs::new(ObsConfig {
+            trace_enabled: false,
+            hist_enabled: false,
+            ring_capacity: 2,
+            trace_path: None,
+        })
+    }
+
+    pub fn trace_enabled(&self) -> bool {
+        self.trace_on
+    }
+
+    pub fn trace_path(&self) -> Option<&Path> {
+        self.trace_path.as_deref()
+    }
+
+    /// Timestamp the start of a call/span — `None` (one branch, no clock
+    /// read) when nothing is enabled, making the disabled cost ~zero.
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.trace_on || self.hist_on {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Record one finished call/span begun at `t0` (from [`Obs::start`]).
+    /// No-op when `t0` is `None`. Never blocks: a full ring drops and
+    /// counts.
+    #[inline]
+    pub fn record(
+        &self,
+        kind: EventKind,
+        tier: Option<TierIdx>,
+        key: u64,
+        bytes: u64,
+        t0: Option<Instant>,
+        outcome: EventOutcome,
+    ) {
+        let Some(t0) = t0 else { return };
+        let latency_ns = t0.elapsed().as_nanos() as u64;
+        let tier_b = match tier {
+            Some(t) if t < MAX_TIER_SLOTS => t as u8,
+            Some(_) => (MAX_TIER_SLOTS - 1) as u8,
+            None => TIER_NONE,
+        };
+        if self.hist_on {
+            self.hists[hist_index(kind, tier_b)].record(latency_ns);
+        }
+        if self.trace_on {
+            let t_ns = t0.saturating_duration_since(self.epoch).as_nanos() as u64;
+            let tid = thread_id();
+            let ev = Event {
+                t_ns,
+                latency_ns,
+                key,
+                bytes,
+                thread: tid,
+                op: kind as u8,
+                tier: tier_b,
+                outcome: outcome as u8,
+            };
+            if self.rings[tid as usize & (NSHARDS - 1)].push(ev) {
+                self.recorded.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Outcome shorthand for `Result`-shaped calls.
+    #[inline]
+    pub fn outcome_of<T, E>(r: &Result<T, E>) -> EventOutcome {
+        if r.is_ok() {
+            EventOutcome::Ok
+        } else {
+            EventOutcome::Err
+        }
+    }
+
+    /// Recovery found a same-size replica whose content hash disagreed
+    /// with the journal (satellite: `recovery.corrupt_replica`).
+    pub fn note_corrupt_replica(&self, key: u64) {
+        self.corrupt_replicas.fetch_add(1, Ordering::Relaxed);
+        self.record(
+            EventKind::CorruptReplica,
+            None,
+            key,
+            0,
+            self.start(),
+            EventOutcome::Err,
+        );
+    }
+
+    pub fn corrupt_replicas(&self) -> u64 {
+        self.corrupt_replicas.load(Ordering::Relaxed)
+    }
+
+    /// Events accepted into rings so far.
+    pub fn trace_recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Events refused because a ring was full.
+    pub fn trace_dropped(&self) -> u64 {
+        self.rings.iter().map(|r| r.dropped()).sum()
+    }
+
+    /// Histogram sample count for one kind, summed over tiers.
+    pub fn hist_count(&self, kind: EventKind) -> u64 {
+        (0..TIER_SLOTS)
+            .map(|slot| self.hists[kind.index() * TIER_SLOTS + slot].count())
+            .sum()
+    }
+
+    /// Estimated quantile for one kind (all tiers merged), if sampled.
+    pub fn hist_quantile(&self, kind: EventKind, q: f64) -> Option<f64> {
+        let merged = LatencyHist::new();
+        for slot in 0..TIER_SLOTS {
+            merged.merge(&self.hists[kind.index() * TIER_SLOTS + slot]);
+        }
+        merged.quantile(q)
+    }
+
+    /// Non-empty per-(op, tier) latency rows for the metrics snapshot.
+    pub fn latency_rows(&self, tier_names: &[String]) -> Vec<LatencyRow> {
+        let mut rows = Vec::new();
+        for kind in EventKind::ALL {
+            for slot in 0..TIER_SLOTS {
+                let h = &self.hists[kind.index() * TIER_SLOTS + slot];
+                let count = h.count();
+                if count == 0 {
+                    continue;
+                }
+                let tier = if slot == MAX_TIER_SLOTS {
+                    "-".to_string()
+                } else {
+                    tier_names
+                        .get(slot)
+                        .cloned()
+                        .unwrap_or_else(|| format!("tier{slot}"))
+                };
+                let q = |p: f64| h.quantile(p).unwrap_or(0.0);
+                rows.push(LatencyRow {
+                    op: kind.as_str().to_string(),
+                    tier,
+                    count,
+                    p50_ns: q(0.5),
+                    p90_ns: q(0.9),
+                    p99_ns: q(0.99),
+                    p999_ns: q(0.999),
+                });
+            }
+        }
+        rows
+    }
+
+    /// Obs' own counters for the unified registry.
+    pub fn own_counters(&self) -> Vec<Counter> {
+        vec![
+            Counter::new("sea_trace_events_total", self.trace_recorded()),
+            Counter::new("sea_trace_dropped_total", self.trace_dropped()),
+            Counter::new(
+                "sea_recovery_corrupt_replica_total",
+                self.corrupt_replicas(),
+            ),
+        ]
+    }
+
+    /// Drain every ring into `out` (used by the drainer and by final
+    /// flushes); returns how many events were moved.
+    pub fn drain_rings(&self, out: &mut Vec<Event>) -> usize {
+        self.rings.iter().map(|r| r.drain_into(out)).sum()
+    }
+
+    /// Start the trace drainer thread for this hub. Returns `Ok(None)`
+    /// when tracing is off or no trace path is configured. The handle
+    /// stops and joins the thread on drop, leaving a complete file.
+    pub fn spawn_drainer(self: &Arc<Self>) -> std::io::Result<Option<DrainerHandle>> {
+        if !self.trace_on {
+            return Ok(None);
+        }
+        let Some(path) = self.trace_path.clone() else {
+            return Ok(None);
+        };
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        trace::write_header(&mut file)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let obs = self.clone();
+        let stop2 = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("sea-trace-drainer".to_string())
+            .spawn(move || {
+                let mut buf: Vec<Event> = Vec::with_capacity(1024);
+                loop {
+                    let stopping = stop2.load(Ordering::Acquire);
+                    obs.drain_rings(&mut buf);
+                    for ev in buf.drain(..) {
+                        let _ = file.write_all(&ev.encode());
+                    }
+                    if stopping {
+                        // one post-stop sweep already happened above
+                        let _ = file.flush();
+                        return;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+            })?;
+        Ok(Some(DrainerHandle {
+            stop,
+            join: Some(join),
+        }))
+    }
+}
+
+fn hist_index(kind: EventKind, tier_b: u8) -> usize {
+    let slot = if tier_b == TIER_NONE {
+        MAX_TIER_SLOTS
+    } else {
+        (tier_b as usize).min(MAX_TIER_SLOTS - 1)
+    };
+    kind.index() * TIER_SLOTS + slot
+}
+
+/// Owns the drainer thread; stops and joins it on drop so the trace file
+/// on disk is complete once the owning `SeaIo` is gone.
+pub struct DrainerHandle {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for DrainerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::tempdir::tempdir;
+
+    fn enabled(path: Option<PathBuf>) -> Obs {
+        Obs::new(ObsConfig {
+            trace_enabled: true,
+            hist_enabled: true,
+            ring_capacity: 256,
+            trace_path: path,
+        })
+    }
+
+    #[test]
+    fn disabled_obs_records_nothing() {
+        let o = Obs::disabled();
+        assert!(o.start().is_none());
+        o.record(EventKind::Write, Some(0), 1, 2, o.start(), EventOutcome::Ok);
+        assert_eq!(o.trace_recorded(), 0);
+        assert_eq!(o.hist_count(EventKind::Write), 0);
+    }
+
+    #[test]
+    fn record_feeds_both_hist_and_ring() {
+        let o = enabled(None);
+        for i in 0..10 {
+            o.record(
+                EventKind::Write,
+                Some(0),
+                i,
+                4096,
+                o.start(),
+                EventOutcome::Ok,
+            );
+        }
+        o.record(EventKind::Stat, None, 7, 0, o.start(), EventOutcome::Err);
+        assert_eq!(o.hist_count(EventKind::Write), 10);
+        assert_eq!(o.hist_count(EventKind::Stat), 1);
+        assert_eq!(o.trace_recorded(), 11);
+        let mut evs = Vec::new();
+        o.drain_rings(&mut evs);
+        assert_eq!(evs.len(), 11);
+        let stat = evs.iter().find(|e| e.op == EventKind::Stat as u8).unwrap();
+        assert_eq!(stat.tier, TIER_NONE);
+        assert_eq!(stat.outcome, EventOutcome::Err as u8);
+    }
+
+    #[test]
+    fn latency_rows_cover_sampled_cells_only() {
+        let o = enabled(None);
+        o.record(EventKind::Read, Some(1), 1, 10, o.start(), EventOutcome::Ok);
+        o.record(EventKind::Read, Some(1), 1, 10, o.start(), EventOutcome::Ok);
+        let rows = o.latency_rows(&["tmpfs".into(), "ssd".into()]);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].op, "read");
+        assert_eq!(rows[0].tier, "ssd");
+        assert_eq!(rows[0].count, 2);
+    }
+
+    #[test]
+    fn drainer_writes_complete_trace_file() {
+        let dir = tempdir("obs-drainer");
+        let path = dir.path().join("out.trace");
+        let o = Arc::new(enabled(Some(path.clone())));
+        let handle = o.spawn_drainer().unwrap().expect("drainer starts");
+        for i in 0..100u64 {
+            o.record(
+                EventKind::Write,
+                Some(0),
+                i,
+                512,
+                o.start(),
+                EventOutcome::Ok,
+            );
+        }
+        drop(handle); // stop + join + flush
+        let evs = trace::read_trace(&path).unwrap();
+        assert_eq!(evs.len() as u64, o.trace_recorded());
+        assert_eq!(evs.len(), 100);
+    }
+
+    #[test]
+    fn corrupt_replica_counts_and_traces() {
+        let o = enabled(None);
+        o.note_corrupt_replica(42);
+        assert_eq!(o.corrupt_replicas(), 1);
+        let mut evs = Vec::new();
+        o.drain_rings(&mut evs);
+        assert!(evs
+            .iter()
+            .any(|e| e.op == EventKind::CorruptReplica as u8 && e.key == 42));
+        assert!(o
+            .own_counters()
+            .iter()
+            .any(|c| c.name == "sea_recovery_corrupt_replica_total" && c.value == 1));
+    }
+
+    #[test]
+    fn thread_ids_are_dense_and_stable() {
+        let a = thread_id();
+        assert_eq!(a, thread_id());
+        let other = std::thread::spawn(thread_id).join().unwrap();
+        assert_ne!(a, other);
+    }
+}

@@ -80,15 +80,12 @@ pub struct RealRunReport {
     pub images: usize,
     pub stats: CallStats,
     pub flush: FlushReport,
-    /// Cache-admission outcomes (hit / evicted-to-fit / fell-through):
-    /// how often writes and staging found cache room, made room by
-    /// evicting cold clean replicas, or fell through to the persistent
-    /// tier — the attribution data behind makespan differences.
-    pub admission: crate::stats::AdmissionSnapshot,
-    /// Transfer-engine outcomes (completed / cancelled / errored copies
-    /// and bytes moved) across flush, prefetch, and spill — the
-    /// data-movement companion to the admission counters.
-    pub transfers: crate::transfer::TransferSnapshot,
+    /// The unified metrics-registry snapshot taken after the drain:
+    /// every counter (calls, admission, transfers, journal, tier usage)
+    /// plus the per-op × per-tier latency quantiles. This replaces the
+    /// old hand-picked admission/transfer snapshot fields — report
+    /// rendering and `--metrics-out` both read from here.
+    pub metrics: crate::obs::MetricsSnapshot,
     /// Files physically present under the persistent root afterwards
     /// (the paper's §3.6 quota argument).
     pub files_on_persist: usize,
@@ -341,13 +338,13 @@ pub fn run_real(cfg: &RealRunConfig, svc: &ComputeService) -> Result<RealRunRepo
 
     let drain_sw = Stopwatch::start();
     let n_images = images.len();
-    // Keep the core alive across unmount so the admission and transfer
-    // counters include the drain (where most flush copies happen).
+    // Keep the core alive across unmount so the metrics snapshot (and
+    // its admission/transfer counters) includes the drain — where most
+    // flush copies happen.
     let core = session.io().core().clone();
     let (stats, flush) = session.unmount();
     let drain_secs = drain_sw.elapsed_secs();
-    let admission = core.admission.snapshot();
-    let transfers = core.transfers.stats.snapshot();
+    let metrics = core.metrics_snapshot();
 
     Ok(RealRunReport {
         makespan_secs,
@@ -356,8 +353,7 @@ pub fn run_real(cfg: &RealRunConfig, svc: &ComputeService) -> Result<RealRunRepo
         images: n_images,
         stats,
         flush,
-        admission,
-        transfers,
+        metrics,
         files_on_persist: count_files(&cfg.data_root),
     })
 }
@@ -420,6 +416,17 @@ mod tests {
         // never persisted — nothing under derivatives/ ends with .tmp
         assert!(!cfg.data_root.join("derivatives").exists()
             || count_files(&cfg.data_root.join("derivatives")) == 8);
+        // the embedded registry snapshot agrees with the typed stats
+        assert_eq!(report.metrics.sum("sea_calls_total"), report.stats.total());
+        assert!(
+            report.metrics.sum("sea_transfers_total") > 0,
+            "flush-all run moved no transfers: {:?}",
+            report.metrics.counters
+        );
+        assert!(
+            !report.metrics.latency.is_empty(),
+            "histograms missing from report"
+        );
     }
 
     #[test]

@@ -264,6 +264,26 @@ pub fn expand_readahead(core: &SeaCore, origin: &CleanPath, depth: usize) -> Vec
 /// under the per-file fence, and a losing race discards the fresh copy
 /// before the fence is released.
 pub fn stage_one(core: &SeaCore, logical: &CleanPath) -> StageOutcome {
+    let t0 = core.obs.start();
+    let out = stage_one_inner(core, logical);
+    let (bytes, outcome) = match out {
+        StageOutcome::Staged(bytes) => (bytes, crate::obs::EventOutcome::Ok),
+        StageOutcome::Skipped => (0, crate::obs::EventOutcome::Cancelled),
+        StageOutcome::NoSpace => (0, crate::obs::EventOutcome::Busy),
+        StageOutcome::Error => (0, crate::obs::EventOutcome::Err),
+    };
+    core.obs.record(
+        crate::obs::EventKind::PrefetchStage,
+        None,
+        crate::journal::fnv1a_bytes(logical.as_str().as_bytes()),
+        bytes,
+        t0,
+        outcome,
+    );
+    out
+}
+
+fn stage_one_inner(core: &SeaCore, logical: &CleanPath) -> StageOutcome {
     let persist = core.tiers.persist_idx();
     let Some((size, version, eligible)) = core.ns.with_meta(logical, |m| {
         (

@@ -238,7 +238,8 @@ impl TransferStats {
         self.bytes_moved.load(Ordering::Relaxed)
     }
 
-    /// Point-in-time copy for reports (`RealRunReport.transfers`).
+    /// Point-in-time copy for reports (feeds the `sea_transfers_total`
+    /// family in `SeaCore::metrics_snapshot`).
     pub fn snapshot(&self) -> TransferSnapshot {
         TransferSnapshot {
             completed: self.completed(),
@@ -335,6 +336,34 @@ impl TransferEngine {
     }
 
     fn copy_under<V>(
+        &self,
+        core: &SeaCore,
+        guard: &FenceGuard<'_>,
+        logical: &str,
+        from: TierIdx,
+        to: TierIdx,
+        commit: impl FnOnce(u64) -> V,
+    ) -> std::io::Result<Outcome<V>> {
+        let t0 = core.obs.start();
+        let res = self.copy_under_inner(core, guard, logical, from, to, commit);
+        let (bytes, outcome) = match &res {
+            Ok(Outcome::Done { bytes, .. }) => (*bytes, crate::obs::EventOutcome::Ok),
+            Ok(Outcome::Cancelled) => (0, crate::obs::EventOutcome::Cancelled),
+            Ok(Outcome::Busy) => (0, crate::obs::EventOutcome::Busy),
+            Err(_) => (0, crate::obs::EventOutcome::Err),
+        };
+        core.obs.record(
+            crate::obs::EventKind::TransferCopy,
+            Some(to),
+            crate::journal::fnv1a_bytes(logical.as_bytes()),
+            bytes,
+            t0,
+            outcome,
+        );
+        res
+    }
+
+    fn copy_under_inner<V>(
         &self,
         core: &SeaCore,
         guard: &FenceGuard<'_>,

@@ -181,6 +181,75 @@ fn double_crash_during_recovery_is_idempotent() {
     assert_eq!(persist_bytes(dir.path(), "/twice.nii"), Some(payload));
 }
 
+/// A crash-corrupted replica (same size, different bytes) is caught by
+/// the journaled content hash: recovery deletes it and counts it
+/// (`sea_recovery_corrupt_replica_total`) instead of flushing garbage
+/// to the persist tier. Size checks alone cannot see this case.
+#[test]
+fn corrupted_replica_is_detected_and_never_flushed() {
+    let dir = tempdir("crash-corrupt");
+    let sess = mount_at(dir.path(), true, "");
+    let payload = pattern(23, 16 * 1024);
+    write_all(sess.io(), &[("/bitrot.nii".to_string(), payload.clone())]);
+    std::mem::forget(sess); // crash: journal holds dirty record + hash
+
+    // Flip bytes in the middle of the cache replica, keeping the size.
+    let replica = dir.path().join("tmpfs/bitrot.nii");
+    let mut bytes = std::fs::read(&replica).unwrap();
+    for b in bytes[1024..2048].iter_mut() {
+        *b ^= 0xFF;
+    }
+    assert_eq!(bytes.len(), payload.len());
+    std::fs::write(&replica, &bytes).unwrap();
+
+    let sess = mount_at(dir.path(), true, "");
+    let core = sess.io().core().clone();
+    assert_eq!(core.obs.corrupt_replicas(), 1, "corruption not detected");
+    assert_eq!(
+        core.metrics_snapshot()
+            .value("sea_recovery_corrupt_replica_total"),
+        Some(1)
+    );
+    // Nothing recoverable survives: no resurrection, no garbage flushed.
+    assert!(sess.io().stat("/bitrot.nii").is_err());
+    assert!(!replica.exists(), "corrupt replica must be deleted");
+    let (_stats, report) = sess.unmount();
+    assert_eq!(report.flushed + report.moved, 0, "{report:?}");
+    assert_eq!(persist_bytes(dir.path(), "/bitrot.nii"), None);
+}
+
+/// Reopening a journaled-dirty file for writing invalidates its hash
+/// (an in-place rewrite is indistinguishable from corruption by bytes
+/// alone): a crash with the fd still open must recover the rewritten
+/// bytes as unverifiable rather than wrongly deleting them as corrupt.
+#[test]
+fn rewrite_in_place_invalidates_hash_instead_of_vetoing_recovery() {
+    use sea::intercept::OpenMode;
+
+    let dir = tempdir("crash-rehash");
+    let sess = mount_at(dir.path(), true, "");
+    let payload = pattern(29, 4096);
+    write_all(sess.io(), &[("/rw.nii".to_string(), payload)]);
+
+    // Same-size in-place rewrite through a ReadWrite fd, then crash
+    // before close — the close-time checkpoint never runs, so the only
+    // protection is the open-time hash-invalidation record.
+    let patch = pattern(31, 4096);
+    let fd = sess.io().open("/rw.nii", OpenMode::ReadWrite).unwrap();
+    sess.io().write(fd, &patch).unwrap();
+    std::mem::forget(sess);
+
+    let sess = mount_at(dir.path(), true, "");
+    assert_eq!(
+        sess.io().core().obs.corrupt_replicas(),
+        0,
+        "legitimate rewrite misflagged as corruption"
+    );
+    let (_stats, report) = sess.unmount();
+    assert!(report.flushed + report.moved >= 1, "{report:?}");
+    assert_eq!(persist_bytes(dir.path(), "/rw.nii"), Some(patch));
+}
+
 /// Garbage appended past the last good record (a torn tail from a crash
 /// mid-append) must not poison replay of the records before it.
 #[test]

@@ -141,6 +141,97 @@ fn stress_invariants_hold_under_concurrent_io_with_flusher() {
 }
 
 #[test]
+fn trace_event_counts_match_call_stats_under_contention() {
+    // The instrumentation invariant the obs wrapper pattern promises:
+    // every public call records exactly one histogram sample and one
+    // trace event (or a counted drop), so per-kind totals from the
+    // observability layer equal the CallStats counters even with 8
+    // threads hammering one mount.
+    const WORKERS: usize = 8;
+    const ITERS: usize = 40;
+
+    use sea::obs::EventKind;
+
+    let dir = tempdir("obs-stress");
+    let trace = dir.path().join("stress.trace");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 64 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .obs_trace_path(&trace)
+        .build();
+    let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+    {
+        let sea = &sea;
+        std::thread::scope(|s| {
+            for w in 0..WORKERS {
+                s.spawn(move || {
+                    for i in 0..ITERS {
+                        let p = format!("/w{w}/f{i}.dat");
+                        let fd = sea.create(&p).unwrap();
+                        sea.write(fd, &[w as u8; 256]).unwrap();
+                        sea.close(fd).unwrap();
+                        let fd = sea.open(&p, OpenMode::Read).unwrap();
+                        let mut buf = [0u8; 256];
+                        sea.read(fd, &mut buf).unwrap();
+                        sea.close(fd).unwrap();
+                        sea.stat(&p).unwrap();
+                        if i % 2 == 0 {
+                            sea.unlink(&p).unwrap();
+                        }
+                    }
+                });
+            }
+        });
+    }
+    let stats = sea.stats();
+    let obs = sea.core().obs.clone();
+
+    // Histograms are never dropped: per-kind sample counts are exact.
+    for (kind, expected) in [
+        (EventKind::Create, stats.create),
+        (EventKind::Write, stats.write),
+        (EventKind::Open, stats.open),
+        (EventKind::Read, stats.read),
+        (EventKind::Close, stats.close),
+        (EventKind::Stat, stats.stat),
+        (EventKind::Unlink, stats.unlink),
+    ] {
+        assert_eq!(
+            obs.hist_count(kind),
+            expected,
+            "histogram count for {} drifted from CallStats",
+            kind.as_str()
+        );
+    }
+
+    // Unmount: the drainer joins and leaves a complete trace file.
+    drop(sea);
+    let recorded = obs.trace_recorded();
+    let dropped = obs.trace_dropped();
+    assert!(
+        recorded + dropped >= stats.total(),
+        "ring accounting lost events: {recorded} recorded + {dropped} dropped < {} calls",
+        stats.total()
+    );
+    let events = sea::obs::trace::read_trace(&trace).unwrap();
+    assert_eq!(
+        events.len() as u64,
+        recorded,
+        "on-disk trace disagrees with the recorded counter"
+    );
+    if dropped == 0 {
+        // Nothing overflowed (plenty of ring for this workload), so the
+        // file's per-kind event counts equal CallStats exactly.
+        for (kind, expected) in
+            [(EventKind::Write, stats.write), (EventKind::Unlink, stats.unlink)]
+        {
+            let n = events.iter().filter(|e| e.kind() == Some(kind)).count() as u64;
+            assert_eq!(n, expected, "traced {} events != CallStats", kind.as_str());
+        }
+    }
+}
+
+#[test]
 fn fd_recycling_returns_badfd_never_another_files_bytes() {
     // The ABA property of the generation-tagged slab fd table: one
     // thread close/reopens the same path in a loop — churning the freed
