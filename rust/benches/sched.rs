@@ -1,0 +1,222 @@
+//! Cost-aware scheduler benchmarks: emits `BENCH_sched.json` (cwd) so
+//! the perf trajectory across PRs is machine-readable.
+//!
+//! Two headline comparisons:
+//!
+//! * **GDSF vs LRU eviction** — a mixed-size workload (a hammered hot
+//!   set of 4 KiB files plus a stream of cold large volumes) overflows
+//!   an undersized cache. GDSF ranks candidates by
+//!   `freq × weight / size`, so it drains the cold large replicas and
+//!   keeps the hot set resident; LRU ages the hot set out the moment
+//!   the cold stream's access stamps pass it. The score is the
+//!   aggregate re-fetch cost (`freq × weight × size`, summed over
+//!   evictions) charged by each policy for freeing the same demand —
+//!   lower is better.
+//! * **Two-class QoS** — two background threads storm a
+//!   bandwidth-throttled persist tier with prefetch-class requests
+//!   while a foreground thread issues small read-class requests. With
+//!   QoS on, background yields under foreground pressure and pays down
+//!   its debt; the foreground p99 wait drops accordingly.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sea::config::SeaConfig;
+use sea::intercept::{OpenMode, SeaIo};
+use sea::pathrules::SeaLists;
+use sea::prefetch::{stage_one, StageOutcome};
+use sea::sched::IoClass;
+use sea::testing::tempdir::tempdir;
+use sea::util::MIB;
+
+const KIB: usize = 1024;
+
+/// CI smoke mode (`SEA_BENCH_SMOKE=1`): tiny workloads so the bench code
+/// is executed per PR, not just compiled. Smoke numbers are meaningless.
+fn smoke() -> bool {
+    std::env::var_os("SEA_BENCH_SMOKE").is_some()
+}
+
+struct EvictScore {
+    refetch_cost: u64,
+    evictions: u64,
+    /// Hot 4 KiB files still cache-resident once the cold stream ends.
+    hot_survivors: usize,
+}
+
+/// Run the mixed-size overflow workload under `policy` and return the
+/// aggregate re-fetch cost its evictions charged.
+fn evict_score(policy: &str, hot: usize, cold: usize) -> EvictScore {
+    const HOT_SIZE: usize = 4 * KIB;
+    const COLD_SIZE: usize = 64 * KIB;
+
+    let dir = tempdir("bench-sched-evict");
+    let lustre = dir.subdir("lustre");
+    for i in 0..hot {
+        std::fs::write(lustre.join(format!("hot{i:02}.nii")), vec![1u8; HOT_SIZE]).unwrap();
+    }
+    for i in 0..cold {
+        std::fs::write(lustre.join(format!("cold{i:02}.nii")), vec![2u8; COLD_SIZE]).unwrap();
+    }
+    // Cache fits the whole hot set plus three cold volumes; the fourth
+    // cold staging must evict.
+    let cache_cap = (hot * HOT_SIZE + 3 * COLD_SIZE) as u64;
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), cache_cap)
+        .persist("lustre", &lustre, 100_000 * MIB)
+        .flusher(false, 100)
+        .prefetcher(false)
+        .promote_on_read(false)
+        .readahead(0)
+        .sched_policy(policy)
+        .build();
+    let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+    let core = sea.core();
+
+    // Stage the hot set, then hammer it: high access frequency, but
+    // *older* access stamps than the cold stream that follows.
+    for i in 0..hot {
+        let p = sea::namespace::CleanPath::new(&format!("/hot{i:02}.nii"));
+        assert_eq!(stage_one(core, &p), StageOutcome::Staged(HOT_SIZE as u64));
+    }
+    for _ in 0..16 {
+        for i in 0..hot {
+            let fd = sea.open(&format!("/hot{i:02}.nii"), OpenMode::Read).unwrap();
+            sea.close(fd).unwrap();
+        }
+    }
+    // Cold stream: stage each large volume (forcing evictions once the
+    // cache fills) and read it once so its access stamp postdates every
+    // hot-set access.
+    for i in 0..cold {
+        let p = sea::namespace::CleanPath::new(&format!("/cold{i:02}.nii"));
+        let out = stage_one(core, &p);
+        assert!(
+            matches!(out, StageOutcome::Staged(_) | StageOutcome::NoSpace),
+            "cold{i:02}: {out:?}"
+        );
+        let fd = sea.open(&format!("/cold{i:02}.nii"), OpenMode::Read).unwrap();
+        sea.close(fd).unwrap();
+    }
+    let survivors = (0..hot)
+        .filter(|i| {
+            core.ns
+                .with_meta(&format!("/hot{i:02}.nii"), |m| m.fastest_replica() == 0)
+                .unwrap_or(false)
+        })
+        .count();
+    let snap = core.sched.snapshot();
+    EvictScore {
+        refetch_cost: snap.refetch_cost,
+        evictions: snap.evictions,
+        hot_survivors: survivors,
+    }
+}
+
+/// Foreground p99 wait (µs) on a bandwidth-throttled persist tier while
+/// two background threads storm it with prefetch-class requests.
+fn qos_fg_p99_us(qos: bool, iters: usize) -> f64 {
+    const BW: f64 = 8.0 * 1024.0 * 1024.0; // 8 MiB/s
+    const BG_CHUNK: u64 = 128 * KIB as u64; // ~16 ms of tokens each
+    const FG_CHUNK: u64 = 16 * KIB as u64; // ~2 ms of tokens
+
+    let dir = tempdir("bench-sched-qos");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .flusher(false, 100)
+        .prefetcher(false)
+        .sched_qos(qos)
+        .build();
+    let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| {
+        t.with_bandwidth_limit(BW)
+    })
+    .unwrap();
+    let core = sea.core().clone();
+    let persist = core.tiers.persist_idx();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut storm = Vec::new();
+    for _ in 0..2 {
+        let core = core.clone();
+        let stop = stop.clone();
+        storm.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                core.tiers.get(persist).wait_data_class(BG_CHUNK, IoClass::Background);
+            }
+        }));
+    }
+    // Let the storm saturate the bucket before measuring.
+    std::thread::sleep(Duration::from_millis(100));
+    let mut lat_us: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        core.tiers.get(persist).wait_data_class(FG_CHUNK, IoClass::Foreground);
+        lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    stop.store(true, Ordering::Release);
+    for h in storm {
+        h.join().unwrap();
+    }
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((lat_us.len() as f64 * 0.99).ceil() as usize).min(lat_us.len()) - 1;
+    lat_us[idx]
+}
+
+fn main() {
+    println!("\n# cost-aware scheduler benchmarks\n");
+    let (hot, cold) = if smoke() { (8, 6) } else { (16, 12) };
+    let fg_iters = if smoke() { 15 } else { 60 };
+
+    let gdsf = evict_score("gdsf", hot, cold);
+    println!(
+        "eviction, gdsf: {} evictions, refetch cost {:>9}, {}/{hot} hot files survive",
+        gdsf.evictions, gdsf.refetch_cost, gdsf.hot_survivors
+    );
+    let lru = evict_score("lru", hot, cold);
+    println!(
+        "eviction, lru : {} evictions, refetch cost {:>9}, {}/{hot} hot files survive",
+        lru.evictions, lru.refetch_cost, lru.hot_survivors
+    );
+    let cost_ratio = lru.refetch_cost as f64 / gdsf.refetch_cost.max(1) as f64;
+    println!("refetch-cost ratio (lru/gdsf, >1 means gdsf wins): {cost_ratio:.2}");
+
+    let p99_off = qos_fg_p99_us(false, fg_iters);
+    println!("fg p99 under bg storm, qos off {p99_off:>10.0} µs");
+    let p99_on = qos_fg_p99_us(true, fg_iters);
+    let qos_gain = p99_off / p99_on.max(1e-9);
+    println!("fg p99 under bg storm, qos on  {p99_on:>10.0} µs ({qos_gain:.2}x)");
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"gdsf_refetch_cost\": {},\n",
+            "  \"gdsf_evictions\": {},\n",
+            "  \"gdsf_hot_survivors\": {},\n",
+            "  \"lru_refetch_cost\": {},\n",
+            "  \"lru_evictions\": {},\n",
+            "  \"lru_hot_survivors\": {},\n",
+            "  \"refetch_cost_ratio\": {:.2},\n",
+            "  \"qos_off_fg_p99_us\": {:.1},\n",
+            "  \"qos_on_fg_p99_us\": {:.1},\n",
+            "  \"qos_fg_p99_gain\": {:.2}\n",
+            "}}\n"
+        ),
+        gdsf.refetch_cost,
+        gdsf.evictions,
+        gdsf.hot_survivors,
+        lru.refetch_cost,
+        lru.evictions,
+        lru.hot_survivors,
+        cost_ratio,
+        p99_off,
+        p99_on,
+        qos_gain
+    );
+    match std::fs::write("BENCH_sched.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_sched.json"),
+        Err(e) => eprintln!("could not write BENCH_sched.json: {e}"),
+    }
+}

@@ -292,6 +292,10 @@ fn cmd_run(mut a: Args) -> Result<()> {
             "{}",
             crate::experiments::report::fmt_transfers(&report.metrics)
         );
+        println!(
+            "{}",
+            crate::experiments::report::fmt_sched(&report.metrics)
+        );
         let latency = crate::experiments::report::fmt_latency(&report.metrics);
         if !latency.is_empty() {
             println!("\n{latency}");

@@ -44,6 +44,12 @@
 //! histograms    = true                   # per-op × per-tier latency hists
 //! ring_capacity = 8192                   # per-shard trace ring (events)
 //! trace_path    =                        # default: <cache0>/.sea_trace
+//!
+//! [sched]
+//! policy = gdsf                          # eviction rank: gdsf | lru | fifo
+//! qos    = true                          # two-class bandwidth scheduling:
+//!                                        # background prefetch/transfer
+//!                                        # yields under foreground pressure
 //! ```
 //!
 //! ## `.sea_prefetchlist` semantics
@@ -147,6 +153,16 @@ pub struct SeaConfig {
     /// `None` (default) places `.sea_trace` under the fastest cache
     /// root, next to that tier's `.sea_journal`.
     pub obs_trace_path: Option<PathBuf>,
+    /// Eviction ranking policy (`[sched] policy`): `gdsf` (default,
+    /// cost-aware frequency × re-fetch weight / size), `lru` (the exact
+    /// pre-scheduler recency order), or `fifo` (creation order).
+    /// Validated at parse time.
+    pub sched_policy: String,
+    /// Two-class bandwidth QoS (`[sched] qos`): background
+    /// prefetch/transfer acquisitions yield to foreground read/write/
+    /// flush pressure on bandwidth-shaped tiers. Off collapses both
+    /// classes to the plain first-come-first-served token bucket.
+    pub sched_qos: bool,
 }
 
 fn parse_cache_spec(spec: &str) -> Result<CacheDef, SeaConfigError> {
@@ -230,6 +246,13 @@ impl SeaConfig {
                 .get("obs", "trace_path")
                 .filter(|v| !v.is_empty())
                 .map(PathBuf::from),
+            sched_policy: {
+                let p = ini.get("sched", "policy").unwrap_or("gdsf");
+                p.parse::<crate::sched::EvictionPolicy>()
+                    .map_err(SeaConfigError::BadValue)?;
+                p.to_string()
+            },
+            sched_qos: ini.get_bool("sched", "qos").unwrap_or(true),
         })
     }
 
@@ -257,6 +280,8 @@ impl SeaConfig {
             obs_histograms: true,
             obs_ring_capacity: crate::obs::DEFAULT_RING_CAPACITY,
             obs_trace_path: None,
+            sched_policy: "gdsf".to_string(),
+            sched_qos: true,
         }
     }
 
@@ -285,6 +310,8 @@ pub struct SeaConfigBuilder {
     obs_histograms: bool,
     obs_ring_capacity: usize,
     obs_trace_path: Option<PathBuf>,
+    sched_policy: String,
+    sched_qos: bool,
 }
 
 impl SeaConfigBuilder {
@@ -379,6 +406,20 @@ impl SeaConfigBuilder {
         self
     }
 
+    /// Eviction ranking policy: `gdsf` (default), `lru`, or `fifo`.
+    /// Validated at mount, not here, so tests can exercise the mount
+    /// error path.
+    pub fn sched_policy(mut self, policy: &str) -> Self {
+        self.sched_policy = policy.to_string();
+        self
+    }
+
+    /// Enable/disable two-class bandwidth QoS on shaped tiers.
+    pub fn sched_qos(mut self, enabled: bool) -> Self {
+        self.sched_qos = enabled;
+        self
+    }
+
     pub fn build(self) -> SeaConfig {
         SeaConfig {
             mountpoint: self.mountpoint,
@@ -401,6 +442,8 @@ impl SeaConfigBuilder {
             obs_histograms: self.obs_histograms,
             obs_ring_capacity: self.obs_ring_capacity,
             obs_trace_path: self.obs_trace_path,
+            sched_policy: self.sched_policy,
+            sched_qos: self.sched_qos,
         }
     }
 }
@@ -576,6 +619,35 @@ interval_ms = 50
             .evict_to_fit(false)
             .build();
         assert!(!cfg.evict_to_fit);
+    }
+
+    #[test]
+    fn sched_section_parses_with_defaults() {
+        let cfg = SeaConfig::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.sched_policy, "gdsf", "GDSF must default on");
+        assert!(cfg.sched_qos, "QoS must default on");
+
+        let cfg = SeaConfig::parse(
+            "mount=/m\n[caches]\npersist = l:/x:1G\n\
+             [sched]\npolicy = lru\nqos = false\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.sched_policy, "lru");
+        assert!(!cfg.sched_qos);
+
+        let err = SeaConfig::parse(
+            "mount=/m\n[caches]\npersist = l:/x:1G\n[sched]\npolicy = mru\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, SeaConfigError::BadValue(_)));
+
+        let cfg = SeaConfig::builder("/m")
+            .persist("l", "/x", GIB)
+            .sched_policy("fifo")
+            .sched_qos(false)
+            .build();
+        assert_eq!(cfg.sched_policy, "fifo");
+        assert!(!cfg.sched_qos);
     }
 
     #[test]

@@ -67,6 +67,39 @@ pub fn fmt_transfers(m: &crate::obs::MetricsSnapshot) -> String {
     )
 }
 
+/// Scheduler summary for a real-mode run, read from the unified
+/// registry snapshot: cost-aware evictions (with the active policy),
+/// the aggregate re-fetch cost released by them, and — per
+/// bandwidth-limited tier — the foreground/background byte split with
+/// how often background work yielded to foreground pressure.
+pub fn fmt_sched(m: &crate::obs::MetricsSnapshot) -> String {
+    let evict = m
+        .counters
+        .iter()
+        .find(|c| c.name == "sea_sched_evictions_total");
+    let policy = evict
+        .and_then(|c| c.labels.iter().find(|(k, _)| k == "policy"))
+        .map(|(_, v)| v.as_str())
+        .unwrap_or("gdsf");
+    let mut out = format!(
+        "sched[{policy}]: {} evictions ({} B, refetch cost {} released)",
+        evict.map(|c| c.value).unwrap_or(0),
+        m.value("sea_sched_evicted_bytes_total").unwrap_or(0),
+        m.value("sea_sched_refetch_cost_total").unwrap_or(0),
+    );
+    for c in m.counters.iter().filter(|c| c.name == "sea_sched_fg_bytes_total") {
+        if let Some((_, tier)) = c.labels.iter().find(|(k, _)| k == "tier") {
+            out.push_str(&format!(
+                "; {tier}: {} B fg / {} B bg, {} bg yields",
+                c.value,
+                labeled(m, "sea_sched_bg_bytes_total", tier),
+                labeled(m, "sea_sched_bg_yields_total", tier),
+            ));
+        }
+    }
+    out
+}
+
 /// Per-op × per-tier latency quantiles as a markdown table (µs). Empty
 /// string when histograms were disabled for the run.
 pub fn fmt_latency(m: &crate::obs::MetricsSnapshot) -> String {
@@ -141,6 +174,12 @@ mod tests {
                 Counter::with_label("sea_transfers_total", "outcome", "cancelled", 1),
                 Counter::with_label("sea_transfers_total", "outcome", "errors", 2),
                 Counter::new("sea_transfer_bytes_total", 8192),
+                Counter::with_label("sea_sched_evictions_total", "policy", "gdsf", 7),
+                Counter::new("sea_sched_evicted_bytes_total", 2048),
+                Counter::new("sea_sched_refetch_cost_total", 99),
+                Counter::with_label("sea_sched_fg_bytes_total", "tier", "lustre", 500),
+                Counter::with_label("sea_sched_bg_bytes_total", "tier", "lustre", 300),
+                Counter::with_label("sea_sched_bg_yields_total", "tier", "lustre", 4),
             ],
             latency: vec![LatencyRow {
                 op: "write".into(),
@@ -170,6 +209,21 @@ mod tests {
         assert!(line.contains("8192 B moved"), "{line}");
         assert!(line.contains("1 cancelled"), "{line}");
         assert!(line.contains("2 errors"), "{line}");
+    }
+
+    #[test]
+    fn fmt_sched_line() {
+        let line = fmt_sched(&registry());
+        assert!(line.starts_with("sched[gdsf]: 7 evictions"), "{line}");
+        assert!(line.contains("2048 B"), "{line}");
+        assert!(line.contains("refetch cost 99 released"), "{line}");
+        assert!(line.contains("lustre: 500 B fg / 300 B bg, 4 bg yields"), "{line}");
+        // a run with no sched samples still renders a stable line
+        let empty = crate::obs::MetricsSnapshot::default();
+        assert_eq!(
+            fmt_sched(&empty),
+            "sched[gdsf]: 0 evictions (0 B, refetch cost 0 released)"
+        );
     }
 
     #[test]

@@ -215,10 +215,18 @@ fn flush_pass_inner(core: &SeaCore, force: bool) -> FlushReport {
     // bytes landed and must stay tracked for unlink/rename to clean up —
     // but the file stays dirty and the re-queued retry overwrites the
     // possibly-torn persist bytes atomically before anything reads them.
-    let results = core.transfers.run_batch(core, jobs, |job: &BatchJob, _bytes: u64| {
-        let entry = &entries[job.token].0;
-        core.ns.commit_flush(&entry.logical, entry.version, Some(persist))
-    });
+    // Foreground class: a dirty drain is on the application's durability
+    // path (its data is not safe until persisted), so flush copies must
+    // not yield to themselves behind prefetch staging.
+    let results = core.transfers.run_batch(
+        core,
+        jobs,
+        crate::sched::IoClass::Foreground,
+        |job: &BatchJob, _bytes: u64| {
+            let entry = &entries[job.token].0;
+            core.ns.commit_flush(&entry.logical, entry.version, Some(persist))
+        },
+    );
 
     // Phase 3 (serial): accounting and re-queues.
     for (job, res) in results {

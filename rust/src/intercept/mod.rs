@@ -131,6 +131,15 @@ pub struct SeaCore {
     /// Cache-admission outcome counters (hit / evicted-to-fit /
     /// fell-through) for the experiment reports.
     pub admission: AdmissionStats,
+    /// Active eviction-ranking policy (config `[sched] policy`), parsed
+    /// once at mount: GDSF cost-aware by default, `lru`/`fifo` pin the
+    /// pre-scheduler behaviour.
+    pub policy: crate::sched::EvictionPolicy,
+    /// Scheduler decision counters: evictions by the active policy, bytes
+    /// dropped, aggregate re-fetch cost, and the eviction-priority
+    /// histogram — folded into [`SeaCore::metrics_snapshot`] as
+    /// `sea_sched_*`.
+    pub sched: crate::sched::SchedStats,
     /// Per-cache-tier negative-result memo for the eviction candidate
     /// scan: the value of [`Namespace::evict_transitions`] at the last
     /// scan that found nothing for that tier (`u64::MAX` = never
@@ -231,8 +240,9 @@ impl SeaCore {
         Some(size)
     }
 
-    /// Evict-to-make-room: drop cold, clean, closed, already-persisted
-    /// replicas from cache `idx` (coldest LRU stamp first) until `bytes`
+    /// Evict-to-make-room: drop clean, closed, already-persisted
+    /// replicas from cache `idx` — ranked cheapest-to-lose first by the
+    /// configured [`crate::sched::EvictionPolicy`] — until `bytes`
     /// fit. A path whose transfer fence is held is skipped — an
     /// in-flight copy is never evicted under itself, and because
     /// [`crate::transfer::FenceMap::begin`] is non-blocking, a caller
@@ -257,25 +267,26 @@ impl SeaCore {
             return false;
         }
         let persist = self.tiers.persist_idx();
-        let candidates = self.ns.cold_cache_replicas(idx, persist);
+        let candidates = self.ns.cold_cache_replicas(idx, persist, self.policy);
         if candidates.is_empty() {
             self.admission_scan_memo[idx].store(transitions, Ordering::Relaxed);
             return false;
         }
-        for (logical, _size) in candidates {
+        for cand in candidates {
             if tier.free() >= bytes {
                 break;
             }
-            let Some(_fence) = self.transfers.fences.begin(&logical) else {
+            let Some(_fence) = self.transfers.fences.begin(&cand.key) else {
                 continue; // copy in flight on this path: never evict under it
             };
             // Detach only this tier's replica — draining a full tmpfs
             // must not also discard a perfectly good copy on another
             // cache tier — re-validated clean-and-closed under the
             // shard lock.
-            if let Some(size) = self.ns.detach_replica_on(&logical, idx, persist) {
-                self.delete_replica(&logical, idx, size);
+            if let Some(size) = self.ns.detach_replica_on(&cand.key, idx, persist) {
+                self.delete_replica(&cand.key, idx, size);
                 self.admission.note_evicted_replica(size);
+                self.sched.note_eviction(&cand);
             }
         }
         tier.free() >= bytes
@@ -283,8 +294,8 @@ impl SeaCore {
 
     /// [`TierSet::reserve_on_cache`] with the evict-to-make-room
     /// admission path: when no cache can take `bytes` outright, drain
-    /// cold clean replicas (LRU over the namespace access stamps) until
-    /// the reservation fits. Every outcome is counted in
+    /// clean replicas (ranked by the configured eviction policy over the
+    /// namespace cost/access stamps) until the reservation fits. Every outcome is counted in
     /// [`SeaCore::admission`]. `None` means no cache can hold the bytes
     /// even after eviction — staging callers skip, spill falls through
     /// to persist.
@@ -413,6 +424,38 @@ impl SeaCore {
         }
         counters.push(Counter::new("sea_admission_evicted_files_total", adm.evicted_files));
         counters.push(Counter::new("sea_admission_evicted_bytes_total", adm.evicted_bytes));
+        let sched = self.sched.snapshot();
+        counters.push(Counter::with_label(
+            "sea_sched_evictions_total",
+            "policy",
+            self.policy.as_str(),
+            sched.evictions,
+        ));
+        counters.push(Counter::new("sea_sched_evicted_bytes_total", sched.evicted_bytes));
+        counters.push(Counter::new("sea_sched_refetch_cost_total", sched.refetch_cost));
+        for idx in 0..self.tiers.len() {
+            let t = self.tier(idx);
+            if let Some(q) = t.qos_snapshot() {
+                counters.push(Counter::with_label(
+                    "sea_sched_fg_bytes_total",
+                    "tier",
+                    &t.name,
+                    q.fg_bytes,
+                ));
+                counters.push(Counter::with_label(
+                    "sea_sched_bg_bytes_total",
+                    "tier",
+                    &t.name,
+                    q.bg_bytes,
+                ));
+                counters.push(Counter::with_label(
+                    "sea_sched_bg_yields_total",
+                    "tier",
+                    &t.name,
+                    q.bg_yields,
+                ));
+            }
+        }
         let tr = self.transfers.stats.snapshot();
         for (outcome, v) in [
             ("completed", tr.completed),
@@ -783,6 +826,15 @@ impl SeaIo {
         shape_persist: impl FnOnce(Tier) -> Tier,
     ) -> Result<SeaIo, SeaError> {
         let tiers = TierSet::new(&cfg.caches, &cfg.persist, shape_persist)?;
+        // Config paths validated the policy string at parse time; this
+        // re-parse also covers programmatic builders.
+        let policy = cfg
+            .sched_policy
+            .parse::<crate::sched::EvictionPolicy>()
+            .map_err(|e| SeaError::PlainIo(std::io::Error::other(e)))?;
+        for idx in 0..tiers.len() {
+            tiers.get(idx).set_qos(cfg.sched_qos);
+        }
         let faults = Arc::new(
             FaultPlan::from_env_or(&cfg.faults_spec)
                 .map_err(|e| SeaError::PlainIo(std::io::Error::other(e)))?,
@@ -839,6 +891,8 @@ impl SeaIo {
             transfers,
             prefetch: PrefetchQueue::new(),
             admission: AdmissionStats::default(),
+            policy,
+            sched: crate::sched::SchedStats::new(),
             admission_scan_memo,
             journal,
             faults,

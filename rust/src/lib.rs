@@ -37,6 +37,7 @@ pub mod pathrules;
 pub mod pipeline;
 pub mod prefetch;
 pub mod runtime;
+pub mod sched;
 pub mod simcore;
 pub mod stats;
 pub mod testing;

@@ -38,10 +38,12 @@
 //! updated [`FileRecord`] behind an `Arc`, which the interceptor caches
 //! in its per-fd state at open time ([`Namespace::note_open`] hands it
 //! out). A steady-state `write` on an already-dirty file then publishes
-//! through [`Namespace::publish_write`] with four atomic ops and **zero
-//! shard-lock acquisitions**; the shard lock is taken only on the
-//! clean→dirty *transition*, which must feed the dirty queue, move the
-//! master to the written tier, and invalidate stale replicas.
+//! through [`Namespace::publish_write`] with a handful of relaxed
+//! atomic ops — all on thread-striped clocks or per-file counters, no
+//! shared `fetch_add` to serialise on — and **zero shard-lock
+//! acquisitions**; the shard lock is taken only on the clean→dirty
+//! *transition*, which must feed the dirty queue, move the master to
+//! the written tier, and invalidate stale replicas.
 //!
 //! The clean-marking race this creates is closed by write order + unique
 //! stamps: a writer stores a fresh, never-reused version *before*
@@ -108,19 +110,44 @@
 //! drain time — the flusher no longer walks every file per pass to find
 //! eviction candidates.
 //!
-//! # LRU access stamps
+//! # Cost-aware access stamps and the striped clocks
 //!
-//! Every file carries an access stamp ([`FileRecord::last_access`]) from
-//! a namespace-global logical clock, bumped on open
-//! ([`Namespace::note_open`]), close ([`Namespace::note_close`]), every
-//! recorded write, and — now that the stamp is a plain atomic — every
-//! intercepted read ([`Namespace::touch`]), all without extra lock
-//! traffic. Mount-time registration leaves the stamp at 0 ("never
-//! accessed"), so untouched inputs are the coldest candidates. The
-//! evict-to-make-room admission path
-//! (`SeaCore::reserve_on_cache_evicting`) orders its candidate scan
-//! ([`Namespace::cold_cache_replicas`]) by relaxed loads of these
-//! stamps, coldest first.
+//! Every file carries an access stamp ([`FileRecord::last_access`]) plus
+//! a packed GDSF cost stamp ([`FileRecord`]'s `cost_stamp`: access
+//! frequency in the low bits, re-fetch tier distance in the high byte)
+//! and a creation stamp, bumped on open ([`Namespace::note_open`]),
+//! close ([`Namespace::note_close`]), every recorded write, and every
+//! intercepted read ([`Namespace::touch`]) — all relaxed atomics, no
+//! extra lock traffic. Mount-time registration leaves `last_access` at 0
+//! ("never accessed"), so untouched inputs are the coldest candidates.
+//! The evict-to-make-room admission path
+//! (`SeaCore::reserve_on_cache_evicting`) ranks its candidate scan
+//! ([`Namespace::cold_cache_replicas`]) by the configured
+//! [`crate::sched::EvictionPolicy`]: GDSF priority
+//! (frequency × re-fetch cost / size, evict cheapest-to-refetch first),
+//! pure LRU, or FIFO.
+//!
+//! Three clocks back these stamps, each tuned to what its consumers
+//! actually compare (see [`crate::sched`]):
+//!
+//! * **`vgen` — the transition clock.** A single shared `AtomicU64`.
+//!   Only its stamps ever reach the crash journal, whose replay sorts
+//!   records *globally* by `(version, rank)` — so these stamps must be
+//!   totally ordered across threads. They are only taken at
+//!   shard-locked transition sites (create, register, dirty/clean
+//!   transitions, remove, rename, hash records), which are not hot.
+//! * **`wgen` — the hot write clock** ([`crate::sched::HotStampClock`]).
+//!   Thread-striped, uniqueness-only: stamps are tagged with a high bit
+//!   and are *not* comparable across threads. Used solely by
+//!   [`Namespace::publish_write`]'s lock-free version store — every
+//!   consumer of `FileRecord::version` compares for *equality* (did the
+//!   file change under me?), never for order, and these stamps are
+//!   never journaled. This removes the last shared `fetch_add` from the
+//!   steady-state write path.
+//! * **`agen` — the access clock** ([`crate::sched::StripedClock`]).
+//!   Thread-striped with block-batched leases off a shared base:
+//!   per-thread monotone and cross-thread comparable to within one
+//!   block, which is all LRU/FIFO ranking needs.
 //!
 //! Hot paths avoid re-normalising paths via [`CleanPath`] (a proven-clean
 //! logical path), avoid cloning whole [`FileMeta`] records (with their
@@ -293,20 +320,36 @@ pub struct FileRecord {
     /// `swap` it to true — the swap result is what detects the
     /// clean→dirty transition that must take the shard lock.
     dirty: AtomicBool,
-    /// Write generation, stamped from the **namespace-global** counter
-    /// on every recorded write, clean→dirty transition, and
-    /// (re-)creation. Global stamps are never reused across paths or
-    /// file lifetimes, so a flusher comparing its [`DirtyEntry`]
-    /// snapshot cannot be ABA-fooled by truncate or unlink+recreate —
-    /// writes landing *during* a flush copy are never silently marked
-    /// clean. Writers publish the stamp **before** flipping `dirty`;
+    /// Write generation. Every stamp is unique across paths and file
+    /// lifetimes and only ever compared for **equality**, so a flusher
+    /// comparing its [`DirtyEntry`] snapshot cannot be ABA-fooled by
+    /// truncate or unlink+recreate — writes landing *during* a flush
+    /// copy are never silently marked clean. Two disjoint stamp spaces
+    /// feed it (see the module docs on the two-clock discipline): every
+    /// shard-locked transition stamps from the global transition clock
+    /// `vgen` (the only stamps that ever reach the crash journal, which
+    /// sorts by them), while the lock-free steady-state write path
+    /// stamps from the thread-striped [`crate::sched::HotStampClock`]
+    /// (`HOT_BIT`-tagged, unordered, never journaled). Writers publish
+    /// the stamp **before** flipping `dirty`;
     /// [`Namespace::commit_flush`] re-reads it after its own swap.
     version: AtomicU64,
-    /// LRU access stamp from the namespace-global logical clock: bumped
-    /// on open, close, read, and every recorded write (see the module
-    /// docs). 0 = registered at mount and never touched since — the
-    /// coldest possible eviction candidate.
+    /// LRU access stamp from the namespace-global block-batched clock
+    /// ([`crate::sched::StripedClock`]): bumped on open, close, read,
+    /// and every recorded write (see the module docs). 0 = registered
+    /// at mount and never touched since — the coldest possible eviction
+    /// candidate.
     last_access: AtomicU64,
+    /// GDSF cost stamp: access frequency in the low 56 bits (one relaxed
+    /// `fetch_add` on the lock-free write path, plus open/read touches)
+    /// and the re-fetch tier-distance weight in the high 8 bits, written
+    /// during the cold eviction scan (see [`crate::sched::pack_cost`]).
+    /// Approximate by design: a racing weight re-pack may drop a
+    /// concurrent frequency bump — one lost count out of many.
+    cost_stamp: AtomicU64,
+    /// Creation stamp from the access clock, for the `fifo` eviction
+    /// policy. Set once at (re-)creation/registration, never updated.
+    created: AtomicU64,
     /// [`REC_LIVE`] / [`REC_MOVED`] / [`REC_REMOVED`]; transitions only
     /// under the shard lock of the key the meta currently lives at.
     state: AtomicU8,
@@ -324,6 +367,8 @@ impl FileRecord {
             dirty: AtomicBool::new(dirty),
             version: AtomicU64::new(0),
             last_access: AtomicU64::new(0),
+            cost_stamp: AtomicU64::new(0),
+            created: AtomicU64::new(0),
             state: AtomicU8::new(REC_LIVE),
             relocated: Mutex::new(None),
         }
@@ -343,6 +388,16 @@ impl FileRecord {
 
     pub fn last_access(&self) -> u64 {
         self.last_access.load(Ordering::Relaxed)
+    }
+
+    /// Recorded access frequency (the low field of the cost stamp).
+    pub fn freq(&self) -> u64 {
+        crate::sched::cost_freq(self.cost_stamp.load(Ordering::Relaxed))
+    }
+
+    /// Creation stamp on the access clock (the `fifo` policy rank).
+    pub fn created(&self) -> u64 {
+        self.created.load(Ordering::Relaxed)
     }
 
     /// True once unlink or truncate-create retired this record: updates
@@ -602,11 +657,22 @@ impl ShardState {
 #[derive(Debug)]
 pub struct Namespace {
     shards: Vec<RwLock<ShardState>>,
-    /// Global write-generation source. Every issued stamp is unique
-    /// across all paths and file lifetimes (see [`FileMeta::version`]).
+    /// The **transition clock**: global, totally ordered write-generation
+    /// source for every shard-locked stamp site (create/register, dirty
+    /// transitions, flush commits, retire, rename). These are the only
+    /// stamps that ever reach the crash journal — replay reconstructs a
+    /// true serialization by sorting on them, which is exactly why the
+    /// hot path does not use this counter (see `wgen`).
     vgen: AtomicU64,
-    /// Global LRU access clock (see [`FileRecord::last_access`]).
-    agen: AtomicU64,
+    /// The **hot write clock**: thread-striped uniqueness-only stamps
+    /// for the lock-free steady-state publish. `HOT_BIT`-tagged so the
+    /// stamp space is disjoint from `vgen`'s; never journaled, never
+    /// ordered — every consumer compares versions by equality only.
+    wgen: crate::sched::HotStampClock,
+    /// Global LRU access clock (see [`FileRecord::last_access`]):
+    /// block-batched thread stripes, one shared `fetch_add` per 256
+    /// stamps instead of one per access.
+    agen: crate::sched::StripedClock,
     /// Clean-and-closed transition counter: bumped every time a file
     /// (re-)enters the evictable state. The admission path memoises the
     /// value of a scan that found no eviction candidates and skips
@@ -623,7 +689,8 @@ impl Default for Namespace {
         Namespace {
             shards: (0..NS_SHARDS).map(|_| RwLock::new(ShardState::default())).collect(),
             vgen: AtomicU64::new(0),
-            agen: AtomicU64::new(0),
+            wgen: crate::sched::HotStampClock::new(),
+            agen: crate::sched::StripedClock::new(),
             egen: AtomicU64::new(0),
             journal: None,
         }
@@ -673,6 +740,7 @@ fn apply_write(m: &mut FileMeta, new_size: u64, tier: TierIdx, stamp: u64) {
     m.set_dirty(true);
     m.master = tier;
     m.set_last_access(stamp);
+    m.rec.cost_stamp.fetch_add(1, Ordering::Relaxed);
     // a write invalidates stale replicas: only the written tier
     // holds current bytes
     m.replicas.retain(|&t| t == tier);
@@ -712,6 +780,7 @@ impl Namespace {
         let version = fresh_stamp(&self.vgen);
         meta.rec.version.store(version, Ordering::Release);
         meta.set_last_access(stamp);
+        meta.rec.created.store(stamp, Ordering::Relaxed);
         s.dirty.insert(key.clone());
         if let Some(j) = &self.journal {
             j.log_dirty(&key, tier, 0, version, 0);
@@ -723,11 +792,14 @@ impl Namespace {
         prev
     }
 
-    /// A fresh LRU access stamp (monotone per namespace; fetched outside
-    /// the shard lock — strict ordering between racing touches of
-    /// *different* files is irrelevant to an LRU approximation).
+    /// A fresh LRU access stamp (approximately monotone per namespace;
+    /// exactly monotone per thread). Served from the calling thread's
+    /// block lease, so 8 writer threads no longer serialize on one
+    /// shared `fetch_add` per access — strict ordering between racing
+    /// touches of *different* files is irrelevant to an LRU
+    /// approximation, and the lease skew is bounded by one block.
     fn touch_stamp(&self) -> u64 {
-        self.agen.fetch_add(1, Ordering::Relaxed) + 1
+        self.agen.tick()
     }
 
     /// Full clone of the file's meta (cold paths and tests). Hot paths
@@ -795,12 +867,16 @@ impl Namespace {
     /// [`Namespace::create`] + [`Namespace::update`].
     pub fn register_clean(&self, logical: &(impl PathArg + ?Sized), tier: TierIdx, size: u64) {
         let key = logical.to_clean().into_owned();
+        let stamp = self.touch_stamp();
         let mut s = self.shard(&key).write().unwrap();
         let mut meta = FileMeta::new(tier);
         meta.flushed = true;
         meta.set_size(size);
         meta.set_dirty(false);
         meta.rec.version.store(fresh_stamp(&self.vgen), Ordering::Release);
+        // FIFO eviction needs a birth stamp even for mount-time files;
+        // `last_access` deliberately stays 0 ("never accessed").
+        meta.rec.created.store(stamp, Ordering::Relaxed);
         if let Some(prev) = s.files.insert(key, meta) {
             prev.rec.retire_removed();
         }
@@ -829,6 +905,7 @@ impl Namespace {
         let version = fresh_stamp(&self.vgen);
         meta.rec.version.store(version, Ordering::Release);
         meta.set_last_access(stamp);
+        meta.rec.created.store(stamp, Ordering::Relaxed);
         s.dirty.insert(key.clone());
         if let Some(prev) = s.files.insert(key, meta) {
             prev.rec.retire_removed();
@@ -867,11 +944,16 @@ impl Namespace {
     /// lock is taken only on the clean→dirty transition or when the
     /// record was retired by a racing rename (re-resolve, re-memoise).
     ///
-    /// Publish order is load-bearing: size, LRU stamp, then the fresh
-    /// (globally unique) version with `Release`, then the dirty swap —
+    /// Publish order is load-bearing: size, LRU stamp, then a fresh
+    /// never-reused version with `Release`, then the dirty swap —
     /// [`Namespace::commit_flush`] re-reads the version after its own
     /// swap, so a write interleaving with clean-marking is always
-    /// re-detected (see the module docs).
+    /// re-detected (see the module docs). The version stamp comes from
+    /// the thread-striped hot clock, not the global transition clock:
+    /// uniqueness is all the protocol needs (equality-only compares),
+    /// and it removes the last shared `fetch_add` from the steady-state
+    /// path. The cost-stamp frequency bump rides the same cache line as
+    /// the record's other hot fields.
     pub fn publish_write(
         &self,
         rec: &Arc<FileRecord>,
@@ -890,7 +972,8 @@ impl Namespace {
         }
         rec.size.fetch_max(new_size, Ordering::AcqRel);
         rec.last_access.store(self.touch_stamp(), Ordering::Relaxed);
-        rec.version.store(fresh_stamp(&self.vgen), Ordering::Release);
+        rec.cost_stamp.fetch_add(1, Ordering::Relaxed);
+        rec.version.store(self.wgen.stamp(), Ordering::Release);
         if rec.dirty.swap(true, Ordering::AcqRel) {
             // Already dirty: published without any lock. If the file was
             // renamed meanwhile, the record moved with it — the flusher
@@ -969,11 +1052,21 @@ impl Namespace {
             };
             if let Some(invalidated) = invalidated {
                 s.dirty.insert(key.as_str().to_string());
+                // Re-stamp from the transition clock under the shard
+                // lock: the publish stored a striped hot stamp, which
+                // must never reach the journal (replay sorts by version,
+                // and only transition-clock stamps are totally ordered).
+                // A concurrent already-dirty publisher may overwrite this
+                // store with another hot stamp — harmless, every version
+                // consumer compares by equality, and the journaled value
+                // below is the locally-held `version`, not a re-read.
+                let version = fresh_stamp(&self.vgen);
+                rec.version.store(version, Ordering::Release);
                 // The clean→dirty edge of the lock-free write path: the
                 // only transition slow path a steady-state writer ever
                 // takes, and so the journal hook for intercepted writes.
                 if let Some(j) = &self.journal {
-                    j.log_dirty(key.as_str(), tier, rec.size(), rec.version(), 0);
+                    j.log_dirty(key.as_str(), tier, rec.size(), version, 0);
                 }
                 return WriteAck {
                     moved_to: moved.then(|| (key.clone(), shard_idx)),
@@ -1064,22 +1157,31 @@ impl Namespace {
             _ => {}
         }
         if verdict == FlushCommit::Clean {
-            // Journal the dirty→clean edge at the version the flush
-            // copied. A racing write logs a Dirty record with a strictly
-            // newer stamp, so replay keeps the file dirty (see
-            // `crate::journal` for the tie-break).
+            // Journal the dirty→clean edge at a *fresh* transition-clock
+            // stamp, not the drain snapshot: the snapshot may be a
+            // striped hot stamp (unordered, must never reach the
+            // journal). Issued under the shard write lock, the fresh
+            // stamp is strictly after this lifetime's Dirty record and
+            // strictly before any later transition of this file, so
+            // replay orders the Clean correctly; a racing write that
+            // slipped past our version re-check is impossible here (the
+            // re-check after the swap just proved the version stable),
+            // and any *later* write logs a Dirty with a newer stamp, so
+            // replay keeps that file dirty.
             if let Some(j) = &self.journal {
-                j.log_clean(&key, snapshot_version);
+                j.log_clean(&key, fresh_stamp(&self.vgen));
             }
         }
         verdict
     }
 
-    /// Restamp a record's LRU clock (the read path: one relaxed store,
+    /// Restamp a record's LRU clock (the read path: two relaxed ops,
     /// no lock — reads now count as recency directly instead of being
-    /// approximated by the surrounding open/close stamps).
+    /// approximated by the surrounding open/close stamps) and bump its
+    /// GDSF access frequency.
     pub fn touch(&self, rec: &FileRecord) {
         rec.last_access.store(self.touch_stamp(), Ordering::Relaxed);
+        rec.cost_stamp.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Snapshot `(master, size, version)` of a dirty, fully-closed file —
@@ -1106,8 +1208,13 @@ impl Namespace {
     /// same master, still dirty, still closed) — a concurrent reopen or
     /// write between checkpoint and here makes the hash stale, and
     /// skipping it is always safe (hash 0 means "unverifiable", never
-    /// "corrupt"). Appended at the *same* version as the transition it
-    /// annotates; replay's stable sort makes the later append win.
+    /// "corrupt"). Journaled at a *fresh* transition-clock stamp, not
+    /// the checkpoint version: the checkpoint may be a striped hot
+    /// stamp (unordered, never journaled), while the fresh stamp is
+    /// correctly ordered because the shard **read** lock held here
+    /// excludes every shard-locked transition of this key — the hash
+    /// record sorts after the Dirty it annotates and before any later
+    /// transition, so replay's `(version, rank)` sort makes it win.
     pub fn log_dirty_hash(
         &self,
         logical: &(impl PathArg + ?Sized),
@@ -1131,7 +1238,7 @@ impl Namespace {
             })
             .unwrap_or(false);
         if still_valid {
-            j.log_dirty(&key, tier, size, version, hash);
+            j.log_dirty(&key, tier, size, fresh_stamp(&self.vgen), hash);
         }
         still_valid
     }
@@ -1148,7 +1255,11 @@ impl Namespace {
         let s = self.shard(&key).read().unwrap();
         if let Some(m) = s.files.get(&*key) {
             if m.dirty() {
-                j.log_dirty(&key, m.master, m.size(), m.version(), 0);
+                // Fresh transition-clock stamp for the same reason as
+                // `log_dirty_hash`: the live version may be a striped
+                // hot stamp, and the shard read lock orders this record
+                // correctly in the journal.
+                j.log_dirty(&key, m.master, m.size(), fresh_stamp(&self.vgen), 0);
             }
         }
     }
@@ -1164,6 +1275,7 @@ impl Namespace {
         let meta = s.files.get_mut(&*key)?;
         meta.open_count += 1;
         meta.set_last_access(stamp);
+        meta.rec.cost_stamp.fetch_add(1, Ordering::Relaxed);
         Some(meta.rec.clone())
     }
 
@@ -1561,14 +1673,26 @@ impl Namespace {
 
     /// Evict-to-make-room candidate scan: clean, closed files holding
     /// both a replica on cache `tier` and a persisted copy on `persist`
-    /// (so dropping the cache copy loses no data), ordered coldest first
-    /// by [`FileMeta::last_access`]. A snapshot only — callers must
+    /// (so dropping the cache copy loses no data), ranked evict-first by
+    /// `policy` — GDSF priority (frequency × re-fetch weight / size),
+    /// pure LRU recency (the exact pre-sched `(last_access, key, size)`
+    /// tuple order), or FIFO creation order. The scan also re-packs each
+    /// candidate's re-fetch weight (tier distance to its nearest
+    /// surviving replica) into the record's cost stamp, so stats and the
+    /// next scan see current placement; a racing frequency bump dropped
+    /// by that re-pack is benign. A snapshot only — callers must
     /// re-validate under the shard lock ([`Namespace::detach_replica_on`])
     /// before acting, exactly as the flusher's eviction sweep does.
     /// O(files), but only reached when a cache tier is already full, and
     /// rate-limited by the caller's [`Namespace::evict_transitions`]
     /// memo — the admission fast path never scans.
-    pub fn cold_cache_replicas(&self, tier: TierIdx, persist: TierIdx) -> Vec<(String, u64)> {
+    pub fn cold_cache_replicas(
+        &self,
+        tier: TierIdx,
+        persist: TierIdx,
+        policy: crate::sched::EvictionPolicy,
+    ) -> Vec<crate::sched::EvictCandidate> {
+        use crate::sched::{self, EvictCandidate, EvictionPolicy};
         /// One admission attempt never needs more victims than this; a
         /// cheap selection bounds the sort so a huge namespace with many
         /// candidates does not pay an O(n log n) sort per attempt.
@@ -1576,7 +1700,7 @@ impl Namespace {
         if tier == persist {
             return Vec::new();
         }
-        let mut v: Vec<(u64, String, u64)> = Vec::new();
+        let mut v: Vec<EvictCandidate> = Vec::new();
         for shard in &self.shards {
             let s = shard.read().unwrap();
             for (k, m) in &s.files {
@@ -1585,18 +1709,37 @@ impl Namespace {
                     && m.has_replica(tier)
                     && m.has_replica(persist)
                 {
-                    v.push((m.last_access(), k.clone(), m.size()));
+                    let size = m.size();
+                    let stamp = m.rec.cost_stamp.load(Ordering::Relaxed);
+                    let freq = sched::cost_freq(stamp);
+                    let weight = sched::refetch_weight(tier, &m.replicas);
+                    m.rec
+                        .cost_stamp
+                        .store(sched::pack_cost(weight, freq), Ordering::Relaxed);
+                    let priority = sched::gdsf_rank(freq, weight as u64, size);
+                    let rank = match policy {
+                        EvictionPolicy::Gdsf => priority,
+                        EvictionPolicy::Lru => m.last_access(),
+                        EvictionPolicy::Fifo => m.rec.created(),
+                    };
+                    v.push(EvictCandidate {
+                        rank,
+                        key: k.clone(),
+                        size,
+                        refetch_cost: sched::refetch_cost(freq, weight as u64, size),
+                        priority,
+                    });
                 }
             }
         }
         if v.len() > MAX_CANDIDATES {
-            // keep only the MAX_CANDIDATES coldest (O(n) selection),
-            // then sort just those
+            // keep only the MAX_CANDIDATES cheapest-to-evict (O(n)
+            // selection), then sort just those
             v.select_nth_unstable(MAX_CANDIDATES - 1);
             v.truncate(MAX_CANDIDATES);
         }
         v.sort();
-        v.into_iter().map(|(_, k, size)| (k, size)).collect()
+        v
     }
 
     /// Snapshot of clean, closed files (eviction candidates).
@@ -2011,6 +2154,13 @@ mod tests {
 
     #[test]
     fn access_stamps_order_cold_cache_replicas() {
+        use crate::sched::EvictionPolicy;
+        let lru_keys = |ns: &Namespace| -> Vec<String> {
+            ns.cold_cache_replicas(0, 2, EvictionPolicy::Lru)
+                .into_iter()
+                .map(|c| c.key)
+                .collect()
+        };
         let ns = Namespace::new();
         let persist = 2;
         for p in ["/a", "/b", "/c"] {
@@ -2018,31 +2168,69 @@ mod tests {
             ns.add_replica(p, 0);
         }
         // untouched files are tied at stamp 0 → path order
+        let first: Vec<(String, u64)> = ns
+            .cold_cache_replicas(0, persist, EvictionPolicy::Lru)
+            .into_iter()
+            .map(|c| (c.key, c.size))
+            .collect();
         assert_eq!(
-            ns.cold_cache_replicas(0, persist),
+            first,
             vec![("/a".to_string(), 10), ("/b".to_string(), 10), ("/c".to_string(), 10)]
         );
         // touching /a makes it the hottest
         ns.note_open("/a").unwrap();
         ns.note_close("/a");
-        let cold: Vec<String> =
-            ns.cold_cache_replicas(0, persist).into_iter().map(|(k, _)| k).collect();
-        assert_eq!(cold, vec!["/b", "/c", "/a"]);
+        assert_eq!(lru_keys(&ns), vec!["/b", "/c", "/a"]);
         // open files and dirty files are not candidates
         ns.note_open("/b").unwrap();
         ns.record_write("/c", 20, 0);
-        let cold: Vec<String> =
-            ns.cold_cache_replicas(0, persist).into_iter().map(|(k, _)| k).collect();
-        assert_eq!(cold, vec!["/a"]);
+        assert_eq!(lru_keys(&ns), vec!["/a"]);
         // files without a persist replica are never offered
         ns.create("/cache-only", 0);
         ns.update("/cache-only", |m| m.set_dirty(false));
-        assert!(!ns
-            .cold_cache_replicas(0, persist)
-            .iter()
-            .any(|(k, _)| k == "/cache-only"));
+        assert!(!lru_keys(&ns).iter().any(|k| k == "/cache-only"));
         // tier == persist is never a valid scan
-        assert!(ns.cold_cache_replicas(persist, persist).is_empty());
+        assert!(ns
+            .cold_cache_replicas(persist, persist, EvictionPolicy::Lru)
+            .is_empty());
+    }
+
+    #[test]
+    fn gdsf_ranks_cheap_large_cold_files_first() {
+        use crate::sched::EvictionPolicy;
+        let ns = Namespace::new();
+        let persist = 2;
+        // /big: 64 MiB, touched once at mount. /small: 4 KiB, hammered.
+        ns.register_clean("/big", persist, 64 << 20);
+        ns.add_replica("/big", 0);
+        ns.register_clean("/small", persist, 4 << 10);
+        ns.add_replica("/small", 0);
+        for _ in 0..100 {
+            let rec = ns.note_open("/small").unwrap();
+            ns.touch(&rec);
+            ns.note_close("/small");
+        }
+        // LRU would evict /big or /small purely by recency (/big is
+        // colder); GDSF agrees here but for the cost reason: the big
+        // cold file has by far the lowest freq × weight / size.
+        let gdsf = ns.cold_cache_replicas(0, persist, EvictionPolicy::Gdsf);
+        assert_eq!(gdsf[0].key, "/big");
+        assert!(gdsf[0].priority < gdsf[1].priority);
+        // refetch accounting scales with size and frequency
+        assert!(gdsf[0].refetch_cost > 0);
+        // now make /small the *recently cold* one: LRU evicts /small
+        // first, GDSF still protects the hot small file over the big
+        // cold one.
+        let rec = ns.note_open("/big").unwrap();
+        ns.touch(&rec);
+        ns.note_close("/big");
+        let lru = ns.cold_cache_replicas(0, persist, EvictionPolicy::Lru);
+        assert_eq!(lru[0].key, "/small");
+        let gdsf = ns.cold_cache_replicas(0, persist, EvictionPolicy::Gdsf);
+        assert_eq!(gdsf[0].key, "/big", "GDSF ranks by cost, not recency");
+        // FIFO ranks by creation stamp: /big was registered first
+        let fifo = ns.cold_cache_replicas(0, persist, EvictionPolicy::Fifo);
+        assert_eq!(fifo[0].key, "/big");
     }
 
     #[test]

@@ -298,38 +298,46 @@ fn stage_one_inner(core: &SeaCore, logical: &CleanPath) -> StageOutcome {
         return StageOutcome::Skipped;
     }
     // Evict-to-make-room reservation: a full cache drains cold clean
-    // replicas (LRU) before this gives up — staging no longer skips work
-    // just because the tier is momentarily full.
+    // replicas (ranked by the configured eviction policy) before this
+    // gives up — staging no longer skips work just because the tier is
+    // momentarily full.
     let Some(target) = core.reserve_on_cache_evicting(size) else {
         return StageOutcome::NoSpace;
     };
-    let result = core.transfers.copy(core, logical.as_str(), persist, target, |_bytes| {
-        // Under the fence: record the replica only if nothing moved the
-        // file meanwhile; otherwise discard the fresh copy while the
-        // fence still excludes racing creates from the same physical
-        // path. The open_count re-check matters: a descriptor opened
-        // (ReadWrite, no write yet — same version) since the eligibility
-        // check is bound to the persist tier, and its first write would
-        // drop this replica from the namespace while the reservation
-        // and the physical copy stayed behind.
-        let mut ok = false;
-        let known = core.ns.update(logical, |m| {
-            if m.version() == version
-                && !m.dirty()
-                && m.open_count == 0
-                && m.master == persist
-                && !m.replicas.contains(&target)
-            {
-                m.replicas.push(target);
-                ok = true;
+    let result = core.transfers.copy(
+        core,
+        logical.as_str(),
+        persist,
+        target,
+        crate::sched::IoClass::Background,
+        |_bytes| {
+            // Under the fence: record the replica only if nothing moved the
+            // file meanwhile; otherwise discard the fresh copy while the
+            // fence still excludes racing creates from the same physical
+            // path. The open_count re-check matters: a descriptor opened
+            // (ReadWrite, no write yet — same version) since the eligibility
+            // check is bound to the persist tier, and its first write would
+            // drop this replica from the namespace while the reservation
+            // and the physical copy stayed behind.
+            let mut ok = false;
+            let known = core.ns.update(logical, |m| {
+                if m.version() == version
+                    && !m.dirty()
+                    && m.open_count == 0
+                    && m.master == persist
+                    && !m.replicas.contains(&target)
+                {
+                    m.replicas.push(target);
+                    ok = true;
+                }
+            });
+            if !(known && ok) {
+                let _ = std::fs::remove_file(core.tiers.get(target).physical(logical));
+                core.tiers.get(target).release(size);
             }
-        });
-        if !(known && ok) {
-            let _ = std::fs::remove_file(core.tiers.get(target).physical(logical));
-            core.tiers.get(target).release(size);
-        }
-        ok
-    });
+            ok
+        },
+    );
     match result {
         Ok(Outcome::Done { bytes, commit: true }) => StageOutcome::Staged(bytes),
         Ok(Outcome::Done { .. }) => StageOutcome::Skipped, // raced; cleaned up under the fence
@@ -384,9 +392,14 @@ pub fn stage_listed(core: &SeaCore) -> Result<PrefetchReport, (String, std::io::
             token,
         });
     }
-    let results = core.transfers.run_batch(core, jobs, |job: &BatchJob, _bytes: u64| {
-        core.ns.add_replica(&job.logical, job.to);
-    });
+    let results = core.transfers.run_batch(
+        core,
+        jobs,
+        crate::sched::IoClass::Background,
+        |job: &BatchJob, _bytes: u64| {
+            core.ns.add_replica(&job.logical, job.to);
+        },
+    );
     let mut first_err: Option<(String, std::io::Error)> = None;
     for (job, res) in results {
         let (target, size) = reservations[job.token];
@@ -440,7 +453,9 @@ impl PrefetcherHandle {
     /// re-queued at the tail of its own priority class rather than
     /// retried hot (so a deferred promote still beats every readahead
     /// hint), and a drain that staged nothing while deferring backs off
-    /// briefly instead of spinning on a full cache.
+    /// briefly instead of spinning on a full cache. Both requeue sites
+    /// re-check the stop signal first so a racing shutdown never sees
+    /// the queue refilled after `stop()` already drained it.
     pub fn spawn(core: Arc<SeaCore>) -> PrefetcherHandle {
         let loop_core = core.clone();
         let join = std::thread::Builder::new()
@@ -474,9 +489,17 @@ impl PrefetcherHandle {
                                     // that becomes invalid meanwhile
                                     // re-validates to Skipped and
                                     // leaves the queue for good.
-                                    deferred |= loop_core
-                                        .prefetch
-                                        .push(PrefetchRequest::Stage(path));
+                                    // Re-check stop first: a shutdown
+                                    // racing this drain must not see the
+                                    // queue refilled after `stop()`
+                                    // drained it — the requeue would
+                                    // leave a stale entry behind the
+                                    // thread's exit.
+                                    if !done(&loop_core) {
+                                        deferred |= loop_core
+                                            .prefetch
+                                            .push(PrefetchRequest::Stage(path));
+                                    }
                                 }
                             }
                             PrefetchRequest::Readahead(origin) => {
@@ -494,9 +517,14 @@ impl PrefetcherHandle {
                                         // move on — promote requests and
                                         // later evictions may free room
                                         // before it comes around again.
-                                        deferred |= loop_core.prefetch.push(
-                                            PrefetchRequest::Readahead(origin.clone()),
-                                        );
+                                        // Same stop re-check as the Stage
+                                        // requeue: never refill a queue a
+                                        // racing `stop()` already drained.
+                                        if !done(&loop_core) {
+                                            deferred |= loop_core.prefetch.push(
+                                                PrefetchRequest::Readahead(origin.clone()),
+                                            );
+                                        }
                                         break;
                                     }
                                 }

@@ -12,6 +12,27 @@
 //!
 //! Shaping is *honest waiting*: callers really block, so real-mode
 //! experiments measure true elapsed time.
+//!
+//! ## Two-class throttle protocol
+//!
+//! A shaped tier's bandwidth budget is shared by two kinds of traffic with
+//! very different urgency: *foreground* (the application blocked inside an
+//! intercepted `read`/`write`, or the flusher persisting dirty bytes the
+//! application is waiting on) and *background* (prefetch staging, bulk
+//! tier-to-tier transfer). The raw token bucket is therefore wrapped in a
+//! [`crate::sched::QosThrottle`]: every acquisition names an
+//! [`crate::sched::IoClass`], foreground waits charge a *debt* counter,
+//! and background acquisitions yield in bounded slices while foreground
+//! waiters are live or debt is unpaid (capped ≈250 ms so background never
+//! starves outright). [`Tier::wait_data`] is the foreground entry point —
+//! all pre-existing call sites keep their behaviour — and
+//! [`Tier::wait_data_class`] is what the transfer engine routes through
+//! with an explicit class. The split is toggled at mount via
+//! [`Tier::set_qos`] (config `[sched] qos`); disabled, both classes
+//! collapse to the old single-queue bucket. All QoS state is lock-free
+//! atomics around the bucket's own mutex, so the protocol adds no lock
+//! ordering edges: throttles remain self-contained leaves that may be
+//! waited on under any higher-level lock.
 
 pub mod throttle;
 
@@ -22,6 +43,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
 
 use crate::config::CacheDef;
+use crate::sched::{IoClass, QosSnapshot, QosThrottle};
 
 /// Index of a tier within a [`TierSet`]: caches first (0 = fastest),
 /// persistent store last.
@@ -34,7 +56,7 @@ pub struct Tier {
     root: PathBuf,
     capacity: u64,
     used: AtomicU64,
-    data_throttle: Option<Throttle>,
+    data_throttle: Option<QosThrottle>,
     meta_latency: Option<Duration>,
     /// Dropout flag (fault injection): a down tier refuses transfers at
     /// [`Tier::check_up`] call sites. Never set in production mounts.
@@ -57,8 +79,14 @@ impl Tier {
 
     /// Cap data bandwidth (bytes/s) through this tier. The burst window is
     /// 50 ms so even sub-second experiments see the cap.
+    ///
+    /// Panics on a non-positive/non-finite rate — programmatic builder for
+    /// tests and benches; config-driven paths validate first via
+    /// [`Throttle::with_burst`].
     pub fn with_bandwidth_limit(mut self, bytes_per_sec: f64) -> Tier {
-        self.data_throttle = Some(Throttle::with_burst(bytes_per_sec, 0.05));
+        let bucket = Throttle::with_burst(bytes_per_sec, 0.05)
+            .expect("tier bandwidth limit must be finite and > 0");
+        self.data_throttle = Some(QosThrottle::new(bucket));
         self
     }
 
@@ -127,11 +155,32 @@ impl Tier {
         }
     }
 
-    /// Block for the tier's data-bandwidth budget before moving `bytes`.
+    /// Block for the tier's data-bandwidth budget before moving `bytes`
+    /// as foreground (application-blocking) traffic.
     pub fn wait_data(&self, bytes: u64) {
+        self.wait_data_class(bytes, IoClass::Foreground);
+    }
+
+    /// Block for the tier's data-bandwidth budget before moving `bytes`
+    /// under an explicit bandwidth class (see the module docs for the
+    /// two-class protocol).
+    pub fn wait_data_class(&self, bytes: u64, class: IoClass) {
         if let Some(t) = &self.data_throttle {
-            t.acquire(bytes as f64);
+            t.acquire(bytes, class);
         }
+    }
+
+    /// Enable/disable the foreground/background class split on this
+    /// tier's throttle (config `[sched] qos`); no-op on unshaped tiers.
+    pub fn set_qos(&self, on: bool) {
+        if let Some(t) = &self.data_throttle {
+            t.set_enabled(on);
+        }
+    }
+
+    /// Per-class bandwidth counters, when this tier is shaped.
+    pub fn qos_snapshot(&self) -> Option<QosSnapshot> {
+        self.data_throttle.as_ref().map(|t| t.snapshot())
     }
 
     /// Block for one metadata operation (open/create/stat/unlink/rename).
@@ -261,7 +310,8 @@ impl TierSet {
     /// the tier set knows nothing about which replicas are cold or
     /// clean. The evict-to-make-room admission path lives one layer up
     /// in `SeaCore::reserve_on_cache_evicting`, which drains cold clean
-    /// replicas (LRU over the namespace access stamps, fence-skipping)
+    /// replicas (ranked by the configured eviction policy — GDSF
+    /// cost-aware by default, see [`crate::sched`] — fence-skipping)
     /// and then retries this reservation.
     pub fn reserve_on_cache(&self, bytes: u64) -> Option<TierIdx> {
         self.caches()
@@ -379,6 +429,20 @@ mod tests {
         let dt = t0.elapsed().as_secs_f64();
         assert!(dt >= 0.04, "dt={dt}");
         assert!(tier.is_throttled());
+    }
+
+    #[test]
+    fn qos_counters_split_by_class() {
+        let (_g, def) = tmp("qos");
+        let tier = Tier::new(&def).unwrap().with_bandwidth_limit(1e9);
+        tier.set_qos(true);
+        tier.wait_data(100); // foreground entry point
+        tier.wait_data_class(200, IoClass::Background);
+        let snap = tier.qos_snapshot().unwrap();
+        assert_eq!(snap.fg_bytes, 100);
+        assert_eq!(snap.bg_bytes, 200);
+        let (_g2, def2) = tmp("qos-off");
+        assert!(Tier::new(&def2).unwrap().qos_snapshot().is_none());
     }
 
     #[test]

@@ -23,21 +23,32 @@ pub struct Throttle {
 }
 
 impl Throttle {
-    pub fn new(rate: f64) -> Throttle {
+    pub fn new(rate: f64) -> Result<Throttle, String> {
         Throttle::with_burst(rate, 1.0)
     }
 
     /// `burst_secs` seconds of budget may pass without waiting.
-    pub fn with_burst(rate: f64, burst_secs: f64) -> Throttle {
-        assert!(rate > 0.0 && burst_secs > 0.0);
-        Throttle {
+    ///
+    /// Rejects non-finite or non-positive rates/bursts: a zero or negative
+    /// rate would make the refill computation divide by zero (`NaN`/`inf`
+    /// sleep durations), turning every acquire into an unbounded hang.
+    pub fn with_burst(rate: f64, burst_secs: f64) -> Result<Throttle, String> {
+        if !rate.is_finite() || rate <= 0.0 {
+            return Err(format!("throttle rate must be finite and > 0, got {rate}"));
+        }
+        if !burst_secs.is_finite() || burst_secs <= 0.0 {
+            return Err(format!(
+                "throttle burst must be finite and > 0 seconds, got {burst_secs}"
+            ));
+        }
+        Ok(Throttle {
             rate,
             burst: rate * burst_secs,
             state: Mutex::new(BucketState {
                 tokens: rate * burst_secs,
                 last_refill: Instant::now(),
             }),
-        }
+        })
     }
 
     pub fn rate(&self) -> f64 {
@@ -46,16 +57,26 @@ impl Throttle {
 
     /// Take `amount` tokens, sleeping as required. Large requests are
     /// split so concurrent callers interleave fairly.
-    pub fn acquire(&self, mut amount: f64) {
-        let chunk = self.burst.max(1.0);
-        while amount > 0.0 {
-            let take = amount.min(chunk);
-            self.acquire_once(take);
-            amount -= take;
-        }
+    pub fn acquire(&self, amount: f64) {
+        self.acquire_tracked(amount);
     }
 
-    fn acquire_once(&self, amount: f64) {
+    /// Like [`acquire`](Throttle::acquire), but reports whether the caller
+    /// had to sleep for tokens — the signal the two-class QoS layer uses to
+    /// charge background debt for foreground waits.
+    pub fn acquire_tracked(&self, mut amount: f64) -> bool {
+        let chunk = self.burst.max(1.0);
+        let mut waited = false;
+        while amount > 0.0 {
+            let take = amount.min(chunk);
+            waited |= self.acquire_once(take);
+            amount -= take;
+        }
+        waited
+    }
+
+    fn acquire_once(&self, amount: f64) -> bool {
+        let mut waited = false;
         loop {
             let wait = {
                 let mut st = self.state.lock().unwrap();
@@ -65,11 +86,12 @@ impl Throttle {
                 st.last_refill = now;
                 if st.tokens >= amount {
                     st.tokens -= amount;
-                    return;
+                    return waited;
                 }
                 // sleep until enough tokens accumulate
                 (amount - st.tokens) / self.rate
             };
+            waited = true;
             std::thread::sleep(Duration::from_secs_f64(wait.min(0.25)));
         }
     }
@@ -80,8 +102,30 @@ mod tests {
     use super::*;
 
     #[test]
+    fn invalid_rate_or_burst_is_a_config_error() {
+        assert!(Throttle::with_burst(0.0, 1.0).is_err());
+        assert!(Throttle::with_burst(-5.0, 1.0).is_err());
+        assert!(Throttle::with_burst(f64::NAN, 1.0).is_err());
+        assert!(Throttle::with_burst(f64::INFINITY, 1.0).is_err());
+        assert!(Throttle::with_burst(1000.0, 0.0).is_err());
+        assert!(Throttle::with_burst(1000.0, -1.0).is_err());
+        assert!(Throttle::with_burst(1000.0, f64::NAN).is_err());
+        assert!(Throttle::new(0.0).is_err());
+        assert!(Throttle::new(1000.0).is_ok());
+    }
+
+    #[test]
+    fn acquire_tracked_reports_sleeps() {
+        let t = Throttle::with_burst(1_000_000.0, 1.0).unwrap();
+        // fits the burst: no wait
+        assert!(!t.acquire_tracked(1000.0));
+        // drains past the burst: must sleep at least once
+        assert!(t.acquire_tracked(2_000_000.0));
+    }
+
+    #[test]
     fn burst_passes_instantly() {
-        let t = Throttle::new(1000.0);
+        let t = Throttle::new(1000.0).unwrap();
         let start = Instant::now();
         t.acquire(500.0);
         assert!(start.elapsed() < Duration::from_millis(20));
@@ -89,7 +133,7 @@ mod tests {
 
     #[test]
     fn sustained_rate_enforced() {
-        let t = Throttle::new(10_000.0);
+        let t = Throttle::new(10_000.0).unwrap();
         let start = Instant::now();
         // 20k tokens at 10k/s with a 10k burst -> >= ~1 s total
         t.acquire(20_000.0);
@@ -101,7 +145,7 @@ mod tests {
     #[test]
     fn concurrent_acquires_share_rate() {
         use std::sync::Arc;
-        let t = Arc::new(Throttle::new(20_000.0));
+        let t = Arc::new(Throttle::new(20_000.0).unwrap());
         let start = Instant::now();
         let handles: Vec<_> = (0..4)
             .map(|_| {

@@ -54,6 +54,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::intercept::SeaCore;
 use crate::namespace::CleanPath;
+use crate::sched::IoClass;
 use crate::tiers::TierIdx;
 
 /// Marker embedded in every in-flight destination temp name. Paths whose
@@ -306,23 +307,29 @@ impl TransferEngine {
     /// in place — namespace bookkeeping goes there, so racing metadata
     /// ops (which block on the same fence) see all of the transfer or
     /// none of it. Returns [`Outcome::Busy`] without copying when the
-    /// path's fence is already held.
+    /// path's fence is already held. `class` is the bandwidth class the
+    /// copy's throttle waits are charged to: background callers
+    /// (prefetch staging, bulk flush batches on an idle mount) yield to
+    /// foreground pressure on QoS-shaped tiers.
     pub fn copy<V>(
         &self,
         core: &SeaCore,
         logical: &str,
         from: TierIdx,
         to: TierIdx,
+        class: IoClass,
         commit: impl FnOnce(u64) -> V,
     ) -> std::io::Result<Outcome<V>> {
         match self.fences.begin(logical) {
-            Some(guard) => self.copy_under(core, &guard, logical, from, to, commit),
+            Some(guard) => self.copy_under(core, &guard, logical, from, to, class, commit),
             None => Ok(Outcome::Busy),
         }
     }
 
     /// Blocking variant: cancels and waits out any in-flight holder
     /// first (the spill path's "my write must proceed"). Never `Busy`.
+    /// Always foreground: every caller is on an application-blocking
+    /// path.
     pub fn copy_now<V>(
         &self,
         core: &SeaCore,
@@ -332,7 +339,7 @@ impl TransferEngine {
         commit: impl FnOnce(u64) -> V,
     ) -> std::io::Result<Outcome<V>> {
         let guard = self.fences.block(logical);
-        self.copy_under(core, &guard, logical, from, to, commit)
+        self.copy_under(core, &guard, logical, from, to, IoClass::Foreground, commit)
     }
 
     fn copy_under<V>(
@@ -342,10 +349,11 @@ impl TransferEngine {
         logical: &str,
         from: TierIdx,
         to: TierIdx,
+        class: IoClass,
         commit: impl FnOnce(u64) -> V,
     ) -> std::io::Result<Outcome<V>> {
         let t0 = core.obs.start();
-        let res = self.copy_under_inner(core, guard, logical, from, to, commit);
+        let res = self.copy_under_inner(core, guard, logical, from, to, class, commit);
         let (bytes, outcome) = match &res {
             Ok(Outcome::Done { bytes, .. }) => (*bytes, crate::obs::EventOutcome::Ok),
             Ok(Outcome::Cancelled) => (0, crate::obs::EventOutcome::Cancelled),
@@ -370,6 +378,7 @@ impl TransferEngine {
         logical: &str,
         from: TierIdx,
         to: TierIdx,
+        class: IoClass,
         commit: impl FnOnce(u64) -> V,
     ) -> std::io::Result<Outcome<V>> {
         let dst_path = core.tiers.get(to).physical(logical);
@@ -386,7 +395,7 @@ impl TransferEngine {
         }
         core.tiers.get(from).wait_meta();
         core.tiers.get(to).wait_meta();
-        let total = match self.copy_bytes(core, guard, logical, from, to, &tmp_path) {
+        let total = match self.copy_bytes(core, guard, logical, from, to, class, &tmp_path) {
             Ok(Some(total)) => total,
             Ok(None) => {
                 let _ = std::fs::remove_file(&tmp_path);
@@ -431,6 +440,7 @@ impl TransferEngine {
         logical: &str,
         from: TierIdx,
         to: TierIdx,
+        class: IoClass,
         tmp_path: &std::path::Path,
     ) -> std::io::Result<Option<u64>> {
         core.tiers.get(from).check_up()?;
@@ -452,8 +462,8 @@ impl TransferEngine {
                 if guard.cancelled() {
                     return Ok(None);
                 }
-                core.tiers.get(from).wait_data(slice.len() as u64);
-                core.tiers.get(to).wait_data(slice.len() as u64);
+                core.tiers.get(from).wait_data_class(slice.len() as u64, class);
+                core.tiers.get(to).wait_data_class(slice.len() as u64, class);
                 core.faults.check_io("copy.write")?;
                 if let Some(limit) = torn_at {
                     let room = limit.saturating_sub(total);
@@ -485,10 +495,14 @@ impl TransferEngine {
     /// job's `commit` runs under that job's fence on the worker thread;
     /// results come back in submission order for serial post-processing.
     /// Jobs whose fence is held report [`Outcome::Busy`] (no waiting).
+    /// `class` applies to every job's throttle waits — the flusher's
+    /// persist drain is foreground (dirty data durability blocks the
+    /// application's progress budget), prefetch staging is background.
     pub fn run_batch<V, C>(
         &self,
         core: &SeaCore,
         jobs: Vec<BatchJob>,
+        class: IoClass,
         commit: C,
     ) -> Vec<BatchResult<V>>
     where
@@ -504,9 +518,10 @@ impl TransferEngine {
             return jobs
                 .into_iter()
                 .map(|job| {
-                    let r = self.copy(core, job.logical.as_str(), job.from, job.to, |b| {
-                        commit(&job, b)
-                    });
+                    let r =
+                        self.copy(core, job.logical.as_str(), job.from, job.to, class, |b| {
+                            commit(&job, b)
+                        });
                     (job, r)
                 })
                 .collect();
@@ -526,9 +541,10 @@ impl TransferEngine {
                             break;
                         }
                         let job = &jobs_ref[i];
-                        let r = self.copy(core, job.logical.as_str(), job.from, job.to, |b| {
-                            commit_ref(job, b)
-                        });
+                        let r = self
+                            .copy(core, job.logical.as_str(), job.from, job.to, class, |b| {
+                                commit_ref(job, b)
+                            });
                         *slots_ref[i].lock().unwrap() = Some(r);
                     });
                 }
@@ -619,7 +635,7 @@ mod tests {
         let mut committed = 0u64;
         let out = core
             .transfers
-            .copy(core, "/d/a.out", 0, persist, |b| {
+            .copy(core, "/d/a.out", 0, persist, IoClass::Foreground, |b| {
                 committed = b;
             })
             .unwrap();
@@ -642,7 +658,10 @@ mod tests {
         let core = sea.core();
         let persist = core.tiers.persist_idx();
         let _held = core.transfers.fences.begin("/d/b.out").unwrap();
-        let out = core.transfers.copy(core, "/d/b.out", 0, persist, |_| ()).unwrap();
+        let out = core
+            .transfers
+            .copy(core, "/d/b.out", 0, persist, IoClass::Background, |_| ())
+            .unwrap();
         assert!(matches!(out, Outcome::Busy));
         assert!(!core.tiers.persist().physical("/d/b.out").exists());
     }
@@ -712,13 +731,16 @@ mod tests {
         let persist = core.tiers.persist_idx();
         let err = core
             .transfers
-            .copy(core, "/d/e.out", 0, persist, |_| ())
+            .copy(core, "/d/e.out", 0, persist, IoClass::Foreground, |_| ())
             .unwrap_err();
         assert!(err.to_string().contains("injected EIO"), "{err}");
         assert_eq!(core.transfers.stats.errors(), 1);
         assert!(!core.tiers.persist().physical("/d/e.out").exists());
         // The fault is one-shot: the retry succeeds.
-        let out = core.transfers.copy(core, "/d/e.out", 0, persist, |_| ()).unwrap();
+        let out = core
+            .transfers
+            .copy(core, "/d/e.out", 0, persist, IoClass::Foreground, |_| ())
+            .unwrap();
         assert!(out.is_done());
     }
 
@@ -736,7 +758,7 @@ mod tests {
         let persist = core.tiers.persist_idx();
         let err = core
             .transfers
-            .copy(core, "/d/t.out", 0, persist, |_| ())
+            .copy(core, "/d/t.out", 0, persist, IoClass::Foreground, |_| ())
             .unwrap_err();
         assert!(err.to_string().contains("torn"), "{err}");
         assert!(!core.tiers.persist().physical("/d/t.out").exists());
@@ -764,7 +786,7 @@ mod tests {
         let persist = core.tiers.persist_idx();
         let err = core
             .transfers
-            .copy(core, "/d/dn.out", 0, persist, |_| ())
+            .copy(core, "/d/dn.out", 0, persist, IoClass::Foreground, |_| ())
             .unwrap_err();
         assert!(err.to_string().contains("down"), "{err}");
         assert!(!core.tiers.persist().physical("/d/dn.out").exists());
@@ -787,7 +809,7 @@ mod tests {
                 token: i,
             })
             .collect();
-        let results = core.transfers.run_batch(core, jobs, |job, bytes| {
+        let results = core.transfers.run_batch(core, jobs, IoClass::Background, |job, bytes| {
             assert_eq!(bytes, 512);
             job.token
         });

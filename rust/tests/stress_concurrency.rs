@@ -727,3 +727,127 @@ fn rename_storm_against_background_flusher_converges() {
     }
     assert_no_temp_litter(persist.root());
 }
+
+/// One run of the mixed-size eviction workload under `policy`: 8 threads
+/// create hot 4 KiB files and cold 64 MiB volumes against an undersized
+/// cache, a flush turns the survivors into clean dual-replica eviction
+/// candidates, and one more 64 MiB create forces the eviction path.
+/// Returns the scheduler counters, how many hot files kept their cache
+/// replica, and whether the cached cold volume survived.
+fn mixed_size_eviction_run(policy: &str) -> (sea::sched::SchedSnapshot, usize, bool) {
+    const SMALL_THREADS: usize = 6;
+    const SMALLS_PER_THREAD: usize = 8;
+    const SMALL: usize = 4 * 1024;
+    const BIG: usize = 64 * MIB as usize;
+
+    let dir = tempdir("stress-gdsf");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 80 * MIB)
+        .persist("lustre", dir.subdir("lustre"), u64::MAX / 4)
+        .flusher(false, 100)
+        .prefetcher(false)
+        .promote_on_read(false)
+        .readahead(0)
+        .sched_policy(policy)
+        .build();
+    let sea = SeaIo::mount_with(cfg, SeaLists::flush_all(), |t| t).unwrap();
+    let sea = &sea;
+
+    // 8 threads, mixed sizes, all racing the undersized cache: six
+    // create the hot 4 KiB set, two create one 64 MiB volume each (the
+    // cache can hold only one of the two — the loser falls through to
+    // the persist tier, which is itself part of the stress).
+    let barrier = Barrier::new(SMALL_THREADS + 2);
+    std::thread::scope(|s| {
+        for w in 0..SMALL_THREADS {
+            let barrier = &barrier;
+            s.spawn(move || {
+                barrier.wait();
+                for i in 0..SMALLS_PER_THREAD {
+                    let p = format!("/hot/w{w}-{i}.out");
+                    let fd = sea.create(&p).unwrap();
+                    sea.write(fd, &vec![1u8; SMALL]).unwrap();
+                    sea.close(fd).unwrap();
+                }
+            });
+        }
+        for b in 0..2 {
+            let barrier = &barrier;
+            s.spawn(move || {
+                barrier.wait();
+                let p = format!("/cold/big{b}.out");
+                let fd = sea.create(&p).unwrap();
+                sea.write(fd, &vec![2u8; BIG]).unwrap();
+                sea.close(fd).unwrap();
+            });
+        }
+    });
+
+    // Drain everything dirty: the cache residents become clean
+    // dual-replica (cache + persist) eviction candidates.
+    let core = sea.core();
+    let rep = flush_pass(core, false);
+    assert_eq!(rep.errors, 0, "{rep:?}");
+
+    // Hammer the hot set: high access frequency, but *older* access
+    // stamps than the cold volume's final touch below — exactly the
+    // shape where recency (LRU) and cost (GDSF) disagree.
+    for _ in 0..8 {
+        for w in 0..SMALL_THREADS {
+            for i in 0..SMALLS_PER_THREAD {
+                let fd = sea.open(&format!("/hot/w{w}-{i}.out"), OpenMode::Read).unwrap();
+                sea.close(fd).unwrap();
+            }
+        }
+    }
+    let cached_big = (0..2)
+        .map(|b| format!("/cold/big{b}.out"))
+        .find(|p| core.ns.with_meta(p, |m| m.has_replica(0)).unwrap())
+        .expect("one cold volume must have won the cache");
+    let fd = sea.open(&cached_big, OpenMode::Read).unwrap();
+    sea.close(fd).unwrap();
+
+    // Pressure: one more 64 MiB create only fits by evicting.
+    let fd = sea.create("/probe.out").unwrap();
+    sea.write(fd, &vec![3u8; BIG]).unwrap();
+    sea.close(fd).unwrap();
+
+    let hot_survivors = (0..SMALL_THREADS)
+        .flat_map(|w| (0..SMALLS_PER_THREAD).map(move |i| format!("/hot/w{w}-{i}.out")))
+        .filter(|p| core.ns.with_meta(p, |m| m.has_replica(0)).unwrap())
+        .count();
+    let big_survived = core.ns.with_meta(&cached_big, |m| m.has_replica(0)).unwrap();
+    (core.sched.snapshot(), hot_survivors, big_survived)
+}
+
+#[test]
+fn gdsf_beats_lru_on_refetch_cost_for_mixed_sizes() {
+    const HOT_FILES: usize = 48; // 6 threads × 8 files
+
+    let (gdsf, gdsf_hot, gdsf_big) = mixed_size_eviction_run("gdsf");
+    let (lru, lru_hot, lru_big) = mixed_size_eviction_run("lru");
+
+    // GDSF drains the one cheap-per-byte cold volume and keeps the whole
+    // hammered hot set resident.
+    assert!(gdsf.evictions >= 1, "{gdsf:?}");
+    assert!(!gdsf_big, "gdsf must evict the cold 64 MiB volume");
+    assert_eq!(gdsf_hot, HOT_FILES, "gdsf must keep the hot set cached");
+
+    // The old ordering: LRU walks oldest-stamp-first, so it ages out the
+    // entire hot set (older stamps) before reaching the cold volume it
+    // must evict anyway.
+    assert!(!lru_big, "lru also frees the big volume in the end");
+    assert_eq!(lru_hot, 0, "lru must reproduce oldest-first eviction");
+    assert_eq!(
+        lru.evictions,
+        gdsf.evictions + HOT_FILES as u64,
+        "lru pays {HOT_FILES} extra evictions for the same demand"
+    );
+
+    // The headline: same staging demand, strictly lower aggregate
+    // re-fetch cost under GDSF.
+    assert!(
+        gdsf.refetch_cost < lru.refetch_cost,
+        "gdsf {gdsf:?} must charge strictly less than lru {lru:?}"
+    );
+}
