@@ -296,6 +296,10 @@ fn cmd_run(mut a: Args) -> Result<()> {
             "{}",
             crate::experiments::report::fmt_sched(&report.metrics)
         );
+        println!(
+            "{}",
+            crate::experiments::report::fmt_health(&report.metrics)
+        );
         let latency = crate::experiments::report::fmt_latency(&report.metrics);
         if !latency.is_empty() {
             println!("\n{latency}");

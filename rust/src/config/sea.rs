@@ -50,6 +50,21 @@
 //! qos    = true                          # two-class bandwidth scheduling:
 //!                                        # background prefetch/transfer
 //!                                        # yields under foreground pressure
+//!
+//! [health]
+//! enabled           = true               # tier health state machine: retries,
+//!                                        # failover, degraded-mode placement.
+//!                                        # Off reproduces fail-fast exactly.
+//! probe_interval_ms = 500                # prober cadence: touch-file
+//!                                        # write/read/unlink on Down/Full
+//!                                        # tiers, re-admitting on success
+//! suspect_after     = 3                  # consecutive classified-transient
+//!                                        # failures before a tier is Suspect
+//!                                        # (2x trips the breaker to Down)
+//! retry_deadline_ms = 2000               # per-op budget for the bounded
+//!                                        # exponential-backoff retry loop
+//! evacuate          = on                 # background drain of surviving
+//!                                        # dirty replicas off Suspect tiers
 //! ```
 //!
 //! ## `.sea_prefetchlist` semantics
@@ -163,6 +178,28 @@ pub struct SeaConfig {
     /// flush pressure on bandwidth-shaped tiers. Off collapses both
     /// classes to the plain first-come-first-served token bucket.
     pub sched_qos: bool,
+    /// Tier health engine (`[health] enabled`): classify I/O errors,
+    /// retry transients with bounded backoff, fail reads over to
+    /// surviving replicas, re-route placement off sick tiers, and probe
+    /// for recovery. Off reproduces the pre-health fail-fast behaviour
+    /// exactly (every check compiles down to one disabled test).
+    pub health_enabled: bool,
+    /// Prober cadence in milliseconds (`[health] probe_interval_ms`):
+    /// how often Down/Full tiers get a touch-file write/read/unlink
+    /// probe, and Suspect tiers an evacuation sweep.
+    pub health_probe_interval_ms: u64,
+    /// Consecutive classified-transient failures before a tier turns
+    /// Suspect (`[health] suspect_after`); twice this trips the breaker
+    /// to Down.
+    pub health_suspect_after: u32,
+    /// Per-operation retry budget in milliseconds
+    /// (`[health] retry_deadline_ms`) for the exponential-backoff loop
+    /// around transient errors.
+    pub health_retry_deadline_ms: u64,
+    /// Drain surviving dirty replicas off Suspect tiers in the
+    /// background (`[health] evacuate`), through the journaled,
+    /// fence-protected transfer engine at background QoS.
+    pub health_evacuate: bool,
 }
 
 fn parse_cache_spec(spec: &str) -> Result<CacheDef, SeaConfigError> {
@@ -253,6 +290,23 @@ impl SeaConfig {
                 p.to_string()
             },
             sched_qos: ini.get_bool("sched", "qos").unwrap_or(true),
+            health_enabled: ini.get_bool("health", "enabled").unwrap_or(true),
+            health_probe_interval_ms: ini
+                .get_parsed("health", "probe_interval_ms")
+                .transpose()
+                .map_err(|e| SeaConfigError::BadValue(format!("health.probe_interval_ms: {e}")))?
+                .unwrap_or(500),
+            health_suspect_after: ini
+                .get_parsed("health", "suspect_after")
+                .transpose()
+                .map_err(|e| SeaConfigError::BadValue(format!("health.suspect_after: {e}")))?
+                .unwrap_or(3),
+            health_retry_deadline_ms: ini
+                .get_parsed("health", "retry_deadline_ms")
+                .transpose()
+                .map_err(|e| SeaConfigError::BadValue(format!("health.retry_deadline_ms: {e}")))?
+                .unwrap_or(2000),
+            health_evacuate: ini.get_bool("health", "evacuate").unwrap_or(true),
         })
     }
 
@@ -282,6 +336,11 @@ impl SeaConfig {
             obs_trace_path: None,
             sched_policy: "gdsf".to_string(),
             sched_qos: true,
+            health_enabled: true,
+            health_probe_interval_ms: 500,
+            health_suspect_after: 3,
+            health_retry_deadline_ms: 2000,
+            health_evacuate: true,
         }
     }
 
@@ -312,6 +371,11 @@ pub struct SeaConfigBuilder {
     obs_trace_path: Option<PathBuf>,
     sched_policy: String,
     sched_qos: bool,
+    health_enabled: bool,
+    health_probe_interval_ms: u64,
+    health_suspect_after: u32,
+    health_retry_deadline_ms: u64,
+    health_evacuate: bool,
 }
 
 impl SeaConfigBuilder {
@@ -420,6 +484,38 @@ impl SeaConfigBuilder {
         self
     }
 
+    /// Enable/disable the tier health engine (retries, failover,
+    /// degraded-mode placement). Off reproduces fail-fast exactly.
+    pub fn health(mut self, enabled: bool) -> Self {
+        self.health_enabled = enabled;
+        self
+    }
+
+    /// Prober cadence for Down/Full tiers, in milliseconds.
+    pub fn health_probe_interval(mut self, ms: u64) -> Self {
+        self.health_probe_interval_ms = ms;
+        self
+    }
+
+    /// Consecutive transient failures before a tier turns Suspect.
+    pub fn health_suspect_after(mut self, n: u32) -> Self {
+        self.health_suspect_after = n;
+        self
+    }
+
+    /// Per-operation retry budget for transient errors, in milliseconds.
+    pub fn health_retry_deadline(mut self, ms: u64) -> Self {
+        self.health_retry_deadline_ms = ms;
+        self
+    }
+
+    /// Enable/disable background evacuation of dirty replicas off
+    /// Suspect tiers.
+    pub fn health_evacuate(mut self, enabled: bool) -> Self {
+        self.health_evacuate = enabled;
+        self
+    }
+
     pub fn build(self) -> SeaConfig {
         SeaConfig {
             mountpoint: self.mountpoint,
@@ -444,6 +540,11 @@ impl SeaConfigBuilder {
             obs_trace_path: self.obs_trace_path,
             sched_policy: self.sched_policy,
             sched_qos: self.sched_qos,
+            health_enabled: self.health_enabled,
+            health_probe_interval_ms: self.health_probe_interval_ms,
+            health_suspect_after: self.health_suspect_after,
+            health_retry_deadline_ms: self.health_retry_deadline_ms,
+            health_evacuate: self.health_evacuate,
         }
     }
 }
@@ -648,6 +749,48 @@ interval_ms = 50
             .build();
         assert_eq!(cfg.sched_policy, "fifo");
         assert!(!cfg.sched_qos);
+    }
+
+    #[test]
+    fn health_section_parses_with_defaults() {
+        let cfg = SeaConfig::parse(SAMPLE).unwrap();
+        assert!(cfg.health_enabled, "health must default on");
+        assert_eq!(cfg.health_probe_interval_ms, 500);
+        assert_eq!(cfg.health_suspect_after, 3);
+        assert_eq!(cfg.health_retry_deadline_ms, 2000);
+        assert!(cfg.health_evacuate, "evacuation must default on");
+
+        let cfg = SeaConfig::parse(
+            "mount=/m\n[caches]\npersist = l:/x:1G\n\
+             [health]\nenabled = false\nprobe_interval_ms = 50\n\
+             suspect_after = 2\nretry_deadline_ms = 100\nevacuate = off\n",
+        )
+        .unwrap();
+        assert!(!cfg.health_enabled);
+        assert_eq!(cfg.health_probe_interval_ms, 50);
+        assert_eq!(cfg.health_suspect_after, 2);
+        assert_eq!(cfg.health_retry_deadline_ms, 100);
+        assert!(!cfg.health_evacuate);
+
+        let err = SeaConfig::parse(
+            "mount=/m\n[caches]\npersist = l:/x:1G\n[health]\nsuspect_after = soon\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, SeaConfigError::BadValue(_)));
+
+        let cfg = SeaConfig::builder("/m")
+            .persist("l", "/x", GIB)
+            .health(false)
+            .health_probe_interval(25)
+            .health_suspect_after(1)
+            .health_retry_deadline(10)
+            .health_evacuate(false)
+            .build();
+        assert!(!cfg.health_enabled);
+        assert_eq!(cfg.health_probe_interval_ms, 25);
+        assert_eq!(cfg.health_suspect_after, 1);
+        assert_eq!(cfg.health_retry_deadline_ms, 10);
+        assert!(!cfg.health_evacuate);
     }
 
     #[test]

@@ -100,6 +100,46 @@ pub fn fmt_sched(m: &crate::obs::MetricsSnapshot) -> String {
     out
 }
 
+/// One-line degraded-mode summary: per-tier health state plus the
+/// retry / failover / evacuation counters the health engine accumulated.
+/// `"health: all tiers up"` when nothing degraded over the run.
+pub fn fmt_health(m: &crate::obs::MetricsSnapshot) -> String {
+    let states: Vec<String> = m
+        .counters
+        .iter()
+        .filter(|c| c.name == "sea_tier_health")
+        .filter_map(|c| {
+            c.labels
+                .iter()
+                .find(|(k, _)| k == "tier")
+                .map(|(_, tier)| format!("{tier}={}", crate::health::TierState::name_of(c.value)))
+        })
+        .collect();
+    let retries = m.value("sea_tier_retries_total").unwrap_or(0);
+    let failovers = m.value("sea_tier_failovers_total").unwrap_or(0);
+    let evac_files = m.value("sea_tier_evacuated_files_total").unwrap_or(0);
+    let evac_bytes = m.value("sea_tier_evacuated_bytes").unwrap_or(0);
+    let journal_off = m.value("sea_journal_disabled_total").unwrap_or(0);
+    let degraded = m
+        .counters
+        .iter()
+        .any(|c| c.name == "sea_tier_health" && c.value != 0);
+    let mut out = if states.is_empty() || (!degraded && retries + failovers + evac_files == 0) {
+        "health: all tiers up".to_string()
+    } else {
+        format!("health: {}", states.join(" "))
+    };
+    if retries + failovers + evac_files + journal_off > 0 {
+        out.push_str(&format!(
+            "; {retries} retries, {failovers} failovers, {evac_files} files ({evac_bytes} B) evacuated"
+        ));
+        if journal_off > 0 {
+            out.push_str(&format!(", journaling disabled on {journal_off} tier(s)"));
+        }
+    }
+    out
+}
+
 /// Per-op × per-tier latency quantiles as a markdown table (µs). Empty
 /// string when histograms were disabled for the run.
 pub fn fmt_latency(m: &crate::obs::MetricsSnapshot) -> String {
@@ -223,6 +263,44 @@ mod tests {
         assert_eq!(
             fmt_sched(&empty),
             "sched[gdsf]: 0 evictions (0 B, refetch cost 0 released)"
+        );
+    }
+
+    #[test]
+    fn fmt_health_line() {
+        use crate::obs::{Counter, MetricsSnapshot};
+        // healthy run: quiet one-liner even with per-tier gauges present
+        let healthy = MetricsSnapshot {
+            counters: vec![
+                Counter::with_label("sea_tier_health", "tier", "tmpfs", 0),
+                Counter::with_label("sea_tier_health", "tier", "lustre", 0),
+            ],
+            latency: vec![],
+        };
+        assert_eq!(fmt_health(&healthy), "health: all tiers up");
+        // degraded run: states plus the counters that explain the rescue
+        let degraded = MetricsSnapshot {
+            counters: vec![
+                Counter::with_label("sea_tier_health", "tier", "tmpfs", 2),
+                Counter::with_label("sea_tier_health", "tier", "lustre", 0),
+                Counter::new("sea_tier_retries_total", 6),
+                Counter::new("sea_tier_failovers_total", 2),
+                Counter::new("sea_tier_evacuated_files_total", 3),
+                Counter::new("sea_tier_evacuated_bytes", 4096),
+                Counter::new("sea_journal_disabled_total", 1),
+            ],
+            latency: vec![],
+        };
+        let line = fmt_health(&degraded);
+        assert_eq!(
+            line,
+            "health: tmpfs=down lustre=up; 6 retries, 2 failovers, \
+             3 files (4096 B) evacuated, journaling disabled on 1 tier(s)"
+        );
+        // empty snapshot (metrics off) still renders a stable line
+        assert_eq!(
+            fmt_health(&MetricsSnapshot::default()),
+            "health: all tiers up"
         );
     }
 

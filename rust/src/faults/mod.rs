@@ -13,7 +13,13 @@
 //!   reaches the point: no destructors, no drain, no journal compaction —
 //!   the honest `kill -9`;
 //! * `down` — a whole tier stops accepting transfers (`tier.<name>=down`),
-//!   checked non-destructively for the life of the mount.
+//!   checked non-destructively for the life of the mount;
+//! * `flaky` — transfers touching the tier fail with EIO at a given
+//!   probability (`tier.<name>=flaky:0.05` is a 5% per-op failure rate),
+//!   deterministically derived from an op counter so runs are repeatable;
+//! * `hang` — transfers touching the tier stall for the given number of
+//!   milliseconds before proceeding (`tier.<name>=hang:50`), modelling a
+//!   deteriorated-but-alive device.
 //!
 //! Plans come from the `[faults] spec = ...` config key or, overriding
 //! it, the `SEA_FAULTS` environment variable — which is what lets the
@@ -36,7 +42,7 @@
 //! | `copy.before_rename` | crash point: temp fully written, not renamed |
 //! | `copy.after_rename` | crash point: renamed into place, commit not run |
 //! | `journal.append` | dirty-journal append |
-//! | `tier.<name>` | any transfer touching the named tier (`down`) |
+//! | `tier.<name>` | any transfer touching the named tier (`down`, `flaky`, `hang`) |
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -52,6 +58,8 @@ pub enum FaultKind {
     Enospc,
     Torn,
     Down,
+    Flaky,
+    Hang,
 }
 
 impl FaultKind {
@@ -62,6 +70,8 @@ impl FaultKind {
             "enospc" => FaultKind::Enospc,
             "torn" => FaultKind::Torn,
             "down" => FaultKind::Down,
+            "flaky" => FaultKind::Flaky,
+            "hang" => FaultKind::Hang,
             _ => return None,
         })
     }
@@ -73,7 +83,9 @@ struct Rule {
     kind: FaultKind,
     /// Remaining firings (consumed per hit; `down` rules ignore it).
     remaining: AtomicU64,
-    /// Kind-specific argument: byte limit for `torn`, unused otherwise.
+    /// Kind-specific argument: byte limit for `torn`, failure rate in
+    /// parts-per-million for `flaky`, stall milliseconds for `hang`,
+    /// unused otherwise.
     arg: u64,
 }
 
@@ -102,6 +114,10 @@ impl Rule {
 #[derive(Debug, Default)]
 pub struct FaultPlan {
     rules: Vec<Rule>,
+    /// Op counter feeding the deterministic `flaky` decision (see
+    /// [`FaultPlan::tier_io`]): mixed through splitmix64 so consecutive
+    /// ops land pseudo-uniformly, but the sequence is repeatable.
+    flaky_seq: AtomicU64,
 }
 
 impl FaultPlan {
@@ -112,8 +128,10 @@ impl FaultPlan {
 
     /// Parse a comma-separated spec: `point=kind[:arg]` per rule, e.g.
     /// `copy.write=eio:3,tier.tmpfs=down,copy.before_rename=crash`.
-    /// The arg is a firing count for `eio`/`enospc`/`crash` (default 1)
-    /// and a byte limit for `torn` (default 4096).
+    /// The arg is a firing count for `eio`/`enospc`/`crash` (default 1),
+    /// a byte limit for `torn` (default 4096), a failure probability in
+    /// `[0, 1]` for `flaky` (e.g. `flaky:0.05`), and a stall duration in
+    /// milliseconds for `hang` (default 50).
     pub fn parse(spec: &str) -> Result<FaultPlan, String> {
         let mut rules = Vec::new();
         for tok in spec.split(',') {
@@ -130,17 +148,27 @@ impl FaultPlan {
             };
             let kind = FaultKind::parse(kind_s)
                 .ok_or_else(|| format!("fault rule {tok:?}: unknown kind {kind_s:?}"))?;
-            let arg: u64 = match arg_s {
-                Some(a) => a
+            let arg: u64 = match (kind, arg_s) {
+                // flaky takes a probability, stored as parts-per-million
+                (FaultKind::Flaky, Some(a)) => {
+                    let rate: f64 = a
+                        .parse()
+                        .map_err(|_| format!("fault rule {tok:?}: bad rate {a:?}"))?;
+                    if !(0.0..=1.0).contains(&rate) {
+                        return Err(format!("fault rule {tok:?}: rate {a:?} not in [0, 1]"));
+                    }
+                    (rate * 1_000_000.0) as u64
+                }
+                (FaultKind::Flaky, None) => 50_000, // 5%
+                (_, Some(a)) => a
                     .parse()
                     .map_err(|_| format!("fault rule {tok:?}: bad arg {a:?}"))?,
-                None => match kind {
-                    FaultKind::Torn => 4096,
-                    _ => 1,
-                },
+                (FaultKind::Torn, None) => 4096,
+                (FaultKind::Hang, None) => 50,
+                (_, None) => 1,
             };
             let remaining = match kind {
-                FaultKind::Down => u64::MAX,
+                FaultKind::Down | FaultKind::Flaky | FaultKind::Hang => u64::MAX,
                 FaultKind::Torn => 1,
                 _ => arg.max(1),
             };
@@ -151,7 +179,10 @@ impl FaultPlan {
                 arg,
             });
         }
-        Ok(FaultPlan { rules })
+        Ok(FaultPlan {
+            rules,
+            flaky_seq: AtomicU64::new(0),
+        })
     }
 
     /// Build from the configured spec, letting [`ENV_FAULTS`] override it
@@ -218,6 +249,51 @@ impl FaultPlan {
             .iter()
             .any(|r| r.kind == FaultKind::Down && r.point == point)
     }
+
+    /// Per-tier I/O disturbance check for `flaky`/`hang` rules
+    /// (`tier.<name>=flaky:<rate>` / `tier.<name>=hang:<ms>`), consulted
+    /// by the transfer engine on every copy touching the tier. A `hang`
+    /// rule stalls the calling thread for its argument in milliseconds; a
+    /// `flaky` rule then fails with an injected EIO at its configured
+    /// probability. The flaky decision hashes a shared op counter
+    /// (splitmix64), so a run with a fixed spec fails the same ops every
+    /// time — randomized chaos, deterministic replay.
+    pub fn tier_io(&self, name: &str) -> std::io::Result<()> {
+        if self.rules.is_empty() {
+            return Ok(());
+        }
+        let point = format!("tier.{name}");
+        for r in &self.rules {
+            if r.point != point {
+                continue;
+            }
+            match r.kind {
+                FaultKind::Hang => {
+                    std::thread::sleep(std::time::Duration::from_millis(r.arg));
+                }
+                FaultKind::Flaky => {
+                    let n = self.flaky_seq.fetch_add(1, Ordering::Relaxed);
+                    if splitmix64(n) % 1_000_000 < r.arg {
+                        return Err(std::io::Error::other(format!(
+                            "injected flaky EIO at {point}"
+                        )));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Stateless 64-bit mixer (splitmix64 finalizer): turns the sequential
+/// flaky op counter into a pseudo-uniform stream without carrying RNG
+/// state or pulling in a dependency.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
 }
 
 #[cfg(test)]
@@ -272,8 +348,50 @@ mod tests {
         assert!(FaultPlan::parse("nonsense").is_err());
         assert!(FaultPlan::parse("p=unknownkind").is_err());
         assert!(FaultPlan::parse("p=eio:notanumber").is_err());
+        assert!(FaultPlan::parse("tier.x=flaky:notarate").is_err());
+        assert!(FaultPlan::parse("tier.x=flaky:1.5").is_err());
+        assert!(FaultPlan::parse("tier.x=hang:abc").is_err());
         assert!(FaultPlan::parse("").unwrap().is_empty());
         assert!(FaultPlan::parse(" , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_errors_name_the_offending_token() {
+        let err = FaultPlan::parse("copy.write=eio:1,bogus-token").unwrap_err();
+        assert!(err.contains("bogus-token"), "{err}");
+        let err = FaultPlan::parse("p=unknownkind").unwrap_err();
+        assert!(err.contains("unknownkind"), "{err}");
+    }
+
+    #[test]
+    fn flaky_rate_zero_never_fires_rate_one_always_fires() {
+        let never = FaultPlan::parse("tier.fast=flaky:0").unwrap();
+        let always = FaultPlan::parse("tier.fast=flaky:1").unwrap();
+        for _ in 0..256 {
+            assert!(never.tier_io("fast").is_ok());
+            assert!(always.tier_io("fast").is_err());
+        }
+        assert!(always.tier_io("slow").is_ok(), "other tiers unaffected");
+    }
+
+    #[test]
+    fn flaky_rate_is_roughly_honoured_and_deterministic() {
+        let count_failures = || {
+            let p = FaultPlan::parse("tier.fast=flaky:0.2").unwrap();
+            (0..1000).filter(|_| p.tier_io("fast").is_err()).count()
+        };
+        let a = count_failures();
+        let b = count_failures();
+        assert_eq!(a, b, "fixed spec must fail the same ops across runs");
+        assert!((100..350).contains(&a), "~20% of 1000, got {a}");
+    }
+
+    #[test]
+    fn hang_delays_but_succeeds() {
+        let p = FaultPlan::parse("tier.fast=hang:20").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(p.tier_io("fast").is_ok());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(20));
     }
 
     #[test]

@@ -53,6 +53,17 @@
 //! clears the state; `force` passes (drain) ignore deadlines, because
 //! unmount has no later pass to wait for.
 //!
+//! With the tier health engine enabled (`[health]`, the default — see
+//! `crate::health`), a dirty entry whose master tier is held `Down` is
+//! re-queued up front (counted `backed_off`, no copy attempted), and a
+//! copy that fails at the tier breaker mid-pass is re-queued without
+//! counting an error or charging the file's backoff budget: the prober
+//! owns re-admission, so a dead tier costs one `backed_off` re-queue
+//! per pass and nothing else. Transient copy failures still count as
+//! errors and back off as before, but additionally feed the health
+//! state machine (repeated failures make the tier `Suspect`, which
+//! triggers background evacuation of its dirty replicas).
+//!
 //! # Crash consistency (the dirty journal)
 //!
 //! With `[journal] enabled` (the default), every dirty-state transition
@@ -171,6 +182,16 @@ fn flush_pass_inner(core: &SeaCore, force: bool) -> FlushReport {
             core.ns.mark_dirty(&entry.logical);
             continue;
         }
+        if !core.health.readable(entry.master) {
+            // The master replica sits on a tier the health engine holds
+            // Down: the copy would fail at the breaker anyway, so skip
+            // without burning a copy error or the file's backoff budget
+            // — the prober re-admits the tier (or evacuation already
+            // moved the bytes) before the entry is tried again.
+            core.ns.mark_dirty(&entry.logical);
+            report.backed_off += 1;
+            continue;
+        }
         if !force {
             // Backoff: a file whose copy failed recently waits out its
             // deadline instead of burning an error per pass. Drain
@@ -234,7 +255,10 @@ fn flush_pass_inner(core: &SeaCore, force: bool) -> FlushReport {
         match res {
             Ok(Outcome::Done { bytes, commit: verdict }) => {
                 // The copy itself succeeded: whatever the commit verdict,
-                // the file is reachable again — clear its backoff state.
+                // the file is reachable again — clear its backoff state
+                // and feed the health engine's consecutive-error reset.
+                core.health.note_ok(job.from);
+                core.health.note_ok(job.to);
                 core.flush_backoff.lock().unwrap().remove(entry.logical.as_str());
                 match verdict {
                     FlushCommit::Gone => {
@@ -283,7 +307,7 @@ fn flush_pass_inner(core: &SeaCore, force: bool) -> FlushReport {
                 // move if it doesn't.
                 core.ns.mark_dirty(&entry.logical);
             }
-            Err(_) => {
+            Err(e) => {
                 // The copy source is the drain-time `entry.master`
                 // snapshot, so a benignly moved file is not a flush
                 // failure: a rename/unlink makes the path vanish (the
@@ -299,6 +323,27 @@ fn flush_pass_inner(core: &SeaCore, force: bool) -> FlushReport {
                         core.ns.mark_dirty(&entry.logical);
                     }
                     Some(_) => {
+                        if core.health.enabled() {
+                            match core.health.note_copy_error(core, job.from, job.to, &e) {
+                                crate::health::ErrorClass::TierDown => {
+                                    // Breaker tripped mid-pass (a tier
+                                    // dropped between phase 1's check
+                                    // and the copy): degraded mode, not
+                                    // an error — re-queue without
+                                    // charging the backoff budget; the
+                                    // prober owns re-admission.
+                                    core.ns.mark_dirty(&entry.logical);
+                                    report.backed_off += 1;
+                                    continue;
+                                }
+                                crate::health::ErrorClass::Transient => {
+                                    // Counted as a scheduled retry: the
+                                    // re-queue below is the retry.
+                                    core.health.note_retry();
+                                }
+                                _ => {}
+                            }
+                        }
                         report.errors += 1;
                         // Still dirty on disk: re-queue, under a bounded
                         // exponential backoff so a persistently failing
@@ -455,12 +500,15 @@ pub struct SeaSession {
     io: SeaIo,
     flusher: Option<FlusherHandle>,
     prefetcher: Option<PrefetcherHandle>,
+    /// The health prober/evacuation loop (`crate::health`); `None` when
+    /// `[health] enabled = false`.
+    prober: Option<crate::health::ProberHandle>,
 }
 
 impl SeaSession {
-    /// Mount and (as enabled in `cfg`) start the flusher and prefetcher
-    /// threads. The prefetcher only spawns when there is a cache tier to
-    /// stage into.
+    /// Mount and (as enabled in `cfg`) start the flusher, prefetcher
+    /// and health-prober threads. The prefetcher only spawns when there
+    /// is a cache tier to stage into.
     pub fn start(
         cfg: SeaConfig,
         lists: SeaLists,
@@ -469,15 +517,19 @@ impl SeaSession {
         let interval = Duration::from_millis(cfg.flusher_interval_ms);
         let flusher_enabled = cfg.flusher_enabled;
         let prefetcher_enabled = cfg.prefetcher_enabled && !cfg.caches.is_empty();
+        let prober_enabled = cfg.health_enabled;
         let io = SeaIo::mount_with(cfg, lists, shape_persist)?;
         let flusher = flusher_enabled
             .then(|| FlusherHandle::spawn(io.core().clone(), interval));
         let prefetcher =
             prefetcher_enabled.then(|| PrefetcherHandle::spawn(io.core().clone()));
+        let prober =
+            prober_enabled.then(|| crate::health::ProberHandle::spawn(io.core().clone()));
         Ok(SeaSession {
             io,
             flusher,
             prefetcher,
+            prober,
         })
     }
 
@@ -490,9 +542,14 @@ impl SeaSession {
         flush_pass(self.io.core(), false)
     }
 
-    /// Unmount: stop the prefetcher, drain everything, stop the flusher,
-    /// return final accounting.
+    /// Unmount: stop the prober and prefetcher, drain everything, stop
+    /// the flusher, return final accounting.
     pub fn unmount(mut self) -> (CallStats, FlushReport) {
+        // Prober first: an evacuation batch still holding fences would
+        // make the final drain skip (re-queue) those files.
+        if let Some(handle) = self.prober.take() {
+            handle.shutdown();
+        }
         if let Some(handle) = self.prefetcher.take() {
             handle.shutdown();
         }
@@ -506,10 +563,11 @@ impl SeaSession {
 
 impl Drop for SeaSession {
     fn drop(&mut self) {
-        // Join the prefetcher before the flusher handle's drop runs its
-        // final drain: a staging copy still holding a file's fence would
-        // make the drain skip (re-queue) that file — and there is no
-        // later pass to pick it up.
+        // Join the prober and prefetcher before the flusher handle's
+        // drop runs its final drain: a staging or evacuation copy still
+        // holding a file's fence would make the drain skip (re-queue)
+        // that file — and there is no later pass to pick it up.
+        self.prober.take();
         self.prefetcher.take();
     }
 }

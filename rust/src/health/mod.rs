@@ -1,0 +1,789 @@
+//! Tier health engine: degraded-mode operation instead of surfaced
+//! errors (the paper's premise, applied to tier *failure* rather than
+//! tier slowness — Sea exists to keep pipelines running "when the
+//! shared file system's performance is deteriorated", and a cache tier
+//! that starts throwing EIO or ENOSPC mid-pipeline deserves the same
+//! treatment as one that merely got slow).
+//!
+//! # State machine
+//!
+//! Each tier carries one lock-free [`TierState`] in an `AtomicU8`:
+//!
+//! ```text
+//!            transient errors ≥ suspect_after
+//!   Up ────────────────────────────────────────▶ Suspect
+//!    ▲                                             │
+//!    │ success                      2× suspect_after│, or a
+//!    │                              breaker/ENOSPC  ▼
+//!   Probing ◀──────────────────────────────── Down / Full
+//!          prober touch-file round-trip fails ──▶ back to Down/Full
+//!          prober touch-file round-trip passes ──▶ Up
+//! ```
+//!
+//! `Full` is the capacity twin of `Down`: admission stops placing
+//! replicas there, but reads keep working (the bytes already resident
+//! are fine). The prober re-admits a `Full` tier only once it has free
+//! bytes again.
+//!
+//! # Error classifier
+//!
+//! | observation                                   | class       | reaction |
+//! |-----------------------------------------------|-------------|----------|
+//! | `StorageFull` kind, or message has "ENOSPC"   | `Capacity`  | tier → `Full`; admission skips it |
+//! | breaker message "tier … is down"              | `TierDown`  | tier → `Down` immediately |
+//! | `NotFound` / `InvalidInput` / `InvalidData` / `AlreadyExists` / `PermissionDenied` | `Unrelated` | no transition (file-level, not tier-level) |
+//! | everything else (EIO, `Interrupted`, `TimedOut`, …) | `Transient` | consecutive-error count; `suspect_after` → `Suspect`, double that → `Down`; [`Health::with_retry`] retries under a deadline |
+//!
+//! # Degraded-mode reactions (wired in `intercept`/`flusher`)
+//!
+//! * **Reads** fail over: open resolution prefers the fastest replica
+//!   on a [`Health::readable`] tier and falls back to persist, counting
+//!   a failover.
+//! * **Writes/prefetch** re-route: `SeaCore::place_new_file`,
+//!   `reserve_on_cache_evicting` (which prefetch staging uses) and the
+//!   spill target loop only consider tiers that pass
+//!   [`Health::admits_writes`].
+//! * **The flusher** skips copies that failed against a `Down` tier
+//!   without counting an error or charging its per-file backoff budget
+//!   — the prober owns re-admission, so a dead tier costs nothing per
+//!   pass.
+//! * **Evacuation**: while a tier is `Suspect` (still answering, but
+//!   erratically), the prober drains its closed dirty replicas to the
+//!   persist tier through the existing `TransferEngine` — journaled
+//!   (`commit_flush` under the per-file fence) and bandwidth-classed
+//!   `IoClass::Background` so it yields to foreground I/O. Evacuating
+//!   to persist deliberately trades the §3.6 quota argument for
+//!   durability: dirty bytes on a dying tier beat clean quotas. `Down`
+//!   tiers are *not* evacuated — the breaker refuses reads from them;
+//!   their dirty state survives in the journal and recovers at the
+//!   next mount.
+//! * **The prober** (`sea-prober` thread, `[health] probe_interval_ms`)
+//!   probes `Down`/`Full` tiers with a touch-file write/read/unlink at
+//!   the tier root and re-admits on success.
+//!
+//! With `[health] enabled = false` every predicate is a constant
+//! `true`, every note is a no-op and no prober thread spawns — the old
+//! fail-fast behaviour, exactly.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::SeaConfig;
+use crate::intercept::SeaCore;
+use crate::obs::{EventKind, EventOutcome, Obs};
+use crate::sched::IoClass;
+use crate::tiers::TierIdx;
+use crate::transfer::{BatchJob, Outcome};
+
+/// Name of the prober's touch file at each tier root. Never registered
+/// as a logical file (it lives outside the namespace and is unlinked
+/// within the probe).
+pub const PROBE_NAME: &str = ".sea_probe";
+
+/// Retry backoff bounds for [`Health::with_retry`].
+const RETRY_BASE: Duration = Duration::from_millis(1);
+const RETRY_CAP: Duration = Duration::from_millis(64);
+
+/// One tier's health, packed into an `AtomicU8` (see the module docs
+/// for the transition diagram).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TierState {
+    Up = 0,
+    /// Erratic but answering: evacuation drains its dirty replicas.
+    Suspect = 1,
+    /// Breaker open: no reads, no writes, no flush attempts.
+    Down = 2,
+    /// The prober is mid-round-trip on it.
+    Probing = 3,
+    /// ENOSPC twin of `Down`: reads fine, no new replicas.
+    Full = 4,
+}
+
+impl TierState {
+    fn from_u8(v: u8) -> TierState {
+        match v {
+            1 => TierState::Suspect,
+            2 => TierState::Down,
+            3 => TierState::Probing,
+            4 => TierState::Full,
+            _ => TierState::Up,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TierState::Up => "up",
+            TierState::Suspect => "suspect",
+            TierState::Down => "down",
+            TierState::Probing => "probing",
+            TierState::Full => "full",
+        }
+    }
+
+    /// Human name for a `sea_tier_health` gauge value (report rendering).
+    pub fn name_of(code: u64) -> &'static str {
+        TierState::from_u8(code.min(4) as u8).as_str()
+    }
+}
+
+/// What the classifier decided about one I/O error (module-docs table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// Worth retrying in place (EIO, timeout, interruption).
+    Transient,
+    /// ENOSPC: the tier is intact but can't take another byte.
+    Capacity,
+    /// The tier breaker is open (`Tier::check_up` refused).
+    TierDown,
+    /// File-level trouble that says nothing about the tier.
+    Unrelated,
+}
+
+/// Classify an I/O error per the module-docs table. Message sniffing is
+/// deliberate: injected faults (and the tier breaker) surface as
+/// `ErrorKind::Other` with distinctive text, and real ENOSPC reaches us
+/// as `StorageFull`.
+pub fn classify(e: &std::io::Error) -> ErrorClass {
+    use std::io::ErrorKind as K;
+    if e.kind() == K::StorageFull {
+        return ErrorClass::Capacity;
+    }
+    match e.kind() {
+        K::NotFound
+        | K::InvalidInput
+        | K::InvalidData
+        | K::AlreadyExists
+        | K::PermissionDenied => return ErrorClass::Unrelated,
+        _ => {}
+    }
+    let msg = e.to_string();
+    if msg.contains("ENOSPC") {
+        ErrorClass::Capacity
+    } else if msg.contains("is down") {
+        ErrorClass::TierDown
+    } else {
+        ErrorClass::Transient
+    }
+}
+
+struct Slot {
+    state: AtomicU8,
+    /// Consecutive transient errors since the last success.
+    consec: AtomicU32,
+}
+
+/// The per-mount health engine: one [`Slot`] per tier plus the
+/// degraded-mode counters behind `sea_tier_*` metrics. Lives by value
+/// in `SeaCore`; the prober thread reaches it through the core Arc.
+pub struct Health {
+    enabled: bool,
+    evacuate_enabled: bool,
+    suspect_after: u32,
+    retry_deadline: Duration,
+    slots: Vec<Slot>,
+    obs: Arc<Obs>,
+    retries: AtomicU64,
+    failovers: AtomicU64,
+    evacuated_bytes: AtomicU64,
+    evacuated_files: AtomicU64,
+    probes: AtomicU64,
+    transitions: AtomicU64,
+}
+
+impl std::fmt::Debug for Health {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Health")
+            .field("enabled", &self.enabled)
+            .field(
+                "states",
+                &(0..self.slots.len()).map(|i| self.state(i).as_str()).collect::<Vec<_>>(),
+            )
+            .finish_non_exhaustive()
+    }
+}
+
+impl Health {
+    pub fn new(cfg: &SeaConfig, n_tiers: usize, obs: Arc<Obs>) -> Health {
+        Health {
+            enabled: cfg.health_enabled,
+            evacuate_enabled: cfg.health_evacuate,
+            suspect_after: cfg.health_suspect_after.max(1),
+            retry_deadline: Duration::from_millis(cfg.health_retry_deadline_ms),
+            slots: (0..n_tiers)
+                .map(|_| Slot {
+                    state: AtomicU8::new(TierState::Up as u8),
+                    consec: AtomicU32::new(0),
+                })
+                .collect(),
+            obs,
+            retries: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            evacuated_bytes: AtomicU64::new(0),
+            evacuated_files: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
+            transitions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn state(&self, idx: TierIdx) -> TierState {
+        TierState::from_u8(self.slots[idx].state.load(Ordering::Acquire))
+    }
+
+    /// Publish a transition, count it and emit a `tier.health` trace
+    /// event carrying the new state code as its key. Idempotent: a
+    /// same-state store is silent.
+    fn set_state(&self, idx: TierIdx, new: TierState) {
+        let old = self.slots[idx].state.swap(new as u8, Ordering::AcqRel);
+        if old != new as u8 {
+            self.transitions.fetch_add(1, Ordering::Relaxed);
+            self.obs.record(
+                EventKind::TierHealth,
+                Some(idx),
+                new as u64,
+                0,
+                None,
+                EventOutcome::Ok,
+            );
+        }
+    }
+
+    /// A successful I/O against `idx`: reset the consecutive-error
+    /// count and close a half-open (`Suspect`/`Probing`) breaker.
+    /// `Down`/`Full` stay put — only the prober re-admits those.
+    pub fn note_ok(&self, idx: TierIdx) {
+        if !self.enabled {
+            return;
+        }
+        self.slots[idx].consec.store(0, Ordering::Relaxed);
+        match self.state(idx) {
+            TierState::Suspect | TierState::Probing => self.set_state(idx, TierState::Up),
+            _ => {}
+        }
+    }
+
+    /// Classify a failed I/O against `idx` and advance its state
+    /// machine. Returns the class so callers can pick the degraded-mode
+    /// reaction (skip / retry / fail).
+    pub fn note_error(&self, idx: TierIdx, e: &std::io::Error) -> ErrorClass {
+        let class = classify(e);
+        if !self.enabled {
+            return class;
+        }
+        match class {
+            ErrorClass::Capacity => self.set_state(idx, TierState::Full),
+            ErrorClass::TierDown => {
+                self.slots[idx].consec.store(0, Ordering::Relaxed);
+                self.set_state(idx, TierState::Down);
+            }
+            ErrorClass::Transient => {
+                let n = self.slots[idx].consec.fetch_add(1, Ordering::Relaxed) + 1;
+                if n >= self.suspect_after * 2 {
+                    self.set_state(idx, TierState::Down);
+                } else if n >= self.suspect_after {
+                    self.set_state(idx, TierState::Suspect);
+                }
+            }
+            ErrorClass::Unrelated => {}
+        }
+        class
+    }
+
+    /// Attribute a tier-to-tier copy error to the tier it implicates:
+    /// the breaker and the injectors both name the tier in the message
+    /// (`"tier <name> is down"`, `"… at tier.<name>"`); anything
+    /// anonymous is charged to `from` — the side whose bytes were being
+    /// read. Returns the class, like [`Health::note_error`].
+    pub fn note_copy_error(
+        &self,
+        core: &SeaCore,
+        from: TierIdx,
+        to: TierIdx,
+        e: &std::io::Error,
+    ) -> ErrorClass {
+        let msg = e.to_string();
+        let names_to = {
+            let name = &core.tiers.get(to).name;
+            msg.contains(&format!("tier.{name}")) || msg.contains(&format!("tier {name} "))
+        };
+        self.note_error(if names_to { to } else { from }, e)
+    }
+
+    /// True when admission may place a new replica on `idx`: `Up` only
+    /// (a `Suspect` tier is being drained, not refilled). Always true
+    /// when health is disabled — the pre-health placement order,
+    /// exactly. One atomic load.
+    pub fn admits_writes(&self, idx: TierIdx) -> bool {
+        !self.enabled || self.state(idx) == TierState::Up
+    }
+
+    /// True when a read may be served from `idx`: everything but
+    /// `Down`/`Probing` — a `Full` or `Suspect` tier's resident bytes
+    /// are fine. One atomic load.
+    pub fn readable(&self, idx: TierIdx) -> bool {
+        if !self.enabled {
+            return true;
+        }
+        !matches!(self.state(idx), TierState::Down | TierState::Probing)
+    }
+
+    /// Count one read failover (a resolution that had to skip an
+    /// unreadable tier).
+    pub fn note_failover(&self) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one scheduled retry (in-place or next-pass).
+    pub fn note_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Run `op` against tier `idx`, retrying `Transient` failures under
+    /// bounded exponential backoff (1 ms doubling to 64 ms) until
+    /// `[health] retry_deadline_ms` expires. Non-transient errors and
+    /// deadline exhaustion surface the last error; success feeds
+    /// [`Health::note_ok`]. A disabled engine calls `op` exactly once.
+    pub fn with_retry<T>(
+        &self,
+        idx: TierIdx,
+        mut op: impl FnMut() -> std::io::Result<T>,
+    ) -> std::io::Result<T> {
+        if !self.enabled {
+            return op();
+        }
+        let deadline = Instant::now() + self.retry_deadline;
+        let mut delay = RETRY_BASE;
+        loop {
+            match op() {
+                Ok(v) => {
+                    self.note_ok(idx);
+                    return Ok(v);
+                }
+                Err(e) => {
+                    let class = self.note_error(idx, &e);
+                    if class != ErrorClass::Transient || Instant::now() + delay > deadline {
+                        return Err(e);
+                    }
+                    self.note_retry();
+                    std::thread::sleep(delay);
+                    delay = (delay * 2).min(RETRY_CAP);
+                }
+            }
+        }
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
+    }
+
+    pub fn evacuated_bytes(&self) -> u64 {
+        self.evacuated_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn evacuated_files(&self) -> u64 {
+        self.evacuated_files.load(Ordering::Relaxed)
+    }
+
+    pub fn probes(&self) -> u64 {
+        self.probes.load(Ordering::Relaxed)
+    }
+
+    pub fn transitions(&self) -> u64 {
+        self.transitions.load(Ordering::Relaxed)
+    }
+
+    /// One prober iteration: probe every `Down`/`Full` tier for
+    /// re-admission and evacuate every `Suspect` tier's dirty replicas.
+    /// Called by the `sea-prober` thread each `probe_interval_ms`;
+    /// tests call it synchronously.
+    pub fn probe_pass(&self, core: &SeaCore) {
+        if !self.enabled {
+            return;
+        }
+        for idx in 0..core.tiers.len() {
+            match self.state(idx) {
+                TierState::Down | TierState::Full => self.probe_tier(core, idx),
+                TierState::Suspect if self.evacuate_enabled => self.evacuate(core, idx),
+                _ => {}
+            }
+        }
+    }
+
+    /// Touch-file round trip against one `Down`/`Full` tier. Success
+    /// closes the breaker (`→ Up`); failure restores the previous
+    /// state. The `tier.probe` trace span records the attempt either
+    /// way.
+    fn probe_tier(&self, core: &SeaCore, idx: TierIdx) {
+        self.probes.fetch_add(1, Ordering::Relaxed);
+        let t0 = core.obs.start();
+        let prior = self.state(idx);
+        self.set_state(idx, TierState::Probing);
+        let ok = self.probe_io(core, idx, prior == TierState::Full);
+        if ok {
+            self.slots[idx].consec.store(0, Ordering::Relaxed);
+            self.set_state(idx, TierState::Up);
+        } else {
+            self.set_state(idx, prior);
+        }
+        core.obs.record(
+            EventKind::TierProbe,
+            Some(idx),
+            0,
+            0,
+            t0,
+            if ok { EventOutcome::Ok } else { EventOutcome::Err },
+        );
+    }
+
+    fn probe_io(&self, core: &SeaCore, idx: TierIdx, was_full: bool) -> bool {
+        let tier = core.tiers.get(idx);
+        // The breaker flag (fault injection, chaos flapping) vetoes
+        // before any disk I/O; a Full tier additionally needs free
+        // bytes back before re-admission means anything.
+        if tier.is_down() {
+            return false;
+        }
+        if was_full && tier.free() == 0 {
+            return false;
+        }
+        // Injected tier-level flakiness applies to probes too — a tier
+        // failing 100% of injected I/O must not be re-admitted by a
+        // probe that bypasses the injector.
+        if core.faults.tier_io(&tier.name).is_err() {
+            return false;
+        }
+        let path = tier.root().join(PROBE_NAME);
+        let payload: &[u8] = b"sea-probe";
+        let ok = std::fs::write(&path, payload).is_ok()
+            && std::fs::read(&path).map(|b| b == payload).unwrap_or(false);
+        let _ = std::fs::remove_file(&path);
+        ok
+    }
+
+    /// Drain closed dirty replicas mastered on a `Suspect` tier to
+    /// persist: journaled (`commit_flush` under each file's fence),
+    /// background-classed, skip-on-busy. A successful copy doubles as
+    /// evidence the tier still works ([`Health::note_ok`] closes the
+    /// breaker); failures feed the state machine like any other copy.
+    fn evacuate(&self, core: &SeaCore, idx: TierIdx) {
+        let persist = core.tiers.persist_idx();
+        if idx == persist {
+            return;
+        }
+        let entries: Vec<crate::namespace::DirtyEntry> = core.ns.dirty_files_on(idx);
+        if entries.is_empty() {
+            return;
+        }
+        let t0 = core.obs.start();
+        let jobs: Vec<BatchJob> = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| BatchJob {
+                logical: e.logical.clone(),
+                from: idx,
+                to: persist,
+                token: i,
+            })
+            .collect();
+        let results = core.transfers.run_batch(
+            core,
+            jobs,
+            IoClass::Background,
+            |job: &BatchJob, _bytes: u64| {
+                let e = &entries[job.token];
+                core.ns.commit_flush(&e.logical, e.version, Some(persist))
+            },
+        );
+        let mut bytes = 0u64;
+        let mut files = 0u64;
+        for (job, res) in results {
+            match res {
+                Ok(Outcome::Done { bytes: b, .. }) => {
+                    self.note_ok(job.from);
+                    bytes += b;
+                    files += 1;
+                }
+                // Busy/Cancelled: a flush or a metadata op owns the
+                // fence; whatever stays dirty is picked up next round.
+                Ok(_) => {}
+                Err(e) => {
+                    self.note_copy_error(core, job.from, job.to, &e);
+                }
+            }
+        }
+        self.evacuated_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.evacuated_files.fetch_add(files, Ordering::Relaxed);
+        core.obs.record(
+            EventKind::TierEvacuate,
+            Some(idx),
+            files,
+            bytes,
+            t0,
+            EventOutcome::Ok,
+        );
+        // The clean records appended by the commits must not wait for
+        // the next flush pass: the tier being drained is the same one
+        // holding a journal file.
+        if let Some(j) = &core.journal {
+            j.sync();
+        }
+    }
+}
+
+/// Handle to the background `sea-prober` thread (probe + evacuation
+/// loop). Spawned by `SeaSession::start` when `[health] enabled` and
+/// the mount has cache tiers; shares `SeaCore::shutdown` with the
+/// flusher, so either handle's shutdown stops both loops.
+pub struct ProberHandle {
+    core: Arc<SeaCore>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ProberHandle {
+    pub fn spawn(core: Arc<SeaCore>) -> ProberHandle {
+        let loop_core = core.clone();
+        let interval = Duration::from_millis(loop_core.cfg.health_probe_interval_ms.max(1));
+        let join = std::thread::Builder::new()
+            .name("sea-prober".into())
+            .spawn(move || loop {
+                if loop_core.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                loop_core.health.probe_pass(&loop_core);
+                // Sliced sleep: shutdown must not wait out a long
+                // probe interval.
+                let mut left = interval;
+                while left > Duration::ZERO {
+                    if loop_core.shutdown.load(Ordering::Acquire) {
+                        return;
+                    }
+                    let step = left.min(Duration::from_millis(25));
+                    std::thread::sleep(step);
+                    left -= step;
+                }
+            })
+            .expect("spawn sea-prober");
+        ProberHandle {
+            core,
+            join: Some(join),
+        }
+    }
+
+    /// Signal shutdown and join the loop.
+    pub fn shutdown(mut self) {
+        self.core.shutdown.store(true, Ordering::Release);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for ProberHandle {
+    fn drop(&mut self) {
+        if let Some(join) = self.join.take() {
+            self.core.shutdown.store(true, Ordering::Release);
+            let _ = join.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SeaConfig;
+    use crate::intercept::SeaIo;
+    use crate::pathrules::SeaLists;
+    use crate::testing::tempdir::{tempdir, TempDirGuard};
+    use crate::util::MIB;
+
+    fn eio() -> std::io::Error {
+        std::io::Error::other("injected EIO at copy.write")
+    }
+
+    fn setup() -> (TempDirGuard, SeaIo) {
+        let dir = tempdir("health");
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), 16 * MIB)
+            .persist("lustre", dir.subdir("lustre"), 100 * MIB)
+            .build();
+        let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+        (dir, sea)
+    }
+
+    #[test]
+    fn classifier_table() {
+        use std::io::{Error, ErrorKind};
+        assert_eq!(classify(&Error::other("injected ENOSPC at journal.append")), ErrorClass::Capacity);
+        assert_eq!(classify(&Error::from(ErrorKind::StorageFull)), ErrorClass::Capacity);
+        assert_eq!(classify(&Error::other("tier tmpfs is down")), ErrorClass::TierDown);
+        assert_eq!(classify(&Error::from(ErrorKind::NotFound)), ErrorClass::Unrelated);
+        assert_eq!(classify(&Error::from(ErrorKind::PermissionDenied)), ErrorClass::Unrelated);
+        assert_eq!(classify(&eio()), ErrorClass::Transient);
+        assert_eq!(classify(&Error::from(ErrorKind::TimedOut)), ErrorClass::Transient);
+        assert_eq!(classify(&Error::from(ErrorKind::Interrupted)), ErrorClass::Transient);
+    }
+
+    #[test]
+    fn transient_errors_walk_up_suspect_down() {
+        let (_g, sea) = setup();
+        let h = &sea.core().health;
+        assert_eq!(h.state(0), TierState::Up);
+        // suspect_after defaults to 3
+        h.note_error(0, &eio());
+        h.note_error(0, &eio());
+        assert_eq!(h.state(0), TierState::Up);
+        h.note_error(0, &eio());
+        assert_eq!(h.state(0), TierState::Suspect);
+        assert!(!h.admits_writes(0), "suspect tier takes no new replicas");
+        assert!(h.readable(0), "suspect tier still serves reads");
+        h.note_error(0, &eio());
+        h.note_error(0, &eio());
+        h.note_error(0, &eio());
+        assert_eq!(h.state(0), TierState::Down);
+        assert!(!h.readable(0));
+        assert!(h.transitions() >= 2);
+    }
+
+    #[test]
+    fn success_closes_a_suspect_breaker() {
+        let (_g, sea) = setup();
+        let h = &sea.core().health;
+        for _ in 0..3 {
+            h.note_error(0, &eio());
+        }
+        assert_eq!(h.state(0), TierState::Suspect);
+        h.note_ok(0);
+        assert_eq!(h.state(0), TierState::Up);
+        // and the consecutive count restarted from zero
+        h.note_error(0, &eio());
+        assert_eq!(h.state(0), TierState::Up);
+    }
+
+    #[test]
+    fn breaker_and_enospc_trip_immediately() {
+        let (_g, sea) = setup();
+        let h = &sea.core().health;
+        h.note_error(0, &std::io::Error::other("tier tmpfs is down"));
+        assert_eq!(h.state(0), TierState::Down);
+        let p = sea.core().tiers.persist_idx();
+        h.note_error(p, &std::io::Error::other("injected ENOSPC at copy.write"));
+        assert_eq!(h.state(p), TierState::Full);
+        // unrelated file-level errors never move the machine
+        let before = h.transitions();
+        h.note_error(0, &std::io::Error::from(std::io::ErrorKind::NotFound));
+        assert_eq!(h.transitions(), before);
+    }
+
+    #[test]
+    fn with_retry_retries_transient_until_success() {
+        let (_g, sea) = setup();
+        let h = &sea.core().health;
+        let mut calls = 0;
+        let out = h.with_retry(0, || {
+            calls += 1;
+            if calls < 3 {
+                Err(eio())
+            } else {
+                Ok(42)
+            }
+        });
+        assert_eq!(out.unwrap(), 42);
+        assert_eq!(calls, 3);
+        assert_eq!(h.retries(), 2);
+        assert_eq!(h.state(0), TierState::Up, "success closed the half-open breaker");
+    }
+
+    #[test]
+    fn with_retry_fails_fast_on_non_transient() {
+        let (_g, sea) = setup();
+        let h = &sea.core().health;
+        let mut calls = 0;
+        let out: std::io::Result<()> = h.with_retry(0, || {
+            calls += 1;
+            Err(std::io::Error::other("tier tmpfs is down"))
+        });
+        assert!(out.is_err());
+        assert_eq!(calls, 1, "TierDown is never retried in place");
+        assert_eq!(h.state(0), TierState::Down);
+    }
+
+    #[test]
+    fn disabled_engine_is_inert() {
+        let dir = tempdir("health-off");
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), 16 * MIB)
+            .persist("lustre", dir.subdir("lustre"), 100 * MIB)
+            .health(false)
+            .build();
+        let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();
+        let h = &sea.core().health;
+        for _ in 0..16 {
+            h.note_error(0, &eio());
+        }
+        assert_eq!(h.state(0), TierState::Up);
+        assert!(h.admits_writes(0));
+        assert!(h.readable(0));
+        let mut calls = 0;
+        let _ = h.with_retry(0, || -> std::io::Result<()> {
+            calls += 1;
+            Err(eio())
+        });
+        assert_eq!(calls, 1, "disabled engine never retries");
+        h.probe_pass(sea.core());
+        assert_eq!(h.probes(), 0);
+    }
+
+    #[test]
+    fn probe_readmits_once_breaker_flag_clears() {
+        let (_g, sea) = setup();
+        let core = sea.core();
+        let h = &core.health;
+        core.tiers.get(0).set_down(true);
+        h.note_error(0, &std::io::Error::other("tier tmpfs is down"));
+        assert_eq!(h.state(0), TierState::Down);
+        h.probe_pass(core);
+        assert_eq!(h.state(0), TierState::Down, "flag still set: stays down");
+        core.tiers.get(0).set_down(false);
+        h.probe_pass(core);
+        assert_eq!(h.state(0), TierState::Up, "touch-file probe re-admitted");
+        assert!(h.probes() >= 2);
+        // no probe litter at the tier root
+        assert!(!core.tiers.get(0).root().join(PROBE_NAME).exists());
+    }
+
+    #[test]
+    fn evacuation_drains_dirty_replicas_off_suspect_tier() {
+        let (_g, sea) = setup();
+        let core = sea.core();
+        let fd = sea.create("/evac/a.out").unwrap();
+        sea.write(fd, &[7u8; 4096]).unwrap();
+        sea.close(fd).unwrap();
+        let h = &core.health;
+        for _ in 0..3 {
+            h.note_error(0, &eio());
+        }
+        assert_eq!(h.state(0), TierState::Suspect);
+        h.probe_pass(core);
+        assert_eq!(h.evacuated_files(), 1);
+        assert_eq!(h.evacuated_bytes(), 4096);
+        let persist = core.tiers.persist_idx();
+        assert!(core.tiers.persist().physical("/evac/a.out").exists());
+        let meta = core.ns.lookup("/evac/a.out").unwrap();
+        assert!(!meta.dirty(), "evacuated file committed clean");
+        assert!(meta.has_replica(persist));
+        assert_eq!(
+            h.state(0),
+            TierState::Up,
+            "successful evacuation copy closed the breaker"
+        );
+    }
+}

@@ -163,6 +163,11 @@ pub struct SeaCore {
     /// whose copy failed recently are skipped until their deadline
     /// passes instead of being retried every pass.
     pub flush_backoff: Mutex<HashMap<String, crate::flusher::Backoff>>,
+    /// The tier health engine (`crate::health`): per-tier breaker state
+    /// driving degraded-mode placement, read failover, flusher skips
+    /// and the prober/evacuation loop. Inert (every predicate `true`)
+    /// when `[health] enabled = false`.
+    pub health: crate::health::Health,
     pub shutdown: AtomicBool,
 }
 
@@ -298,14 +303,22 @@ impl SeaCore {
     /// namespace cost/access stamps) until the reservation fits. Every outcome is counted in
     /// [`SeaCore::admission`]. `None` means no cache can hold the bytes
     /// even after eviction — staging callers skip, spill falls through
-    /// to persist.
+    /// to persist. Unhealthy tiers (per
+    /// [`crate::health::Health::admits_writes`]) are excluded outright,
+    /// so prefetch staging and spill both re-route around a failing
+    /// cache without extra checks at their call sites.
     pub fn reserve_on_cache_evicting(&self, bytes: u64) -> Option<TierIdx> {
-        if let Some(idx) = self.tiers.reserve_on_cache(bytes) {
+        if let Some(idx) =
+            self.tiers.reserve_on_cache_filtered(bytes, |i| self.health.admits_writes(i))
+        {
             self.admission.note_hit();
             return Some(idx);
         }
         if self.cfg.evict_to_fit {
             for idx in 0..self.tiers.persist_idx() {
+                if !self.health.admits_writes(idx) {
+                    continue;
+                }
                 if self.evict_cold_until(idx, bytes) && self.tier(idx).try_reserve(bytes) {
                     self.admission.note_evicted_to_fit();
                     return Some(idx);
@@ -316,22 +329,25 @@ impl SeaCore {
         None
     }
 
-    /// New-file write placement (`create`): fastest cache with any free
-    /// byte — evicting a cold replica to reopen a full cache — else the
-    /// persistent tier. The 0-byte reservation grows with the writes
-    /// that follow, exactly as [`TierSet::place_write`] documents for
-    /// zero-byte requests.
+    /// New-file write placement (`create`): fastest *healthy* cache
+    /// with any free byte — evicting a cold replica to reopen a full
+    /// cache — else the persistent tier. Tiers that fail
+    /// [`crate::health::Health::admits_writes`] (Suspect/Down/Full) are
+    /// skipped, which is how new writes re-route around a failing tier.
+    /// The 0-byte reservation grows with the writes that follow,
+    /// exactly as [`TierSet::place_write`] documents for zero-byte
+    /// requests.
     pub fn place_new_file(&self) -> TierIdx {
         let persist = self.tiers.persist_idx();
         for idx in 0..persist {
-            if self.tier(idx).free() > 0 {
+            if self.health.admits_writes(idx) && self.tier(idx).free() > 0 {
                 self.admission.note_hit();
                 return idx;
             }
         }
         if self.cfg.evict_to_fit {
             for idx in 0..persist {
-                if self.evict_cold_until(idx, 1) {
+                if self.health.admits_writes(idx) && self.evict_cold_until(idx, 1) {
                     self.admission.note_evicted_to_fit();
                     return idx;
                 }
@@ -465,13 +481,37 @@ impl SeaCore {
             counters.push(Counter::with_label("sea_transfers_total", "outcome", outcome, v));
         }
         counters.push(Counter::new("sea_transfer_bytes_total", tr.bytes_moved));
-        let (appends, append_errors, syncs) = match &self.journal {
-            Some(j) => (j.appends(), j.append_errors(), j.syncs()),
-            None => (0, 0, 0),
+        let (appends, append_errors, syncs, disabled) = match &self.journal {
+            Some(j) => (j.appends(), j.append_errors(), j.syncs(), j.disabled_total()),
+            None => (0, 0, 0, 0),
         };
         counters.push(Counter::new("sea_journal_appends_total", appends));
         counters.push(Counter::new("sea_journal_append_errors_total", append_errors));
         counters.push(Counter::new("sea_journal_syncs_total", syncs));
+        counters.push(Counter::new("sea_journal_disabled_total", disabled));
+        // Tier health: the state gauge carries the TierState code
+        // (0 = up … 4 = full) so `sea_tier_health{tier=...} != 0` is
+        // the degraded-mode alarm expression.
+        for idx in 0..self.tiers.len() {
+            counters.push(Counter::with_label(
+                "sea_tier_health",
+                "tier",
+                &self.tier(idx).name,
+                self.health.state(idx) as u64,
+            ));
+        }
+        counters.push(Counter::new("sea_tier_retries_total", self.health.retries()));
+        counters.push(Counter::new("sea_tier_failovers_total", self.health.failovers()));
+        counters.push(Counter::new("sea_tier_evacuated_bytes", self.health.evacuated_bytes()));
+        counters.push(Counter::new(
+            "sea_tier_evacuated_files_total",
+            self.health.evacuated_files(),
+        ));
+        counters.push(Counter::new("sea_tier_probes_total", self.health.probes()));
+        counters.push(Counter::new(
+            "sea_tier_transitions_total",
+            self.health.transitions(),
+        ));
         counters.push(Counter::new(
             "sea_flush_backoff_entries",
             self.flush_backoff.lock().unwrap().len() as u64,
@@ -783,6 +823,10 @@ pub enum SeaError {
         #[source]
         source: std::io::Error,
     },
+    /// A malformed configuration value whose offending token is worth
+    /// surfacing verbatim (e.g. a `SEA_FAULTS` / `[faults] spec` rule).
+    #[error("bad value: {0}")]
+    BadValue(String),
     #[error(transparent)]
     Rules(#[from] crate::pathrules::RulesError),
     #[error(transparent)]
@@ -835,10 +879,10 @@ impl SeaIo {
         for idx in 0..tiers.len() {
             tiers.get(idx).set_qos(cfg.sched_qos);
         }
-        let faults = Arc::new(
-            FaultPlan::from_env_or(&cfg.faults_spec)
-                .map_err(|e| SeaError::PlainIo(std::io::Error::other(e)))?,
-        );
+        // A malformed fault rule is a configuration error, not an I/O
+        // error: surface the offending token instead of wrapping it in
+        // an opaque PlainIo.
+        let faults = Arc::new(FaultPlan::from_env_or(&cfg.faults_spec).map_err(SeaError::BadValue)?);
         if !faults.is_empty() {
             for idx in 0..tiers.len() {
                 let t = tiers.get(idx);
@@ -883,6 +927,7 @@ impl SeaIo {
         let transfers = TransferEngine::new(cfg.transfer_workers, cfg.copy_buf_bytes);
         let admission_scan_memo =
             (0..tiers.persist_idx()).map(|_| AtomicU64::new(u64::MAX)).collect();
+        let health = crate::health::Health::new(&cfg, tiers.len(), obs.clone());
         let core = Arc::new(SeaCore {
             tiers,
             ns,
@@ -898,6 +943,7 @@ impl SeaIo {
             faults,
             obs,
             flush_backoff: Mutex::new(HashMap::new()),
+            health,
             shutdown: AtomicBool::new(false),
             cfg,
         });
@@ -1232,7 +1278,27 @@ impl SeaIo {
             let (tier, size) = self
                 .core
                 .ns
-                .with_meta(&logical, |m| (m.fastest_replica(), m.size()))
+                .with_meta(&logical, |m| {
+                    let fastest = m.fastest_replica();
+                    let tier = if self.core.health.readable(fastest) {
+                        fastest
+                    } else {
+                        // Read failover: the fastest replica sits on a
+                        // tier the health engine holds Down — serve the
+                        // fastest readable replica instead (ultimately
+                        // the persist copy). A file whose *only*
+                        // replica is on the down tier still tries it:
+                        // best effort beats a guaranteed error.
+                        self.core.health.note_failover();
+                        m.replicas
+                            .iter()
+                            .copied()
+                            .filter(|&t| self.core.health.readable(t))
+                            .min()
+                            .unwrap_or(fastest)
+                    };
+                    (tier, m.size())
+                })
                 .ok_or_else(|| SeaError::NotFound(logical.to_string()))?;
             self.core.tier(tier).wait_meta();
             let physical = self.core.tier(tier).physical(&logical);
@@ -1278,7 +1344,28 @@ impl SeaIo {
                 {
                     attempts += 1;
                 }
-                Err(e) => return Err(io_err(&logical, e)),
+                Err(e) => {
+                    // Degraded-mode open: a failing physical open feeds
+                    // the health engine; transient errors re-enter the
+                    // resolution loop (which fails over to another
+                    // replica once the tier trips Down) instead of
+                    // surfacing immediately.
+                    let class = self.core.health.note_error(tier, &e);
+                    if self.core.health.enabled()
+                        && !self.core.is_persist(tier)
+                        && attempts < 8
+                        && matches!(
+                            class,
+                            crate::health::ErrorClass::Transient
+                                | crate::health::ErrorClass::TierDown
+                        )
+                    {
+                        self.core.health.note_retry();
+                        attempts += 1;
+                        continue;
+                    }
+                    return Err(io_err(&logical, e));
+                }
             }
         };
         if self.core.is_persist(tier) {
@@ -1460,6 +1547,9 @@ impl SeaIo {
         let persist = core.tiers.persist_idx();
         let mut target = persist;
         for idx in start..persist {
+            if !core.health.admits_writes(idx) {
+                continue; // failing tier: spill past it, not onto it
+            }
             if core.tier(idx).try_reserve(needed) {
                 core.admission.note_hit();
                 target = idx;
@@ -1494,8 +1584,13 @@ impl SeaIo {
         // A failed (or fenced-out/cancelled) spill copy must hand back
         // the reservation it just took on the target tier, or the
         // capacity leaks for the session; the write then fails and the
-        // file stays where it was.
-        if let Err(e) = core.copy_between(&of.logical, of.tier, target) {
+        // file stays where it was. The spill is on the application's
+        // blocking path, so transient target errors get the bounded
+        // in-place retry instead of surfacing on the first EIO.
+        if let Err(e) = core
+            .health
+            .with_retry(target, || core.copy_between(&of.logical, of.tier, target))
+        {
             if target != persist {
                 core.tier(target).release(needed);
             }

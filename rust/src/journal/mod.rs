@@ -100,7 +100,7 @@ use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::faults::FaultPlan;
@@ -365,6 +365,13 @@ pub struct Journal {
     appends: AtomicU64,
     append_errors: AtomicU64,
     syncs: AtomicU64,
+    /// Journaling degraded off for the rest of the mount (an append hit
+    /// ENOSPC — see [`Journal::append_to`]). Crash protection is lost,
+    /// application writes are not.
+    disabled: AtomicBool,
+    /// Times journaling was degraded off (0 or 1 per mount; a counter
+    /// for the metrics registry's monotone contract).
+    disabled_total: AtomicU64,
 }
 
 impl std::fmt::Debug for Journal {
@@ -404,6 +411,8 @@ impl Journal {
             appends: AtomicU64::new(0),
             append_errors: AtomicU64::new(0),
             syncs: AtomicU64::new(0),
+            disabled: AtomicBool::new(false),
+            disabled_total: AtomicU64::new(0),
         })
     }
 
@@ -424,7 +433,22 @@ impl Journal {
         self.syncs.load(Ordering::Relaxed)
     }
 
+    /// Times journaling was degraded off by an ENOSPC append (the
+    /// `sea_journal_disabled_total` counter; 0 or 1 per mount).
+    pub fn disabled_total(&self) -> u64 {
+        self.disabled_total.load(Ordering::Relaxed)
+    }
+
+    /// True once an ENOSPC append degraded journaling off for this
+    /// mount.
+    pub fn is_disabled(&self) -> bool {
+        self.disabled.load(Ordering::Acquire)
+    }
+
     fn append_to(&self, idx: usize, frame: &[u8]) {
+        if self.disabled.load(Ordering::Acquire) {
+            return; // degraded off: one atomic load, no I/O
+        }
         self.appends.fetch_add(1, Ordering::Relaxed);
         let t0 = self.obs.start();
         let res = (|| -> std::io::Result<()> {
@@ -443,8 +467,31 @@ impl Journal {
             t0,
             crate::obs::Obs::outcome_of(&res),
         );
-        if res.is_err() {
+        if let Err(e) = res {
             self.append_errors.fetch_add(1, Ordering::Relaxed);
+            // A full journal tier must not fail (or stall) the
+            // shard-locked transition that called us: degrade to
+            // journaling-off-with-warning. The mount keeps running with
+            // the pre-journal durability contract (a crash loses dirty
+            // tracking; live data is unaffected) instead of erroring
+            // writes that would otherwise succeed.
+            if crate::health::classify(&e) == crate::health::ErrorClass::Capacity
+                && !self.disabled.swap(true, Ordering::AcqRel)
+            {
+                self.disabled_total.fetch_add(1, Ordering::Relaxed);
+                self.obs.record(
+                    crate::obs::EventKind::JournalDegraded,
+                    Some(idx),
+                    0,
+                    0,
+                    None,
+                    crate::obs::EventOutcome::Err,
+                );
+                eprintln!(
+                    "sea: journal append hit ENOSPC on tier {idx}; journaling \
+                     disabled for this mount (crash recovery degraded)"
+                );
+            }
         }
     }
 
@@ -756,6 +803,30 @@ mod tests {
         let recs = j.replay();
         assert_eq!(recs.len(), 1);
         assert_eq!(fold_dirty(&recs)[0].0, "/kept.dat");
+    }
+
+    #[test]
+    fn enospc_append_degrades_journaling_off_with_counter() {
+        let dir = tempdir("journal-enospc");
+        let roots = vec![dir.subdir("t0")];
+        let plan = FaultPlan::parse("journal.append=enospc:1").unwrap();
+        let j =
+            Journal::open(&roots, Arc::new(plan), Arc::new(crate::obs::Obs::disabled())).unwrap();
+        assert!(!j.is_disabled());
+        j.log_dirty("/full.dat", 0, 1, 1, 0);
+        assert!(j.is_disabled(), "ENOSPC append degrades journaling off");
+        assert_eq!(j.disabled_total(), 1);
+        assert_eq!(j.append_errors(), 1);
+        // Subsequent appends are silent no-ops: no I/O, no error churn,
+        // no double-counting of the degrade.
+        j.log_dirty("/after.dat", 0, 1, 2, 0);
+        j.log_clean("/after.dat", 2);
+        assert_eq!(j.appends(), 1, "appends stop being attempted");
+        assert_eq!(j.append_errors(), 1);
+        assert_eq!(j.disabled_total(), 1);
+        assert!(j.replay().is_empty(), "nothing reached the file");
+        // sync stays harmless on a degraded journal
+        j.sync();
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod dataset;
 pub mod experiments;
 pub mod faults;
 pub mod flusher;
+pub mod health;
 pub mod intercept;
 pub mod journal;
 pub mod lustre;

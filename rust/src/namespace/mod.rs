@@ -1645,6 +1645,19 @@ impl Namespace {
         out
     }
 
+    /// Full-scan snapshot of the *closed* dirty files mastered on one
+    /// tier — the health engine's evacuation work-list (`crate::health`).
+    /// Same cost profile as [`Namespace::dirty_files`]: a per-shard read
+    /// lock sweep, run only while a tier is Suspect, never on a hot
+    /// path. Open files are excluded — their bytes are still moving and
+    /// the next probe round retries them.
+    pub fn dirty_files_on(&self, tier: TierIdx) -> Vec<DirtyEntry> {
+        self.dirty_files()
+            .into_iter()
+            .filter(|e| e.master == tier && !e.open)
+            .collect()
+    }
+
     /// Paths of clean, closed files that `select` accepts, visited under
     /// brief per-shard read locks — the full-scan fallback. The flusher's
     /// per-pass sweep uses the O(transitions) incremental

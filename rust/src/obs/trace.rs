@@ -59,10 +59,14 @@ pub enum EventKind {
     JournalAppend = 35,
     Recovery = 36,
     CorruptReplica = 37,
+    TierHealth = 38,
+    TierProbe = 39,
+    TierEvacuate = 40,
+    JournalDegraded = 41,
 }
 
 impl EventKind {
-    pub const ALL: [EventKind; 18] = [
+    pub const ALL: [EventKind; 22] = [
         EventKind::Open,
         EventKind::Create,
         EventKind::Close,
@@ -81,6 +85,10 @@ impl EventKind {
         EventKind::JournalAppend,
         EventKind::Recovery,
         EventKind::CorruptReplica,
+        EventKind::TierHealth,
+        EventKind::TierProbe,
+        EventKind::TierEvacuate,
+        EventKind::JournalDegraded,
     ];
 
     /// Dense index into per-kind tables (histograms).
@@ -112,6 +120,10 @@ impl EventKind {
             EventKind::JournalAppend => "journal_append",
             EventKind::Recovery => "recovery",
             EventKind::CorruptReplica => "recovery.corrupt_replica",
+            EventKind::TierHealth => "tier.health",
+            EventKind::TierProbe => "tier.probe",
+            EventKind::TierEvacuate => "tier.evacuate",
+            EventKind::JournalDegraded => "journal.degraded",
         }
     }
 

@@ -24,7 +24,10 @@
 //! A long-lived [`PrefetcherHandle`] thread (spawned by
 //! `flusher::SeaSession` next to the flusher) drains the queue and runs
 //! [`stage_one`] per request: reserve space on the fastest cache with
-//! room, copy through the fenced transfer engine, and record the replica
+//! room (reservation goes through the health-filtered
+//! `reserve_on_cache_evicting`, so staging transparently re-routes around
+//! tiers the [`crate::health`] engine marked Suspect/Down/Full), copy
+//! through the fenced transfer engine, and record the replica
 //! *under the fence* only if the file's version is unchanged — a racing
 //! write/rename/unlink either cancels the transfer or makes the commit
 //! observe the bump and discard the fresh copy (still under the fence,

@@ -32,7 +32,10 @@
 //! Background work therefore gets real backpressure under foreground
 //! pressure instead of blind requeue-with-backoff, while still proceeding
 //! at full rate on an idle mount (the yield loop is capped at ~250 ms so
-//! background can never be starved indefinitely).
+//! background can never be starved indefinitely). `IoClass::Background` is
+//! also the bandwidth class for [`crate::health`] evacuation drains, so
+//! rescuing dirty replicas off a Suspect tier never steals tokens from the
+//! application's foreground I/O.
 //!
 //! **Striped clocks.** The namespace's two global `fetch_add` counters are
 //! replaced here: [`StripedClock`] (the access clock `agen`) hands out

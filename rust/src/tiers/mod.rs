@@ -58,8 +58,11 @@ pub struct Tier {
     used: AtomicU64,
     data_throttle: Option<QosThrottle>,
     meta_latency: Option<Duration>,
-    /// Dropout flag (fault injection): a down tier refuses transfers at
-    /// [`Tier::check_up`] call sites. Never set in production mounts.
+    /// Dropout flag: a down tier refuses transfers at [`Tier::check_up`]
+    /// call sites. Set at mount from an armed `FaultPlan`
+    /// (`tier.<name>=down`), or toggled mid-run by chaos tests; the
+    /// health engine (`crate::health`) watches it through its prober and
+    /// converts the resulting failures into degraded-mode operation.
     down: AtomicBool,
 }
 
@@ -194,8 +197,9 @@ impl Tier {
         self.data_throttle.is_some() || self.meta_latency.is_some()
     }
 
-    /// Mark the tier dropped out (or back up) — fault injection only;
-    /// set once at mount from the armed `FaultPlan`.
+    /// Mark the tier dropped out (or back up) — fault injection: set at
+    /// mount from the armed `FaultPlan`, or flipped mid-run by chaos
+    /// tests simulating a device that dies and recovers.
     pub fn set_down(&self, down: bool) {
         self.down.store(down, Ordering::Relaxed);
     }
@@ -283,7 +287,23 @@ impl TierSet {
     /// monotonically upward. Persist-resident bytes for reporting come
     /// from the namespace (`Namespace::bytes_on_tier`) instead.
     pub fn place_write(&self, bytes: u64) -> TierIdx {
+        self.place_write_filtered(bytes, |_| true)
+    }
+
+    /// [`TierSet::place_write`] restricted to caches the predicate
+    /// accepts — the health engine's degraded-mode entry point: a `Down`
+    /// or `Full` tier is filtered out so new replicas land on healthy
+    /// tiers (or persist, which is never filtered: it is the durability
+    /// root and has no healthy alternative).
+    pub fn place_write_filtered(
+        &self,
+        bytes: u64,
+        usable: impl Fn(TierIdx) -> bool,
+    ) -> TierIdx {
         for (idx, tier) in self.tiers[..self.persist].iter().enumerate() {
+            if !usable(idx) {
+                continue;
+            }
             if bytes == 0 {
                 if tier.free() > 0 {
                     return idx;
@@ -314,9 +334,21 @@ impl TierSet {
     /// cost-aware by default, see [`crate::sched`] — fence-skipping)
     /// and then retries this reservation.
     pub fn reserve_on_cache(&self, bytes: u64) -> Option<TierIdx> {
+        self.reserve_on_cache_filtered(bytes, |_| true)
+    }
+
+    /// [`TierSet::reserve_on_cache`] restricted to caches the predicate
+    /// accepts (see [`TierSet::place_write_filtered`]). `None` when no
+    /// healthy cache can hold the bytes.
+    pub fn reserve_on_cache_filtered(
+        &self,
+        bytes: u64,
+        usable: impl Fn(TierIdx) -> bool,
+    ) -> Option<TierIdx> {
         self.caches()
             .iter()
-            .position(|tier| tier.try_reserve(bytes))
+            .enumerate()
+            .position(|(idx, tier)| usable(idx) && tier.try_reserve(bytes))
     }
 }
 
@@ -408,6 +440,23 @@ mod tests {
         let (_g3, lus2) = tmp("roc-only");
         let baseline = TierSet::new(&[], &lus2, |t| t).unwrap();
         assert_eq!(baseline.reserve_on_cache(1), None);
+    }
+
+    #[test]
+    fn filtered_placement_skips_rejected_caches() {
+        let (_g1, fast) = tmp("flt-fast");
+        let (_g2, slow) = tmp("flt-slow");
+        let (_g3, lus) = tmp("flt-lus");
+        let ts = TierSet::new(&[fast, slow], &lus, |t| t).unwrap();
+        // fast (idx 0) filtered out: placement lands on slow
+        assert_eq!(ts.place_write_filtered(100, |idx| idx != 0), 1);
+        assert_eq!(ts.get(0).used(), 0, "no reservation on a filtered tier");
+        // every cache filtered: falls through to persist
+        assert_eq!(ts.place_write_filtered(100, |_| false), ts.persist_idx());
+        assert_eq!(ts.place_write_filtered(0, |_| false), ts.persist_idx());
+        // reserve_on_cache_filtered has no persist fallthrough
+        assert_eq!(ts.reserve_on_cache_filtered(100, |idx| idx != 0), Some(1));
+        assert_eq!(ts.reserve_on_cache_filtered(100, |_| false), None);
     }
 
     #[test]

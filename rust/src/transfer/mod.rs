@@ -445,6 +445,11 @@ impl TransferEngine {
     ) -> std::io::Result<Option<u64>> {
         core.tiers.get(from).check_up()?;
         core.tiers.get(to).check_up()?;
+        // Tier-level flakiness/hang injection (`tier.<name>=flaky:<rate>`,
+        // `tier.<name>=hang:<ms>`): one roll per copy per side, so the
+        // health engine sees failures attributed to the tier by name.
+        core.faults.tier_io(&core.tiers.get(from).name)?;
+        core.faults.tier_io(&core.tiers.get(to).name)?;
         let torn_at = core.faults.torn_limit("copy.write");
         let src_path = core.tiers.get(from).physical(logical);
         let mut src = std::fs::File::open(&src_path)?;

@@ -1,0 +1,198 @@
+//! PR-9 acceptance tests for the tier-health subsystem: a cache tier
+//! going down mid-run must degrade the mount, not fail it.
+//!
+//! Three pins:
+//!
+//! 1. With `tier.<cache>=down` tripping mid-run, the pipeline completes
+//!    with zero surfaced I/O errors, every written byte lands on the
+//!    persist tier, and `sea_tier_health{tier=...}` reflects the
+//!    Up → Down → Up transition.
+//! 2. With `[health] enabled = false`, the old fail-fast behaviour is
+//!    reproduced exactly: flush errors surface in the report and the
+//!    state machine never moves.
+//! 3. A malformed `[faults] spec` is a mount-time configuration error
+//!    that names the offending token (`SeaError::BadValue`), not an
+//!    opaque I/O failure later.
+
+use std::time::{Duration, Instant};
+
+use sea::config::SeaConfig;
+use sea::flusher::{flush_pass, SeaSession};
+use sea::health::TierState;
+use sea::intercept::{OpenMode, SeaError, SeaIo};
+use sea::pathrules::{PathRules, SeaLists};
+use sea::testing::tempdir::tempdir;
+use sea::util::MIB;
+
+fn flush_lists() -> SeaLists {
+    SeaLists::new(
+        PathRules::parse(r".*\.out$").unwrap(),
+        PathRules::empty(),
+        PathRules::empty(),
+    )
+}
+
+fn payload(i: usize) -> Vec<u8> {
+    (0..2048).map(|b| (b as u8).wrapping_mul(i as u8 | 1)).collect()
+}
+
+#[test]
+fn down_cache_tier_mid_run_completes_pipeline_without_errors() {
+    let dir = tempdir("health-downrun");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 64 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .flusher(false, 3_600_000)
+        .prefetcher(false)
+        .health_probe_interval(50)
+        .build();
+    let sess = SeaSession::start(cfg, flush_lists(), |t| t).unwrap();
+    let sea = sess.io();
+    let core = sea.core().clone();
+
+    // Act 1: a healthy first third of the pipeline, flushed to persist.
+    for i in 0..8 {
+        let fd = sea.create(&format!("/act1/f{i}.out")).unwrap();
+        sea.write(fd, &payload(i)).unwrap();
+        sea.close(fd).unwrap();
+    }
+    let report = sess.flush_now();
+    assert_eq!(report.errors, 0, "{report:?}");
+    assert_eq!(core.health.state(0), TierState::Up);
+
+    // Act 2: the cache tier drops mid-run. Every application call must
+    // keep succeeding — creates/writes/read-backs of old and new files.
+    core.tiers.get(0).set_down(true);
+    for i in 0..8 {
+        let fd = sea.create(&format!("/act2/f{i}.out")).unwrap();
+        sea.write(fd, &payload(i + 8)).unwrap();
+        sea.close(fd).unwrap();
+        let fd = sea.open(&format!("/act1/f{i}.out"), OpenMode::Read).unwrap();
+        let mut buf = vec![0u8; 2048];
+        let n = sea.read(fd, &mut buf).unwrap();
+        assert_eq!(&buf[..n], payload(i).as_slice());
+        sea.close(fd).unwrap();
+    }
+    // A flush against the dead tier degrades (silent re-queue), trips
+    // the breaker, and surfaces no error.
+    let report = sess.flush_now();
+    assert_eq!(report.errors, 0, "down tier must degrade, not error: {report:?}");
+    // != Up rather than == Down: the live prober may hold the slot in its
+    // transient Probing state for a moment while its probe gets vetoed.
+    assert_ne!(core.health.state(0), TierState::Up, "breaker never tripped");
+
+    // The metric the alarm expression watches reflects the transition:
+    // `sea_tier_health{tier=...} != 0` means degraded.
+    let snap = core.metrics_snapshot();
+    let health = snap
+        .counters
+        .iter()
+        .find(|c| {
+            c.name == "sea_tier_health"
+                && c.labels.iter().any(|(k, v)| k == "tier" && v == "tmpfs")
+        })
+        .expect("sea_tier_health{tier=tmpfs} missing");
+    assert_ne!(health.value, 0, "gauge must leave Up after the breaker trips");
+    assert!(snap.value("sea_tier_transitions_total").unwrap_or(0) >= 1);
+
+    // Act 3: while the breaker is open, new files route around the dead
+    // cache straight to the persist tier.
+    for i in 0..8 {
+        let fd = sea.create(&format!("/act3/f{i}.out")).unwrap();
+        sea.write(fd, &payload(i + 16)).unwrap();
+        sea.close(fd).unwrap();
+    }
+    for i in 0..8 {
+        assert_eq!(
+            sea.stat(&format!("/act3/f{i}.out")).unwrap().tier,
+            "lustre",
+            "breaker-open create must fall through to persist"
+        );
+    }
+
+    // The tier heals; the prober re-admits it without any manual poke.
+    core.tiers.get(0).set_down(false);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while core.health.state(0) != TierState::Up {
+        assert!(Instant::now() < deadline, "prober never re-admitted the tier");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Drain: everything the run wrote is durable on persist, bytes exact.
+    let (_stats, report) = sess.unmount();
+    assert_eq!(report.errors, 0, "{report:?}");
+    let persist = core.tiers.persist();
+    for (act, base) in [("act1", 0usize), ("act2", 8), ("act3", 16)] {
+        for i in 0..8 {
+            let logical = format!("/{act}/f{i}.out");
+            let got = std::fs::read(persist.physical(&logical))
+                .unwrap_or_else(|e| panic!("{logical} not durable: {e}"));
+            assert_eq!(got, payload(base + i), "{logical} corrupted");
+        }
+    }
+}
+
+#[test]
+fn health_disabled_reproduces_fail_fast_behaviour() {
+    let dir = tempdir("health-off");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 64 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .flusher(false, 3_600_000)
+        .prefetcher(false)
+        .health(false)
+        .build();
+    let sea = SeaIo::mount_with(cfg, flush_lists(), |t| t).unwrap();
+    let core = sea.core().clone();
+
+    for i in 0..4 {
+        let fd = sea.create(&format!("/f{i}.out")).unwrap();
+        sea.write(fd, &payload(i)).unwrap();
+        sea.close(fd).unwrap();
+    }
+    core.tiers.get(0).set_down(true);
+
+    // Old behaviour, exactly: each failed copy surfaces as a flush error
+    // and charges the file's backoff budget; nothing degrades quietly.
+    let report = flush_pass(&core, true);
+    assert_eq!(report.errors, 4, "fail-fast must surface every copy error: {report:?}");
+    assert_eq!(report.flushed + report.moved, 0, "{report:?}");
+
+    // The disabled engine never moves off Up and never counts anything.
+    assert_eq!(core.health.state(0), TierState::Up);
+    assert_eq!(core.health.retries(), 0);
+    assert_eq!(core.health.failovers(), 0);
+    let snap = core.metrics_snapshot();
+    assert_eq!(snap.value("sea_tier_transitions_total"), Some(0));
+
+    // Placement still offers the downed tier (no health filter): the
+    // next create lands on the cache exactly as the old code did.
+    let fd = sea.create("/post.out").unwrap();
+    sea.write(fd, b"post").unwrap();
+    sea.close(fd).unwrap();
+    assert_eq!(sea.stat("/post.out").unwrap().tier, "tmpfs");
+}
+
+#[test]
+fn malformed_fault_spec_is_a_mount_time_bad_value() {
+    for (spec, token) in [
+        ("tier.fast=flaky:banana", "banana"),
+        ("tier.fast=warp:3", "warp"),
+        ("no-equals-here", "no-equals-here"),
+    ] {
+        let dir = tempdir("health-badspec");
+        let cfg = SeaConfig::builder(dir.subdir("mount"))
+            .cache("tmpfs", dir.subdir("tmpfs"), 64 * MIB)
+            .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+            .faults(spec)
+            .build();
+        match SeaIo::mount_with(cfg, SeaLists::default(), |t| t) {
+            Err(SeaError::BadValue(msg)) => assert!(
+                msg.contains(token),
+                "error for {spec:?} must name the offending token: {msg}"
+            ),
+            Err(e) => panic!("{spec:?} must fail mount with BadValue, got {e}"),
+            Ok(_) => panic!("{spec:?} must fail the mount"),
+        }
+    }
+}
