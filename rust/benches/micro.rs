@@ -47,6 +47,18 @@ fn obs_trace_out() -> Option<std::path::PathBuf> {
     std::env::var_os("SEA_OBS_TRACE").map(|_| std::path::PathBuf::from("BENCH_trace.bin"))
 }
 
+/// Multi-tenant mode (`SEA_BENCH_TENANTS=N`): register N tenants on the
+/// interceptor mount so the hot-path budget is measured with the tenant
+/// registry armed (`multi() == true`) — the write path then runs its
+/// quota charge on every growth reservation, which is the configuration
+/// the control-plane CI budget pins.
+fn bench_tenants() -> usize {
+    std::env::var("SEA_BENCH_TENANTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
 /// Scale an iteration count down in smoke mode.
 fn scaled(iters: u64) -> u64 {
     if smoke() {
@@ -216,6 +228,13 @@ fn main() {
     if let Some(trace) = obs_trace_out() {
         println!("tracing to {} (SEA_OBS_TRACE set)\n", trace.display());
         builder = builder.obs_trace_path(trace);
+    }
+    let n_tenants = bench_tenants();
+    if n_tenants > 0 {
+        println!("tenant registry armed: {n_tenants} tenants (SEA_BENCH_TENANTS set)\n");
+        for i in 0..n_tenants {
+            builder = builder.tenant(&format!("t{i}"), &format!("/tenant{i}"), None);
+        }
     }
     let cfg = builder.build();
     let sea = SeaIo::mount_with(cfg, SeaLists::default(), |t| t).unwrap();

@@ -7,6 +7,7 @@
 //! sea run          real mode: preprocess a dataset through Sea + XLA
 //! sea trace        export a binary .sea_trace as JSONL / Chrome JSON
 //! sea metrics      render a --metrics-out snapshot as Prometheus text
+//! sea status       fetch /status from a live mount's ops endpoint
 //! sea check        verify AOT artifacts load and execute
 //! sea help
 //! ```
@@ -36,9 +37,12 @@ USAGE:
   sea trace export TRACE [--out FILE] [--format jsonl|chrome]
             [--tiers name0,name1,...]
   sea metrics SNAPSHOT.json [--serve ADDR]
+  sea status HOST:PORT [--path /status]
   sea check [--artifacts DIR]
 
 P in {afni, fsl, spm}; D in {ds001545, prevent_ad, hcp}.
+`sea status` talks to a live mount's coordinator endpoint
+([coordinator] bind); --path also reaches /metrics and /tenants/<id>.
 ";
 
 fn parse_pipeline(s: &str) -> Result<PipelineKind> {
@@ -300,6 +304,10 @@ fn cmd_run(mut a: Args) -> Result<()> {
             "{}",
             crate::experiments::report::fmt_health(&report.metrics)
         );
+        let tenants = crate::experiments::report::fmt_tenants(&report.metrics);
+        if !tenants.is_empty() {
+            println!("{tenants}");
+        }
         let latency = crate::experiments::report::fmt_latency(&report.metrics);
         if !latency.is_empty() {
             println!("\n{latency}");
@@ -389,6 +397,42 @@ fn cmd_metrics(mut a: Args) -> Result<()> {
     Ok(())
 }
 
+/// One dependency-free HTTP GET against the coordinator ops endpoint;
+/// returns the body of a 200, errors with the status line otherwise.
+fn http_get(addr: &str, path: &str) -> Result<String> {
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    write!(
+        stream,
+        "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+    )?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    let (head, body) = resp
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow!("malformed HTTP response from {addr}"))?;
+    let status = head.lines().next().unwrap_or_default();
+    anyhow::ensure!(status.contains(" 200"), "GET {addr}{path}: {status}");
+    Ok(body.to_string())
+}
+
+/// `sea status <host:port> [--path P]`: fetch the coordinator ops
+/// endpoint of a live mount and print the response body — `/status` by
+/// default, `--path /tenants/<id>` or `/metrics` for the rest of the
+/// API.
+fn cmd_status(mut a: Args) -> Result<()> {
+    let addr = a
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("usage: sea status HOST:PORT [--path /status]"))?;
+    let path = a.opt("path").unwrap_or_else(|| "/status".into());
+    a.finish()?;
+    print!("{}", http_get(&addr, &path)?);
+    Ok(())
+}
+
 fn cmd_check(mut a: Args) -> Result<()> {
     let dir = a
         .opt("artifacts")
@@ -428,6 +472,7 @@ pub fn main(argv: Vec<String>) -> Result<i32> {
         "run" => cmd_run(sub)?,
         "trace" => cmd_trace(sub)?,
         "metrics" => cmd_metrics(sub)?,
+        "status" => cmd_status(sub)?,
         "check" => cmd_check(sub)?,
         "help" | "--help" | "-h" => print!("{HELP}"),
         other => {
@@ -540,6 +585,17 @@ mod tests {
         std::fs::write(&path, snap.to_json()).unwrap();
         assert_eq!(run(&format!("metrics {}", path.display())).unwrap(), 0);
         assert!(run("metrics /nonexistent-snapshot.json").is_err());
+    }
+
+    #[test]
+    fn status_fetches_live_endpoint() {
+        let server =
+            crate::coordinator::serve_metrics("127.0.0.1:0", || "ok\n".into()).unwrap();
+        let body = http_get(&server.addr().to_string(), "/status").unwrap();
+        assert_eq!(body, "ok\n");
+        assert_eq!(run(&format!("status {}", server.addr())).unwrap(), 0);
+        server.shutdown();
+        assert!(run("status 127.0.0.1:1").is_err(), "refused connection errors");
     }
 
     #[test]

@@ -200,6 +200,43 @@ pub struct SeaConfig {
     /// background (`[health] evacuate`), through the journaled,
     /// fence-protected transfer engine at background QoS.
     pub health_evacuate: bool,
+    /// Feed the health prober's measured tier bandwidth into the QoS
+    /// debt decay (`[sched] qos_adaptive`, default off): background debt
+    /// decays at min(configured, measured) rate instead of the configured
+    /// limit alone.
+    pub sched_qos_adaptive: bool,
+    /// `[tenants]` entries (`tenant = name:prefix[:quota_bytes]`), in
+    /// declaration order. Empty (the default) keeps the mount
+    /// single-tenant with zero accounting overhead.
+    pub tenants: Vec<crate::coordinator::tenants::TenantDef>,
+    /// Bind address for the coordinator ops/metrics HTTP endpoint
+    /// (`[coordinator] bind`, e.g. `127.0.0.1:9188`). `None` (default)
+    /// serves nothing.
+    pub ops_bind: Option<String>,
+}
+
+fn parse_tenant_spec(
+    spec: &str,
+) -> Result<crate::coordinator::tenants::TenantDef, SeaConfigError> {
+    let parts: Vec<&str> = spec.splitn(3, ':').collect();
+    if parts.len() < 2 || parts[0].is_empty() || !parts[1].starts_with('/') {
+        return Err(SeaConfigError::BadValue(format!(
+            "tenant spec {spec:?}: want name:/prefix[:quota_bytes]"
+        )));
+    }
+    let quota_bytes = match parts.get(2) {
+        None => None,
+        Some(q) if q.is_empty() || *q == "unlimited" => None,
+        Some(q) => Some(
+            parse_bytes(q)
+                .map_err(|e| SeaConfigError::BadValue(format!("tenant {spec:?}: {e}")))?,
+        ),
+    };
+    Ok(crate::coordinator::tenants::TenantDef {
+        name: parts[0].to_string(),
+        prefix: parts[1].trim_end_matches('/').to_string(),
+        quota_bytes,
+    })
 }
 
 fn parse_cache_spec(spec: &str) -> Result<CacheDef, SeaConfigError> {
@@ -307,6 +344,16 @@ impl SeaConfig {
                 .map_err(|e| SeaConfigError::BadValue(format!("health.retry_deadline_ms: {e}")))?
                 .unwrap_or(2000),
             health_evacuate: ini.get_bool("health", "evacuate").unwrap_or(true),
+            sched_qos_adaptive: ini.get_bool("sched", "qos_adaptive").unwrap_or(false),
+            tenants: ini
+                .get_all("tenants", "tenant")
+                .into_iter()
+                .map(parse_tenant_spec)
+                .collect::<Result<Vec<_>, _>>()?,
+            ops_bind: ini
+                .get("coordinator", "bind")
+                .filter(|v| !v.is_empty())
+                .map(str::to_string),
         })
     }
 
@@ -341,6 +388,9 @@ impl SeaConfig {
             health_suspect_after: 3,
             health_retry_deadline_ms: 2000,
             health_evacuate: true,
+            sched_qos_adaptive: false,
+            tenants: Vec::new(),
+            ops_bind: None,
         }
     }
 
@@ -376,6 +426,9 @@ pub struct SeaConfigBuilder {
     health_suspect_after: u32,
     health_retry_deadline_ms: u64,
     health_evacuate: bool,
+    sched_qos_adaptive: bool,
+    tenants: Vec<crate::coordinator::tenants::TenantDef>,
+    ops_bind: Option<String>,
 }
 
 impl SeaConfigBuilder {
@@ -516,6 +569,32 @@ impl SeaConfigBuilder {
         self
     }
 
+    /// Decay background QoS debt at min(configured, measured) bandwidth,
+    /// using the health prober's observed tier throughput. Default off.
+    pub fn qos_adaptive(mut self, enabled: bool) -> Self {
+        self.sched_qos_adaptive = enabled;
+        self
+    }
+
+    /// Register a tenant owning every path under `prefix` (relative to
+    /// the mountpoint), with an optional cache-byte quota (`None` =
+    /// unlimited). Declaring at least one tenant switches the mount to
+    /// multi-tenant accounting.
+    pub fn tenant(mut self, name: &str, prefix: &str, quota_bytes: Option<u64>) -> Self {
+        self.tenants.push(crate::coordinator::tenants::TenantDef {
+            name: name.to_string(),
+            prefix: prefix.trim_end_matches('/').to_string(),
+            quota_bytes,
+        });
+        self
+    }
+
+    /// Bind address for the coordinator ops/metrics HTTP endpoint.
+    pub fn ops_bind(mut self, addr: &str) -> Self {
+        self.ops_bind = Some(addr.to_string());
+        self
+    }
+
     pub fn build(self) -> SeaConfig {
         SeaConfig {
             mountpoint: self.mountpoint,
@@ -545,6 +624,9 @@ impl SeaConfigBuilder {
             health_suspect_after: self.health_suspect_after,
             health_retry_deadline_ms: self.health_retry_deadline_ms,
             health_evacuate: self.health_evacuate,
+            sched_qos_adaptive: self.sched_qos_adaptive,
+            tenants: self.tenants,
+            ops_bind: self.ops_bind,
         }
     }
 }
@@ -791,6 +873,62 @@ interval_ms = 50
         assert_eq!(cfg.health_suspect_after, 1);
         assert_eq!(cfg.health_retry_deadline_ms, 10);
         assert!(!cfg.health_evacuate);
+    }
+
+    #[test]
+    fn tenant_config_parses_and_defaults_empty() {
+        let cfg = SeaConfig::parse(SAMPLE).unwrap();
+        assert!(cfg.tenants.is_empty(), "tenancy must default off");
+        assert!(!cfg.sched_qos_adaptive, "adaptive QoS must default off");
+        assert!(cfg.ops_bind.is_none());
+
+        let cfg = SeaConfig::parse(
+            "mount=/m\n[caches]\npersist = l:/x:1G\n\
+             [tenants]\ntenant = alice:/alice:64M\ntenant = bob:/bob\n\
+             tenant = carol:/carol:unlimited\n\
+             [sched]\nqos_adaptive = on\n\
+             [coordinator]\nbind = 127.0.0.1:9188\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.tenants.len(), 3);
+        assert_eq!(cfg.tenants[0].name, "alice");
+        assert_eq!(cfg.tenants[0].prefix, "/alice");
+        assert_eq!(cfg.tenants[0].quota_bytes, Some(64 << 20));
+        assert_eq!(cfg.tenants[1].name, "bob");
+        assert_eq!(cfg.tenants[1].quota_bytes, None);
+        assert_eq!(cfg.tenants[2].quota_bytes, None);
+        assert!(cfg.sched_qos_adaptive);
+        assert_eq!(cfg.ops_bind.as_deref(), Some("127.0.0.1:9188"));
+    }
+
+    #[test]
+    fn bad_tenant_specs_are_rejected() {
+        for spec in ["alice", ":/p", "alice:relative/path", "alice:/p:2pebibytes"] {
+            let err = SeaConfig::parse(&format!(
+                "mount=/m\n[caches]\npersist = l:/x:1G\n[tenants]\ntenant = {spec}\n"
+            ))
+            .unwrap_err();
+            assert!(
+                matches!(err, SeaConfigError::BadValue(_)),
+                "spec {spec:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn tenant_builder_round_trip() {
+        let cfg = SeaConfig::builder("/m")
+            .persist("l", "/x", GIB)
+            .tenant("alice", "/alice/", Some(GIB))
+            .tenant("bob", "/bob", None)
+            .qos_adaptive(true)
+            .ops_bind("127.0.0.1:0")
+            .build();
+        assert_eq!(cfg.tenants.len(), 2);
+        assert_eq!(cfg.tenants[0].prefix, "/alice", "trailing slash trimmed");
+        assert_eq!(cfg.tenants[0].quota_bytes, Some(GIB));
+        assert!(cfg.sched_qos_adaptive);
+        assert_eq!(cfg.ops_bind.as_deref(), Some("127.0.0.1:0"));
     }
 
     #[test]

@@ -1,28 +1,32 @@
-//! Experiment coordination (the leader): runs strategy comparisons on
-//! identical fresh copies of a dataset, both in real mode and across
-//! simulated grids, and assembles comparison reports — plus the
-//! `/metrics` endpoint ([`serve_metrics`]) that exposes the unified
-//! metrics registry (`SeaCore::metrics_snapshot`) in Prometheus text
-//! format while a run is in flight.
+//! Experiment coordination and the control plane: runs strategy
+//! comparisons on identical fresh copies of a dataset, owns the tenant
+//! registry ([`tenants`]), and serves the dependency-free HTTP ops
+//! endpoint — `/metrics` (Prometheus text, [`serve_metrics`]) plus the
+//! REST-style ops API ([`serve_ops`]): `GET /status`,
+//! `GET /tenants/<id>`, `POST /tenants/<id>/quota`.
+
+pub mod tenants;
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::config::Strategy;
+use crate::intercept::SeaCore;
 use crate::pipeline::executor::{run_real, RealRunConfig, RealRunReport};
 use crate::runtime::ComputeService;
 
-/// A minimal HTTP responder for Prometheus scrapes: every request gets a
-/// `200 text/plain` with whatever `render` returns at that instant. One
-/// dependency-free thread, nonblocking accept loop; dropping the handle
-/// stops and joins it.
+/// A minimal dependency-free HTTP responder: one thread, nonblocking
+/// accept loop that parks 25 ms between empty accepts; dropping the
+/// handle stops and joins it. [`serve_metrics`] answers every path with
+/// the render closure; [`serve_ops`] routes the ops API.
 pub struct MetricsServer {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    idle_polls: Arc<AtomicU64>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -30,6 +34,13 @@ impl MetricsServer {
     /// The actually-bound address (resolves `:0` ephemeral ports).
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
+    }
+
+    /// Number of empty accept polls so far. Each poll is followed by a
+    /// 25 ms park, so this advancing slowly (≈40/s) is the signature of
+    /// a cold idle server; a busy-wait would spin it millions per second.
+    pub fn idle_polls(&self) -> u64 {
+        self.idle_polls.load(Ordering::Relaxed)
     }
 
     pub fn shutdown(mut self) {
@@ -50,43 +61,128 @@ impl Drop for MetricsServer {
     }
 }
 
-/// Serve `render()` at `bind` (e.g. `127.0.0.1:9090`, or port 0 for an
-/// ephemeral port — read it back from [`MetricsServer::addr`]). The
-/// render closure runs per scrape on the server thread, so it must be
-/// cheap and lock-light — `SeaCore::metrics_snapshot().to_prometheus()`
-/// qualifies (atomic loads only).
-pub fn serve_metrics(
+/// One parsed HTTP request off the wire.
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+struct HttpResponse {
+    status: u16,
+    content_type: &'static str,
+    body: String,
+}
+
+impl HttpResponse {
+    fn json(status: u16, body: String) -> HttpResponse {
+        HttpResponse {
+            status,
+            content_type: "application/json",
+            body,
+        }
+    }
+
+    fn error(status: u16, message: &str) -> HttpResponse {
+        HttpResponse::json(status, format!("{{\"error\": \"{message}\"}}\n"))
+    }
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Internal Server Error",
+    }
+}
+
+/// Read one request from the connection: head until the blank line, then
+/// `Content-Length` bytes of body. Bounded (8 KiB head) and tolerant —
+/// a malformed head yields `None` and the connection is dropped.
+fn read_request(conn: &mut std::net::TcpStream) -> Option<HttpRequest> {
+    use std::io::Read;
+    let mut buf = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos + 4;
+        }
+        if buf.len() > 8192 {
+            return None;
+        }
+        match conn.read(&mut chunk) {
+            Ok(0) | Err(_) => return None,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+        }
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.lines();
+    let mut request_line = lines.next()?.split_whitespace();
+    let method = request_line.next()?.to_string();
+    let path = request_line.next()?.to_string();
+    let content_length = lines
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.trim().parse::<usize>().ok())
+        .unwrap_or(0);
+    if content_length > 1 << 20 {
+        return None;
+    }
+    let mut body = buf[head_end..].to_vec();
+    while body.len() < content_length {
+        match conn.read(&mut chunk) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+        }
+    }
+    body.truncate(content_length);
+    Some(HttpRequest { method, path, body })
+}
+
+/// Shared accept loop behind [`serve_metrics`] and [`serve_ops`].
+fn serve_http(
     bind: &str,
-    render: impl Fn() -> String + Send + 'static,
+    name: &str,
+    handler: impl Fn(&HttpRequest) -> HttpResponse + Send + 'static,
 ) -> std::io::Result<MetricsServer> {
     let listener = std::net::TcpListener::bind(bind)?;
     listener.set_nonblocking(true)?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
+    let idle_polls = Arc::new(AtomicU64::new(0));
     let thread_stop = stop.clone();
+    let thread_polls = idle_polls.clone();
     let join = std::thread::Builder::new()
-        .name("sea-metrics".into())
+        .name(name.into())
         .spawn(move || {
             while !thread_stop.load(Ordering::Acquire) {
                 match listener.accept() {
                     Ok((mut conn, _peer)) => {
                         let _ = conn.set_nonblocking(false);
                         let _ = conn.set_read_timeout(Some(Duration::from_millis(500)));
-                        // Drain the request head (path/headers are
-                        // irrelevant: every scrape gets the registry).
-                        let mut head = [0u8; 4096];
-                        let _ = std::io::Read::read(&mut conn, &mut head);
-                        let body = render();
+                        let response = match read_request(&mut conn) {
+                            Some(req) => handler(&req),
+                            None => HttpResponse::error(400, "malformed request"),
+                        };
                         let resp = format!(
-                            "HTTP/1.1 200 OK\r\n\
-                             Content-Type: text/plain; version=0.0.4\r\n\
+                            "HTTP/1.1 {} {}\r\n\
+                             Content-Type: {}\r\n\
                              Content-Length: {}\r\n\
-                             Connection: close\r\n\r\n{body}",
-                            body.len(),
+                             Connection: close\r\n\r\n{}",
+                            response.status,
+                            status_reason(response.status),
+                            response.content_type,
+                            response.body.len(),
+                            response.body,
                         );
                         let _ = std::io::Write::write_all(&mut conn, resp.as_bytes());
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        // Park between empty accepts: the idle server
+                        // costs ~40 wakeups/s, not a spinning core.
+                        thread_polls.fetch_add(1, Ordering::Relaxed);
                         std::thread::sleep(Duration::from_millis(25));
                     }
                     Err(_) => std::thread::sleep(Duration::from_millis(25)),
@@ -96,8 +192,80 @@ pub fn serve_metrics(
     Ok(MetricsServer {
         addr,
         stop,
+        idle_polls,
         join: Some(join),
     })
+}
+
+/// Serve `render()` at `bind` (e.g. `127.0.0.1:9090`, or port 0 for an
+/// ephemeral port — read it back from [`MetricsServer::addr`]). Every
+/// path gets the render output (Prometheus scrapers probe variously);
+/// the closure runs per scrape on the server thread, so it must be
+/// cheap and lock-light — `SeaCore::metrics_snapshot().to_prometheus()`
+/// qualifies (atomic loads only).
+pub fn serve_metrics(
+    bind: &str,
+    render: impl Fn() -> String + Send + 'static,
+) -> std::io::Result<MetricsServer> {
+    serve_http(bind, "sea-metrics", move |_req| HttpResponse {
+        status: 200,
+        content_type: "text/plain; version=0.0.4",
+        body: render(),
+    })
+}
+
+/// Serve the ops API for a live mount at `bind`:
+///
+/// - `GET /metrics` — Prometheus text (same as [`serve_metrics`]);
+/// - `GET /status` — JSON: tiers (used/capacity/health), tenants
+///   (usage/quota/counters), QoS;
+/// - `GET /tenants/<id>` — one tenant's JSON (by numeric id or name);
+/// - `POST /tenants/<id>/quota` — body is the new cache-byte quota
+///   (`parse_bytes` grammar, e.g. `64M`, or `unlimited`); applies
+///   immediately, no remount.
+///
+/// All handlers are atomic-read snapshots — safe to scrape during an
+/// active run.
+pub fn serve_ops(bind: &str, core: Arc<SeaCore>) -> std::io::Result<MetricsServer> {
+    serve_http(bind, "sea-ops", move |req| route_ops(&core, req))
+}
+
+fn route_ops(core: &SeaCore, req: &HttpRequest) -> HttpResponse {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/metrics") => HttpResponse {
+            status: 200,
+            content_type: "text/plain; version=0.0.4",
+            body: core.metrics_snapshot().to_prometheus(),
+        },
+        ("GET", "/status") => HttpResponse::json(200, core.status_json()),
+        ("GET", path) if path.starts_with("/tenants/") => {
+            let key = &path["/tenants/".len()..];
+            match core.tenants.lookup(key) {
+                Some(id) => HttpResponse::json(200, core.tenant_json(id)),
+                None => HttpResponse::error(404, "no such tenant"),
+            }
+        }
+        ("POST", path) if path.starts_with("/tenants/") && path.ends_with("/quota") => {
+            let key = &path["/tenants/".len()..path.len() - "/quota".len()];
+            let Some(id) = core.tenants.lookup(key) else {
+                return HttpResponse::error(404, "no such tenant");
+            };
+            let body = String::from_utf8_lossy(&req.body);
+            let spec = body.trim();
+            let quota = if spec == "unlimited" {
+                tenants::UNLIMITED
+            } else {
+                match crate::util::parse_bytes(spec) {
+                    Ok(v) => v,
+                    Err(e) => return HttpResponse::error(400, &e),
+                }
+            };
+            core.tenants.set_quota(id, quota);
+            HttpResponse::json(200, core.tenant_json(id))
+        }
+        ("GET", _) => HttpResponse::error(404, "unknown path"),
+        _ => HttpResponse::error(405, "method not allowed"),
+    }
 }
 
 /// Sea vs reference comparison on the same workload.
@@ -215,6 +383,41 @@ mod tests {
             assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
             assert!(resp.contains("sea_calls_total{op=\"read\"} 7"), "{resp}");
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn idle_server_stays_cold() {
+        let server = serve_metrics("127.0.0.1:0", String::new).unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+        let polls = server.idle_polls();
+        // 200 ms at one poll per 25 ms park is ~8 polls; a busy-wait
+        // would rack up thousands. Allow wide margins for slow CI.
+        assert!(polls >= 2, "accept loop stalled: {polls} polls");
+        assert!(polls < 100, "accept loop busy-waiting: {polls} polls in 200ms");
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_gets_400_and_loop_survives() {
+        use std::io::{Read, Write};
+        let server = serve_metrics("127.0.0.1:0", || "ok".to_string()).unwrap();
+        let addr = server.addr();
+        {
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            conn.write_all(b"\r\n\r\n").unwrap();
+            let _ = conn.shutdown(std::net::Shutdown::Write);
+            let mut resp = String::new();
+            let _ = conn.read_to_string(&mut resp);
+            assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        }
+        // The loop keeps serving after the bad request.
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        let _ = conn.shutdown(std::net::Shutdown::Write);
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
         server.shutdown();
     }
 

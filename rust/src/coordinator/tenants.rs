@@ -1,0 +1,452 @@
+//! Tenant registry: the control plane's per-tenant identity, quota and
+//! accounting state.
+//!
+//! A **tenant** is a named slice of the logical namespace (a path prefix)
+//! with its own cache-byte quota, QoS lane and counters. `TenantId` is an
+//! index into the registry's dense vector; tenant 0 is always the
+//! `default` tenant with an empty prefix and no quota, so a mount with no
+//! `[tenants]` section resolves every path to tenant 0 and the registry
+//! degenerates to a no-op (`multi() == false`): no accounting, no quota
+//! checks, no lanes — byte-for-byte the pre-tenant behaviour.
+//!
+//! Accounting discipline (the hot-path contract):
+//!
+//! * `cache_used` is an exact per-tenant `AtomicU64` mirrored against tier
+//!   reservations — charged/released only at reservation sites (create
+//!   placement, write growth, spill, prefetch staging, eviction), all of
+//!   which already take a shared CAS on the tier's `used` counter. The
+//!   steady-state dirty write never reserves, so it never touches this.
+//! * `bytes_written`/`cache_hits` are [`crate::sched::StripedCounter`]s:
+//!   per-thread stripes, no shared `fetch_add` for concurrent writers.
+//! * Everything else (files, yields, fell-through) is bumped only on slow
+//!   paths (create, throttle sleeps, quota fall-through).
+//!
+//! Quotas are plain atomics: `POST /tenants/<id>/quota` on the ops API
+//! stores a new cap and the very next reservation check sees it — no
+//! remount, no lock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sched::StripedCounter;
+
+/// Dense tenant index; tenant 0 is always the default tenant.
+pub type TenantId = u16;
+
+/// The implicit catch-all tenant every mount has.
+pub const DEFAULT_TENANT: TenantId = 0;
+
+/// Quota sentinel: no cache-byte cap.
+pub const UNLIMITED: u64 = u64::MAX;
+
+/// One `[tenants]` config entry (`tenant = name:prefix[:quota_bytes]`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantDef {
+    pub name: String,
+    /// Logical path prefix owned by this tenant (longest match wins).
+    pub prefix: String,
+    /// Cache-byte cap; `None` = unlimited.
+    pub quota_bytes: Option<u64>,
+}
+
+/// Live per-tenant state.
+#[derive(Debug)]
+pub struct TenantState {
+    name: String,
+    prefix: String,
+    quota: AtomicU64,
+    cache_used: AtomicU64,
+    files: AtomicU64,
+    bytes_written: StripedCounter,
+    cache_hits: StripedCounter,
+    throttle_yields: AtomicU64,
+    fell_through: AtomicU64,
+}
+
+impl TenantState {
+    fn new(name: &str, prefix: &str, quota: u64) -> TenantState {
+        TenantState {
+            name: name.to_string(),
+            prefix: prefix.to_string(),
+            quota: AtomicU64::new(quota),
+            cache_used: AtomicU64::new(0),
+            files: AtomicU64::new(0),
+            bytes_written: StripedCounter::new(),
+            cache_hits: StripedCounter::new(),
+            throttle_yields: AtomicU64::new(0),
+            fell_through: AtomicU64::new(0),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn prefix(&self) -> &str {
+        &self.prefix
+    }
+
+    /// Current cache-byte cap (`UNLIMITED` = none).
+    pub fn quota(&self) -> u64 {
+        self.quota.load(Ordering::Relaxed)
+    }
+
+    /// Bytes this tenant currently has reserved across cache tiers.
+    pub fn cache_used(&self) -> u64 {
+        self.cache_used.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time tenant counters for reports and the ops API.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSnapshot {
+    pub id: TenantId,
+    pub name: String,
+    pub prefix: String,
+    pub quota: u64,
+    pub cache_used: u64,
+    pub files: u64,
+    pub bytes_written: u64,
+    pub cache_hits: u64,
+    pub throttle_yields: u64,
+    pub fell_through: u64,
+}
+
+/// The registry proper. Built once at mount from `[tenants]`; immutable
+/// shape (tenant set), mutable state (quotas, counters).
+#[derive(Debug)]
+pub struct TenantRegistry {
+    tenants: Vec<TenantState>,
+    multi: bool,
+}
+
+impl Default for TenantRegistry {
+    fn default() -> Self {
+        TenantRegistry::from_defs(&[])
+    }
+}
+
+impl TenantRegistry {
+    /// Build from config. The default tenant (id 0, empty prefix, no
+    /// quota) is always present; configured tenants get ids 1..=n in
+    /// declaration order.
+    pub fn from_defs(defs: &[TenantDef]) -> TenantRegistry {
+        let mut tenants = vec![TenantState::new("default", "", UNLIMITED)];
+        for def in defs {
+            tenants.push(TenantState::new(
+                &def.name,
+                &def.prefix,
+                def.quota_bytes.unwrap_or(UNLIMITED),
+            ));
+        }
+        let multi = tenants.len() > 1;
+        TenantRegistry { tenants, multi }
+    }
+
+    /// True when a `[tenants]` section configured at least one tenant —
+    /// the switch that turns all per-tenant accounting on. When false,
+    /// every accounting call below is a no-op and the mount behaves
+    /// exactly like the pre-tenant code.
+    pub fn multi(&self) -> bool {
+        self.multi
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // the default tenant always exists
+    }
+
+    pub fn get(&self, id: TenantId) -> &TenantState {
+        &self.tenants[(id as usize).min(self.tenants.len() - 1)]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (TenantId, &TenantState)> {
+        self.tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (i as TenantId, t))
+    }
+
+    /// Resolve a tenant by numeric id or name (the ops API accepts both).
+    pub fn lookup(&self, key: &str) -> Option<TenantId> {
+        if let Ok(id) = key.parse::<u16>() {
+            if (id as usize) < self.tenants.len() {
+                return Some(id);
+            }
+        }
+        self.tenants
+            .iter()
+            .position(|t| t.name == key)
+            .map(|i| i as TenantId)
+    }
+
+    /// Owner of a logical path: the tenant with the longest matching
+    /// prefix (a prefix matches at a path-component boundary), falling
+    /// back to the default tenant. Pure — the same path always resolves
+    /// to the same tenant, which is what lets release sites re-derive the
+    /// owner instead of persisting it.
+    pub fn resolve(&self, logical: &str) -> TenantId {
+        if !self.multi {
+            return DEFAULT_TENANT;
+        }
+        let mut best = DEFAULT_TENANT;
+        let mut best_len = 0usize;
+        for (i, t) in self.tenants.iter().enumerate().skip(1) {
+            let p = &t.prefix;
+            if p.is_empty() || p.len() < best_len || !logical.starts_with(p.as_str()) {
+                continue;
+            }
+            let boundary = p.ends_with('/')
+                || logical.len() == p.len()
+                || logical.as_bytes()[p.len()] == b'/';
+            if boundary {
+                best = i as TenantId;
+                best_len = p.len();
+            }
+        }
+        best
+    }
+
+    /// Set a tenant's cache-byte quota at runtime (ops API). Takes effect
+    /// on the next reservation check; never requires a remount.
+    pub fn set_quota(&self, id: TenantId, quota: u64) {
+        self.get(id).quota.store(quota, Ordering::Relaxed);
+    }
+
+    /// True when `id` could admit at least one more byte (or file) into a
+    /// cache tier. Zero-byte creates use this as the admission predicate.
+    pub fn cache_admissible(&self, id: TenantId) -> bool {
+        if !self.multi {
+            return true;
+        }
+        let t = self.get(id);
+        t.cache_used() < t.quota()
+    }
+
+    /// Reserve `bytes` of cache budget for `id`. Exact CAS against the
+    /// quota; a failed charge means the caller must fall through to the
+    /// persist tier (the same degraded path as a breaker-open tier).
+    /// Always succeeds (and still tracks usage) for unlimited tenants.
+    pub fn try_charge(&self, id: TenantId, bytes: u64) -> bool {
+        if !self.multi || bytes == 0 {
+            return true;
+        }
+        let t = self.get(id);
+        let mut used = t.cache_used.load(Ordering::Relaxed);
+        loop {
+            let quota = t.quota.load(Ordering::Relaxed);
+            if quota != UNLIMITED && used.saturating_add(bytes) > quota {
+                return false;
+            }
+            match t.cache_used.compare_exchange_weak(
+                used,
+                used + bytes,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(cur) => used = cur,
+            }
+        }
+    }
+
+    /// Unconditional charge, bypassing the quota check: crash recovery
+    /// and cross-tenant renames use it when the bytes are already
+    /// physically on a cache tier — usage must reflect them even if that
+    /// overshoots the quota (the next placement then falls through to
+    /// persist until usage drains), mirroring the tolerated
+    /// `try_reserve` on the tier side.
+    pub fn charge(&self, id: TenantId, bytes: u64) {
+        if self.multi && bytes != 0 {
+            self.get(id).cache_used.fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Return cache budget (mirrors `Tier::release`: saturating).
+    pub fn release(&self, id: TenantId, bytes: u64) {
+        if !self.multi || bytes == 0 {
+            return;
+        }
+        let t = self.get(id);
+        let mut used = t.cache_used.load(Ordering::Relaxed);
+        loop {
+            let next = used.saturating_sub(bytes);
+            match t.cache_used.compare_exchange_weak(
+                used,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(cur) => used = cur,
+            }
+        }
+    }
+
+    pub fn note_create(&self, id: TenantId) {
+        if self.multi {
+            self.get(id).files.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn note_bytes_written(&self, id: TenantId, bytes: u64) {
+        if self.multi {
+            self.get(id).bytes_written.add(bytes);
+        }
+    }
+
+    pub fn note_cache_hit(&self, id: TenantId) {
+        if self.multi {
+            self.get(id).cache_hits.add(1);
+        }
+    }
+
+    pub fn note_yields(&self, id: TenantId, yields: u32) {
+        if self.multi && yields > 0 {
+            self.get(id)
+                .throttle_yields
+                .fetch_add(yields as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// An over-quota placement that degraded to the persist tier.
+    pub fn note_fell_through(&self, id: TenantId) {
+        if self.multi {
+            self.get(id).fell_through.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self, id: TenantId) -> TenantSnapshot {
+        let t = self.get(id);
+        TenantSnapshot {
+            id,
+            name: t.name.clone(),
+            prefix: t.prefix.clone(),
+            quota: t.quota(),
+            cache_used: t.cache_used(),
+            files: t.files.load(Ordering::Relaxed),
+            bytes_written: t.bytes_written.sum(),
+            cache_hits: t.cache_hits.sum(),
+            throttle_yields: t.throttle_yields.load(Ordering::Relaxed),
+            fell_through: t.fell_through.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn snapshots(&self) -> Vec<TenantSnapshot> {
+        (0..self.tenants.len())
+            .map(|i| self.snapshot(i as TenantId))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_tenants() -> TenantRegistry {
+        TenantRegistry::from_defs(&[
+            TenantDef {
+                name: "alice".into(),
+                prefix: "/alice".into(),
+                quota_bytes: Some(1000),
+            },
+            TenantDef {
+                name: "bob".into(),
+                prefix: "/alice/shared/bob".into(),
+                quota_bytes: None,
+            },
+        ])
+    }
+
+    #[test]
+    fn empty_config_is_single_tenant_noop() {
+        let r = TenantRegistry::from_defs(&[]);
+        assert!(!r.multi());
+        assert_eq!(r.resolve("/anything/at/all"), DEFAULT_TENANT);
+        assert!(r.try_charge(DEFAULT_TENANT, u64::MAX));
+        assert!(r.cache_admissible(DEFAULT_TENANT));
+        r.note_create(DEFAULT_TENANT);
+        r.note_bytes_written(DEFAULT_TENANT, 99);
+        let s = r.snapshot(DEFAULT_TENANT);
+        assert_eq!(s.files, 0, "single-tenant mode must not account");
+        assert_eq!(s.bytes_written, 0);
+    }
+
+    #[test]
+    fn resolve_longest_prefix_at_component_boundary() {
+        let r = two_tenants();
+        assert_eq!(r.resolve("/alice/f.nii"), 1);
+        assert_eq!(r.resolve("/alice"), 1);
+        assert_eq!(r.resolve("/alicenot/f.nii"), 0, "no mid-component match");
+        assert_eq!(r.resolve("/alice/shared/bob/x"), 2, "longest prefix wins");
+        assert_eq!(r.resolve("/other"), 0);
+    }
+
+    #[test]
+    fn lookup_accepts_id_and_name() {
+        let r = two_tenants();
+        assert_eq!(r.lookup("alice"), Some(1));
+        assert_eq!(r.lookup("2"), Some(2));
+        assert_eq!(r.lookup("default"), Some(0));
+        assert_eq!(r.lookup("nope"), None);
+        assert_eq!(r.lookup("99"), None);
+    }
+
+    #[test]
+    fn quota_charges_exactly_and_releases() {
+        let r = two_tenants();
+        assert!(r.try_charge(1, 600));
+        assert!(!r.try_charge(1, 500), "601..1100 > 1000 must fail");
+        assert!(r.try_charge(1, 400), "fits exactly");
+        assert!(!r.cache_admissible(1), "at quota");
+        r.release(1, 400);
+        assert!(r.cache_admissible(1));
+        assert_eq!(r.get(1).cache_used(), 600);
+        // release is saturating, mirroring Tier::release
+        r.release(1, 10_000);
+        assert_eq!(r.get(1).cache_used(), 0);
+        // unlimited tenant still tracks usage
+        assert!(r.try_charge(2, 1 << 40));
+        assert_eq!(r.get(2).cache_used(), 1 << 40);
+    }
+
+    #[test]
+    fn quota_change_applies_without_remount() {
+        let r = two_tenants();
+        assert!(r.try_charge(1, 1000));
+        assert!(!r.try_charge(1, 1));
+        r.set_quota(1, 5000);
+        assert!(r.try_charge(1, 1), "raised quota visible immediately");
+        r.set_quota(1, 10);
+        assert!(!r.cache_admissible(1), "lowered below current usage");
+        assert!(!r.try_charge(1, 1));
+    }
+
+    #[test]
+    fn concurrent_charges_never_exceed_quota() {
+        use std::sync::Arc;
+        let r = Arc::new(TenantRegistry::from_defs(&[TenantDef {
+            name: "t".into(),
+            prefix: "/t".into(),
+            quota_bytes: Some(10_000),
+        }]));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let r = Arc::clone(&r);
+            handles.push(std::thread::spawn(move || {
+                let mut charged = 0u64;
+                for _ in 0..1000 {
+                    if r.try_charge(1, 7) {
+                        charged += 7;
+                    }
+                }
+                charged
+            }));
+        }
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total <= 10_000, "{total}");
+        assert_eq!(r.get(1).cache_used(), total);
+    }
+}

@@ -140,6 +140,45 @@ pub fn fmt_health(m: &crate::obs::MetricsSnapshot) -> String {
     out
 }
 
+/// Per-tenant activity summary for a multi-tenant run, one line per
+/// tenant, read from the unified registry snapshot. Empty string on a
+/// single-tenant mount — the per-tenant counter family is only
+/// published when `[tenants]` is configured, so the default report
+/// stays byte-identical.
+pub fn fmt_tenants(m: &crate::obs::MetricsSnapshot) -> String {
+    let mut names: Vec<&str> = m
+        .counters
+        .iter()
+        .filter(|c| c.name.starts_with("sea_tenant_"))
+        .filter_map(|c| {
+            c.labels
+                .iter()
+                .find(|(k, _)| k == "tenant")
+                .map(|(_, v)| v.as_str())
+        })
+        .collect();
+    names.sort_unstable();
+    names.dedup();
+    let mut out = String::new();
+    for name in names {
+        if !out.is_empty() {
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "tenant[{name}]: {} files ({} B), {} B written, {} cache hits, \
+             {} B cache used, {} bg yields, {} fell through",
+            labeled(m, "sea_tenant_files", name),
+            labeled(m, "sea_tenant_bytes", name),
+            labeled(m, "sea_tenant_bytes_written_total", name),
+            labeled(m, "sea_tenant_cache_hits_total", name),
+            labeled(m, "sea_tenant_cache_used_bytes", name),
+            labeled(m, "sea_tenant_throttle_yields_total", name),
+            labeled(m, "sea_tenant_fell_through_total", name),
+        ));
+    }
+    out
+}
+
 /// Per-op × per-tier latency quantiles as a markdown table (µs). Empty
 /// string when histograms were disabled for the run.
 pub fn fmt_latency(m: &crate::obs::MetricsSnapshot) -> String {
@@ -302,6 +341,34 @@ mod tests {
             fmt_health(&MetricsSnapshot::default()),
             "health: all tiers up"
         );
+    }
+
+    #[test]
+    fn fmt_tenants_lines() {
+        use crate::obs::{Counter, MetricsSnapshot};
+        let snap = MetricsSnapshot {
+            counters: vec![
+                Counter::with_label("sea_tenant_files", "tenant", "alice", 3),
+                Counter::with_label("sea_tenant_bytes", "tenant", "alice", 900),
+                Counter::with_label("sea_tenant_bytes_written_total", "tenant", "alice", 1200),
+                Counter::with_label("sea_tenant_cache_hits_total", "tenant", "alice", 7),
+                Counter::with_label("sea_tenant_cache_used_bytes", "tenant", "alice", 512),
+                Counter::with_label("sea_tenant_files", "tenant", "bob", 1),
+            ],
+            latency: vec![],
+        };
+        let lines = fmt_tenants(&snap);
+        assert_eq!(lines.lines().count(), 2, "{lines}");
+        assert!(
+            lines.contains(
+                "tenant[alice]: 3 files (900 B), 1200 B written, 7 cache hits, \
+                 512 B cache used, 0 bg yields, 0 fell through"
+            ),
+            "{lines}"
+        );
+        assert!(lines.contains("tenant[bob]: 1 files"), "{lines}");
+        // single-tenant runs publish no sea_tenant_* family at all
+        assert_eq!(fmt_tenants(&MetricsSnapshot::default()), "");
     }
 
     #[test]

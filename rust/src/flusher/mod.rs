@@ -501,14 +501,18 @@ pub struct SeaSession {
     flusher: Option<FlusherHandle>,
     prefetcher: Option<PrefetcherHandle>,
     /// The health prober/evacuation loop (`crate::health`); `None` when
-    /// `[health] enabled = false`.
+    /// `[health] enabled = false` and adaptive QoS is off (the same
+    /// thread carries the bandwidth measurement).
     prober: Option<crate::health::ProberHandle>,
+    /// The coordinator ops/metrics endpoint (`[coordinator] bind`);
+    /// `None` when unconfigured.
+    ops: Option<crate::coordinator::MetricsServer>,
 }
 
 impl SeaSession {
-    /// Mount and (as enabled in `cfg`) start the flusher, prefetcher
-    /// and health-prober threads. The prefetcher only spawns when there
-    /// is a cache tier to stage into.
+    /// Mount and (as enabled in `cfg`) start the flusher, prefetcher,
+    /// health-prober and coordinator ops-endpoint threads. The
+    /// prefetcher only spawns when there is a cache tier to stage into.
     pub fn start(
         cfg: SeaConfig,
         lists: SeaLists,
@@ -517,7 +521,8 @@ impl SeaSession {
         let interval = Duration::from_millis(cfg.flusher_interval_ms);
         let flusher_enabled = cfg.flusher_enabled;
         let prefetcher_enabled = cfg.prefetcher_enabled && !cfg.caches.is_empty();
-        let prober_enabled = cfg.health_enabled;
+        let prober_enabled = cfg.health_enabled || cfg.sched_qos_adaptive;
+        let ops_bind = cfg.ops_bind.clone();
         let io = SeaIo::mount_with(cfg, lists, shape_persist)?;
         let flusher = flusher_enabled
             .then(|| FlusherHandle::spawn(io.core().clone(), interval));
@@ -525,16 +530,28 @@ impl SeaSession {
             prefetcher_enabled.then(|| PrefetcherHandle::spawn(io.core().clone()));
         let prober =
             prober_enabled.then(|| crate::health::ProberHandle::spawn(io.core().clone()));
+        let ops = match ops_bind {
+            Some(bind) => Some(crate::coordinator::serve_ops(&bind, io.core().clone())?),
+            None => None,
+        };
         Ok(SeaSession {
             io,
             flusher,
             prefetcher,
             prober,
+            ops,
         })
     }
 
     pub fn io(&self) -> &SeaIo {
         &self.io
+    }
+
+    /// The bound address of the coordinator ops endpoint, when
+    /// `[coordinator] bind` is configured (resolves `:0` ephemeral
+    /// ports for tests and the run report).
+    pub fn ops_addr(&self) -> Option<std::net::SocketAddr> {
+        self.ops.as_ref().map(|s| s.addr())
     }
 
     /// Run one synchronous flush pass right now.
@@ -545,7 +562,12 @@ impl SeaSession {
     /// Unmount: stop the prober and prefetcher, drain everything, stop
     /// the flusher, return final accounting.
     pub fn unmount(mut self) -> (CallStats, FlushReport) {
-        // Prober first: an evacuation batch still holding fences would
+        // Ops endpoint first: no scrape should observe a half-drained
+        // mount as live.
+        if let Some(server) = self.ops.take() {
+            server.shutdown();
+        }
+        // Prober next: an evacuation batch still holding fences would
         // make the final drain skip (re-queue) those files.
         if let Some(handle) = self.prober.take() {
             handle.shutdown();

@@ -81,6 +81,17 @@ use crate::transfer::{BatchJob, Outcome};
 /// within the probe).
 pub const PROBE_NAME: &str = ".sea_probe";
 
+/// Name of the adaptive-QoS bandwidth probe file (`[sched]
+/// qos_adaptive`); like [`PROBE_NAME`], it lives outside the namespace
+/// and is unlinked within the measurement.
+pub const QOS_PROBE_NAME: &str = ".sea_qos_probe";
+
+/// Payload size of one adaptive-QoS bandwidth measurement. Small enough
+/// to be invisible next to real traffic, large enough that the
+/// write+read round trip is dominated by the device, not by syscall
+/// setup.
+pub const QOS_PROBE_BYTES: usize = 64 * 1024;
+
 /// Retry backoff bounds for [`Health::with_retry`].
 const RETRY_BASE: Duration = Duration::from_millis(1);
 const RETRY_CAP: Duration = Duration::from_millis(64);
@@ -418,6 +429,41 @@ impl Health {
         }
     }
 
+    /// Adaptive-QoS bandwidth measurement (`[sched] qos_adaptive`): a
+    /// timed write+read round trip against every *shaped* tier, feeding
+    /// the observed bytes/s into the throttle's debt-decay rate
+    /// ([`crate::tiers::Tier::set_measured_rate`]). A device that has
+    /// slowed down (contention, degraded media) yields a lower measured
+    /// rate, so background debt decays slower and background transfers
+    /// back off harder — the prober's latency observation closes the
+    /// loop the static configured rate cannot. Gated by the caller on
+    /// the config flag, *not* on [`Health::enabled`]: adaptive QoS
+    /// works with the breaker disabled. Measurement failures skip the
+    /// tier silently — the health state machine only eats errors from
+    /// real traffic and its own probes.
+    pub fn measure_pass(&self, core: &SeaCore) {
+        for idx in 0..core.tiers.len() {
+            let tier = core.tiers.get(idx);
+            if !tier.is_data_shaped() || tier.is_down() {
+                continue;
+            }
+            let path = tier.root().join(QOS_PROBE_NAME);
+            let payload = vec![0x5Au8; QOS_PROBE_BYTES];
+            let t0 = std::time::Instant::now();
+            let ok = std::fs::write(&path, &payload).is_ok()
+                && std::fs::read(&path)
+                    .map(|b| b.len() == payload.len())
+                    .unwrap_or(false);
+            let _ = std::fs::remove_file(&path);
+            if !ok {
+                continue;
+            }
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            // The payload crossed the device twice (write, then read).
+            tier.set_measured_rate((2 * QOS_PROBE_BYTES) as f64 / secs);
+        }
+    }
+
     /// Touch-file round trip against one `Down`/`Full` tier. Success
     /// closes the breaker (`→ Up`); failure restores the previous
     /// state. The `tier.probe` trace span records the attempt either
@@ -559,6 +605,9 @@ impl ProberHandle {
                     return;
                 }
                 loop_core.health.probe_pass(&loop_core);
+                if loop_core.cfg.sched_qos_adaptive {
+                    loop_core.health.measure_pass(&loop_core);
+                }
                 // Sliced sleep: shutdown must not wait out a long
                 // probe interval.
                 let mut left = interval;

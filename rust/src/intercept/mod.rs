@@ -168,6 +168,12 @@ pub struct SeaCore {
     /// and the prober/evacuation loop. Inert (every predicate `true`)
     /// when `[health] enabled = false`.
     pub health: crate::health::Health,
+    /// The tenant registry (`crate::coordinator::tenants`): path-prefix
+    /// ownership, per-tenant cache-byte quotas mirrored 1:1 against tier
+    /// reservations, and per-tenant counters. A mount without a
+    /// `[tenants]` section gets the single-tenant registry, where every
+    /// accounting call is a no-op.
+    pub tenants: crate::coordinator::tenants::TenantRegistry,
     pub shutdown: AtomicBool,
 }
 
@@ -225,6 +231,10 @@ impl SeaCore {
         let _ = std::fs::remove_file(path);
         if !self.is_persist(tier) {
             self.tier(tier).release(size);
+            // Tenant quota mirrors the tier reservation exactly: the
+            // owner is re-derived from the path (resolve is pure), so
+            // every release site stays in lock-step with `Tier::release`.
+            self.tenants.release(self.tenants.resolve(logical), size);
         }
     }
 
@@ -307,7 +317,16 @@ impl SeaCore {
     /// [`crate::health::Health::admits_writes`]) are excluded outright,
     /// so prefetch staging and spill both re-route around a failing
     /// cache without extra checks at their call sites.
-    pub fn reserve_on_cache_evicting(&self, bytes: u64) -> Option<TierIdx> {
+    /// The `tenant` is charged against its cache-byte quota alongside
+    /// the tier reservation; an over-quota tenant is refused outright —
+    /// the same degraded fall-through as a breaker-open tier, with no
+    /// surfaced error.
+    pub fn reserve_on_cache_evicting(&self, bytes: u64, tenant: u16) -> Option<TierIdx> {
+        if !self.tenants.try_charge(tenant, bytes) {
+            self.tenants.note_fell_through(tenant);
+            self.admission.note_fell_through();
+            return None;
+        }
         if let Some(idx) =
             self.tiers.reserve_on_cache_filtered(bytes, |i| self.health.admits_writes(i))
         {
@@ -325,6 +344,7 @@ impl SeaCore {
                 }
             }
         }
+        self.tenants.release(tenant, bytes);
         self.admission.note_fell_through();
         None
     }
@@ -337,8 +357,17 @@ impl SeaCore {
     /// The 0-byte reservation grows with the writes that follow,
     /// exactly as [`TierSet::place_write`] documents for zero-byte
     /// requests.
-    pub fn place_new_file(&self) -> TierIdx {
+    /// An over-quota `tenant` (no cache budget left for even one byte)
+    /// skips every cache and lands on persist directly — quota
+    /// exhaustion degrades placement exactly like a breaker-open tier,
+    /// never surfacing an error.
+    pub fn place_new_file(&self, tenant: u16) -> TierIdx {
         let persist = self.tiers.persist_idx();
+        if !self.tenants.cache_admissible(tenant) {
+            self.tenants.note_fell_through(tenant);
+            self.admission.note_fell_through();
+            return persist;
+        }
         for idx in 0..persist {
             if self.health.admits_writes(idx) && self.tier(idx).free() > 0 {
                 self.admission.note_hit();
@@ -520,6 +549,34 @@ impl SeaCore {
             counters.push(Counter::with_label("sea_tier_used_bytes", "tier", &name, bytes));
             counters.push(Counter::with_label("sea_tier_files", "tier", &name, files as u64));
         }
+        // Per-tenant dimension, only on multi-tenant mounts: the
+        // single-tenant registry keeps the scrape output byte-identical
+        // to the pre-tenant code.
+        if self.tenants.multi() {
+            let usage = self.ns.tenant_usage(self.tenants.len());
+            for s in self.tenants.snapshots() {
+                let (files, bytes) = usage[s.id as usize];
+                for (metric, v) in [
+                    ("sea_tenant_files", files),
+                    ("sea_tenant_bytes", bytes),
+                    ("sea_tenant_cache_used_bytes", s.cache_used),
+                    ("sea_tenant_bytes_written_total", s.bytes_written),
+                    ("sea_tenant_cache_hits_total", s.cache_hits),
+                    ("sea_tenant_throttle_yields_total", s.throttle_yields),
+                    ("sea_tenant_fell_through_total", s.fell_through),
+                ] {
+                    counters.push(Counter::with_label(metric, "tenant", &s.name, v));
+                }
+                if s.quota != crate::coordinator::tenants::UNLIMITED {
+                    counters.push(Counter::with_label(
+                        "sea_tenant_quota_bytes",
+                        "tenant",
+                        &s.name,
+                        s.quota,
+                    ));
+                }
+            }
+        }
         counters.extend(self.obs.own_counters());
         let tier_names: Vec<String> =
             (0..self.tiers.len()).map(|i| self.tier(i).name.clone()).collect();
@@ -528,6 +585,108 @@ impl SeaCore {
             latency: self.obs.latency_rows(&tier_names),
         }
     }
+
+    /// One tenant rendered as a JSON object — usage from the batched
+    /// namespace scan, quota/counters from the registry, per-tier
+    /// background-lane counters when QoS lanes are installed. Atomic
+    /// reads plus one read-lock pass per shard; safe during a live run.
+    fn tenant_json_inner(&self, id: u16, usage: (u64, u64)) -> String {
+        let s = self.tenants.snapshot(id);
+        let quota = if s.quota == crate::coordinator::tenants::UNLIMITED {
+            "\"unlimited\"".to_string()
+        } else {
+            s.quota.to_string()
+        };
+        let mut lanes = String::new();
+        for idx in 0..self.tiers.len() {
+            let t = self.tier(idx);
+            if let Some((bg_bytes, yields)) = t.lane_snapshot(id) {
+                if !lanes.is_empty() {
+                    lanes.push_str(", ");
+                }
+                lanes.push_str(&format!(
+                    "{{\"tier\": \"{}\", \"bg_bytes\": {bg_bytes}, \"yields\": {yields}}}",
+                    json_escape(&t.name),
+                ));
+            }
+        }
+        format!(
+            "{{\"id\": {}, \"name\": \"{}\", \"prefix\": \"{}\", \
+             \"quota_bytes\": {quota}, \"cache_used_bytes\": {}, \
+             \"files\": {}, \"bytes\": {}, \"bytes_written\": {}, \
+             \"cache_hits\": {}, \"throttle_yields\": {}, \
+             \"fell_through\": {}, \"lanes\": [{lanes}]}}",
+            s.id,
+            json_escape(&s.name),
+            json_escape(&s.prefix),
+            s.cache_used,
+            usage.0,
+            usage.1,
+            s.bytes_written,
+            s.cache_hits,
+            s.throttle_yields,
+            s.fell_through,
+        )
+    }
+
+    /// `GET /tenants/<id>` body.
+    pub fn tenant_json(&self, id: u16) -> String {
+        let usage = self.ns.tenant_usage(self.tenants.len());
+        let slot = (id as usize).min(usage.len() - 1);
+        let mut body = self.tenant_json_inner(id, usage[slot]);
+        body.push('\n');
+        body
+    }
+
+    /// `GET /status` body: tiers (usage, capacity, health state), every
+    /// tenant (via [`SeaCore::tenant_json`]'s renderer), and the QoS
+    /// switches. Hand-rolled JSON — the ops API carries no dependencies.
+    pub fn status_json(&self) -> String {
+        let mut tiers = String::new();
+        for (idx, (name, bytes, files)) in self.tier_usage().into_iter().enumerate() {
+            if !tiers.is_empty() {
+                tiers.push_str(", ");
+            }
+            tiers.push_str(&format!(
+                "{{\"name\": \"{}\", \"used_bytes\": {bytes}, \"capacity_bytes\": {}, \
+                 \"files\": {files}, \"health\": \"{}\", \"persist\": {}}}",
+                json_escape(&name),
+                self.tier(idx).capacity(),
+                self.health.state(idx).as_str(),
+                self.is_persist(idx),
+            ));
+        }
+        let usage = self.ns.tenant_usage(self.tenants.len());
+        let mut tenants = String::new();
+        for (id, _) in self.tenants.iter() {
+            if !tenants.is_empty() {
+                tenants.push_str(", ");
+            }
+            tenants.push_str(&self.tenant_json_inner(id, usage[id as usize]));
+        }
+        format!(
+            "{{\"multi_tenant\": {}, \"qos\": {}, \"qos_adaptive\": {}, \
+             \"tiers\": [{tiers}], \"tenants\": [{tenants}]}}\n",
+            self.tenants.multi(),
+            self.cfg.sched_qos,
+            self.cfg.sched_qos_adaptive,
+        )
+    }
+}
+
+/// Minimal JSON string escaping for names/prefixes (quotes, backslashes,
+/// control bytes) — enough for config-supplied identifiers.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// File-descriptor flags.
@@ -566,6 +725,10 @@ struct OpenFile {
     pos: u64,
     /// Current known size (reservation already accounted to `tier`).
     size: u64,
+    /// Owning tenant, memoised at open/create (re-derived with `logical`
+    /// when a rename moves the descriptor) so the steady write path
+    /// never re-resolves the path prefix.
+    tenant: u16,
 }
 
 /// Slots per pre-allocated slab chunk.
@@ -928,6 +1091,21 @@ impl SeaIo {
         let admission_scan_memo =
             (0..tiers.persist_idx()).map(|_| AtomicU64::new(u64::MAX)).collect();
         let health = crate::health::Health::new(&cfg, tiers.len(), obs.clone());
+        let tenants = crate::coordinator::tenants::TenantRegistry::from_defs(&cfg.tenants);
+        if tenants.multi() && cfg.sched_qos {
+            // Per-tenant background lanes on every shaped tier, plus the
+            // optional prober-fed adaptive debt decay. Single-tenant
+            // mounts install neither — the throttle code path is
+            // byte-identical to the pre-tenant build.
+            for idx in 0..tiers.len() {
+                tiers.get(idx).set_tenant_lanes(tenants.len());
+            }
+        }
+        if cfg.sched_qos_adaptive {
+            for idx in 0..tiers.len() {
+                tiers.get(idx).set_qos_adaptive(true);
+            }
+        }
         let core = Arc::new(SeaCore {
             tiers,
             ns,
@@ -944,6 +1122,7 @@ impl SeaIo {
             obs,
             flush_backoff: Mutex::new(HashMap::new()),
             health,
+            tenants,
             shutdown: AtomicBool::new(false),
             cfg,
         });
@@ -1006,7 +1185,8 @@ impl SeaIo {
                     // One locked op, no dirty-queue traffic: mounting over
                     // a large existing dataset must not enqueue (and then
                     // drain-and-discard) every input file.
-                    self.core.ns.register_clean(&logical, persist, size);
+                    let owner = self.core.tenants.resolve(&logical);
+                    self.core.ns.register_clean_owned(&logical, persist, size, owner);
                 }
             }
         }
@@ -1083,7 +1263,12 @@ impl SeaIo {
                 // failed reserve is tolerated rather than evicting data
                 // we are about to flush.
                 let _ = self.core.tier(t).try_reserve(disk_size);
-                let version = self.core.ns.register_dirty(&path, t, disk_size);
+                let owner = self.core.tenants.resolve(&path);
+                // Unconditional: the replica is physically on the tier,
+                // so the tenant's usage must reflect it even over-quota
+                // (mirroring the tolerated reserve above).
+                self.core.tenants.charge(owner, disk_size);
+                let version = self.core.ns.register_dirty_owned(&path, t, disk_size, owner);
                 recovered.push((path, t, disk_size, version, verified_hash));
             }
         }
@@ -1189,6 +1374,7 @@ impl SeaIo {
 
     fn create_impl(&self, path: &str) -> Result<(Fd, TierIdx), SeaError> {
         let logical = CleanPath::new(path);
+        let tenant = self.core.tenants.resolve(&logical);
         // Fence first: a truncate-create racing an in-flight transfer of
         // the same path cancels and drains it before touching the
         // physical file, so a flush of the old incarnation can neither
@@ -1196,8 +1382,9 @@ impl SeaIo {
         let _fence = self.core.transfers.fences.block(&logical);
         // Policy: highest-priority cache with room (0-byte reservation
         // grows with writes), evicting a cold clean replica to reopen a
-        // full cache; always succeeds at the persistent tier.
-        let tier = self.core.place_new_file();
+        // full cache; always succeeds at the persistent tier. An
+        // over-quota tenant lands on persist directly.
+        let tier = self.core.place_new_file(tenant);
         if self.core.is_persist(tier) {
             self.core.counters.bump_persist();
         }
@@ -1211,16 +1398,18 @@ impl SeaIo {
         // Replace any previous entry (truncate semantics). The previous
         // incarnation's record was retired under the shard lock, so
         // descriptors still holding it stop tracking.
-        if let Some(prev) = self.core.ns.create(&logical, tier) {
+        if let Some(prev) = self.core.ns.create_owned(&logical, tier, tenant) {
             let prev_size = prev.size();
             for rep in prev.replicas {
                 if rep != tier {
                     self.core.delete_replica(&logical, rep, prev_size);
                 } else if !self.core.is_persist(rep) {
                     self.core.tier(rep).release(prev_size);
+                    self.core.tenants.release(tenant, prev_size);
                 }
             }
         }
+        self.core.tenants.note_create(tenant);
         let record = self
             .core
             .ns
@@ -1236,6 +1425,7 @@ impl SeaIo {
             writable: true,
             pos: 0,
             size: 0,
+            tenant,
         });
         Ok((fd, tier))
     }
@@ -1399,6 +1589,7 @@ impl SeaIo {
             self.core.ns.invalidate_hash(&logical);
         }
         let ns_shard = crate::namespace::shard_index(&logical);
+        let tenant = self.core.tenants.resolve(&logical);
         let fd = self.fds.insert(OpenFile {
             logical,
             ns_shard,
@@ -1408,6 +1599,7 @@ impl SeaIo {
             writable: mode == OpenMode::ReadWrite,
             pos: 0,
             size,
+            tenant,
         });
         Ok((fd, tier))
     }
@@ -1446,17 +1638,35 @@ impl SeaIo {
         })?;
         let growth = new_end.saturating_sub(of.size);
         let persist = self.core.is_persist(of.tier);
-        if growth > 0 && !persist && !self.core.tier(of.tier).try_reserve(growth) {
-            // Cache full: first try to make room in place by evicting
-            // cold clean replicas; otherwise spill the whole file to the
-            // next tier with room.
-            if self.core.cfg.evict_to_fit
-                && self.core.evict_cold_until(of.tier, growth)
-                && self.core.tier(of.tier).try_reserve(growth)
-            {
-                self.core.admission.note_evicted_to_fit();
-            } else {
-                // The spill copies and re-registers the file *by path*,
+        if growth > 0 && !persist {
+            // Quota gate first: growth on a cache tier is the only place a
+            // tenant's cache footprint grows through this descriptor, and
+            // the charge must land before the tier reservation so the two
+            // books never disagree. An over-quota tenant skips the cache
+            // entirely and spills (ultimately to persist), exactly like a
+            // breaker-open tier.
+            let quota_ok = self.core.tenants.try_charge(of.tenant, growth);
+            let mut reserved = quota_ok && self.core.tier(of.tier).try_reserve(growth);
+            if !reserved && quota_ok {
+                // Cache full: try to make room in place by evicting cold
+                // clean replicas before giving up on this tier.
+                if self.core.cfg.evict_to_fit
+                    && self.core.evict_cold_until(of.tier, growth)
+                    && self.core.tier(of.tier).try_reserve(growth)
+                {
+                    self.core.admission.note_evicted_to_fit();
+                    reserved = true;
+                }
+            }
+            if !reserved {
+                // Quota-fail fall-through is counted once, in
+                // spill_locked (whose full-size charge fails the same
+                // way), not here too.
+                if quota_ok {
+                    self.core.tenants.release(of.tenant, growth);
+                }
+                // Spill the whole file to the next tier with room. The
+                // spill copies and re-registers the file *by path*,
                 // so a rename that retired the memoised one must be
                 // resolved first — the lock-free publish below never
                 // needs this (the record travels with the meta), but a
@@ -1468,6 +1678,7 @@ impl SeaIo {
                 {
                     of.logical = to;
                     of.ns_shard = shard;
+                    of.tenant = self.core.tenants.resolve(&of.logical);
                 }
                 Self::spill_locked(&self.core, of, growth)?;
             }
@@ -1483,6 +1694,9 @@ impl SeaIo {
             of.size = new_end;
         }
         self.core.counters.add_written(buf.len() as u64, persist);
+        self.core
+            .tenants
+            .note_bytes_written(of.tenant, buf.len() as u64);
         // Publish on the memoised record: steady state (already-dirty
         // file) is lock-free; a clean→dirty transition or a retired
         // record (rename/unlink/truncate raced this descriptor) goes
@@ -1499,9 +1713,12 @@ impl SeaIo {
                 .publish_write(&of.record, of.ns_shard, &of.logical, of.size, of.tier);
         if let Some((to, shard)) = ack.moved_to {
             // Renamed while open: bytes land under the new name from here
-            // on (and already did, physically — the inode moved).
+            // on (and already did, physically — the inode moved). The
+            // memoised tenant follows the name; the rename path already
+            // settled the quota transfer.
             of.logical = to;
             of.ns_shard = shard;
+            of.tenant = self.core.tenants.resolve(&of.logical);
         }
         if !ack.tracked {
             // Unlinked (or truncate-created over) while open: POSIX
@@ -1518,6 +1735,7 @@ impl SeaIo {
             self.core.counters.bump_write_untracked();
             if growth > 0 && !persist && of.record.size() < of.size {
                 self.core.tier(of.tier).release(growth);
+                self.core.tenants.release(of.tenant, growth);
             }
         }
         for tier in ack.invalidated {
@@ -1546,24 +1764,31 @@ impl SeaIo {
         let start = of.tier + 1;
         let persist = core.tiers.persist_idx();
         let mut target = persist;
-        for idx in start..persist {
-            if !core.health.admits_writes(idx) {
-                continue; // failing tier: spill past it, not onto it
-            }
-            if core.tier(idx).try_reserve(needed) {
-                core.admission.note_hit();
-                target = idx;
-                break;
-            }
-            // Full lower cache: evict cold clean replicas there before
-            // giving up on it (fence-skipping, see evict_cold_until).
-            if core.cfg.evict_to_fit
-                && core.evict_cold_until(idx, needed)
-                && core.tier(idx).try_reserve(needed)
-            {
-                core.admission.note_evicted_to_fit();
-                target = idx;
-                break;
+        // The relocated replica re-reserves its full size on the target
+        // cache, so the tenant's quota must cover `needed` there too. An
+        // over-quota tenant skips the lower caches and lands on persist
+        // (whose capacity is never tenant-charged).
+        let quota_ok = core.tenants.try_charge(of.tenant, needed);
+        if quota_ok {
+            for idx in start..persist {
+                if !core.health.admits_writes(idx) {
+                    continue; // failing tier: spill past it, not onto it
+                }
+                if core.tier(idx).try_reserve(needed) {
+                    core.admission.note_hit();
+                    target = idx;
+                    break;
+                }
+                // Full lower cache: evict cold clean replicas there before
+                // giving up on it (fence-skipping, see evict_cold_until).
+                if core.cfg.evict_to_fit
+                    && core.evict_cold_until(idx, needed)
+                    && core.tier(idx).try_reserve(needed)
+                {
+                    core.admission.note_evicted_to_fit();
+                    target = idx;
+                    break;
+                }
             }
         }
         if target == persist {
@@ -1572,6 +1797,11 @@ impl SeaIo {
             // seed reserved here but nothing ever released it, so
             // Tier::used()/free() and the run report drifted
             // monotonically upward across spills.
+            if quota_ok {
+                core.tenants.release(of.tenant, needed);
+            } else {
+                core.tenants.note_fell_through(of.tenant);
+            }
             core.admission.note_fell_through();
         }
         // Pre-copy durability sync of the source. A failure is counted —
@@ -1593,6 +1823,7 @@ impl SeaIo {
         {
             if target != persist {
                 core.tier(target).release(needed);
+                core.tenants.release(of.tenant, needed);
             }
             return Err(io_err(&of.logical, e));
         }
@@ -1615,6 +1846,7 @@ impl SeaIo {
         if let Some((to, shard)) = core.ns.current_location(&of.record, &of.logical) {
             of.logical = to;
             of.ns_shard = shard;
+            of.tenant = core.tenants.resolve(&of.logical);
         }
         core.ns.update(&of.logical, |m| {
             m.master = target;
@@ -1644,6 +1876,8 @@ impl SeaIo {
         let persist = self.core.is_persist(of.tier);
         if persist {
             self.core.counters.bump_persist();
+        } else {
+            self.core.tenants.note_cache_hit(of.tenant);
         }
         let n = of.file.read(buf).map_err(|e| io_err(&of.logical, e))?;
         self.core.tier(of.tier).wait_data(n as u64);
@@ -1872,10 +2106,10 @@ impl SeaIo {
         let _fence_a = self.core.transfers.fences.block(first);
         let _fence_b = (first.as_str() != second.as_str())
             .then(|| self.core.transfers.fences.block(second));
-        let replicas = self
+        let (replicas, moved_size) = self
             .core
             .ns
-            .with_meta(&from_l, |m| m.replicas.clone())
+            .with_meta(&from_l, |m| (m.replicas.clone(), m.size()))
             .ok_or_else(|| SeaError::NotFound(from_l.to_string()))?;
         for &tier in &replicas {
             if self.core.is_persist(tier) {
@@ -1904,9 +2138,27 @@ impl SeaIo {
                     if replicas.contains(&tier) {
                         if !self.core.is_persist(tier) {
                             self.core.tier(tier).release(old_size);
+                            self.core
+                                .tenants
+                                .release(self.core.tenants.resolve(&to_l), old_size);
                         }
                     } else {
                         self.core.delete_replica(&to_l, tier, old_size);
+                    }
+                }
+            }
+            // Cross-tenant move: cache bytes leave the source tenant's
+            // quota and land on the destination's. The destination charge
+            // is unconditional — the bytes are already physically on the
+            // cache, so refusing would desync the books; an overshoot
+            // just makes the next placement fall through.
+            let owner_from = self.core.tenants.resolve(&from_l);
+            let owner_to = self.core.tenants.resolve(&to_l);
+            if owner_from != owner_to {
+                for &tier in &replicas {
+                    if !self.core.is_persist(tier) {
+                        self.core.tenants.release(owner_from, moved_size);
+                        self.core.tenants.charge(owner_to, moved_size);
                     }
                 }
             }

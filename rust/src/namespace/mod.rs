@@ -158,7 +158,7 @@
 
 use std::borrow::Cow;
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU16, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::tiers::TierIdx;
@@ -353,6 +353,12 @@ pub struct FileRecord {
     /// [`REC_LIVE`] / [`REC_MOVED`] / [`REC_REMOVED`]; transitions only
     /// under the shard lock of the key the meta currently lives at.
     state: AtomicU8,
+    /// Owning tenant ([`crate::coordinator::tenants::TenantId`]), stamped
+    /// once under the shard lock at create/register time and read-only
+    /// afterwards — the steady-write publish never touches it, so
+    /// tenancy adds zero atomics to the hot path. 0 is the default
+    /// tenant (single-tenant mounts stamp nothing else).
+    owner: AtomicU16,
     /// Current logical path once the file has been renamed (`state ==
     /// REC_MOVED`); always the *latest* destination. Its own mutex is
     /// only ever held briefly for a clone/store, never across another
@@ -370,8 +376,14 @@ impl FileRecord {
             cost_stamp: AtomicU64::new(0),
             created: AtomicU64::new(0),
             state: AtomicU8::new(REC_LIVE),
+            owner: AtomicU16::new(0),
             relocated: Mutex::new(None),
         }
+    }
+
+    /// Owning tenant id (0 = default tenant).
+    pub fn owner(&self) -> u16 {
+        self.owner.load(Ordering::Relaxed)
     }
 
     pub fn size(&self) -> u64 {
@@ -773,10 +785,23 @@ impl Namespace {
     /// lock), so a flusher holding a pre-truncate (or pre-unlink)
     /// [`DirtyEntry`] snapshot always sees it as stale.
     pub fn create(&self, logical: &(impl PathArg + ?Sized), tier: TierIdx) -> Option<FileMeta> {
+        self.create_owned(logical, tier, 0)
+    }
+
+    /// [`Namespace::create`] with an owner stamp: the tenant id is
+    /// written into the fresh record under the shard lock, before the
+    /// meta is published — no reader ever observes it changing.
+    pub fn create_owned(
+        &self,
+        logical: &(impl PathArg + ?Sized),
+        tier: TierIdx,
+        owner: u16,
+    ) -> Option<FileMeta> {
         let key = logical.to_clean().into_owned();
         let stamp = self.touch_stamp();
         let mut s = self.shard(&key).write().unwrap();
         let meta = FileMeta::new(tier);
+        meta.rec.owner.store(owner, Ordering::Relaxed);
         let version = fresh_stamp(&self.vgen);
         meta.rec.version.store(version, Ordering::Release);
         meta.set_last_access(stamp);
@@ -866,10 +891,23 @@ impl Namespace {
     /// lock round trip and no dirty-queue traffic, unlike
     /// [`Namespace::create`] + [`Namespace::update`].
     pub fn register_clean(&self, logical: &(impl PathArg + ?Sized), tier: TierIdx, size: u64) {
+        self.register_clean_owned(logical, tier, size, 0)
+    }
+
+    /// [`Namespace::register_clean`] with an owner stamp (see
+    /// [`Namespace::create_owned`]).
+    pub fn register_clean_owned(
+        &self,
+        logical: &(impl PathArg + ?Sized),
+        tier: TierIdx,
+        size: u64,
+        owner: u16,
+    ) {
         let key = logical.to_clean().into_owned();
         let stamp = self.touch_stamp();
         let mut s = self.shard(&key).write().unwrap();
         let mut meta = FileMeta::new(tier);
+        meta.rec.owner.store(owner, Ordering::Relaxed);
         meta.flushed = true;
         meta.set_size(size);
         meta.set_dirty(false);
@@ -896,10 +934,23 @@ impl Namespace {
         tier: TierIdx,
         size: u64,
     ) -> u64 {
+        self.register_dirty_owned(logical, tier, size, 0)
+    }
+
+    /// [`Namespace::register_dirty`] with an owner stamp (see
+    /// [`Namespace::create_owned`]).
+    pub fn register_dirty_owned(
+        &self,
+        logical: &(impl PathArg + ?Sized),
+        tier: TierIdx,
+        size: u64,
+        owner: u16,
+    ) -> u64 {
         let key = logical.to_clean().into_owned();
         let stamp = self.touch_stamp();
         let mut s = self.shard(&key).write().unwrap();
         let mut meta = FileMeta::new(tier);
+        meta.rec.owner.store(owner, Ordering::Relaxed);
         meta.flushed = s.files.get(&key).map(|p| p.flushed).unwrap_or(false);
         meta.set_size(size);
         let version = fresh_stamp(&self.vgen);
@@ -1836,6 +1887,27 @@ impl Namespace {
             })
             .sum()
     }
+
+    /// Batched per-tenant namespace accounting over the 16-shard map:
+    /// one read-lock pass per shard, bucketing live files and bytes by
+    /// the records' owner stamps. Returns one `(files, bytes)` slot per
+    /// tenant id in `0..ntenants` (owners beyond the range — stale
+    /// stamps after a registry shrink — fold into the default tenant).
+    /// This is the coordinator's metadata query: the control plane pays
+    /// 16 batched lock acquisitions per scrape, writers pay nothing.
+    pub fn tenant_usage(&self, ntenants: usize) -> Vec<(u64, u64)> {
+        let mut usage = vec![(0u64, 0u64); ntenants.max(1)];
+        for shard in &self.shards {
+            let s = shard.read().unwrap();
+            for meta in s.files.values() {
+                let owner = meta.rec.owner() as usize;
+                let slot = if owner < usage.len() { owner } else { 0 };
+                usage[slot].0 += 1;
+                usage[slot].1 += meta.size();
+            }
+        }
+        usage
+    }
 }
 
 #[cfg(test)]
@@ -1876,6 +1948,27 @@ mod tests {
         assert_eq!(parent_of("/a/b/c"), "/a/b");
         assert_eq!(parent_of("/a"), "/");
         assert_eq!(parent_of("/"), "/");
+    }
+
+    #[test]
+    fn owner_stamp_survives_rename_and_feeds_tenant_usage() {
+        let ns = Namespace::new();
+        ns.create_owned("/alice/a.nii", 0, 1);
+        ns.register_clean_owned("/bob/b.nii", 0, 100, 2);
+        ns.create("/shared/c.nii", 0); // default tenant
+        ns.update("/alice/a.nii", |m| m.set_size(40));
+        assert_eq!(ns.lookup("/alice/a.nii").unwrap().rec.owner(), 1);
+        // The record carries its owner through a rename.
+        assert!(ns.rename("/alice/a.nii", "/alice/sub/a2.nii"));
+        assert_eq!(ns.lookup("/alice/sub/a2.nii").unwrap().rec.owner(), 1);
+        let usage = ns.tenant_usage(3);
+        assert_eq!(usage[1], (1, 40));
+        assert_eq!(usage[2], (1, 100));
+        assert_eq!(usage[0], (1, 0));
+        // Out-of-range owners (registry shrank) fold into tenant 0.
+        let usage = ns.tenant_usage(2);
+        assert_eq!(usage[0], (2, 100));
+        assert_eq!(usage[1], (1, 40));
     }
 
     #[test]

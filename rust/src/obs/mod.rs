@@ -177,6 +177,26 @@ impl Obs {
         t0: Option<Instant>,
         outcome: EventOutcome,
     ) {
+        self.record_tagged(kind, tier, key, bytes, t0, outcome, 0);
+    }
+
+    /// [`Obs::record`] with a tenant tag packed into the top byte of the
+    /// event's `thread` word. Thread ids are dense (first-use assigned)
+    /// and never anywhere near 2^24 in practice; tenants beyond 255 fold
+    /// into the top tag value. Tag 0 — the default tenant — encodes
+    /// identically to the untagged path, so single-tenant traces are
+    /// byte-for-byte what they were.
+    #[inline]
+    pub fn record_tagged(
+        &self,
+        kind: EventKind,
+        tier: Option<TierIdx>,
+        key: u64,
+        bytes: u64,
+        t0: Option<Instant>,
+        outcome: EventOutcome,
+        tenant: u16,
+    ) {
         let Some(t0) = t0 else { return };
         let latency_ns = t0.elapsed().as_nanos() as u64;
         let tier_b = match tier {
@@ -190,12 +210,13 @@ impl Obs {
         if self.trace_on {
             let t_ns = t0.saturating_duration_since(self.epoch).as_nanos() as u64;
             let tid = thread_id();
+            let tag = (tenant as u32).min(0xFF) << 24;
             let ev = Event {
                 t_ns,
                 latency_ns,
                 key,
                 bytes,
-                thread: tid,
+                thread: (tid & 0x00FF_FFFF) | tag,
                 op: kind as u8,
                 tier: tier_b,
                 outcome: outcome as u8,

@@ -303,8 +303,10 @@ fn stage_one_inner(core: &SeaCore, logical: &CleanPath) -> StageOutcome {
     // Evict-to-make-room reservation: a full cache drains cold clean
     // replicas (ranked by the configured eviction policy) before this
     // gives up — staging no longer skips work just because the tier is
-    // momentarily full.
-    let Some(target) = core.reserve_on_cache_evicting(size) else {
+    // momentarily full. The promoted replica counts against the owning
+    // tenant's cache quota like any other placement.
+    let tenant = core.tenants.resolve(logical);
+    let Some(target) = core.reserve_on_cache_evicting(size, tenant) else {
         return StageOutcome::NoSpace;
     };
     let result = core.transfers.copy(
@@ -337,6 +339,7 @@ fn stage_one_inner(core: &SeaCore, logical: &CleanPath) -> StageOutcome {
             if !(known && ok) {
                 let _ = std::fs::remove_file(core.tiers.get(target).physical(logical));
                 core.tiers.get(target).release(size);
+                core.tenants.release(tenant, size);
             }
             ok
         },
@@ -346,10 +349,12 @@ fn stage_one_inner(core: &SeaCore, logical: &CleanPath) -> StageOutcome {
         Ok(Outcome::Done { .. }) => StageOutcome::Skipped, // raced; cleaned up under the fence
         Ok(Outcome::Busy) | Ok(Outcome::Cancelled) => {
             core.tiers.get(target).release(size);
+            core.tenants.release(tenant, size);
             StageOutcome::Skipped
         }
         Err(_) => {
             core.tiers.get(target).release(size);
+            core.tenants.release(tenant, size);
             StageOutcome::Error
         }
     }
@@ -368,7 +373,7 @@ pub fn stage_listed(core: &SeaCore) -> Result<PrefetchReport, (String, std::io::
     }
     let persist = core.tiers.persist_idx();
     let mut jobs: Vec<BatchJob> = Vec::new();
-    let mut reservations: Vec<(TierIdx, u64)> = Vec::new();
+    let mut reservations: Vec<(TierIdx, u64, u16)> = Vec::new();
     for logical in core.ns.all_paths() {
         if !core.lists.should_prefetch(&logical) {
             continue;
@@ -382,12 +387,13 @@ pub fn stage_listed(core: &SeaCore) -> Result<PrefetchReport, (String, std::io::
         if !eligible {
             continue;
         }
-        let Some(target) = core.reserve_on_cache_evicting(size) else {
+        let tenant = core.tenants.resolve(&logical);
+        let Some(target) = core.reserve_on_cache_evicting(size, tenant) else {
             report.skipped += 1;
             continue;
         };
         let token = reservations.len();
-        reservations.push((target, size));
+        reservations.push((target, size, tenant));
         jobs.push(BatchJob {
             logical: CleanPath::new(&logical),
             from: persist,
@@ -405,7 +411,7 @@ pub fn stage_listed(core: &SeaCore) -> Result<PrefetchReport, (String, std::io::
     );
     let mut first_err: Option<(String, std::io::Error)> = None;
     for (job, res) in results {
-        let (target, size) = reservations[job.token];
+        let (target, size, tenant) = reservations[job.token];
         match res {
             Ok(Outcome::Done { bytes, .. }) => {
                 report.staged += 1;
@@ -413,10 +419,12 @@ pub fn stage_listed(core: &SeaCore) -> Result<PrefetchReport, (String, std::io::
             }
             Ok(_) => {
                 core.tiers.get(target).release(size);
+                core.tenants.release(tenant, size);
                 report.skipped += 1;
             }
             Err(e) => {
                 core.tiers.get(target).release(size);
+                core.tenants.release(tenant, size);
                 report.errors += 1;
                 if first_err.is_none() {
                     first_err = Some((job.logical.into_string(), e));

@@ -241,6 +241,37 @@ impl StripedClock {
     }
 }
 
+/// Thread-striped relaxed counter for per-tenant accounting (cache bytes
+/// written, hit counts). Same padding discipline as the clocks: each stripe
+/// owns a cache line, `add` touches only the calling thread's stripe, and
+/// `sum` folds all stripes — so multi-tenant accounting never puts a shared
+/// `fetch_add` back on the 8-thread write path the striped clocks cleared.
+#[derive(Debug, Default)]
+pub struct StripedCounter {
+    stripes: [PaddedCounter; NSTRIPES],
+}
+
+impl StripedCounter {
+    pub fn new() -> StripedCounter {
+        StripedCounter::default()
+    }
+
+    /// Add to the calling thread's stripe (relaxed; totals are read via
+    /// [`StripedCounter::sum`], which tolerates the usual relaxed skew).
+    pub fn add(&self, delta: u64) {
+        let idx = crate::obs::thread_id() as usize % NSTRIPES;
+        self.stripes[idx].0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Fold every stripe into one total.
+    pub fn sum(&self) -> u64 {
+        self.stripes
+            .iter()
+            .map(|s| s.0.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
 /// Striped uniqueness-only clock (the hot-path write-generation stamp
 /// `wgen`). Stamps are `HOT_BIT | counter << 4 | stripe`: unique across
 /// threads, *never* ordered and *never* journaled — `commit_flush` compares
@@ -310,6 +341,27 @@ pub struct QosThrottle {
     fg_bytes: AtomicU64,
     bg_bytes: AtomicU64,
     bg_yields: AtomicU64,
+    /// Prober-measured tier bandwidth in bytes/s (`f64` bits; 0 = no
+    /// measurement yet). Feeds the debt decay when `adaptive` is on.
+    measured_rate: AtomicU64,
+    /// `[sched] qos_adaptive`: decay debt at the *measured* rate (capped
+    /// by the configured limit) instead of the configured limit alone.
+    adaptive: AtomicBool,
+    /// Per-tenant background token buckets, installed once at mount when
+    /// more than one tenant is configured. `None` (the default) keeps the
+    /// single-tenant fast path byte-identical to the pre-tenant code.
+    lanes: std::sync::OnceLock<Vec<TenantLane>>,
+}
+
+/// One tenant's background lane on a QoS-shaped tier: a private token
+/// bucket (its fair share of the tier's rate) drawn *before* the shared
+/// bucket, so one tenant's staging storm exhausts its own lane instead of
+/// the whole tier's background budget.
+#[derive(Debug)]
+struct TenantLane {
+    bucket: Throttle,
+    bg_bytes: AtomicU64,
+    yields: AtomicU64,
 }
 
 impl QosThrottle {
@@ -322,6 +374,9 @@ impl QosThrottle {
             fg_bytes: AtomicU64::new(0),
             bg_bytes: AtomicU64::new(0),
             bg_yields: AtomicU64::new(0),
+            measured_rate: AtomicU64::new(0),
+            adaptive: AtomicBool::new(false),
+            lanes: std::sync::OnceLock::new(),
         }
     }
 
@@ -335,8 +390,56 @@ impl QosThrottle {
         self.qos_on.load(Ordering::Relaxed)
     }
 
+    /// Enable the adaptive debt decay (`[sched] qos_adaptive`).
+    pub fn set_adaptive(&self, on: bool) {
+        self.adaptive.store(on, Ordering::Relaxed);
+    }
+
+    /// Record a prober-measured tier bandwidth (bytes/s). The health
+    /// prober calls this periodically; only consulted when adaptive.
+    pub fn set_measured_rate(&self, bytes_per_sec: f64) {
+        self.measured_rate
+            .store(bytes_per_sec.max(0.0).to_bits(), Ordering::Relaxed);
+    }
+
+    /// The last prober measurement, if any.
+    pub fn measured_rate(&self) -> Option<f64> {
+        let bits = self.measured_rate.load(Ordering::Relaxed);
+        let v = f64::from_bits(bits);
+        (v > 0.0).then_some(v)
+    }
+
+    /// Install per-tenant background lanes (one bucket per tenant, each
+    /// with its fair share of the tier's rate). Called once at mount for
+    /// multi-tenant configs; later calls are ignored.
+    pub fn set_tenant_lanes(&self, n_tenants: usize) {
+        if n_tenants < 2 {
+            return;
+        }
+        let share = (self.inner.rate() / n_tenants as f64).max(1.0);
+        let _ = self.lanes.set(
+            (0..n_tenants)
+                .map(|_| TenantLane {
+                    bucket: Throttle::with_burst(share, 0.25)
+                        .expect("lane rate is positive"),
+                    bg_bytes: AtomicU64::new(0),
+                    yields: AtomicU64::new(0),
+                })
+                .collect(),
+        );
+    }
+
     /// Block until `bytes` of bandwidth are granted to `class`.
     pub fn acquire(&self, bytes: u64, class: IoClass) {
+        self.acquire_tagged(bytes, class, 0);
+    }
+
+    /// Tenant-tagged acquisition. Background draws from the tenant's own
+    /// lane bucket first (when lanes are installed), then runs the normal
+    /// yield-then-shared-bucket path. Returns the number of yield slices
+    /// burned, so callers can fold per-tenant throttle pressure into the
+    /// tenant registry without this module knowing about it.
+    pub fn acquire_tagged(&self, bytes: u64, class: IoClass, tenant: u16) -> u32 {
         match class {
             IoClass::Foreground => {
                 self.fg_pending.fetch_add(1, Ordering::Relaxed);
@@ -346,34 +449,75 @@ impl QosThrottle {
                     self.bg_debt.fetch_add(bytes, Ordering::Relaxed);
                 }
                 self.fg_bytes.fetch_add(bytes, Ordering::Relaxed);
+                u32::from(waited)
             }
             IoClass::Background => {
+                let lane = self
+                    .lanes
+                    .get()
+                    .and_then(|l| l.get(tenant as usize));
+                if let Some(lane) = lane {
+                    if self.enabled() {
+                        lane.bucket.acquire(bytes as f64);
+                    }
+                    lane.bg_bytes.fetch_add(bytes, Ordering::Relaxed);
+                }
+                let mut yields = 0;
                 if self.enabled() {
-                    self.yield_to_foreground();
+                    yields = self.yield_to_foreground();
+                    if yields > 0 {
+                        if let Some(lane) = lane {
+                            lane.yields.fetch_add(yields as u64, Ordering::Relaxed);
+                        }
+                    }
                 }
                 self.inner.acquire(bytes as f64);
                 self.bg_bytes.fetch_add(bytes, Ordering::Relaxed);
+                yields
             }
         }
     }
 
-    fn yield_to_foreground(&self) {
+    fn yield_to_foreground(&self) -> u32 {
         // One rate-slice of debt decays per yield once no foreground waiter
         // is live, so a single slow flush doesn't tax background forever.
-        let decay = ((self.inner.rate() * YIELD_SLICE.as_secs_f64()) as u64).max(1);
+        // With `qos_adaptive`, the slice is sized by the prober's measured
+        // tier bandwidth (never above the configured limit): on a tier
+        // delivering less than its configured rate, debt decays slower and
+        // background keeps yielding proportionally longer.
+        let mut rate = self.inner.rate();
+        if self.adaptive.load(Ordering::Relaxed) {
+            if let Some(measured) = self.measured_rate() {
+                rate = rate.min(measured);
+            }
+        }
+        let decay = ((rate * YIELD_SLICE.as_secs_f64()) as u64).max(1);
+        let mut burned = 0;
         for _ in 0..MAX_YIELD_SLICES {
             let fg = self.fg_pending.load(Ordering::Relaxed);
             let debt = self.bg_debt.load(Ordering::Relaxed);
             if fg == 0 && debt == 0 {
-                return;
+                return burned;
             }
             if fg == 0 && debt > 0 {
                 let pay = debt.min(decay);
                 self.bg_debt.fetch_sub(pay, Ordering::Relaxed);
             }
             self.bg_yields.fetch_add(1, Ordering::Relaxed);
+            burned += 1;
             std::thread::sleep(YIELD_SLICE);
         }
+        burned
+    }
+
+    /// Per-tenant lane counters (background bytes, yield slices), when
+    /// lanes are installed and the tenant has one.
+    pub fn lane_snapshot(&self, tenant: u16) -> Option<(u64, u64)> {
+        let lane = self.lanes.get()?.get(tenant as usize)?;
+        Some((
+            lane.bg_bytes.load(Ordering::Relaxed),
+            lane.yields.load(Ordering::Relaxed),
+        ))
     }
 
     pub fn snapshot(&self) -> QosSnapshot {
@@ -622,6 +766,82 @@ mod tests {
         q.acquire(1, IoClass::Background);
         assert!(q.snapshot().bg_yields >= 1);
         assert_eq!(q.bg_debt.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn striped_counter_sums_across_threads() {
+        let c = Arc::new(StripedCounter::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.add(3);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.sum(), 8 * 1000 * 3);
+    }
+
+    #[test]
+    fn adaptive_decay_uses_measured_rate_when_enabled() {
+        // Configured 100 MiB/s but measured 1 KiB/s: with qos_adaptive on,
+        // a background acquire facing outstanding debt must keep yielding
+        // (slow decay) where the configured-rate decay would clear it in
+        // one slice.
+        let q = QosThrottle::new(Throttle::with_burst(100.0 * 1024.0 * 1024.0, 0.001).unwrap());
+        q.set_measured_rate(1024.0);
+        q.bg_debt.store(50_000, Ordering::Relaxed);
+        q.acquire(1, IoClass::Background);
+        assert_eq!(q.bg_debt.load(Ordering::Relaxed), 0, "fast decay when not adaptive");
+
+        let q = QosThrottle::new(Throttle::with_burst(100.0 * 1024.0 * 1024.0, 0.001).unwrap());
+        q.set_adaptive(true);
+        q.set_measured_rate(1024.0);
+        q.bg_debt.store(50_000, Ordering::Relaxed);
+        q.acquire(1, IoClass::Background);
+        // 1 KiB/s × 5 ms ≈ 5 bytes of decay per slice (floored to ≥1):
+        // 50 slices cannot clear 50 KB — debt must survive the bounded
+        // yield loop.
+        assert!(q.bg_debt.load(Ordering::Relaxed) > 0, "adaptive decay must be slower");
+        assert_eq!(q.snapshot().bg_yields as u32, MAX_YIELD_SLICES);
+    }
+
+    #[test]
+    fn measured_rate_never_raises_decay_above_configured() {
+        // Measured faster than configured: decay stays at the configured
+        // limit (min of the two), so a generous probe cannot let
+        // background pay debt faster than the tier is allowed to move.
+        let q = QosThrottle::new(Throttle::with_burst(1024.0, 0.001).unwrap());
+        q.set_adaptive(true);
+        q.set_measured_rate(1e12);
+        q.bg_debt.store(2_000, Ordering::Relaxed);
+        q.acquire(1, IoClass::Background);
+        // configured 1 KiB/s → ~5 bytes/slice: 50 slices cannot pay 2000.
+        assert!(q.bg_debt.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn tenant_lanes_meter_background_per_tenant() {
+        // Two lanes over a fast shared bucket; lane share = rate/2. A
+        // burst through tenant 1's lane must not consume tenant 0's lane
+        // tokens: tenant 0's next background acquire stays fast.
+        let q = QosThrottle::new(Throttle::with_burst(1e9, 1.0).unwrap());
+        q.set_tenant_lanes(2);
+        q.acquire_tagged(1024, IoClass::Background, 1);
+        let (bg1, _) = q.lane_snapshot(1).unwrap();
+        assert_eq!(bg1, 1024);
+        assert_eq!(q.lane_snapshot(0).unwrap().0, 0);
+        let start = Instant::now();
+        q.acquire_tagged(1024, IoClass::Background, 0);
+        assert!(start.elapsed() < Duration::from_millis(50));
+        // single-tenant configs never install lanes
+        let q = QosThrottle::new(Throttle::with_burst(1e9, 1.0).unwrap());
+        q.set_tenant_lanes(1);
+        assert!(q.lane_snapshot(0).is_none());
     }
 
     #[test]

@@ -181,6 +181,47 @@ impl Tier {
         }
     }
 
+    /// [`Tier::wait_data_class`] with a tenant tag: background traffic
+    /// draws the tenant's QoS lane bucket first (when lanes are
+    /// installed), and the returned yield count feeds per-tenant
+    /// throttle accounting. No-op (returns 0) on unshaped tiers.
+    pub fn wait_data_tagged(&self, bytes: u64, class: IoClass, tenant: u16) -> u32 {
+        match &self.data_throttle {
+            Some(t) => t.acquire_tagged(bytes, class, tenant),
+            None => 0,
+        }
+    }
+
+    /// Install per-tenant background token-bucket lanes on this tier's
+    /// throttle (multi-tenant mounts only; see
+    /// [`crate::sched::QosThrottle::set_tenant_lanes`]).
+    pub fn set_tenant_lanes(&self, n_tenants: usize) {
+        if let Some(t) = &self.data_throttle {
+            t.set_tenant_lanes(n_tenants);
+        }
+    }
+
+    /// Enable adaptive QoS debt decay (`[sched] qos_adaptive`).
+    pub fn set_qos_adaptive(&self, on: bool) {
+        if let Some(t) = &self.data_throttle {
+            t.set_adaptive(on);
+        }
+    }
+
+    /// Feed a measured bandwidth observation (bytes/s) into the
+    /// throttle's adaptive decay; no-op on unshaped tiers.
+    pub fn set_measured_rate(&self, bytes_per_sec: f64) {
+        if let Some(t) = &self.data_throttle {
+            t.set_measured_rate(bytes_per_sec);
+        }
+    }
+
+    /// Per-tenant background lane counters `(bg_bytes, yields)`, when
+    /// this tier is shaped and lanes are installed.
+    pub fn lane_snapshot(&self, tenant: u16) -> Option<(u64, u64)> {
+        self.data_throttle.as_ref().and_then(|t| t.lane_snapshot(tenant))
+    }
+
     /// Per-class bandwidth counters, when this tier is shaped.
     pub fn qos_snapshot(&self) -> Option<QosSnapshot> {
         self.data_throttle.as_ref().map(|t| t.snapshot())
@@ -195,6 +236,13 @@ impl Tier {
 
     pub fn is_throttled(&self) -> bool {
         self.data_throttle.is_some() || self.meta_latency.is_some()
+    }
+
+    /// True when the tier has a data-bandwidth throttle (the adaptive
+    /// QoS prober only measures shaped tiers — an unshaped tier has no
+    /// debt to decay).
+    pub fn is_data_shaped(&self) -> bool {
+        self.data_throttle.is_some()
     }
 
     /// Mark the tier dropped out (or back up) — fault injection: set at

@@ -360,13 +360,14 @@ impl TransferEngine {
             Ok(Outcome::Busy) => (0, crate::obs::EventOutcome::Busy),
             Err(_) => (0, crate::obs::EventOutcome::Err),
         };
-        core.obs.record(
+        core.obs.record_tagged(
             crate::obs::EventKind::TransferCopy,
             Some(to),
             crate::journal::fnv1a_bytes(logical.as_bytes()),
             bytes,
             t0,
             outcome,
+            core.tenants.resolve(logical),
         );
         res
     }
@@ -457,6 +458,10 @@ impl TransferEngine {
         let mut buf = vec![0u8; self.copy_buf];
         let mut total = 0u64;
         let mut first_slice = true;
+        // Background traffic is billed to the owning tenant's bandwidth
+        // lane (single-tenant: tag 0, identical to the untagged path).
+        let tenant = core.tenants.resolve(logical);
+        let mut yields = 0u32;
         loop {
             core.faults.check_io("copy.read")?;
             let n = src.read(&mut buf)?;
@@ -465,10 +470,17 @@ impl TransferEngine {
             }
             for slice in buf[..n].chunks(CANCEL_SLICE) {
                 if guard.cancelled() {
+                    core.tenants.note_yields(tenant, yields);
                     return Ok(None);
                 }
-                core.tiers.get(from).wait_data_class(slice.len() as u64, class);
-                core.tiers.get(to).wait_data_class(slice.len() as u64, class);
+                yields += core
+                    .tiers
+                    .get(from)
+                    .wait_data_tagged(slice.len() as u64, class, tenant);
+                yields += core
+                    .tiers
+                    .get(to)
+                    .wait_data_tagged(slice.len() as u64, class, tenant);
                 core.faults.check_io("copy.write")?;
                 if let Some(limit) = torn_at {
                     let room = limit.saturating_sub(total);
@@ -490,6 +502,7 @@ impl TransferEngine {
             }
         }
         dst.sync_all()?;
+        core.tenants.note_yields(tenant, yields);
         if guard.cancelled() {
             return Ok(None);
         }

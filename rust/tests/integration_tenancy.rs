@@ -1,0 +1,432 @@
+//! PR-10 acceptance tests for the multi-tenant control plane.
+//!
+//! Five pins:
+//!
+//! 1. A config with no `[tenants]` section reproduces the single-tenant
+//!    behaviour exactly: no per-tenant metric families, no quota checks,
+//!    `multi_tenant: false` on the status endpoint.
+//! 2. Quota caps hold: an over-quota write growth falls through to the
+//!    persist tier error-free (the same degraded path as a breaker-open
+//!    tier) and the tenant's `fell_through` counter records it; a
+//!    cross-tenant rename moves the cache accounting between owners.
+//! 3. `GET /status`, `GET /tenants/<id>` and `POST /tenants/<id>/quota`
+//!    work against a live mount — a quota raise takes effect on the very
+//!    next placement, without a remount.
+//! 4. Concurrent `/metrics` + `/status` scrapes stay consistent (all
+//!    200s, parseable bodies) while 8 writer threads hammer the mount.
+//! 5. A noisy tenant's background storm cannot push a victim tenant's
+//!    foreground p99 wait above 2x its solo baseline when per-tenant QoS
+//!    lanes are on.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sea::config::SeaConfig;
+use sea::coordinator::serve_ops;
+use sea::flusher::SeaSession;
+use sea::intercept::SeaIo;
+use sea::pathrules::{PathRules, SeaLists};
+use sea::sched::IoClass;
+use sea::testing::tempdir::tempdir;
+use sea::util::{KIB, MIB};
+
+fn flush_lists() -> SeaLists {
+    SeaLists::new(
+        PathRules::parse(r".*\.out$").unwrap(),
+        PathRules::empty(),
+        PathRules::empty(),
+    )
+}
+
+fn payload(len: usize, seed: u8) -> Vec<u8> {
+    (0..len).map(|b| (b as u8).wrapping_mul(seed | 1)).collect()
+}
+
+/// Minimal raw-HTTP client against the ops server: returns
+/// `(status_code, body)`.
+fn http(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut conn = TcpStream::connect(addr).expect("ops server reachable");
+    conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: sea\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    conn.write_all(req.as_bytes()).unwrap();
+    let mut raw = String::new();
+    conn.read_to_string(&mut raw).expect("read response");
+    let (head, response_body) = raw.split_once("\r\n\r\n").expect("http head");
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status code");
+    (status, response_body.to_string())
+}
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (u16, String) {
+    http(addr, "GET", path, "")
+}
+
+// ---------------------------------------------------------------------------
+// 1. No [tenants] section => byte-for-byte single-tenant behaviour.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn absent_tenants_section_reproduces_single_tenant_behaviour() {
+    let dir = tempdir("tenancy-single");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 64 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .flusher(false, 3_600_000)
+        .prefetcher(false)
+        .build();
+    let sea = SeaIo::mount_with(cfg, flush_lists(), |t| t).unwrap();
+    let core = sea.core().clone();
+    assert!(!core.tenants.multi());
+
+    for i in 0..4 {
+        let fd = sea.create(&format!("/proj/f{i}.out")).unwrap();
+        sea.write(fd, &payload(4 * KIB as usize, i as u8)).unwrap();
+        sea.close(fd).unwrap();
+        assert_eq!(sea.stat(&format!("/proj/f{i}.out")).unwrap().tier, "tmpfs");
+    }
+
+    // The registry stays inert: everything resolves to the default
+    // tenant and no accounting is performed.
+    let snap = core.tenants.snapshot(0);
+    assert_eq!(snap.cache_used, 0, "single-tenant mount must not account");
+    assert_eq!(snap.files, 0);
+
+    // No per-tenant metric families and no tenant block on /status.
+    let prom = core.metrics_snapshot().to_prometheus();
+    assert!(
+        !prom.contains("sea_tenant_"),
+        "single-tenant /metrics grew tenant families:\n{prom}"
+    );
+    let status = core.status_json();
+    assert!(
+        status.contains("\"multi_tenant\": false"),
+        "status: {status}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. Quota caps hold; over-quota growth falls through to persist.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quota_cap_holds_and_over_quota_writes_fall_through_to_persist() {
+    let dir = tempdir("tenancy-quota");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 64 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .flusher(false, 3_600_000)
+        .prefetcher(false)
+        .tenant("alice", "/alice", Some(64 * KIB))
+        .tenant("bob", "/bob", None)
+        .build();
+    let sea = SeaIo::mount_with(cfg, flush_lists(), |t| t).unwrap();
+    let core = sea.core().clone();
+    assert!(core.tenants.multi());
+    let alice = core.tenants.resolve("/alice/x");
+    let bob = core.tenants.resolve("/bob/x");
+    assert_ne!(alice, 0);
+    assert_ne!(bob, 0);
+    assert_ne!(alice, bob);
+
+    // 10 x 6 KiB = 60 KiB: inside the 64 KiB quota, all cache-resident.
+    let chunk = 6 * KIB as usize;
+    for i in 0..10 {
+        let fd = sea.create(&format!("/alice/f{i}.out")).unwrap();
+        sea.write(fd, &payload(chunk, i as u8)).unwrap();
+        sea.close(fd).unwrap();
+        assert_eq!(sea.stat(&format!("/alice/f{i}.out")).unwrap().tier, "tmpfs");
+    }
+    assert_eq!(core.tenants.snapshot(alice).cache_used, 60 * KIB);
+
+    // The 11th file's growth would hit 66 KiB > 64 KiB: the write must
+    // succeed by falling through to persist, exactly like a full tier.
+    let fd = sea.create("/alice/f10.out").unwrap();
+    sea.write(fd, &payload(chunk, 11)).unwrap();
+    sea.close(fd).unwrap();
+    assert_eq!(
+        sea.stat("/alice/f10.out").unwrap().tier,
+        "lustre",
+        "over-quota growth must land on persist, not error"
+    );
+    let snap = core.tenants.snapshot(alice);
+    assert!(snap.fell_through >= 1, "fall-through not counted: {snap:?}");
+    assert!(
+        snap.cache_used <= 64 * KIB,
+        "quota breached: {} used",
+        snap.cache_used
+    );
+
+    // Persist-tier writes are never charged against the quota.
+    assert_eq!(snap.cache_used, 60 * KIB);
+
+    // A cross-tenant rename hands the cache accounting to the new owner.
+    sea.rename("/alice/f0.out", "/bob/f0.out").unwrap();
+    assert_eq!(core.tenants.snapshot(alice).cache_used, 54 * KIB);
+    assert_eq!(core.tenants.snapshot(bob).cache_used, 6 * KIB);
+    assert_eq!(sea.stat("/bob/f0.out").unwrap().tier, "tmpfs");
+
+    // With 6 KiB of headroom back, alice can cache one more file.
+    let fd = sea.create("/alice/f11.out").unwrap();
+    sea.write(fd, &payload(chunk, 12)).unwrap();
+    sea.close(fd).unwrap();
+    assert_eq!(sea.stat("/alice/f11.out").unwrap().tier, "tmpfs");
+}
+
+// ---------------------------------------------------------------------------
+// 3. Live ops API: status, tenant detail, quota update without remount.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ops_api_serves_status_and_applies_quota_updates_live() {
+    let dir = tempdir("tenancy-ops");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 64 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .flusher(false, 3_600_000)
+        .prefetcher(false)
+        .tenant("alice", "/alice", Some(4 * KIB))
+        .ops_bind("127.0.0.1:0")
+        .build();
+    let sess = SeaSession::start(cfg, flush_lists(), |t| t).unwrap();
+    let sea = sess.io();
+    let addr = sess.ops_addr().expect("ops server bound");
+
+    let (code, status) = http_get(addr, "/status");
+    assert_eq!(code, 200, "{status}");
+    assert!(status.contains("\"multi_tenant\": true"), "{status}");
+    assert!(status.contains("\"name\": \"alice\""), "{status}");
+    assert!(status.contains("\"tiers\""), "{status}");
+
+    let (code, detail) = http_get(addr, "/tenants/alice");
+    assert_eq!(code, 200, "{detail}");
+    assert!(detail.contains("\"quota_bytes\": 4096"), "{detail}");
+
+    let (code, _) = http_get(addr, "/tenants/nosuch");
+    assert_eq!(code, 404);
+
+    // 8 KiB > the 4 KiB quota: the write falls through to persist.
+    let fd = sea.create("/alice/before.out").unwrap();
+    sea.write(fd, &payload(8 * KIB as usize, 1)).unwrap();
+    sea.close(fd).unwrap();
+    assert_eq!(sea.stat("/alice/before.out").unwrap().tier, "lustre");
+
+    // Raise the quota over the wire; no remount.
+    let (code, updated) = http(addr, "POST", "/tenants/alice/quota", "1MiB");
+    assert_eq!(code, 200, "{updated}");
+    assert!(updated.contains("\"quota_bytes\": 1048576"), "{updated}");
+
+    // The very next placement sees the new cap and stays on cache.
+    let fd = sea.create("/alice/after.out").unwrap();
+    sea.write(fd, &payload(8 * KIB as usize, 2)).unwrap();
+    sea.close(fd).unwrap();
+    assert_eq!(
+        sea.stat("/alice/after.out").unwrap().tier,
+        "tmpfs",
+        "quota raise must apply without a remount"
+    );
+
+    let (code, body) = http(addr, "POST", "/tenants/alice/quota", "garbage");
+    assert_eq!(code, 400, "{body}");
+
+    // CI artifact hook: archive the /status body of this live run so the
+    // control-plane job uploads a real capture, not a synthetic fixture.
+    if let Some(out) = std::env::var_os("SEA_STATUS_ARTIFACT") {
+        let (code, status) = http_get(addr, "/status");
+        assert_eq!(code, 200);
+        std::fs::write(out, status).unwrap();
+    }
+    sess.unmount();
+}
+
+// ---------------------------------------------------------------------------
+// 4. Concurrent /metrics + /status scrapes during an active 8-thread run.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_scrapes_stay_consistent_during_active_run() {
+    let dir = tempdir("tenancy-scrape");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 256 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .flusher(false, 3_600_000)
+        .prefetcher(false)
+        .tenant("alice", "/alice", None)
+        .tenant("bob", "/bob", None)
+        .build();
+    let sea = Arc::new(SeaIo::mount_with(cfg, flush_lists(), |t| t).unwrap());
+    let server = serve_ops("127.0.0.1:0", sea.core().clone()).unwrap();
+    let addr = server.addr();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut writers = Vec::new();
+    for t in 0..8 {
+        let sea = sea.clone();
+        let stop = stop.clone();
+        writers.push(std::thread::spawn(move || {
+            let ns = if t % 2 == 0 { "alice" } else { "bob" };
+            let mut i = 0usize;
+            while !stop.load(Ordering::Acquire) {
+                let path = format!("/{ns}/w{t}/f{i}.out");
+                let fd = sea.create(&path).unwrap();
+                sea.write(fd, &payload(4 * KIB as usize, t as u8)).unwrap();
+                sea.close(fd).unwrap();
+                i += 1;
+            }
+            i
+        }));
+    }
+
+    let scrapes = Arc::new(AtomicU64::new(0));
+    let mut scrapers = Vec::new();
+    for s in 0..2 {
+        let stop = stop.clone();
+        let scrapes = scrapes.clone();
+        scrapers.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                let path = if s == 0 { "/metrics" } else { "/status" };
+                let (code, body) = http_get(addr, path);
+                assert_eq!(code, 200, "{path} failed mid-run: {body}");
+                if s == 0 {
+                    assert!(body.contains("sea_tenant_cache_used_bytes"), "{body}");
+                } else {
+                    assert!(body.contains("\"multi_tenant\": true"), "{body}");
+                }
+                scrapes.fetch_add(1, Ordering::Relaxed);
+            }
+        }));
+    }
+
+    std::thread::sleep(Duration::from_millis(300));
+    stop.store(true, Ordering::Release);
+    let written: usize = writers.into_iter().map(|h| h.join().unwrap()).sum();
+    for h in scrapers {
+        h.join().unwrap();
+    }
+    assert!(written > 0);
+    assert!(
+        scrapes.load(Ordering::Relaxed) >= 4,
+        "scrapers barely ran: {} scrapes",
+        scrapes.load(Ordering::Relaxed)
+    );
+
+    // After the dust settles the accounting still mirrors the tiers:
+    // the sum of per-tenant cache_used equals the cache tier's usage.
+    let core = sea.core().clone();
+    let tenant_total: u64 = core
+        .tenants
+        .snapshots()
+        .iter()
+        .map(|s| s.cache_used)
+        .sum();
+    let tier_used: u64 = core.tiers.caches().iter().map(|t| t.used()).sum();
+    assert_eq!(tenant_total, tier_used, "accounting drifted from tiers");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 5. Noisy-neighbor isolation: background storm vs foreground p99.
+// ---------------------------------------------------------------------------
+
+fn p99_us(mut lat_us: Vec<f64>) -> f64 {
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((lat_us.len() as f64 * 0.99).ceil() as usize).min(lat_us.len()) - 1;
+    lat_us[idx]
+}
+
+#[test]
+fn noisy_tenant_storm_cannot_double_victim_foreground_p99() {
+    const BW: f64 = 8.0 * 1024.0 * 1024.0; // 8 MiB/s persist limit
+    const FG_CHUNK: u64 = 128 * KIB; // ~16 ms of tokens per wait
+    const BG_CHUNK: u64 = 16 * KIB; // ~2 ms stolen per lane escape
+    const ITERS: usize = 100;
+
+    let dir = tempdir("tenancy-noisy");
+    let cfg = SeaConfig::builder(dir.subdir("mount"))
+        .cache("tmpfs", dir.subdir("tmpfs"), 64 * MIB)
+        .persist("lustre", dir.subdir("lustre"), 100_000 * MIB)
+        .flusher(false, 3_600_000)
+        .prefetcher(false)
+        .sched_qos(true)
+        .tenant("noisy", "/noisy", None)
+        .tenant("victim", "/victim", None)
+        .build();
+    let sea = SeaIo::mount_with(cfg, flush_lists(), |t| {
+        t.with_bandwidth_limit(BW)
+    })
+    .unwrap();
+    let core = sea.core().clone();
+    let persist = core.tiers.persist_idx();
+    let noisy = core.tenants.resolve("/noisy/x");
+    let victim = core.tenants.resolve("/victim/x");
+
+    // Solo baseline: the victim's foreground waits are token-limited at
+    // ~FG_CHUNK/BW each once the burst allowance drains.
+    let mut solo = Vec::with_capacity(ITERS);
+    for _ in 0..ITERS {
+        let t0 = Instant::now();
+        core.tiers
+            .get(persist)
+            .wait_data_tagged(FG_CHUNK, IoClass::Foreground, victim);
+        solo.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let p99_solo = p99_us(solo);
+
+    // Storm: two noisy-tenant threads hammer the same tier with
+    // background-class requests through the noisy lane.
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut storm = Vec::new();
+    for _ in 0..2 {
+        let core = core.clone();
+        let stop = stop.clone();
+        storm.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                core.tiers
+                    .get(persist)
+                    .wait_data_tagged(BG_CHUNK, IoClass::Background, noisy);
+            }
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut under_storm = Vec::with_capacity(ITERS);
+    for _ in 0..ITERS {
+        let t0 = Instant::now();
+        core.tiers
+            .get(persist)
+            .wait_data_tagged(FG_CHUNK, IoClass::Foreground, victim);
+        under_storm.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let p99_storm = p99_us(under_storm);
+    stop.store(true, Ordering::Release);
+    for h in storm {
+        h.join().unwrap();
+    }
+
+    // The QoS lanes must keep the victim within 2x its solo baseline
+    // (floored at 2 ms so timer jitter on an idle bucket cannot turn
+    // the bound degenerate).
+    let bound = 2.0 * p99_solo.max(2_000.0);
+    assert!(
+        p99_storm <= bound,
+        "victim p99 {p99_storm:.0} us exceeds 2x solo baseline {p99_solo:.0} us"
+    );
+
+    // The noisy tenant was really shaped: its lane saw traffic and
+    // burned yield slices while the victim was waiting.
+    let (bg_bytes, yields) = core
+        .tiers
+        .get(persist)
+        .lane_snapshot(noisy)
+        .expect("noisy lane installed");
+    assert!(bg_bytes > 0, "storm never drew from its lane");
+    assert!(yields > 0, "storm never yielded to foreground");
+}
